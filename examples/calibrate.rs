@@ -1,0 +1,108 @@
+//! Calibration tool: fit the simulator's device constants to the paper's
+//! Table-1 throughput/speedup numbers (DESIGN.md §5).
+//!
+//! Grid-searches (gpu per_lookup) and (cpu per_lookup, server request
+//! cost, PS compute jitter) minimizing squared log-error against the 16
+//! paper cells.  The winning constants are hard-coded in
+//! `sim/device.rs` / `ps/mod.rs` / `config.rs`; re-run this tool after
+//! changing any cost model to re-fit.
+//!
+//! Run: `cargo run --release --example calibrate`
+
+use gmeta::config::{ExperimentConfig, ModelDims};
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::{aliccp_like, inhouse_like, DatasetSpec};
+use gmeta::harness::{inhouse_scale_dims, paper_scale_dims};
+use gmeta::meta::Episode;
+use gmeta::ps::PsTrainer;
+
+// Paper Table 1 targets (samples/s).
+const PS_SIZES: [usize; 4] = [20, 40, 80, 160];
+const PS_PUBLIC: [f64; 4] = [29e3, 51e3, 91e3, 138e3];
+const PS_INHOUSE: [f64; 4] = [27e3, 48e3, 79e3, 126e3];
+const GPU_NODES: [usize; 4] = [1, 2, 4, 8];
+const GMETA_PUBLIC: [f64; 4] = [90e3, 169e3, 322e3, 618e3];
+const GMETA_INHOUSE: [f64; 4] = [54e3, 105e3, 197e3, 380e3];
+
+const STEPS: usize = 8;
+const PER_WORKER: usize = 4;
+
+struct Workload {
+    spec: DatasetSpec,
+    dims: ModelDims,
+    /// episodes[world_index] prepared per world size.
+    eps: Vec<Vec<Vec<Episode>>>,
+}
+
+fn prepare(spec: DatasetSpec, dims: ModelDims, worlds: &[usize]) -> Workload {
+    let eps = worlds
+        .iter()
+        .map(|&w| episodes_from_generator(spec, &dims, w, PER_WORKER))
+        .collect();
+    Workload { spec, dims, eps }
+}
+
+fn log_err(got: f64, want: f64) -> f64 {
+    let e = (got / want).ln();
+    e * e
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- GPU arm: fit per_lookup alone (ratios come from topology). ---
+    let gpu_worlds: Vec<usize> = GPU_NODES.iter().map(|n| n * 4).collect();
+    let pub_wl = prepare(aliccp_like(60_000), paper_scale_dims(), &gpu_worlds);
+    let inh_wl = prepare(inhouse_like(60_000), inhouse_scale_dims(), &gpu_worlds);
+
+    let mut best_gpu = (f64::MAX, 0.0);
+    for pl in [0.18e-6, 0.22e-6, 0.26e-6, 0.30e-6, 0.34e-6] {
+        let mut err = 0.0;
+        for (wl, targets) in [(&pub_wl, &GMETA_PUBLIC), (&inh_wl, &GMETA_INHOUSE)] {
+            for (i, &n) in GPU_NODES.iter().enumerate() {
+                let mut cfg = ExperimentConfig::gmeta(n, 4);
+                cfg.dims = wl.dims;
+                let mut t = GMetaTrainer::new(cfg, "maml", wl.spec.record_bytes, None)?;
+                t.device.per_lookup = pl;
+                let thr = t.run(&wl.eps[i], STEPS)?.throughput();
+                err += log_err(thr, targets[i]);
+            }
+        }
+        println!("gpu per_lookup={pl:.2e}  err={err:.4}");
+        if err < best_gpu.0 {
+            best_gpu = (err, pl);
+        }
+    }
+    println!("BEST gpu per_lookup = {:.3e} (err {:.4})\n", best_gpu.1, best_gpu.0);
+
+    // --- PS arm ---
+    let pub_ps = prepare(aliccp_like(60_000), paper_scale_dims(), &PS_SIZES);
+    let inh_ps = prepare(inhouse_like(60_000), inhouse_scale_dims(), &PS_SIZES);
+    let mut best_ps = (f64::MAX, 0.0, 0.0, 0.0);
+    for pl in [1.0e-6, 1.5e-6, 2.0e-6] {
+        for rc in [0.4e-3, 0.8e-3, 1.2e-3] {
+            for jit in [0.3, 0.45, 0.6] {
+                let mut err = 0.0;
+                for (wl, targets) in [(&pub_ps, &PS_PUBLIC), (&inh_ps, &PS_INHOUSE)] {
+                    for (i, &w) in PS_SIZES.iter().enumerate() {
+                        let mut cfg = ExperimentConfig::ps(w, (w / 4).max(1));
+                        cfg.dims = wl.dims;
+                        cfg.cluster.compute_jitter = jit;
+                        let mut t = PsTrainer::new(cfg, "maml", wl.spec.record_bytes);
+                        t.device.per_lookup = pl;
+                        t.server_request_cost = rc;
+                        let thr = t.run(&wl.eps[i], STEPS)?.throughput();
+                        err += log_err(thr, targets[i]);
+                    }
+                }
+                println!("ps pl={pl:.1e} rc={rc:.1e} jit={jit}  err={err:.4}");
+                if err < best_ps.0 {
+                    best_ps = (err, pl, rc, jit);
+                }
+            }
+        }
+    }
+    println!(
+        "BEST ps per_lookup={:.3e} request_cost={:.3e} jitter={} (err {:.4})",
+        best_ps.1, best_ps.2, best_ps.3, best_ps.0
+    );
+    Ok(())
+}

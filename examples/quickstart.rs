@@ -1,0 +1,61 @@
+//! Quickstart: the smallest complete G-Meta run.
+//!
+//! Builds a synthetic meta-learning workload, runs a few iterations of the
+//! hybrid-parallelism trainer on a simulated 1×4 GPU node, and prints the
+//! phase breakdown.  If `artifacts/` exists (run `make artifacts`), it
+//! also runs *real numerics* through the PJRT runtime and prints the loss
+//! curve.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gmeta::config::{ExperimentConfig, ModelDims};
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::movielens_like;
+use gmeta::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let spec = movielens_like();
+
+    // --- 1. Simulated cluster run (no artifacts needed). ---------------
+    let cfg = ExperimentConfig::gmeta(1, 4);
+    let world = cfg.cluster.world_size();
+    let episodes = episodes_from_generator(spec, &cfg.dims, world, 8);
+    let mut trainer = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None)?;
+    let metrics = trainer.run(&episodes, 20)?;
+    println!("--- simulated 1x4 GPU cluster, 20 iterations ---");
+    println!("{metrics}");
+    println!("dense replicas in sync: {}\n", trainer.replicas_in_sync());
+
+    // --- 2. Real numerics through PJRT (needs `make artifacts`). -------
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ not found — skipping the real-numerics half.");
+        println!("Run `make artifacts` first to see the loss curve.");
+        return Ok(());
+    }
+    let rt = Runtime::load(&dir, &["maml"])?;
+    let mut cfg = ExperimentConfig::gmeta(1, 2);
+    cfg.dims = ModelDims {
+        emb_rows: spec.emb_rows as usize,
+        ..ModelDims::default()
+    };
+    let world = cfg.cluster.world_size();
+    let episodes = episodes_from_generator(spec, &cfg.dims, world, 8);
+    let mut trainer = GMetaTrainer::new(cfg, "maml", spec.record_bytes, Some(&rt))?;
+    let metrics = trainer.run(&episodes, 30)?;
+    println!("--- real numerics (PJRT), 30 meta-steps ---");
+    for (i, (ls, lq)) in trainer.losses.iter().enumerate() {
+        if i % 5 == 0 || i + 1 == trainer.losses.len() {
+            println!("step {i:>3}  loss_sup={ls:.4}  loss_qry={lq:.4}");
+        }
+    }
+    println!(
+        "tail losses: sup={:?} qry={:?}",
+        metrics.tail_loss_sup, metrics.tail_loss_qry
+    );
+    let held_out = episodes_from_generator(spec, &trainer.cfg.dims, 1, 4);
+    if let Some(auc) = trainer.evaluate(&held_out[0])? {
+        println!("held-out AUC: {auc:.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Scaling study: sweep the cluster size for both architectures and print
+//! the Table-1-style throughput/speedup curves, plus a per-phase
+//! breakdown showing *where* each architecture loses efficiency.
+//!
+//! Run: `cargo run --release --example scaling`
+
+use gmeta::config::ExperimentConfig;
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::aliccp_like;
+use gmeta::harness::paper_scale_dims;
+use gmeta::metrics::speedup_ratios;
+use gmeta::ps::PsTrainer;
+
+fn main() -> anyhow::Result<()> {
+    let spec = aliccp_like(80_000);
+    let dims = paper_scale_dims();
+    let steps = 16;
+
+    println!("=== G-Meta (hybrid parallelism, GPU cluster) ===");
+    let mut pts = Vec::new();
+    for nodes in [1usize, 2, 4, 8] {
+        let mut cfg = ExperimentConfig::gmeta(nodes, 4);
+        cfg.dims = dims;
+        let world = cfg.cluster.world_size();
+        let eps = episodes_from_generator(spec, &dims, world, 6);
+        let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None)?;
+        let m = t.run(&eps, steps)?;
+        println!(
+            "{nodes}x4 GPUs: {:>9.0} samples/s   phases: io={:.1}% emb={:.1}% compute={:.1}% grads={:.1}% allreduce={:.1}%",
+            m.throughput(),
+            100.0 * m.phase("io") / m.virtual_time,
+            100.0 * m.phase("emb_exchange") / m.virtual_time,
+            100.0 * m.phase("compute") / m.virtual_time,
+            100.0 * m.phase("grad_exchange") / m.virtual_time,
+            100.0 * m.phase("dense_allreduce") / m.virtual_time,
+        );
+        pts.push((world, m.throughput()));
+    }
+    let ratios = speedup_ratios(&pts);
+    println!("speedup ratios: {:?}\n", ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>());
+
+    println!("=== DMAML (parameter server, CPU cluster) ===");
+    let mut pts = Vec::new();
+    for workers in [20usize, 40, 80, 160] {
+        let mut cfg = ExperimentConfig::ps(workers, workers / 4);
+        cfg.dims = dims;
+        let eps = episodes_from_generator(spec, &dims, workers, 4);
+        let mut t = PsTrainer::new(cfg, "maml", spec.record_bytes);
+        let m = t.run(&eps, steps)?;
+        println!(
+            "{workers:>3} workers: {:>9.0} samples/s   phases: io={:.1}% pull={:.1}% compute={:.1}% push={:.1}%",
+            m.throughput(),
+            100.0 * m.phase("io") / m.virtual_time,
+            100.0 * m.phase("ps_pull") / m.virtual_time,
+            100.0 * m.phase("compute") / m.virtual_time,
+            100.0 * m.phase("ps_push") / m.virtual_time,
+        );
+        pts.push((workers, m.throughput()));
+    }
+    let ratios = speedup_ratios(&pts);
+    println!("speedup ratios: {:?}", ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>());
+
+    println!(
+        "\nThe G-Meta curve stays near-linear (AlltoAll uses full bisection \
+         bandwidth; Ring-AllReduce is bandwidth-optimal), while the PS curve \
+         collapses (server incast + straggler barrier) — paper Table 1."
+    );
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` via the PJRT C API and Python never appears
+on the training path again.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per model variant v in {maml, melu, cbml}):
+    {v}_metatrain.hlo.txt   fused inner+outer meta-train step
+    {v}_forward.hlo.txt     eval/serving forward (probs)
+plus ``manifest.json`` describing the positional ABI (input/output names,
+shapes, dtypes) and the baked static config (dims, alpha) so the Rust
+loader never hard-codes shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import Dims
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, arr) -> dict:
+    return {
+        "name": name,
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+    }
+
+
+def _dense_specs(dims: Dims, variant: str) -> list:
+    params = model.init_dense(jax.random.PRNGKey(0), dims, variant)
+    names = model.DENSE_ORDER + (("task_emb",) if variant == "cbml" else ())
+    return [_spec(n, params[n]) for n in names]
+
+
+def build_entries(dims: Dims, variant: str, alpha: float):
+    """Yield (entry_name, jitted lowering, input specs, output names)."""
+    b, f, v, d = dims.batch, dims.slots, dims.valency, dims.emb_dim
+    emb = jax.ShapeDtypeStruct((b, f, v, d), jnp.float32)
+    y = jax.ShapeDtypeStruct((b,), jnp.float32)
+    ovl = jax.ShapeDtypeStruct((b, f, v), jnp.int32)
+    dense_specs = _dense_specs(dims, variant)
+    dense_structs = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.dtype(s["dtype"]))
+        for s in dense_specs
+    ]
+    names = [s["name"] for s in dense_specs]
+
+    mt_fn, _ = model.metatrain_flat(dims, variant, alpha)
+    mt_inputs = [
+        {"name": "emb_sup", "shape": [b, f, v, d], "dtype": "float32"},
+        {"name": "y_sup", "shape": [b], "dtype": "float32"},
+        {"name": "emb_qry", "shape": [b, f, v, d], "dtype": "float32"},
+        {"name": "y_qry", "shape": [b], "dtype": "float32"},
+        {"name": "overlap", "shape": [b, f, v], "dtype": "int32"},
+    ] + dense_specs
+    mt_outputs = ["loss_sup", "loss_qry", "probs_qry", "g_emb_qry"] + [
+        f"g_{n}" for n in names
+    ]
+    yield (
+        f"{variant}_metatrain",
+        jax.jit(mt_fn).lower(emb, y, emb, y, ovl, *dense_structs),
+        mt_inputs,
+        mt_outputs,
+    )
+
+    fw_fn, _ = model.forward_flat(dims, variant)
+    fw_inputs = [
+        {"name": "emb", "shape": [b, f, v, d], "dtype": "float32"}
+    ] + dense_specs
+    yield (
+        f"{variant}_forward",
+        jax.jit(fw_fn).lower(emb, *dense_structs),
+        fw_inputs,
+        ["probs"],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--valency", type=int, default=2)
+    ap.add_argument("--emb-dim", type=int, default=16)
+    ap.add_argument("--hidden1", type=int, default=128)
+    ap.add_argument("--hidden2", type=int, default=64)
+    ap.add_argument("--task-dim", type=int, default=16)
+    ap.add_argument("--alpha", type=float, default=0.1, help="inner-loop LR")
+    ap.add_argument(
+        "--variants", nargs="*", default=list(model.VARIANTS), choices=model.VARIANTS
+    )
+    args = ap.parse_args()
+
+    dims = Dims(
+        batch=args.batch,
+        slots=args.slots,
+        valency=args.valency,
+        emb_dim=args.emb_dim,
+        hidden1=args.hidden1,
+        hidden2=args.hidden2,
+        task_dim=args.task_dim,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "dims": dataclasses.asdict(dims),
+        "alpha": args.alpha,
+        "dense_order": list(model.DENSE_ORDER),
+        "entries": {},
+    }
+    for variant in args.variants:
+        for name, lowered, inputs, outputs in build_entries(dims, variant, args.alpha):
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest["entries"][name] = {
+                "file": f"{name}.hlo.txt",
+                "variant": variant,
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

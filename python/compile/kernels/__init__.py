@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the Meta-DLRM compute hot-spot.
+
+``matmul``      blocked MXU-tiled matmul
+``fused``       linear(+ReLU) layers with custom VJPs
+``pool``        multivalent-slot sum pooling
+``ref``         pure-jnp oracles (the correctness reference)
+"""
+
+from . import fused, matmul, pool, ref  # noqa: F401

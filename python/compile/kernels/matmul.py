@@ -1,0 +1,103 @@
+"""L1 Pallas blocked matmul kernel.
+
+This is the compute primitive under the Meta-DLRM dense tower — the
+"computation-intensive dense layer" G-Meta moves from CPU parameter-server
+workers onto accelerators (paper §1, §2.1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA-threadblock
+decomposition the paper's A100 stack would use becomes a Pallas grid over
+(M/bm, N/bn, K/bk).  Each (i, j) output tile lives in VMEM for the whole
+K-reduction (the index map for the output ignores the k axis, so Pallas
+keeps the tile resident); x/w tiles stream HBM->VMEM per k step, which is
+the double-buffered schedule Mosaic emits on real hardware.  Block sizes
+default to multiples of the 128x128 MXU systolic tile, fp32 accumulate.
+
+VMEM footprint per program instance (fp32):
+    bm*bk + bk*bn + bm*bn floats = 128*256 + 256*128 + 128*128  ~ 320 KiB
+well under the ~16 MiB/core VMEM budget, leaving room for double buffering.
+
+interpret=True is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Interpret mode
+runs the same block schedule with numpy, so correctness (and the lowered
+HLO structure) is exercised; device performance is *estimated* in
+DESIGN.md / EXPERIMENTS.md, never measured from interpret wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flipped to False only by aot.py if a real TPU lowering target is ever
+# requested; every in-image path uses interpret mode (see module docstring).
+INTERPRET = True
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into the o tile.
+
+    The output tile is revisited across the k axis (its index map ignores
+    k), so it doubles as the fp32 accumulator — no scratch buffer needed,
+    which also keeps the kernel valid under interpret mode.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Blocked ``x @ w`` for 2-D fp32 operands.
+
+    Shapes need not be multiples of the block sizes; Pallas pads the edge
+    blocks (zero-padded loads are sound for a sum-reduction).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    # Pad every dim up to a block multiple: out-of-bounds block reads are
+    # undefined in Pallas (both on TPU and in interpret mode), and zero
+    # padding is exact for a sum-reduction.  The pads lower to HLO
+    # pad/slice ops that XLA folds into the surrounding fusion.
+    mp, kp, np_ = _cdiv(m, bm) * bm, _cdiv(k, bk) * bk, _cdiv(n, bn) * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(x, w)
+    return out[:m, :n] if (mp, np_) != (m, n) else out

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every L1 kernel and the L2 loss pieces.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+(and the whole fused meta-train graph built on them) match these
+references to fp32 tolerance across hypothesis-driven shape sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def linear_relu_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(jnp.dot(x, w) + b[None, :], 0.0)
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w) + b[None, :]
+
+
+def sum_pool_ref(emb: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(emb, axis=2)
+
+
+def bce_with_logits_ref(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean binary cross-entropy from logits: softplus(l) - y*l."""
+    return jnp.mean(jnp.logaddexp(0.0, logits) - y * logits)

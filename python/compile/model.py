@@ -1,0 +1,317 @@
+"""L2: the Meta-DLRM compute graph (MAML / MeLU / CBML variants).
+
+This is the model half of G-Meta's split (paper §2.1): the *dense* part of
+the Meta-DLRM — sum-pooling over gathered embedding blocks plus the MLP
+tower — together with the two meta-learning loops, as one fused JAX
+function lowered AOT to HLO.  The *embedding lookup* is deliberately NOT
+here: the paper's central observation is that the huge embedding layer is
+an I/O- and communication-bound operator that belongs to the distributed
+runtime (row-sharded tables exchanged via AlltoAll, L3 in Rust), not the
+accelerator graph.  The graph therefore takes already-gathered embedding
+blocks ``[B, F, V, D]`` as arguments and returns *gradients with respect
+to those blocks*, which L3 scatter-adds back to the owning shards.
+
+Meta-train step (one call = Algorithm 1 lines 6-12, per worker):
+
+    1. inner forward on the support block -> L_sup
+    2. inner SGD:  adapted = params - alpha * grad(L_sup)    (task-specific)
+    3. overlap patch: query positions whose embedding ROW also appeared in
+       the support set read the *adapted* value (paper line 9); positions
+       with no overlap keep the prefetched (stale-by-one-inner-step) value
+       — exactly the paper's prefetch semantics (§2.1.1).
+    4. outer forward on the query block with adapted params -> L_qry
+    5. outer gradients w.r.t. the meta parameters, returned to L3, which
+       combines them across workers (AlltoAll for embedding grads,
+       Ring-AllReduce for dense grads — paper §2.1.2/2.1.3).
+
+First-order vs second-order: the shipped artifact computes the
+*first-order* meta-gradient (grad of L_qry at the adapted point), the
+standard industrial MAML approximation (FOMAML, Nichol et al. 2018 — the
+paper cites it as [25]).  A pure-jnp *second-order* oracle
+(``metatrain_second_order``) exists for pytest to quantify the
+approximation gap; it is not exported to HLO because ``custom_vjp`` Pallas
+layers differentiate once (see kernels/fused.py).
+
+Variants (Figure 3 of the paper):
+    maml  — inner loop adapts the full tower AND the gathered embeddings.
+    melu  — inner loop adapts only the "decision layers" (w2, b2, w3, b3);
+            embeddings and the first layer stay meta (Lee et al. 2019).
+    cbml  — a task-cluster embedding ``[Dt]`` is concatenated to the tower
+            input and is adapted in the inner loop along with the decision
+            layers (cluster-conditioned modulation, Song et al. 2021).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused, pool, ref
+
+VARIANTS = ("maml", "melu", "cbml")
+
+# Dense-parameter order is the ABI between aot.py and the Rust runtime:
+# artifacts take/return dense tensors in exactly this order (task_emb is
+# appended for cbml only).  manifest.json re-states it for the loader.
+DENSE_ORDER = ("w1", "b1", "w2", "b2", "w3", "b3")
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Static shape configuration baked into an artifact set."""
+
+    batch: int = 256  # samples per task batch (support == query size)
+    slots: int = 16  # categorical feature slots F
+    valency: int = 2  # values per slot V (multivalent slots)
+    emb_dim: int = 16  # embedding dim D
+    hidden1: int = 128
+    hidden2: int = 64
+    task_dim: int = 16  # cluster-embedding dim (cbml only)
+
+    @property
+    def tower_in(self) -> int:
+        return self.slots * self.emb_dim
+
+    def tower_in_for(self, variant: str) -> int:
+        return self.tower_in + (self.task_dim if variant == "cbml" else 0)
+
+
+def init_dense(key: jax.Array, dims: Dims, variant: str) -> Dict[str, jnp.ndarray]:
+    """He-initialised tower parameters (+ zero task embedding for cbml)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in = dims.tower_in_for(variant)
+    p = {
+        "w1": jax.random.normal(k1, (d_in, dims.hidden1)) * jnp.sqrt(2.0 / d_in),
+        "b1": jnp.zeros((dims.hidden1,)),
+        "w2": jax.random.normal(k2, (dims.hidden1, dims.hidden2))
+        * jnp.sqrt(2.0 / dims.hidden1),
+        "b2": jnp.zeros((dims.hidden2,)),
+        "w3": jax.random.normal(k3, (dims.hidden2, 1)) * jnp.sqrt(2.0 / dims.hidden2),
+        "b3": jnp.zeros((1,)),
+    }
+    if variant == "cbml":
+        p["task_emb"] = jnp.zeros((dims.task_dim,))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _tower(params, x: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """The MLP tower over the flattened pooled embeddings -> logits [B]."""
+    if use_pallas:
+        h1 = fused.linear_relu(x, params["w1"], params["b1"])
+        h2 = fused.linear_relu(h1, params["w2"], params["b2"])
+        logits = fused.linear(h2, params["w3"], params["b3"])
+    else:
+        h1 = ref.linear_relu_ref(x, params["w1"], params["b1"])
+        h2 = ref.linear_relu_ref(h1, params["w2"], params["b2"])
+        logits = ref.linear_ref(h2, params["w3"], params["b3"])
+    return logits[:, 0]
+
+
+def forward(
+    params: Dict[str, jnp.ndarray],
+    emb: jnp.ndarray,
+    dims: Dims,
+    variant: str,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Pooled-embedding DLRM forward: ``[B, F, V, D] -> logits [B]``."""
+    pooled = pool.sum_pool(emb) if use_pallas else ref.sum_pool_ref(emb)
+    x = pooled.reshape(emb.shape[0], dims.tower_in)
+    if variant == "cbml":
+        t = jnp.broadcast_to(params["task_emb"][None, :], (emb.shape[0], dims.task_dim))
+        x = jnp.concatenate([x, t], axis=1)
+    return _tower(params, x, use_pallas)
+
+
+def loss_fn(params, emb, y, dims, variant, use_pallas=True) -> jnp.ndarray:
+    return ref.bce_with_logits_ref(forward(params, emb, dims, variant, use_pallas), y)
+
+
+# ---------------------------------------------------------------------------
+# Inner loop (task adaptation)
+# ---------------------------------------------------------------------------
+
+
+def _inner_adapted_leaves(variant: str) -> Tuple[str, ...]:
+    """Which dense leaves the inner loop adapts, per variant."""
+    if variant == "maml":
+        return DENSE_ORDER
+    if variant == "melu":
+        return ("w2", "b2", "w3", "b3")
+    if variant == "cbml":
+        return ("w2", "b2", "w3", "b3", "task_emb")
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def inner_step(
+    params: Dict[str, jnp.ndarray],
+    emb_sup: jnp.ndarray,
+    y_sup: jnp.ndarray,
+    alpha: float,
+    dims: Dims,
+    variant: str,
+    use_pallas: bool = True,
+):
+    """One inner SGD step on the support batch.
+
+    Returns ``(loss_sup, adapted_params, adapted_emb_sup)``.  For variants
+    that do not adapt embeddings, ``adapted_emb_sup is emb_sup``.
+    """
+    adapt_emb = variant == "maml"
+    leaves = _inner_adapted_leaves(variant)
+
+    def sup_loss(adaptable, emb):
+        merged = {**params, **adaptable}
+        return loss_fn(merged, emb, y_sup, dims, variant, use_pallas)
+
+    adaptable = {k: params[k] for k in leaves}
+    if adapt_emb:
+        loss_sup, (g_p, g_e) = jax.value_and_grad(sup_loss, argnums=(0, 1))(
+            adaptable, emb_sup
+        )
+        adapted_emb = emb_sup - alpha * g_e
+    else:
+        loss_sup, g_p = jax.value_and_grad(sup_loss)(adaptable, emb_sup)
+        adapted_emb = emb_sup
+    adapted = dict(params)
+    for k in leaves:
+        adapted[k] = params[k] - alpha * g_p[k]
+    return loss_sup, adapted, adapted_emb
+
+
+def patch_overlap(
+    adapted_emb_sup: jnp.ndarray, emb_qry: jnp.ndarray, overlap: jnp.ndarray
+) -> jnp.ndarray:
+    """Apply paper Algorithm 1 line 9: query positions whose embedding row
+    also appears in the support set read the inner-adapted value.
+
+    ``overlap[b, f, v]`` is the flattened support position holding the same
+    embedding row, or -1 when the row was not in the support batch.
+    """
+    b, f, v, d = emb_qry.shape
+    flat_sup = adapted_emb_sup.reshape(b * f * v, d)
+    idx = jnp.clip(overlap.reshape(-1), 0, b * f * v - 1)
+    gathered = flat_sup[idx].reshape(b, f, v, d)
+    mask = (overlap >= 0)[..., None]
+    return jnp.where(mask, gathered, emb_qry)
+
+
+# ---------------------------------------------------------------------------
+# Fused meta-train step (the artifact entry point)
+# ---------------------------------------------------------------------------
+
+
+def metatrain(
+    params: Dict[str, jnp.ndarray],
+    emb_sup: jnp.ndarray,
+    y_sup: jnp.ndarray,
+    emb_qry: jnp.ndarray,
+    y_qry: jnp.ndarray,
+    overlap: jnp.ndarray,
+    alpha: float,
+    dims: Dims,
+    variant: str,
+    use_pallas: bool = True,
+):
+    """Fused inner+outer step; returns everything L3 needs for the global
+    update: ``(loss_sup, loss_qry, probs_qry, g_emb_qry, g_dense dict)``.
+
+    First-order meta-gradient: grads of L_qry evaluated at the adapted
+    point, taken w.r.t. the adapted leaves (== meta leaves to first order)
+    and w.r.t. the effective query embedding block.
+    """
+    loss_sup, adapted, adapted_emb_sup = inner_step(
+        params, emb_sup, y_sup, alpha, dims, variant, use_pallas
+    )
+    if variant == "maml":
+        emb_eff = patch_overlap(adapted_emb_sup, emb_qry, overlap)
+    else:
+        # melu/cbml do not adapt embeddings, so `overlap` is semantically
+        # unused — but it must stay alive in the jaxpr or JAX DCE removes
+        # the parameter and the artifact ABI diverges across variants.
+        # The term is exactly zero; XLA folds it after parameter binding.
+        emb_eff = emb_qry + 0.0 * overlap.astype(emb_qry.dtype).sum()
+    # First-order: the adapted point is where the outer grads are taken;
+    # cut the graph back into the inner step so the artifact differentiates
+    # the custom-vjp Pallas layers exactly once.
+    adapted = jax.tree_util.tree_map(jax.lax.stop_gradient, adapted)
+    emb_eff = jax.lax.stop_gradient(emb_eff)
+
+    def qry_loss(dense, emb):
+        logits = forward(dense, emb, dims, variant, use_pallas)
+        return ref.bce_with_logits_ref(logits, y_qry), logits
+
+    (loss_qry, logits_qry), (g_dense, g_emb) = jax.value_and_grad(
+        qry_loss, argnums=(0, 1), has_aux=True
+    )(adapted, emb_eff)
+    probs_qry = jax.nn.sigmoid(logits_qry)
+    return loss_sup, loss_qry, probs_qry, g_emb, g_dense
+
+
+def metatrain_flat(dims: Dims, variant: str, alpha: float, use_pallas: bool = True):
+    """Positional-ABI wrapper for AOT export.
+
+    Inputs:  emb_sup, y_sup, emb_qry, y_qry, overlap(int32), w1..b3[, task_emb]
+    Outputs: loss_sup, loss_qry, probs_qry, g_emb_qry, g_w1..g_b3[, g_task_emb]
+    """
+    names = DENSE_ORDER + (("task_emb",) if variant == "cbml" else ())
+
+    def fn(emb_sup, y_sup, emb_qry, y_qry, overlap, *dense):
+        params = dict(zip(names, dense))
+        loss_sup, loss_qry, probs, g_emb, g_dense = metatrain(
+            params, emb_sup, y_sup, emb_qry, y_qry, overlap,
+            alpha, dims, variant, use_pallas,
+        )
+        return (loss_sup, loss_qry, probs, g_emb) + tuple(g_dense[k] for k in names)
+
+    return fn, names
+
+
+def forward_flat(dims: Dims, variant: str, use_pallas: bool = True):
+    """Positional-ABI eval entry: (emb, w1..b3[, task_emb]) -> (probs,)."""
+    names = DENSE_ORDER + (("task_emb",) if variant == "cbml" else ())
+
+    def fn(emb, *dense):
+        params = dict(zip(names, dense))
+        return (jax.nn.sigmoid(forward(params, emb, dims, variant, use_pallas)),)
+
+    return fn, names
+
+
+# ---------------------------------------------------------------------------
+# Second-order oracle (pytest only; quantifies the first-order gap)
+# ---------------------------------------------------------------------------
+
+
+def metatrain_second_order(
+    params, emb_sup, y_sup, emb_qry, y_qry, overlap, alpha, dims, variant
+):
+    """Full MAML meta-gradient, pure jnp (differentiable twice).
+
+    Used only by tests to check the first-order artifact's gradients point
+    in the same direction (cosine similarity) as the exact meta-gradient.
+    """
+
+    def outer(meta_dense, meta_emb_sup, meta_emb_qry):
+        loss_sup, adapted, adapted_emb_sup = inner_step(
+            meta_dense, meta_emb_sup, y_sup, alpha, dims, variant, use_pallas=False
+        )
+        emb_eff = (
+            patch_overlap(adapted_emb_sup, meta_emb_qry, overlap)
+            if variant == "maml"
+            else meta_emb_qry
+        )
+        return loss_fn(adapted, emb_eff, y_qry, dims, variant, use_pallas=False)
+
+    loss_qry, grads = jax.value_and_grad(outer, argnums=(0, 1, 2))(
+        params, emb_sup, emb_qry
+    )
+    return loss_qry, grads

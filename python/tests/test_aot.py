@@ -1,0 +1,88 @@
+"""AOT contract tests: the lowered HLO must honor the manifest ABI.
+
+Regression coverage for the subtle failure where JAX DCE silently drops an
+unused input (e.g. `overlap` in melu/cbml) and every later positional
+argument shifts — the Rust loader would then feed dense tensors into the
+wrong parameters.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.model import Dims
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = Dims(batch=8, slots=2, valency=2, emb_dim=4, hidden1=8, hidden2=4, task_dim=4)
+
+
+def _param_count(hlo_text: str) -> int:
+    """Number of parameters of the ENTRY computation."""
+    entry = re.search(r"ENTRY .*?\{(.*?)\n\}", hlo_text, re.S)
+    assert entry, "no ENTRY computation in HLO"
+    return len(re.findall(r"parameter\(\d+\)", entry.group(1)))
+
+
+@pytest.mark.parametrize("variant", model.VARIANTS)
+def test_metatrain_entry_keeps_every_input(variant):
+    entries = list(aot.build_entries(SMALL, variant, alpha=0.1))
+    name, lowered, inputs, outputs = entries[0]
+    assert name == f"{variant}_metatrain"
+    text = aot.to_hlo_text(lowered)
+    assert _param_count(text) == len(inputs), (
+        f"{variant}: HLO has {_param_count(text)} params but manifest lists "
+        f"{len(inputs)} inputs — an input was DCE'd and the ABI shifted"
+    )
+
+
+@pytest.mark.parametrize("variant", model.VARIANTS)
+def test_forward_entry_matches_manifest(variant):
+    entries = list(aot.build_entries(SMALL, variant, alpha=0.1))
+    name, lowered, inputs, outputs = entries[1]
+    assert name == f"{variant}_forward"
+    text = aot.to_hlo_text(lowered)
+    assert _param_count(text) == len(inputs)
+    assert outputs == ["probs"]
+
+
+def test_metatrain_output_arity_matches_manifest():
+    for variant in model.VARIANTS:
+        name, lowered, inputs, outputs = next(aot.build_entries(SMALL, variant, 0.1))
+        n_dense = 6 + (1 if variant == "cbml" else 0)
+        assert len(outputs) == 4 + n_dense
+        assert outputs[:4] == ["loss_sup", "loss_qry", "probs_qry", "g_emb_qry"]
+
+
+def test_input_shapes_recorded_correctly():
+    name, lowered, inputs, _ = next(aot.build_entries(SMALL, "maml", 0.1))
+    by_name = {i["name"]: i for i in inputs}
+    b, f, v, d = SMALL.batch, SMALL.slots, SMALL.valency, SMALL.emb_dim
+    assert by_name["emb_sup"]["shape"] == [b, f, v, d]
+    assert by_name["overlap"]["shape"] == [b, f, v]
+    assert by_name["overlap"]["dtype"] == "int32"
+    assert by_name["w1"]["shape"] == [f * d, SMALL.hidden1]
+
+
+def test_cbml_has_task_embedding_input():
+    _, _, inputs, outputs = next(aot.build_entries(SMALL, "cbml", 0.1))
+    names = [i["name"] for i in inputs]
+    assert "task_emb" in names
+    assert "g_task_emb" in outputs
+    _, _, inputs, _ = next(aot.build_entries(SMALL, "maml", 0.1))
+    assert "task_emb" not in [i["name"] for i in inputs]
+
+
+def test_hlo_text_is_0_5_1_compatible():
+    """Instruction ids in the text form must be parseable (no proto ids at
+    all — text is the interchange; this is a smoke check that we emit
+    canonical HLO text with an ENTRY block)."""
+    _, lowered, _, _ = next(aot.build_entries(SMALL, "maml", 0.1))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: the root is a tuple.
+    assert re.search(r"ROOT .*tuple", text)

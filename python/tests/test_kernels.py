@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+hypothesis sweeps shapes/seeds; assert_allclose at fp32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, matmul, pool, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = matmul.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 256)])
+def test_matmul_block_shapes_equivalent(bm, bn, bk):
+    """Block decomposition must not change the result (tiling invariance)."""
+    x, w = _rand(0, (100, 70)), _rand(1, (70, 50))
+    base = ref.matmul_ref(x, w)
+    got = matmul.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul.matmul(_rand(0, (4, 5)), _rand(1, (6, 4)))
+    with pytest.raises(ValueError):
+        matmul.matmul(_rand(0, (4,)), _rand(1, (4, 4)))
+
+
+def test_matmul_k_accumulation_order():
+    """K-tiled accumulation is exact for values spanning magnitudes."""
+    x = jnp.concatenate(
+        [jnp.full((4, 128), 1e4, jnp.float32), jnp.full((4, 128), 1e-4, jnp.float32)],
+        axis=1,
+    )
+    w = jnp.ones((256, 8), jnp.float32)
+    got = matmul.matmul(x, w, block_k=64)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused linear(+relu)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_relu_matches_ref(m, k, n, seed):
+    x, w, b = _rand(seed, (m, k)), _rand(seed + 1, (k, n)), _rand(seed + 2, (n,))
+    got = fused.linear_relu(x, w, b)
+    want = ref.linear_relu_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_linear_matches_ref():
+    x, w, b = _rand(0, (64, 32)), _rand(1, (32, 1)), _rand(2, (1,))
+    np.testing.assert_allclose(
+        np.asarray(fused.linear(x, w, b)),
+        np.asarray(ref.linear_ref(x, w, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_linear_relu_grads_match_ref():
+    """Custom VJP (Pallas bwd kernels) vs jax autodiff of the oracle."""
+    x, w, b = _rand(3, (48, 24)), _rand(4, (24, 12)), _rand(5, (12,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(fused.linear_relu(x, w, b) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.linear_relu_ref(x, w, b) ** 2)
+
+    g_pallas = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gp, gr in zip(g_pallas, g_ref):
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr), rtol=1e-4, atol=1e-5)
+
+
+def test_linear_grads_match_ref():
+    x, w, b = _rand(6, (40, 16)), _rand(7, (16, 1)), _rand(8, (1,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(fused.linear(x, w, b) * 3.0)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.linear_ref(x, w, b) * 3.0)
+
+    g_pallas = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gp, gr in zip(g_pallas, g_ref):
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr), rtol=1e-4, atol=1e-5)
+
+
+def test_relu_mask_dead_units_get_zero_grad():
+    x = -jnp.abs(_rand(9, (16, 8)))  # all-negative inputs
+    w = jnp.eye(8, 4, dtype=jnp.float32)
+    b = jnp.zeros((4,))
+    g = jax.grad(lambda x: jnp.sum(fused.linear_relu(x, w, b)))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.zeros((16, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sum pool
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 200),
+    f=st.integers(1, 20),
+    v=st.integers(1, 5),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sum_pool_matches_ref(b, f, v, d, seed):
+    emb = _rand(seed, (b, f, v, d))
+    got = pool.sum_pool(emb)
+    want = ref.sum_pool_ref(emb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_sum_pool_grad_is_broadcast():
+    emb = _rand(0, (8, 4, 3, 5))
+    g = jax.grad(lambda e: jnp.sum(pool.sum_pool(e) ** 2))(emb)
+    g_ref = jax.grad(lambda e: jnp.sum(ref.sum_pool_ref(e) ** 2))(emb)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def test_bce_matches_manual():
+    logits = jnp.array([0.0, 2.0, -3.0], jnp.float32)
+    y = jnp.array([1.0, 0.0, 1.0], jnp.float32)
+    p = jax.nn.sigmoid(logits)
+    manual = -jnp.mean(y * jnp.log(p) + (1 - y) * jnp.log1p(-p))
+    got = ref.bce_with_logits_ref(logits, y)
+    np.testing.assert_allclose(float(got), float(manual), rtol=1e-6)

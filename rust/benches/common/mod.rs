@@ -1,0 +1,50 @@
+//! Shared mini-bench harness (criterion is not in the offline vendored
+//! set): timed repetitions with warmup, reporting mean / p50 / p95 wall
+//! time per iteration.
+
+use std::time::Instant;
+
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>5} iters  mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms",
+            self.name,
+            self.iters,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3
+        );
+    }
+}
+
+/// Time `body` for `iters` measured runs (after `warmup` unmeasured ones).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut body: F) -> BenchStats {
+    for _ in 0..warmup {
+        body();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        body();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: times[times.len() / 2],
+        p95_s: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+    };
+    stats.print();
+    stats
+}

@@ -1,0 +1,103 @@
+//! Bench: L3 hot-path microbenchmarks — the per-iteration coordinator
+//! work that must never bottleneck the device (DESIGN.md §7, the §Perf
+//! regression gate).
+//!
+//! Covers: lookup planning (dedup + shard routing), block assembly,
+//! gradient reduce/split, the AlltoAll router, ring AllReduce, the binary
+//! codec, and one full simulated coordinator step at paper scale.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use gmeta::collectives::{alltoall_bytes, ring_allreduce};
+use gmeta::config::{ClusterSpec, ExperimentConfig};
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::aliccp_like;
+use gmeta::embedding::plan::LookupPlan;
+use gmeta::embedding::ShardedEmbedding;
+use gmeta::harness::paper_scale_dims;
+use gmeta::io::codec::{decode_n, encode_all, Codec};
+use gmeta::net::Topology;
+use gmeta::util::Rng;
+
+fn main() {
+    let dims = paper_scale_dims();
+    let world = 8;
+    let n_ids = dims.batch * dims.slots * dims.valency * 2; // fused sup+qry
+    let mut rng = Rng::seed_from_u64(5);
+    let ids: Vec<u64> = (0..n_ids).map(|_| rng.gen_range(0, 1 << 22)).collect();
+    println!(
+        "paper-scale lookup: {} ids/worker/iter, world {world}, D={}\n",
+        n_ids, dims.emb_dim
+    );
+
+    common::bench("lookup_plan build (dedup+route)", 3, 30, || {
+        let p = LookupPlan::build(&ids, world);
+        std::hint::black_box(p.lookup.unique.len());
+    });
+
+    let plan = LookupPlan::build(&ids, world);
+    let mut table = ShardedEmbedding::new(world, dims.emb_dim, 1);
+    let resp: Vec<Vec<f32>> = (0..world)
+        .map(|s| table.serve(s, &plan.rows_for_shard(s)).unwrap())
+        .collect();
+
+    common::bench("shard serve (all shards)", 3, 30, || {
+        let mut t2 = table.clone();
+        for s in 0..world {
+            std::hint::black_box(t2.serve(s, &plan.rows_for_shard(s)).unwrap().len());
+        }
+    });
+
+    common::bench("scatter responses + assemble block", 3, 30, || {
+        let uniq = plan.scatter_responses(&resp, dims.emb_dim).unwrap();
+        let block = plan.lookup.assemble(&uniq, dims.emb_dim).unwrap();
+        std::hint::black_box(block.len());
+    });
+
+    let uniq = plan.scatter_responses(&resp, dims.emb_dim).unwrap();
+    let block = plan.lookup.assemble(&uniq, dims.emb_dim).unwrap();
+    common::bench("grad reduce (pos->unique) + split", 3, 30, || {
+        let g = plan.lookup.reduce_grads(&block, dims.emb_dim).unwrap();
+        let s = plan.split_grads(&g, dims.emb_dim).unwrap();
+        std::hint::black_box(s.len());
+    });
+
+    let topo = Topology::new(ClusterSpec::gpu(2, 4));
+    common::bench("alltoall router (8x8, 1 MiB msgs)", 3, 20, || {
+        let sends: Vec<Vec<Vec<f32>>> = (0..world)
+            .map(|_| (0..world).map(|_| vec![0.0f32; 1 << 18]).collect())
+            .collect();
+        let (r, _) = alltoall_bytes(sends, &topo).unwrap();
+        std::hint::black_box(r.len());
+    });
+
+    common::bench("ring_allreduce (K=185k tower)", 3, 20, || {
+        let k = dims.dense_params();
+        let mut bufs: Vec<Vec<f32>> = (0..world).map(|r| vec![r as f32; k]).collect();
+        ring_allreduce(&mut bufs, &topo).unwrap();
+        std::hint::black_box(bufs[0][0]);
+    });
+
+    let samples = gmeta::data::Generator::new(aliccp_like(10_000)).take(4_096);
+    let encoded = encode_all(&samples, Codec::Binary);
+    common::bench("binary codec encode 4k records", 3, 30, || {
+        std::hint::black_box(encode_all(&samples, Codec::Binary).len());
+    });
+    common::bench("binary codec decode 4k records", 3, 30, || {
+        std::hint::black_box(decode_n(&encoded, samples.len(), Codec::Binary).unwrap().1);
+    });
+
+    println!();
+    let mut cfg = ExperimentConfig::gmeta(2, 4);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(aliccp_like(10_000), &dims, 8, 2);
+    let mut trainer = GMetaTrainer::new(cfg, "maml", 600, None).unwrap();
+    common::bench("full coordinator step (sim, 2x4, paper dims)", 2, 20, || {
+        trainer.run(&eps, 1).unwrap();
+    });
+    common::bench("episode generation (8 workers x 2)", 1, 5, || {
+        std::hint::black_box(episodes_from_generator(aliccp_like(10_000), &dims, 8, 2).len());
+    });
+}

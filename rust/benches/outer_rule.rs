@@ -1,0 +1,63 @@
+//! Bench: regenerate the paper's **§2.1.3** in-text comparison — the
+//! central-Gather outer update (transfer K(N−1) into one node, O(KN)
+//! central compute) vs the reordered per-worker-gradients + Ring-AllReduce
+//! update (2K(N−1)/N per node, O(K)).
+//!
+//! Verifies both the modeled-time advantage and the *exact byte counts*
+//! the paper derives, plus wall-time of the real data movement.
+//!
+//! Run: `cargo bench --bench outer_rule`
+
+mod common;
+
+use gmeta::collectives::{allreduce_naive, ring_allreduce};
+use gmeta::config::ClusterSpec;
+use gmeta::net::Topology;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== §2.1.3 outer-update-rule comparison ===\n");
+    let rows = gmeta::harness::outer_rule_sweep()?;
+    println!(
+        "{:>10} {:>6} {:>13} {:>13} {:>8} {:>15} {:>15}",
+        "K(floats)", "N", "central(s)", "ring(s)", "speedup", "central bytes", "ring bytes"
+    );
+    for r in &rows {
+        println!(
+            "{:>10} {:>6} {:>13.6} {:>13.6} {:>7.1}x {:>15.0} {:>15.0}",
+            r.k_floats,
+            r.world,
+            r.central_time,
+            r.ring_time,
+            r.central_time / r.ring_time,
+            r.central_bytes,
+            r.ring_bytes
+        );
+        // Paper's algebra: central gather+broadcast moves 2K(N-1) total;
+        // ring moves 2K(N-1)/N *per rank* -> 2K(N-1) total as well; the
+        // difference is WHERE it concentrates (root NIC vs all links).
+        let k = (r.k_floats * 4) as f64;
+        let n = r.world as f64;
+        assert!((r.central_bytes - 2.0 * k * (n - 1.0)).abs() / r.central_bytes < 1e-9);
+        assert!((r.ring_bytes - 2.0 * k * (n - 1.0)).abs() / r.ring_bytes < 1e-2);
+        // Time: ring must win at scale for non-trivial K.
+        if r.world >= 8 && r.k_floats >= 1 << 18 {
+            assert!(r.central_time / r.ring_time > 2.0, "ring advantage missing");
+        }
+    }
+    println!("\nbyte-count identities verified (paper §2.1.3 algebra).");
+
+    println!("\n=== wall time of the real reductions (K = 2^20 floats) ===");
+    let k = 1 << 20;
+    for world in [4usize, 8, 16] {
+        let topo = Topology::new(ClusterSpec::gpu(world / 4, 4));
+        common::bench(&format!("ring_allreduce N={world}"), 1, 10, || {
+            let mut bufs: Vec<Vec<f32>> = (0..world).map(|r| vec![r as f32; k]).collect();
+            ring_allreduce(&mut bufs, &topo).unwrap();
+        });
+        common::bench(&format!("allreduce_naive N={world}"), 1, 10, || {
+            let mut bufs: Vec<Vec<f32>> = (0..world).map(|r| vec![r as f32; k]).collect();
+            allreduce_naive(&mut bufs, 0, &topo).unwrap();
+        });
+    }
+    Ok(())
+}

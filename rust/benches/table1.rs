@@ -1,0 +1,66 @@
+//! Bench: regenerate paper **Table 1** — average throughput (samples/s)
+//! and speedup ratio for DMAML/PS on {20,40,80,160} CPU workers vs G-Meta
+//! on {1×4, 2×4, 4×4, 8×4} GPUs, over the public (Ali-CCP-like) and
+//! in-house-like workloads.
+//!
+//! Also times the harness itself (simulation overhead must stay far below
+//! the simulated phase granularity — see DESIGN.md §7 L3 target).
+//!
+//! Run: `cargo bench --bench table1`
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== paper Table 1 reproduction (virtual-clock measurement) ===\n");
+    let steps = 24;
+    let rows = gmeta::harness::table1(steps, false)?;
+    println!(
+        "{:<34} {:>8} {:>14} {:>9}",
+        "configuration", "workers", "samples/s", "speedup"
+    );
+    for r in &rows {
+        println!(
+            "{:<34} {:>8} {:>14.0} {:>9.2}",
+            r.label, r.world, r.throughput, r.speedup_ratio
+        );
+    }
+
+    println!("\npaper reference:");
+    println!("  PS (public)      29k/1.00  51k/0.88  91k/0.78  138k/0.59");
+    println!("  PS (in-house)    27k/1.00  48k/0.88  79k/0.73  126k/0.58");
+    println!("  G-Meta (public)  90k/1.00 169k/0.94 322k/0.89  618k/0.86");
+    println!("  G-Meta (in-house)54k/1.00 105k/0.97 197k/0.91  380k/0.88");
+
+    // Shape assertions (who wins, roughly by how much, where it crosses).
+    let find = |label: &str| {
+        rows.iter()
+            .find(|r| r.label.starts_with(label))
+            .unwrap_or_else(|| panic!("missing row {label}"))
+    };
+    let ps160 = find("PS (public) 160");
+    let g2x4 = find("G-Meta (public) 2x4");
+    assert!(
+        g2x4.throughput > ps160.throughput,
+        "crossover failed: G-Meta 2x4 must beat PS@160"
+    );
+    let g8x4 = find("G-Meta (public) 8x4");
+    assert!(g8x4.speedup_ratio > 0.8, "G-Meta must scale well");
+    assert!(ps160.speedup_ratio < 0.7, "PS must scale poorly");
+    println!("\nshape checks passed: crossover + scaling trends match the paper.");
+
+    println!("\n=== harness overhead ===");
+    common::bench("gmeta 2x4 step (sim, public dims)", 1, 5, || {
+        let mut cfg = gmeta::config::ExperimentConfig::gmeta(2, 4);
+        cfg.dims = gmeta::harness::paper_scale_dims();
+        let eps = gmeta::coordinator::episodes_from_generator(
+            gmeta::data::aliccp_like(10_000),
+            &cfg.dims,
+            8,
+            2,
+        );
+        let mut t =
+            gmeta::coordinator::GMetaTrainer::new(cfg, "maml", 600, None).unwrap();
+        t.run(&eps, 4).unwrap();
+    });
+    Ok(())
+}

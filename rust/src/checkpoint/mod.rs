@@ -1,0 +1,331 @@
+//! Checkpointing: persist and restore the full meta state.
+//!
+//! The paper's deployment story (§3.4, continuous delivery of models every
+//! 1.2 hours) requires durable training state: the sharded embedding table
+//! ξ (only touched rows — the table is lazily materialized), the dense
+//! replica θ, and the training step counter.  The format is a single
+//! length-prefixed binary file per shard plus a JSON header, CRC-protected
+//! like the Meta-IO record format, so a torn write is detected rather than
+//! silently resumed from.
+//!
+//! Layout:
+//! ```text
+//! <dir>/meta.json                   header: step, dims, variant, world
+//! <dir>/dense.bin                   [u32 len][u32 crc][f32 values...]
+//! <dir>/shard_<rank>.bin            per row: [u64 row][f32 value x D]
+//!                                   (whole file framed with len+crc)
+//! ```
+//!
+//! Restore supports **resharding**: a checkpoint written at world size N
+//! can be loaded into a cluster of world size M — rows are re-routed to
+//! their new owner (`row % M`).  This is the elastic-scaling path an
+//! industrial trainer needs when the GPU allocation changes between
+//! delivery windows.
+
+use std::fs;
+use std::path::Path;
+
+use crate::config::ModelDims;
+use crate::dense::DenseParams;
+use crate::embedding::ShardedEmbedding;
+use crate::util::json::{self, num, obj, s, Value};
+use crate::Result;
+
+/// Everything needed to resume training.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub variant: String,
+    pub dims: ModelDims,
+    pub world: usize,
+    pub dense: Vec<f32>,
+    /// (row, values) pairs across all shards.
+    pub rows: Vec<(u64, Vec<f32>)>,
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn unframe(buf: &[u8], what: &str) -> Result<Vec<u8>> {
+    if buf.len() < 8 {
+        anyhow::bail!("{what}: truncated frame header");
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if buf.len() != 8 + len {
+        anyhow::bail!("{what}: frame length mismatch ({} vs {len})", buf.len() - 8);
+    }
+    let payload = &buf[8..];
+    if crc32fast::hash(payload) != crc {
+        anyhow::bail!("{what}: CRC mismatch — torn or corrupt checkpoint");
+    }
+    Ok(payload.to_vec())
+}
+
+fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        anyhow::bail!("f32 payload not a multiple of 4");
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Write a checkpoint of the trainer state into `dir`.
+pub fn save(
+    dir: &Path,
+    step: u64,
+    variant: &str,
+    dims: &ModelDims,
+    dense: &DenseParams,
+    embedding: &mut ShardedEmbedding,
+) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let world = embedding.world();
+
+    // Header.
+    let header = obj(vec![
+        ("step", num(step as f64)),
+        ("variant", s(variant)),
+        ("world", num(world as f64)),
+        (
+            "dims",
+            obj(vec![
+                ("batch", num(dims.batch as f64)),
+                ("slots", num(dims.slots as f64)),
+                ("valency", num(dims.valency as f64)),
+                ("emb_dim", num(dims.emb_dim as f64)),
+                ("hidden1", num(dims.hidden1 as f64)),
+                ("hidden2", num(dims.hidden2 as f64)),
+                ("task_dim", num(dims.task_dim as f64)),
+                ("emb_rows", num(dims.emb_rows as f64)),
+            ]),
+        ),
+    ]);
+    fs::write(dir.join("meta.json"), json::write(&header))?;
+
+    // Dense replica.
+    fs::write(dir.join("dense.bin"), frame(&f32s_to_bytes(&dense.flatten())))?;
+
+    // Embedding shards: touched rows only.
+    for rank in 0..world {
+        let mut payload = Vec::new();
+        for (row, vals) in embedding.export_shard(rank) {
+            payload.extend_from_slice(&row.to_le_bytes());
+            payload.extend_from_slice(&f32s_to_bytes(&vals));
+        }
+        fs::write(dir.join(format!("shard_{rank}.bin")), frame(&payload))?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint from `dir` (shards from whatever world size wrote it).
+pub fn load(dir: &Path) -> Result<Checkpoint> {
+    let header = json::parse(&fs::read_to_string(dir.join("meta.json"))?)?;
+    let need = |v: &Value, k: &str| -> Result<usize> {
+        v.field(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint header field {k:?} bad"))
+    };
+    let d = header.field("dims")?;
+    let dims = ModelDims {
+        batch: need(d, "batch")?,
+        slots: need(d, "slots")?,
+        valency: need(d, "valency")?,
+        emb_dim: need(d, "emb_dim")?,
+        hidden1: need(d, "hidden1")?,
+        hidden2: need(d, "hidden2")?,
+        task_dim: need(d, "task_dim")?,
+        emb_rows: need(d, "emb_rows")?,
+    };
+    let world = need(&header, "world")?;
+    let variant = header
+        .field("variant")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("bad variant"))?
+        .to_string();
+    let step = header.field("step")?.as_u64().unwrap_or(0);
+
+    let dense = bytes_to_f32s(&unframe(&fs::read(dir.join("dense.bin"))?, "dense.bin")?)?;
+
+    let dim = dims.emb_dim;
+    let stride = 8 + dim * 4;
+    let mut rows = Vec::new();
+    for rank in 0..world {
+        let name = format!("shard_{rank}.bin");
+        let payload = unframe(&fs::read(dir.join(&name))?, &name)?;
+        if payload.len() % stride != 0 {
+            anyhow::bail!("{name}: payload not a multiple of the row stride");
+        }
+        for rec in payload.chunks_exact(stride) {
+            let row = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+            rows.push((row, bytes_to_f32s(&rec[8..])?));
+        }
+    }
+    Ok(Checkpoint {
+        step,
+        variant,
+        dims,
+        world,
+        dense,
+        rows,
+    })
+}
+
+/// Restore a checkpoint into a (possibly different-world) embedding table
+/// + dense replica.  Rows re-route to `row % new_world` — the elastic
+/// resharding path.
+pub fn restore(
+    ckpt: &Checkpoint,
+    dense: &mut DenseParams,
+    embedding: &mut ShardedEmbedding,
+) -> Result<()> {
+    if dense.len() != ckpt.dense.len() {
+        anyhow::bail!(
+            "dense size mismatch: checkpoint {} vs model {}",
+            ckpt.dense.len(),
+            dense.len()
+        );
+    }
+    if embedding.dim() != ckpt.dims.emb_dim {
+        anyhow::bail!("embedding dim mismatch");
+    }
+    dense.unflatten_into(&ckpt.dense)?;
+    for (row, vals) in &ckpt.rows {
+        embedding.import_row(*row, vals)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            batch: 8,
+            slots: 2,
+            valency: 2,
+            emb_dim: 4,
+            hidden1: 8,
+            hidden2: 4,
+            task_dim: 4,
+            emb_rows: 1000,
+        }
+    }
+
+    fn touched_table(world: usize) -> ShardedEmbedding {
+        let mut t = ShardedEmbedding::new(world, 4, 9);
+        for row in [1u64, 5, 17, 123, 999] {
+            // Touch + perturb so the checkpoint differs from lazy init.
+            let owner = t.owner(row);
+            t.apply_grads(owner, &[row], &[0.5; 4], 0.1, crate::embedding::Optimizer::Sgd)
+                .unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn roundtrip_same_world() {
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(4);
+        let want: Vec<(u64, Vec<f32>)> =
+            [1u64, 5, 17, 123, 999].iter().map(|&r| (r, table.read(r))).collect();
+
+        save(tmp.path(), 42, "maml", &d, &dense, &mut table).unwrap();
+        let ckpt = load(tmp.path()).unwrap();
+        assert_eq!(ckpt.step, 42);
+        assert_eq!(ckpt.variant, "maml");
+        assert_eq!(ckpt.world, 4);
+
+        let mut dense2 = DenseParams::init(&d, "maml", 99);
+        let mut table2 = ShardedEmbedding::new(4, 4, 9);
+        restore(&ckpt, &mut dense2, &mut table2).unwrap();
+        assert_eq!(dense2.flatten(), dense.flatten());
+        for (row, vals) in want {
+            assert_eq!(table2.read(row), vals);
+        }
+    }
+
+    #[test]
+    fn reshard_to_different_world() {
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(4);
+        let want: Vec<(u64, Vec<f32>)> =
+            [1u64, 5, 17, 123, 999].iter().map(|&r| (r, table.read(r))).collect();
+        save(tmp.path(), 7, "maml", &d, &dense, &mut table).unwrap();
+
+        // Restore into a 7-way cluster: rows must land on their new owners.
+        let ckpt = load(tmp.path()).unwrap();
+        let mut dense2 = DenseParams::init(&d, "maml", 0);
+        let mut table2 = ShardedEmbedding::new(7, 4, 9);
+        restore(&ckpt, &mut dense2, &mut table2).unwrap();
+        for (row, vals) in want {
+            assert_eq!(table2.read(row), vals, "row {row} wrong after reshard");
+            assert_eq!(table2.owner(row), (row % 7) as usize);
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(2);
+        save(tmp.path(), 1, "maml", &d, &dense, &mut table).unwrap();
+        // Flip a byte in a shard file.
+        let path = tmp.path().join("shard_0.bin");
+        let mut data = fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0xFF;
+        fs::write(&path, data).unwrap();
+        let err = load(tmp.path()).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn dense_size_mismatch_rejected() {
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(2);
+        save(tmp.path(), 1, "maml", &d, &dense, &mut table).unwrap();
+        let ckpt = load(tmp.path()).unwrap();
+        let bigger = ModelDims {
+            hidden1: 16,
+            ..d
+        };
+        let mut dense2 = DenseParams::init(&bigger, "maml", 0);
+        let mut table2 = ShardedEmbedding::new(2, 4, 9);
+        assert!(restore(&ckpt, &mut dense2, &mut table2).is_err());
+    }
+
+    #[test]
+    fn missing_shard_file_is_an_error() {
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(3);
+        save(tmp.path(), 1, "maml", &d, &dense, &mut table).unwrap();
+        fs::remove_file(tmp.path().join("shard_2.bin")).unwrap();
+        assert!(load(tmp.path()).is_err());
+    }
+}

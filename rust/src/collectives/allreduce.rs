@@ -1,0 +1,245 @@
+//! AllReduce: ring (bandwidth-optimal) and naive (central) algorithms.
+//!
+//! Paper §2.1.3: the reordered outer update lets every worker compute its
+//! own dense gradient locally, after which one Ring-AllReduce of size K
+//! replaces the central Gather of N task-specific parameter sets.  Ring-
+//! AllReduce moves `2K(N-1)/N` per node with O(K) compute per node — the
+//! exact expressions the paper cites — and both show up below literally.
+
+use crate::net::{Topology, TrafficReport};
+use crate::Result;
+
+use super::{check_uniform_len, f32_bytes};
+
+/// Bandwidth-optimal Ring-AllReduce (reduce-scatter + all-gather).
+///
+/// In-place: every rank's buffer ends up holding the element-wise sum.
+/// The buffer is chunked into N near-equal chunks; in step `s` of each of
+/// the two phases, rank `i` sends one chunk to rank `(i+1) % N`.  Each of
+/// the `2(N-1)` steps moves one chunk over every link concurrently, so the
+/// modeled step time is the slowest link's α-β time for that chunk — the
+/// ring's bottleneck link (inter-node when the ring spans nodes).
+pub fn ring_allreduce(bufs: &mut [Vec<f32>], topo: &Topology) -> Result<TrafficReport> {
+    let n = bufs.len();
+    let len = check_uniform_len(bufs)?;
+    let mut report = TrafficReport::default();
+    if n <= 1 || len == 0 {
+        return Ok(report);
+    }
+
+    // Chunk boundaries: chunk c covers [starts[c], starts[c+1]).
+    let base = len / n;
+    let extra = len % n;
+    let mut starts = Vec::with_capacity(n + 1);
+    let mut acc = 0usize;
+    for c in 0..=n {
+        starts.push(acc);
+        if c < n {
+            acc += base + usize::from(c < extra);
+        }
+    }
+    let chunk_range = |c: usize| (starts[c], starts[c + 1]);
+
+    let bottleneck = topo.ring_bottleneck();
+
+    // Both phases run in place with NO staging copies: within one step,
+    // the chunk a rank sends is never the chunk it receives into (they
+    // differ by one ring position), so applying the sends sequentially is
+    // equivalent to the simultaneous exchange.  `split_two` gets disjoint
+    // &mut to the src/dst rank buffers (§Perf: removing the staged chunk
+    // clones roughly halved the wall time of large reductions).
+    fn split_two<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+        debug_assert_ne!(a, b);
+        if a < b {
+            let (lo, hi) = xs.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = xs.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
+    }
+
+    // Phase 1: reduce-scatter. After N-1 steps, rank i holds the full sum
+    // for chunk (i+1) % n.
+    for step in 0..n - 1 {
+        let mut max_chunk = 0usize;
+        for src in 0..n {
+            let dst = (src + 1) % n;
+            // Chunk that src forwards at this step of reduce-scatter.
+            let c = (src + n - step) % n;
+            let (lo, hi) = chunk_range(c);
+            let (s, d) = split_two(bufs, src, dst);
+            for (x, v) in d[lo..hi].iter_mut().zip(&s[lo..hi]) {
+                *x += *v;
+            }
+            topo.account(src, dst, f32_bytes(hi - lo), &mut report);
+            max_chunk = max_chunk.max(hi - lo);
+        }
+        report.time += bottleneck.transfer_time(f32_bytes(max_chunk));
+    }
+
+    // Phase 2: all-gather. Rank (c-1+n)%n owns the reduced chunk c and the
+    // ring circulates finished chunks for N-1 more steps.
+    for step in 0..n - 1 {
+        let mut max_chunk = 0usize;
+        for src in 0..n {
+            let dst = (src + 1) % n;
+            let c = (src + 1 + n - step) % n;
+            let (lo, hi) = chunk_range(c);
+            let (s, d) = split_two(bufs, src, dst);
+            d[lo..hi].copy_from_slice(&s[lo..hi]);
+            topo.account(src, dst, f32_bytes(hi - lo), &mut report);
+            max_chunk = max_chunk.max(hi - lo);
+        }
+        report.time += bottleneck.transfer_time(f32_bytes(max_chunk));
+    }
+
+    Ok(report)
+}
+
+/// Naive central AllReduce: gather all buffers at `root`, sum there,
+/// broadcast the result.  Kept as the §2.1.3 comparison point: the root
+/// receives `K(N-1)` bytes serialized through its single NIC and performs
+/// O(KN) additions.
+pub fn allreduce_naive(
+    bufs: &mut [Vec<f32>],
+    root: usize,
+    topo: &Topology,
+) -> Result<TrafficReport> {
+    let n = bufs.len();
+    let len = check_uniform_len(bufs)?;
+    let mut report = TrafficReport::default();
+    if n <= 1 || len == 0 {
+        return Ok(report);
+    }
+
+    // Gather: N-1 messages of the full buffer converge on root's NIC —
+    // serialized (no ring parallelism), which is the bottleneck the
+    // reordering removes.
+    let mut sum = bufs[root].clone();
+    for src in 0..n {
+        if src == root {
+            continue;
+        }
+        for (s, v) in sum.iter_mut().zip(&bufs[src]) {
+            *s += *v;
+        }
+        let bytes = f32_bytes(len);
+        topo.account(src, root, bytes, &mut report);
+        report.time += topo.p2p_time(src, root, bytes);
+    }
+
+    // Broadcast result back, again serialized through root's NIC.
+    for dst in 0..n {
+        if dst == root {
+            bufs[dst].copy_from_slice(&sum);
+            continue;
+        }
+        bufs[dst].copy_from_slice(&sum);
+        let bytes = f32_bytes(len);
+        topo.account(root, dst, bytes, &mut report);
+        report.time += topo.p2p_time(root, dst, bytes);
+    }
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn topo(nodes: usize, wpn: usize) -> Topology {
+        Topology::new(ClusterSpec::gpu(nodes, wpn))
+    }
+
+    fn make_bufs(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|r| (0..len).map(|i| (r * len + i) as f32).collect())
+            .collect()
+    }
+
+    fn expected_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let len = bufs[0].len();
+        (0..len).map(|i| bufs.iter().map(|b| b[i]).sum()).collect()
+    }
+
+    #[test]
+    fn ring_allreduce_sums_all_ranks() {
+        for n in [1usize, 2, 3, 4, 7, 8] {
+            for len in [0usize, 1, 5, 64, 113] {
+                let mut bufs = make_bufs(n, len);
+                let want = expected_sum(&bufs);
+                ring_allreduce(&mut bufs, &topo(2.min(n), n.div_ceil(2.min(n)))).unwrap();
+                for b in &bufs {
+                    for (got, want) in b.iter().zip(&want) {
+                        assert!((got - want).abs() < 1e-3, "n={n} len={len}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_allreduce_matches_ring() {
+        let mut a = make_bufs(5, 37);
+        let mut b = a.clone();
+        ring_allreduce(&mut a, &topo(1, 5)).unwrap();
+        allreduce_naive(&mut b, 0, &topo(1, 5)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            for (u, v) in x.iter().zip(y) {
+                assert!((u - v).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_moves_2k_over_n_per_rank() {
+        // Paper §2.1.3: ring transfers 2K(N-1)/N per node.
+        let n = 8;
+        let len = 800; // divisible by n
+        let mut bufs = make_bufs(n, len);
+        let r = ring_allreduce(&mut bufs, &topo(2, 4)).unwrap();
+        let k = f32_bytes(len);
+        let per_rank_expected = 2.0 * k * (n as f64 - 1.0) / n as f64;
+        let per_rank_actual = r.total_bytes() / n as f64;
+        assert!(
+            (per_rank_actual - per_rank_expected).abs() / per_rank_expected < 1e-9,
+            "expected {per_rank_expected}, got {per_rank_actual}"
+        );
+    }
+
+    #[test]
+    fn naive_moves_k_n_minus_1_to_root() {
+        let n = 8;
+        let len = 800;
+        let mut bufs = make_bufs(n, len);
+        let r = allreduce_naive(&mut bufs, 0, &topo(2, 4)).unwrap();
+        let k = f32_bytes(len);
+        // Gather K(N-1) + broadcast K(N-1).
+        assert!((r.total_bytes() - 2.0 * k * (n as f64 - 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_faster_than_naive_at_scale() {
+        let n = 16;
+        let len = 1 << 18;
+        let t = topo(4, 4);
+        let mut a = make_bufs(n, len);
+        let mut b = a.clone();
+        let ring = ring_allreduce(&mut a, &t).unwrap();
+        let naive = allreduce_naive(&mut b, 0, &t).unwrap();
+        assert!(
+            ring.time * 2.0 < naive.time,
+            "ring {} vs naive {}",
+            ring.time,
+            naive.time
+        );
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let mut bufs = vec![vec![0.0; 4], vec![0.0; 5]];
+        assert!(ring_allreduce(&mut bufs, &topo(1, 2)).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! AlltoAll: the embedding-exchange primitive (paper §2.1.1).
+//!
+//! G-Meta partitions the embedding table row-wise across workers; each
+//! iteration every worker needs rows owned by every other worker, so the
+//! lookup (and the sparse-gradient return path) is an AlltoAll.  The paper
+//! contrasts this with parameter-server pulls: AlltoAll uses the full
+//! bisection bandwidth of the worker mesh instead of funneling through
+//! dedicated servers.
+//!
+//! Implementation: the standard pairwise-exchange schedule.  In step `s`
+//! (1..N), rank `i` exchanges with `i XOR`-free partner `(i+s) % N`; all N
+//! pairs are active concurrently, so the step's modeled time is the
+//! slowest pair's α-β time.  Message payloads are generic so the same
+//! primitive carries embedding rows, gradients, or raw test payloads.
+
+use crate::net::{Topology, TrafficReport};
+use crate::Result;
+
+/// Generic AlltoAll. `sends[src][dst]` is the message src → dst
+/// (`sends[i][i]` is kept locally, charged zero network time).
+/// Returns `recv` with `recv[dst][src]` = original `sends[src][dst]`.
+pub fn alltoall<T>(
+    sends: Vec<Vec<T>>,
+    bytes_of: impl Fn(&T) -> usize,
+    topo: &Topology,
+) -> Result<(Vec<Vec<T>>, TrafficReport)> {
+    let n = sends.len();
+    for (i, row) in sends.iter().enumerate() {
+        if row.len() != n {
+            anyhow::bail!("alltoall: rank {i} has {} destinations, want {n}", row.len());
+        }
+    }
+    let mut report = TrafficReport::default();
+
+    // Move payloads into an Option matrix so we can take them out in the
+    // schedule order without cloning.
+    let mut mat: Vec<Vec<Option<T>>> = sends
+        .into_iter()
+        .map(|row| row.into_iter().map(Some).collect())
+        .collect();
+
+    let mut recv: Vec<Vec<Option<T>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+
+    // Local copies (src == dst): free.
+    for i in 0..n {
+        recv[i][i] = mat[i][i].take();
+    }
+
+    // Pairwise exchange steps.
+    for s in 1..n {
+        let mut step_time: f64 = 0.0;
+        for src in 0..n {
+            let dst = (src + s) % n;
+            let msg = mat[src][dst].take().expect("message already sent");
+            let bytes = bytes_of(&msg) as f64;
+            topo.account(src, dst, bytes, &mut report);
+            step_time = step_time.max(topo.p2p_time(src, dst, bytes));
+            recv[dst][src] = Some(msg);
+        }
+        report.time += step_time;
+    }
+
+    let recv = recv
+        .into_iter()
+        .map(|row| {
+            row.into_iter()
+                .map(|m| m.expect("alltoall: missing message"))
+                .collect()
+        })
+        .collect();
+    Ok((recv, report))
+}
+
+/// AlltoAll over `Vec<f32>` payloads (the common case).
+pub fn alltoall_bytes(
+    sends: Vec<Vec<Vec<f32>>>,
+    topo: &Topology,
+) -> Result<(Vec<Vec<Vec<f32>>>, TrafficReport)> {
+    alltoall(sends, |m| m.len() * std::mem::size_of::<f32>(), topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn topo(nodes: usize, wpn: usize) -> Topology {
+        Topology::new(ClusterSpec::gpu(nodes, wpn))
+    }
+
+    #[test]
+    fn alltoall_transposes_messages() {
+        let n = 5;
+        let sends: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|s| (0..n).map(|d| vec![(s * 10 + d) as f32]).collect())
+            .collect();
+        let (recv, _) = alltoall_bytes(sends, &topo(1, n)).unwrap();
+        for dst in 0..n {
+            for src in 0..n {
+                assert_eq!(recv[dst][src], vec![(src * 10 + dst) as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn local_messages_cost_nothing() {
+        let sends = vec![vec![vec![1.0f32; 1000]]];
+        let (_, r) = alltoall_bytes(sends, &topo(1, 1)).unwrap();
+        assert_eq!(r.total_bytes(), 0.0);
+        assert_eq!(r.time, 0.0);
+    }
+
+    #[test]
+    fn intra_node_traffic_stays_intra() {
+        let n = 4;
+        let sends: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| (0..n).map(|_| vec![0.0f32; 100]).collect())
+            .collect();
+        let (_, r) = alltoall_bytes(sends, &topo(1, n)).unwrap();
+        assert_eq!(r.inter_bytes, 0.0);
+        assert!(r.intra_bytes > 0.0);
+
+        let sends: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| (0..n).map(|_| vec![0.0f32; 100]).collect())
+            .collect();
+        let (_, r2) = alltoall_bytes(sends, &topo(2, 2)).unwrap();
+        assert!(r2.inter_bytes > 0.0);
+        assert!(r2.intra_bytes > 0.0);
+        // Same payload crossing slower links must cost more time.
+        assert!(r2.time > r.time);
+    }
+
+    #[test]
+    fn uneven_payloads_allowed() {
+        let sends = vec![
+            vec![vec![], vec![1.0, 2.0]],
+            vec![vec![3.0], vec![]],
+        ];
+        let (recv, r) = alltoall_bytes(sends, &topo(1, 2)).unwrap();
+        assert_eq!(recv[1][0], vec![1.0, 2.0]);
+        assert_eq!(recv[0][1], vec![3.0]);
+        assert_eq!(recv[0][0], Vec::<f32>::new());
+        assert_eq!(r.total_bytes(), 12.0);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let sends = vec![vec![vec![0.0f32]; 3], vec![vec![0.0f32]; 2]];
+        assert!(alltoall_bytes(sends, &topo(1, 2)).is_err());
+    }
+
+    #[test]
+    fn nvlink_alltoall_faster_than_socket() {
+        let n = 8;
+        let mk = || -> Vec<Vec<Vec<f32>>> {
+            (0..n)
+                .map(|_| (0..n).map(|_| vec![0.0f32; 1 << 16]).collect())
+                .collect()
+        };
+        let (_, fast) =
+            alltoall_bytes(mk(), &Topology::new(ClusterSpec::gpu(2, 4))).unwrap();
+        let (_, slow) =
+            alltoall_bytes(mk(), &Topology::new(ClusterSpec::gpu_commodity(2, 4))).unwrap();
+        assert!(fast.time < slow.time, "fast={} slow={}", fast.time, slow.time);
+    }
+}

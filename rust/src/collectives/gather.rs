@@ -1,0 +1,136 @@
+//! Gather / Broadcast: the central-node primitives of the unoptimized
+//! outer update (paper §2.1.3's "requires a central node to Gather all N
+//! task-specific parameters").  Kept as the ablation baseline for
+//! `bench-outer-rule`.
+
+use crate::net::{Topology, TrafficReport};
+use crate::Result;
+
+/// Gather every rank's buffer at `root`.  The N-1 incoming messages all
+/// traverse the root's single NIC, so their times are summed (this is the
+/// serialization bottleneck the reordered update removes).
+pub fn gather(
+    bufs: &[Vec<f32>],
+    root: usize,
+    topo: &Topology,
+) -> Result<(Vec<Vec<f32>>, TrafficReport)> {
+    if root >= bufs.len() {
+        anyhow::bail!("gather root {root} out of range ({} ranks)", bufs.len());
+    }
+    let mut report = TrafficReport::default();
+    let mut out = Vec::with_capacity(bufs.len());
+    for (src, b) in bufs.iter().enumerate() {
+        out.push(b.clone());
+        if src != root {
+            let bytes = (b.len() * 4) as f64;
+            topo.account(src, root, bytes, &mut report);
+            report.time += topo.p2p_time(src, root, bytes);
+        }
+    }
+    Ok((out, report))
+}
+
+/// Broadcast `buf` from `root` to all `n` ranks via a binomial tree:
+/// ceil(log2 n) rounds, each round doubling the set of ranks that hold the
+/// data, with concurrent transfers within a round.
+pub fn broadcast(
+    buf: &[f32],
+    root: usize,
+    n: usize,
+    topo: &Topology,
+) -> Result<(Vec<Vec<f32>>, TrafficReport)> {
+    if root >= n {
+        anyhow::bail!("broadcast root {root} out of range ({n} ranks)");
+    }
+    let mut report = TrafficReport::default();
+    let mut out: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+    out[root] = Some(buf.to_vec());
+
+    // Ranks relative to root: relative rank r receives in round
+    // floor(log2 r) from relative rank r - 2^floor(log2 r).
+    let bytes = (buf.len() * 4) as f64;
+    let mut round_size = 1usize;
+    while round_size < n {
+        let mut round_time: f64 = 0.0;
+        for rel in round_size..(2 * round_size).min(n) {
+            let src_rel = rel - round_size;
+            let src = (root + src_rel) % n;
+            let dst = (root + rel) % n;
+            let data = out[src].clone().expect("broadcast source not ready");
+            out[dst] = Some(data);
+            topo.account(src, dst, bytes, &mut report);
+            round_time = round_time.max(topo.p2p_time(src, dst, bytes));
+        }
+        report.time += round_time;
+        round_size *= 2;
+    }
+
+    Ok((
+        out.into_iter().map(|o| o.expect("broadcast hole")).collect(),
+        report,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn topo(n: usize) -> Topology {
+        Topology::new(ClusterSpec::gpu(n.div_ceil(4).max(1), 4.min(n)))
+    }
+
+    #[test]
+    fn gather_collects_everything() {
+        let bufs: Vec<Vec<f32>> = (0..6).map(|r| vec![r as f32; 3]).collect();
+        let (got, r) = gather(&bufs, 2, &topo(6)).unwrap();
+        assert_eq!(got, bufs);
+        // 5 senders × 12 bytes.
+        assert_eq!(r.total_bytes(), 5.0 * 12.0);
+        assert!(r.time > 0.0);
+    }
+
+    #[test]
+    fn gather_time_is_serialized() {
+        // Time must scale ~linearly with sender count (single NIC at root).
+        let mk = |n: usize| -> Vec<Vec<f32>> { (0..n).map(|_| vec![0.0; 1 << 16]).collect() };
+        let (_, small) = gather(&mk(4), 0, &topo(4)).unwrap();
+        let (_, large) = gather(&mk(16), 0, &topo(16)).unwrap();
+        assert!(large.time > 3.0 * small.time);
+    }
+
+    #[test]
+    fn broadcast_delivers_to_all() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        for n in [1usize, 2, 3, 5, 8] {
+            for root in [0, n - 1] {
+                let (got, _) = broadcast(&data, root, n, &topo(n)).unwrap();
+                assert_eq!(got.len(), n);
+                for g in got {
+                    assert_eq!(g, data);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_is_logarithmic() {
+        let data = vec![0.0f32; 1 << 16];
+        let (_, t8) = broadcast(&data, 0, 8, &topo(8)).unwrap();
+        let (_, t16) = broadcast(&data, 0, 16, &topo(16)).unwrap();
+        // Binomial tree: one extra round (plus a worse link mix), far
+        // below the linear 15/7 growth a serialized root would show.
+        assert!(
+            t16.time < (15.0 / 7.0) * t8.time,
+            "t8={} t16={}",
+            t8.time,
+            t16.time
+        );
+    }
+
+    #[test]
+    fn bad_roots_rejected() {
+        assert!(gather(&[vec![0.0]], 3, &topo(1)).is_err());
+        assert!(broadcast(&[0.0], 3, 2, &topo(2)).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Hierarchical AllReduce: exploit the NVLink/RoCE bandwidth asymmetry.
+//!
+//! The flat ring (allreduce.rs) is bandwidth-optimal on a homogeneous
+//! network, but a GPU cluster is two-tier: NVLink inside a node is ~20×
+//! faster than RoCE between nodes (paper §2.1.4).  NCCL's answer — and
+//! ours — is hierarchy:
+//!
+//!   1. intra-node reduce to a node leader       (NVLink, parallel/node)
+//!   2. inter-node ring over the M leaders       (RoCE, 2K(M−1)/M each)
+//!   3. intra-node broadcast from the leader     (NVLink)
+//!
+//! vs the flat ring whose every step is bottlenecked by the slowest link.
+//! For N workers on M nodes, inter-node traffic drops from 2K(N−1)/N per
+//! *worker* to 2K(M−1)/M per *node* — the ablation bench quantifies it.
+
+use crate::net::{Topology, TrafficReport};
+use crate::Result;
+
+use super::{check_uniform_len, f32_bytes, ring_allreduce};
+
+/// Hierarchical AllReduce over the cluster topology.  Falls back to the
+/// flat ring on a single node (where it IS the optimum).
+pub fn hierarchical_allreduce(bufs: &mut [Vec<f32>], topo: &Topology) -> Result<TrafficReport> {
+    let n = bufs.len();
+    let len = check_uniform_len(bufs)?;
+    let mut report = TrafficReport::default();
+    if n <= 1 || len == 0 {
+        return Ok(report);
+    }
+    let wpn = topo.cluster.workers_per_node;
+    let nodes = topo.cluster.nodes;
+    if nodes <= 1 || wpn <= 1 {
+        return ring_allreduce(bufs, topo);
+    }
+    if nodes * wpn != n {
+        anyhow::bail!(
+            "hierarchical_allreduce: topology {}x{} does not cover {n} buffers",
+            nodes,
+            wpn
+        );
+    }
+    let intra = topo.cluster.intra_link;
+    let bytes = f32_bytes(len);
+
+    // Phase 1: intra-node tree reduce onto each node leader (rank node*wpn).
+    // ceil(log2 wpn) rounds, all nodes in parallel.
+    let mut span = 1usize;
+    while span < wpn {
+        let mut round_time: f64 = 0.0;
+        for node in 0..nodes {
+            let base = node * wpn;
+            let mut local = 0;
+            while local + span < wpn {
+                let dst = base + local;
+                let src = base + local + span;
+                let (d, s) = two(bufs, dst, src);
+                for (x, v) in d.iter_mut().zip(s.iter()) {
+                    *x += *v;
+                }
+                topo.account(src, dst, bytes, &mut report);
+                round_time = round_time.max(intra.transfer_time(bytes));
+                local += span * 2;
+            }
+        }
+        report.time += round_time;
+        span *= 2;
+    }
+
+    // Phase 2: ring among the M leaders over the inter-node links.
+    // Extract leader buffers, ring-reduce them with a leaders-only
+    // topology, write back.
+    let mut leader_bufs: Vec<Vec<f32>> = (0..nodes)
+        .map(|node| std::mem::take(&mut bufs[node * wpn]))
+        .collect();
+    let leader_topo = Topology::new(crate::config::ClusterSpec {
+        nodes,
+        workers_per_node: 1,
+        ..topo.cluster
+    });
+    let ring_report = ring_allreduce(&mut leader_bufs, &leader_topo)?;
+    report.merge(&ring_report);
+    for (node, buf) in leader_bufs.into_iter().enumerate() {
+        bufs[node * wpn] = buf;
+    }
+
+    // Phase 3: intra-node broadcast from each leader.
+    let mut span = wpn.next_power_of_two() / 2;
+    let mut round = Vec::new();
+    while span >= 1 {
+        round.clear();
+        for node in 0..nodes {
+            let base = node * wpn;
+            let mut local = 0;
+            while local + span < wpn {
+                round.push((base + local, base + local + span));
+                local += span * 2;
+            }
+        }
+        if !round.is_empty() {
+            let mut round_time: f64 = 0.0;
+            for &(src, dst) in &round {
+                let (s, d) = two(bufs, src, dst);
+                d.copy_from_slice(s);
+                topo.account(src, dst, bytes, &mut report);
+                round_time = round_time.max(intra.transfer_time(bytes));
+            }
+            report.time += round_time;
+        }
+        span /= 2;
+    }
+
+    Ok(report)
+}
+
+/// Disjoint mutable borrows of two distinct indices.
+fn two<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = xs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = xs.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn mk(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|r| (0..len).map(|i| ((r * 31 + i * 7) % 13) as f32).collect())
+            .collect()
+    }
+
+    fn want_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        (0..bufs[0].len())
+            .map(|i| bufs.iter().map(|b| b[i]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn hierarchical_sums_correctly() {
+        for (nodes, wpn) in [(2usize, 4usize), (4, 2), (3, 3), (2, 5), (4, 4)] {
+            let n = nodes * wpn;
+            for len in [1usize, 7, 64, 200] {
+                let topo = Topology::new(ClusterSpec::gpu(nodes, wpn));
+                let mut bufs = mk(n, len);
+                let want = want_sum(&bufs);
+                hierarchical_allreduce(&mut bufs, &topo).unwrap();
+                for (r, b) in bufs.iter().enumerate() {
+                    for (i, (g, w)) in b.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - w).abs() < 1e-3,
+                            "nodes={nodes} wpn={wpn} len={len} rank={r} i={i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_falls_back_to_ring() {
+        let topo = Topology::new(ClusterSpec::gpu(1, 4));
+        let mut a = mk(4, 50);
+        let mut b = a.clone();
+        let ra = hierarchical_allreduce(&mut a, &topo).unwrap();
+        let rb = ring_allreduce(&mut b, &topo).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ra.time, rb.time);
+    }
+
+    #[test]
+    fn hierarchical_moves_less_inter_node_traffic() {
+        let topo = Topology::new(ClusterSpec::gpu(4, 4));
+        let len = 1 << 16;
+        let mut a = mk(16, len);
+        let mut b = a.clone();
+        let hier = hierarchical_allreduce(&mut a, &topo).unwrap();
+        let flat = ring_allreduce(&mut b, &topo).unwrap();
+        assert_eq!(a, b, "results must agree");
+        // Inter-node bytes: flat ring carries 2K(N-1)/N over each of the
+        // M boundary links; hierarchy carries 2K(M-1)/M per boundary link.
+        // For N=16, M=4 that is 1.875K vs 1.5K per link — strictly less,
+        // and the advantage grows with wpn.
+        assert!(
+            hier.inter_bytes < flat.inter_bytes,
+            "hier {} !< flat {}",
+            hier.inter_bytes,
+            flat.inter_bytes
+        );
+        assert!(
+            hier.time < flat.time,
+            "hier {} !< flat {}",
+            hier.time,
+            flat.time
+        );
+    }
+
+    #[test]
+    fn topology_mismatch_rejected() {
+        let topo = Topology::new(ClusterSpec::gpu(2, 4));
+        let mut bufs = mk(6, 8); // 6 != 2*4
+        assert!(hierarchical_allreduce(&mut bufs, &topo).is_err());
+    }
+}

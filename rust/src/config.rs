@@ -1,0 +1,326 @@
+//! Typed configuration for clusters, models, datasets and experiments.
+//!
+//! Everything the CLI or an example can set lives here; EXPERIMENTS.md
+//! records the exact configs used per reported row.
+
+use crate::net::LinkClass;
+
+/// Which distributed architecture executes the training run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Architecture {
+    /// G-Meta hybrid parallelism: row-sharded embeddings exchanged via
+    /// AlltoAll + replicated dense via Ring-AllReduce (paper §2.1).
+    GMeta,
+    /// DMAML parameter-server baseline: embedding + dense shards held by
+    /// dedicated server nodes, workers pull/push (paper's baseline [5]).
+    ParameterServer,
+}
+
+/// Physical topology of the training cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    /// Number of machines.
+    pub nodes: usize,
+    /// Workers (GPUs for G-Meta, CPU worker processes for PS) per node.
+    pub workers_per_node: usize,
+    /// Inter-node transport (Socket vs RoCE — paper §2.1.4).
+    pub inter_link: LinkClass,
+    /// Intra-node transport (PCIe/system memory vs NVLink).
+    pub intra_link: LinkClass,
+    /// PS only: number of parameter-server nodes.
+    pub servers: usize,
+    /// Straggler noise (lognormal sigma) on per-worker I/O time.
+    pub io_jitter: f64,
+    /// Straggler noise on per-worker compute time.  Dedicated GPU nodes
+    /// are quiet (~0.08); multi-tenant CPU pods in a shared datacenter are
+    /// not (~0.5) — the paper's own explanation for the PS speedup-ratio
+    /// collapse ("the I/O stage in one node may block the whole
+    /// iteration with high probability", §3.3).
+    pub compute_jitter: f64,
+}
+
+impl ClusterSpec {
+    /// G-Meta GPU cluster `nodes x gpus` with the paper's optimized
+    /// transports (RoCE inter-node, NVLink intra-node).
+    pub fn gpu(nodes: usize, gpus_per_node: usize) -> Self {
+        Self {
+            nodes,
+            workers_per_node: gpus_per_node,
+            inter_link: LinkClass::RoCE,
+            intra_link: LinkClass::NvLink,
+            servers: 0,
+            io_jitter: 0.35,
+            compute_jitter: 0.08,
+        }
+    }
+
+    /// G-Meta GPU cluster on commodity transports (the Figure-4 baseline:
+    /// socket network between nodes, PCIe/system memory within).
+    pub fn gpu_commodity(nodes: usize, gpus_per_node: usize) -> Self {
+        Self {
+            nodes,
+            workers_per_node: gpus_per_node,
+            inter_link: LinkClass::Socket,
+            intra_link: LinkClass::Pcie,
+            servers: 0,
+            io_jitter: 0.35,
+            compute_jitter: 0.08,
+        }
+    }
+
+    /// DMAML CPU PS cluster: `workers` single-worker nodes + `servers`
+    /// server nodes on a socket network (paper §3.1.1).
+    pub fn cpu_ps(workers: usize, servers: usize) -> Self {
+        Self {
+            nodes: workers,
+            workers_per_node: 1,
+            inter_link: LinkClass::Socket,
+            intra_link: LinkClass::Pcie,
+            servers,
+            io_jitter: 0.35,
+            compute_jitter: 0.4,
+        }
+    }
+
+    /// Total worker count.
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.workers_per_node
+    }
+
+    /// Node index hosting worker `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.workers_per_node
+    }
+
+    /// Whether two ranks share a machine (intra-node transfer).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+/// Static model dimensions — must match `artifacts/manifest.json` when the
+/// real-numerics runtime is used (the loader cross-checks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub batch: usize,
+    pub slots: usize,
+    pub valency: usize,
+    pub emb_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub task_dim: usize,
+    /// Embedding table rows (the huge sharded ξ — L3-owned, not in HLO).
+    pub emb_rows: usize,
+}
+
+impl Default for ModelDims {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            slots: 16,
+            valency: 2,
+            emb_dim: 16,
+            hidden1: 128,
+            hidden2: 64,
+            task_dim: 16,
+            emb_rows: 1 << 20,
+        }
+    }
+}
+
+impl ModelDims {
+    /// Embedding values gathered per sample (one support or query row set).
+    pub fn lookups_per_sample(&self) -> usize {
+        self.slots * self.valency
+    }
+
+    /// fp32 parameter count of the dense tower (excl. task embedding).
+    pub fn dense_params(&self) -> usize {
+        let d_in = self.slots * self.emb_dim;
+        d_in * self.hidden1
+            + self.hidden1
+            + self.hidden1 * self.hidden2
+            + self.hidden2
+            + self.hidden2
+            + 1
+    }
+
+    /// fp32 parameter count of the embedding table.
+    pub fn embedding_params(&self) -> usize {
+        self.emb_rows * self.emb_dim
+    }
+
+    /// Analytic FLOP count of one *forward* pass for `n` samples
+    /// (pool + three tower matmuls). Backward ≈ 2x forward.
+    pub fn forward_flops(&self, n: usize) -> f64 {
+        let d_in = (self.slots * self.emb_dim) as f64;
+        let pool = (self.slots * self.valency * self.emb_dim) as f64;
+        let mm = 2.0 * (d_in * self.hidden1 as f64)
+            + 2.0 * (self.hidden1 as f64 * self.hidden2 as f64)
+            + 2.0 * self.hidden2 as f64;
+        n as f64 * (pool + mm)
+    }
+
+    /// FLOPs of one fused meta-train step for `n` support + `n` query
+    /// samples: inner fwd+bwd (3x fwd) + outer fwd+bwd (3x fwd).
+    pub fn metatrain_flops(&self, n: usize) -> f64 {
+        6.0 * self.forward_flops(n)
+    }
+
+    /// Bytes of embedding parameters gathered per sample (support+query
+    /// prefetched together — paper §2.1.1).
+    pub fn gathered_bytes_per_sample(&self) -> usize {
+        2 * self.lookups_per_sample() * self.emb_dim * 4
+    }
+}
+
+/// Meta-IO configuration toggles (paper §2.2 + Figure 4 ablation).
+#[derive(Debug, Clone, Copy)]
+pub struct IoConfig {
+    /// Binary framed records (TFRecord-like) vs string/CSV rows. The paper
+    /// found string decode dominates once GPUs shorten compute (§2.2.2).
+    pub binary_format: bool,
+    /// Sequential offset-range reads vs per-record random access (§2.2.2).
+    pub sequential_reads: bool,
+    /// Batch-level shuffle (vs sample-level, which would mix tasks; §2.2.1).
+    pub batch_level_shuffle: bool,
+    /// Number of read-ahead buffers in the loader pipeline.
+    pub prefetch_depth: usize,
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        Self {
+            binary_format: true,
+            sequential_reads: true,
+            batch_level_shuffle: true,
+            prefetch_depth: 2,
+        }
+    }
+}
+
+impl IoConfig {
+    /// The Figure-4 "no I/O optimization" configuration.
+    pub fn unoptimized() -> Self {
+        Self {
+            binary_format: false,
+            sequential_reads: false,
+            batch_level_shuffle: true,
+            prefetch_depth: 1,
+        }
+    }
+}
+
+/// Algorithmic switches for the meta-train loop.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    /// Inner-loop step size alpha (baked into artifacts for the real path).
+    pub alpha: f32,
+    /// Outer-loop (meta) step size beta (dense parameters).
+    pub beta: f32,
+    /// Outer-loop step size for embedding rows, applied through sparse
+    /// Adagrad.  Sparse features need per-coordinate adaptive steps: a
+    /// mean-normalized SGD step is ~1/(B·occurrences) and never moves a
+    /// row (the standard DLRM practice the paper's TF trainer also uses).
+    pub emb_lr: f32,
+    /// Fuse support+query embedding prefetch into one AlltoAll (§2.1.1).
+    /// Off = two lookup rounds per iteration.
+    pub fused_prefetch: bool,
+    /// Use the reordered outer update (per-worker grads + AllReduce,
+    /// §2.1.3). Off = central Gather of task-specific parameters.
+    pub reordered_outer_update: bool,
+    /// Hierarchical (NCCL-style intra-node + inter-node) AllReduce for the
+    /// dense gradients instead of the flat ring.  An extension beyond the
+    /// paper; ablated in `benches/outer_rule.rs`.
+    pub hierarchical_allreduce: bool,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.1,
+            beta: 0.05,
+            emb_lr: 0.05,
+            fused_prefetch: true,
+            reordered_outer_update: true,
+            hierarchical_allreduce: false,
+            steps: 100,
+            seed: 17,
+        }
+    }
+}
+
+/// A full experiment description (what EXPERIMENTS.md records per row).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub arch: Architecture,
+    pub cluster: ClusterSpec,
+    pub dims: ModelDims,
+    pub io: IoConfig,
+    pub train: TrainConfig,
+}
+
+impl ExperimentConfig {
+    pub fn gmeta(nodes: usize, gpus: usize) -> Self {
+        Self {
+            arch: Architecture::GMeta,
+            cluster: ClusterSpec::gpu(nodes, gpus),
+            dims: ModelDims::default(),
+            io: IoConfig::default(),
+            train: TrainConfig::default(),
+        }
+    }
+
+    pub fn ps(workers: usize, servers: usize) -> Self {
+        Self {
+            arch: Architecture::ParameterServer,
+            cluster: ClusterSpec::cpu_ps(workers, servers),
+            dims: ModelDims::default(),
+            io: IoConfig::default(),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_size_and_node_mapping() {
+        let c = ClusterSpec::gpu(2, 4);
+        assert_eq!(c.world_size(), 8);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(3), 0);
+        assert_eq!(c.node_of(4), 1);
+        assert!(c.same_node(0, 3));
+        assert!(!c.same_node(3, 4));
+    }
+
+    #[test]
+    fn dense_param_count_matches_manual() {
+        let d = ModelDims::default();
+        // 256*128 + 128 + 128*64 + 64 + 64 + 1
+        assert_eq!(d.dense_params(), 256 * 128 + 128 + 128 * 64 + 64 + 64 + 1);
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_samples() {
+        let d = ModelDims::default();
+        assert!((d.forward_flops(2) - 2.0 * d.forward_flops(1)).abs() < 1e-6);
+        assert!(d.metatrain_flops(1) > d.forward_flops(1));
+    }
+
+    #[test]
+    fn presets_have_expected_topologies() {
+        let e = ExperimentConfig::gmeta(2, 4);
+        assert_eq!(e.cluster.world_size(), 8);
+        assert_eq!(e.cluster.inter_link, LinkClass::RoCE);
+        let p = ExperimentConfig::ps(160, 40);
+        assert_eq!(p.cluster.world_size(), 160);
+        assert_eq!(p.cluster.servers, 40);
+        assert_eq!(p.cluster.inter_link, LinkClass::Socket);
+    }
+}

@@ -1,0 +1,706 @@
+//! The G-Meta trainer: hybrid parallelism per Algorithm 1 (paper §2.1).
+//!
+//! Each of the N workers owns (a) one row-shard of the embedding table ξ
+//! (model parallelism) and (b) a full replica of the dense parameters θ
+//! (data parallelism).  One iteration runs:
+//!
+//! 1. **Meta-IO** — workers ingest their task batches (charged by the
+//!    storage model; overlapped with compute when prefetch is on).
+//! 2. **Prefetch AlltoAll** (line 5) — *one* fused lookup for the support
+//!    AND query ids: ids are deduplicated across both sets, exchanged via
+//!    AlltoAll (requests then row vectors).  The unfused variant (two
+//!    rounds) exists for the ablation.
+//! 3. **Local inner + outer loops** (lines 6-10) — the fused
+//!    `{variant}_metatrain` artifact (real numerics through PJRT) or an
+//!    analytically-charged step (cluster-scale simulation).  The overlap
+//!    map implements line 9 (query positions aliasing support rows read
+//!    inner-adapted values; non-overlapping positions use the prefetched,
+//!    stale-by-one-inner-step values).
+//! 4. **Sparse outer update** (line 11) — positional embedding gradients
+//!    are reduced to unique rows, routed to owner shards via AlltoAll, and
+//!    applied by each owner.
+//! 5. **Dense outer update** (line 12) — per-worker dense grads are summed
+//!    with Ring-AllReduce and applied identically on every replica.  The
+//!    §2.1.3 *central* variant (Gather task params at a root, compute
+//!    there, Broadcast) is kept for `bench-outer-rule`.
+
+use crate::collectives::{alltoall, broadcast, gather, hierarchical_allreduce, ring_allreduce};
+use crate::config::ExperimentConfig;
+use crate::dense::DenseParams;
+use crate::embedding::plan::{build_overlap, LookupPlan};
+use crate::embedding::{Optimizer, ShardedEmbedding};
+use crate::meta::Episode;
+use crate::metrics::{
+    RunMetrics, PHASE_COMPUTE, PHASE_DENSE_ALLREDUCE, PHASE_EMB_EXCHANGE, PHASE_GRAD_EXCHANGE,
+    PHASE_IO,
+};
+use crate::net::Topology;
+use crate::ps::jitter;
+use crate::runtime::{MetatrainInputs, Runtime};
+use crate::sim::{DeviceModel, ReadPattern, StorageModel, WorkerClocks};
+use crate::Result;
+
+/// One worker's assembled episode tensors (outputs of the prefetch phase).
+struct WorkerBlocks {
+    plan: LookupPlan,
+    emb_sup: Vec<f32>,
+    emb_qry: Vec<f32>,
+    overlap: Vec<i32>,
+    y_sup: Vec<f32>,
+    y_qry: Vec<f32>,
+}
+
+/// The distributed G-Meta training job.
+pub struct GMetaTrainer<'rt> {
+    pub cfg: ExperimentConfig,
+    pub topo: Topology,
+    pub embedding: ShardedEmbedding,
+    /// One dense replica per worker (kept bit-identical by AllReduce).
+    pub replicas: Vec<DenseParams>,
+    pub device: DeviceModel,
+    pub storage: StorageModel,
+    pub variant: String,
+    pub record_bytes: usize,
+    /// Real numerics through PJRT when set; virtual-clock-only otherwise.
+    pub runtime: Option<&'rt Runtime>,
+    /// (loss_sup, loss_qry) per step, averaged over workers (real mode).
+    pub losses: Vec<(f32, f32)>,
+}
+
+impl<'rt> GMetaTrainer<'rt> {
+    pub fn new(
+        cfg: ExperimentConfig,
+        variant: &str,
+        record_bytes: usize,
+        runtime: Option<&'rt Runtime>,
+    ) -> Result<Self> {
+        let world = cfg.cluster.world_size();
+        if let Some(rt) = runtime {
+            if !rt.dims().matches(&cfg.dims) {
+                anyhow::bail!(
+                    "artifact dims {:?} do not match experiment dims {:?} — re-run \
+                     `make artifacts` with matching flags",
+                    rt.dims(),
+                    cfg.dims
+                );
+            }
+        }
+        Ok(Self {
+            topo: Topology::new(cfg.cluster),
+            embedding: ShardedEmbedding::new(world, cfg.dims.emb_dim, cfg.train.seed),
+            replicas: (0..world)
+                .map(|_| DenseParams::init(&cfg.dims, variant, cfg.train.seed))
+                .collect(),
+            device: DeviceModel::a100(),
+            storage: StorageModel::default(),
+            variant: variant.to_string(),
+            record_bytes,
+            runtime,
+            losses: Vec::new(),
+            cfg,
+        })
+    }
+
+    /// Assemble one worker's blocks through the (fused or two-round)
+    /// AlltoAll prefetch.  Returns blocks and planning data; communication
+    /// cost is charged by the caller from the actual exchanged payloads.
+    fn build_plans(&self, episodes: &[&Episode]) -> Vec<(Vec<u64>, Vec<u64>)> {
+        episodes
+            .iter()
+            .map(|ep| (ep.support_ids(), ep.query_ids()))
+            .collect()
+    }
+
+    /// Execute the id-request + row-response AlltoAll pair for a set of
+    /// per-worker plans.  Returns unique-row buffers per worker and the
+    /// total traffic report (request + response, summed).
+    fn exchange_rows(
+        &mut self,
+        plans: &[LookupPlan],
+    ) -> Result<(Vec<Vec<f32>>, crate::net::TrafficReport)> {
+        let world = plans.len();
+        // Round 1: id requests. sends[w][s] = row ids w asks of shard s.
+        let id_sends: Vec<Vec<Vec<u64>>> = plans
+            .iter()
+            .map(|p| (0..world).map(|s| p.rows_for_shard(s)).collect())
+            .collect();
+        let (id_recv, mut report) = alltoall(id_sends, |m| m.len() * 8, &self.topo)?;
+
+        // Owners serve their shard: resp[s][w] = row vectors for w's ids.
+        let mut resp_sends: Vec<Vec<Vec<f32>>> = Vec::with_capacity(world);
+        for (s, reqs) in id_recv.iter().enumerate() {
+            let mut per_dst = Vec::with_capacity(world);
+            for rows in reqs {
+                per_dst.push(self.embedding.serve(s, rows)?);
+            }
+            resp_sends.push(per_dst);
+        }
+        let (resp_recv, resp_report) =
+            alltoall(resp_sends, |m| m.len() * 4, &self.topo)?;
+        report.merge(&resp_report);
+
+        // Scatter responses into per-worker unique buffers.
+        let dim = self.embedding.dim();
+        let uniq: Result<Vec<Vec<f32>>> = plans
+            .iter()
+            .enumerate()
+            .map(|(w, p)| p.scatter_responses(&resp_recv[w], dim))
+            .collect();
+        Ok((uniq?, report))
+    }
+
+    /// Run `steps` synchronous iterations; `episodes[rank]` is cycled.
+    pub fn run(&mut self, episodes: &[Vec<Episode>], steps: usize) -> Result<RunMetrics> {
+        let world = self.cfg.cluster.world_size();
+        if episodes.len() != world {
+            anyhow::bail!("episodes for {} workers, cluster has {world}", episodes.len());
+        }
+        let dims = self.cfg.dims;
+        let (b, f, v, d) = (dims.batch, dims.slots, dims.valency, dims.emb_dim);
+        let mut clocks = WorkerClocks::new(world);
+        let mut m = RunMetrics::default();
+        let mut prev_compute = vec![0.0f64; world];
+
+        for it in 0..steps {
+            let eps: Vec<&Episode> = (0..world)
+                .map(|r| &episodes[r][it % episodes[r].len()])
+                .collect();
+
+            // --- Phase 1: Meta-IO (prefetch overlaps with prior compute). ---
+            let mut io_max = 0.0f64;
+            for rank in 0..world {
+                let records = eps[rank].support.len() + eps[rank].query.len();
+                let raw = self.storage.read_time(
+                    records,
+                    self.record_bytes,
+                    2, // one support + one query batch extent
+                    if self.cfg.io.sequential_reads {
+                        ReadPattern::Sequential
+                    } else {
+                        ReadPattern::Random
+                    },
+                    self.cfg.io.binary_format,
+                ) * jitter(self.cfg.train.seed, rank, it, self.cfg.cluster.io_jitter);
+                // Double-buffered readers hide I/O behind the previous
+                // iteration's compute (up to an overlap efficiency: the
+                // reader shares cores/PCIe with the trainer).  Conventional
+                // single-buffer pipelines still overlap a little.
+                let overlap_eff = if self.cfg.io.prefetch_depth >= 2 { 0.75 } else { 0.25 };
+                let t = if it > 0 {
+                    (raw - overlap_eff * prev_compute[rank]).max(0.0)
+                } else {
+                    raw
+                };
+                clocks.charge(rank, t);
+                io_max = io_max.max(t);
+            }
+            m.add_phase(PHASE_IO, io_max);
+
+            // --- Phase 2: embedding prefetch via AlltoAll (line 5). ---
+            let id_pairs = self.build_plans(&eps);
+            let mut blocks: Vec<WorkerBlocks> = Vec::with_capacity(world);
+            if self.cfg.train.fused_prefetch {
+                // One fused plan over support ∪ query ids per worker.
+                let plans: Vec<LookupPlan> = id_pairs
+                    .iter()
+                    .map(|(s, q)| {
+                        let mut all = s.clone();
+                        all.extend_from_slice(q);
+                        LookupPlan::build(&all, world)
+                    })
+                    .collect();
+                let (uniq, report) = self.exchange_rows(&plans)?;
+                clocks.barrier(report.time);
+                m.inter_bytes += report.inter_bytes;
+                m.intra_bytes += report.intra_bytes;
+                m.add_phase(PHASE_EMB_EXCHANGE, report.time);
+                let need_values = self.runtime.is_some();
+                for (w, plan) in plans.into_iter().enumerate() {
+                    let (sup_ids, qry_ids) = &id_pairs[w];
+                    // Positional block assembly feeds the compute step;
+                    // in simulation mode nothing consumes the values, so
+                    // skip the expansion (§Perf: the traffic/time model
+                    // is unaffected — bytes were counted by the exchange).
+                    let (emb_sup, emb_qry) = if need_values {
+                        let both = plan.lookup.assemble(&uniq[w], d)?;
+                        let half = b * f * v * d;
+                        (both[..half].to_vec(), both[half..].to_vec())
+                    } else {
+                        (Vec::new(), Vec::new())
+                    };
+                    blocks.push(WorkerBlocks {
+                        emb_sup,
+                        emb_qry,
+                        overlap: build_overlap(sup_ids, qry_ids),
+                        y_sup: eps[w].support_labels(),
+                        y_qry: eps[w].query_labels(),
+                        plan,
+                    });
+                }
+            } else {
+                // Ablation: two separate lookup rounds (2x α, duplicate
+                // rows fetched twice — exactly what §2.1.1 aggregates away).
+                let sup_plans: Vec<LookupPlan> = id_pairs
+                    .iter()
+                    .map(|(s, _)| LookupPlan::build(s, world))
+                    .collect();
+                let qry_plans: Vec<LookupPlan> = id_pairs
+                    .iter()
+                    .map(|(_, q)| LookupPlan::build(q, world))
+                    .collect();
+                let (uniq_s, rep_s) = self.exchange_rows(&sup_plans)?;
+                let (uniq_q, rep_q) = self.exchange_rows(&qry_plans)?;
+                clocks.barrier(rep_s.time + rep_q.time);
+                m.inter_bytes += rep_s.inter_bytes + rep_q.inter_bytes;
+                m.intra_bytes += rep_s.intra_bytes + rep_q.intra_bytes;
+                m.add_phase(PHASE_EMB_EXCHANGE, rep_s.time + rep_q.time);
+                let need_values = self.runtime.is_some();
+                for (w, (sp, qp)) in sup_plans.into_iter().zip(qry_plans).enumerate() {
+                    let (sup_ids, qry_ids) = &id_pairs[w];
+                    let (emb_sup, emb_qry) = if need_values {
+                        (
+                            sp.lookup.assemble(&uniq_s[w], d)?,
+                            qp.lookup.assemble(&uniq_q[w], d)?,
+                        )
+                    } else {
+                        (Vec::new(), Vec::new())
+                    };
+                    blocks.push(WorkerBlocks {
+                        emb_sup,
+                        emb_qry,
+                        overlap: build_overlap(sup_ids, qry_ids),
+                        y_sup: eps[w].support_labels(),
+                        y_qry: eps[w].query_labels(),
+                        // The query plan is the grad-return plan: in the
+                        // unfused mode only query grads flow back (FOMAML).
+                        plan: qp,
+                    });
+                }
+            }
+
+            // --- Phase 3: local inner + outer loops (lines 6-10). ---
+            let mut comp_max = 0.0f64;
+            let mut g_emb_pos: Vec<Vec<f32>> = Vec::with_capacity(world);
+            let mut g_dense: Vec<Vec<f32>> = Vec::with_capacity(world);
+            let mut loss_acc = (0.0f32, 0.0f32);
+            for rank in 0..world {
+                let flops = dims.metatrain_flops(b);
+                let gathered = (2 * b * f * v * d * 4) as f64;
+                // 2B samples (support + query), F*V lookups each.
+                let lookups = (2 * b * f * v) as f64;
+                let t = (self.device.dense_time(flops)
+                    + self.device.mem_time(gathered)
+                    + self.device.lookup_time(lookups))
+                    * jitter(self.cfg.train.seed ^ 0xBEEF, rank, it, self.cfg.cluster.compute_jitter);
+                clocks.charge(rank, t);
+                prev_compute[rank] = t;
+                comp_max = comp_max.max(t);
+
+                if let Some(rt) = self.runtime {
+                    let wb = &blocks[rank];
+                    let out = rt.metatrain(
+                        &self.variant,
+                        &MetatrainInputs {
+                            emb_sup: wb.emb_sup.clone(),
+                            y_sup: wb.y_sup.clone(),
+                            emb_qry: wb.emb_qry.clone(),
+                            y_qry: wb.y_qry.clone(),
+                            overlap: wb.overlap.clone(),
+                        },
+                        &self.replicas[rank],
+                    )?;
+                    loss_acc.0 += out.loss_sup;
+                    loss_acc.1 += out.loss_qry;
+                    g_emb_pos.push(out.g_emb_qry);
+                    g_dense.push(out.g_dense_flat);
+                } else {
+                    // Simulation: gradient *values* are irrelevant to the
+                    // efficiency experiments; sizes/routes are exact.
+                    g_emb_pos.push(vec![0.0f32; b * f * v * d]);
+                    g_dense.push(vec![0.0f32; self.replicas[rank].len()]);
+                }
+            }
+            m.add_phase(PHASE_COMPUTE, comp_max);
+            if self.runtime.is_some() {
+                self.losses
+                    .push((loss_acc.0 / world as f32, loss_acc.1 / world as f32));
+            }
+
+            // --- Phase 4: sparse grads via AlltoAll to owners (line 11). ---
+            // Positional -> unique (sum duplicates) against the *query*
+            // position map (FOMAML: only query-loss grads update ξ).
+            let mut grad_sends: Vec<Vec<(Vec<u64>, Vec<f32>)>> = Vec::with_capacity(world);
+            for rank in 0..world {
+                let wb = &blocks[rank];
+                // In fused mode the plan covers sup+query positions; pad
+                // support positions with zero grads to reuse the plan.
+                let pos = if self.cfg.train.fused_prefetch {
+                    let mut padded = vec![0.0f32; b * f * v * d];
+                    padded.extend_from_slice(&g_emb_pos[rank]);
+                    padded
+                } else {
+                    g_emb_pos[rank].clone()
+                };
+                let uniq_g = wb.plan.lookup.reduce_grads(&pos, d)?;
+                grad_sends.push(wb.plan.split_grads(&uniq_g, d)?);
+            }
+            let (grad_recv, rep) = alltoall(
+                grad_sends,
+                |(rows, grads)| rows.len() * 8 + grads.len() * 4,
+                &self.topo,
+            )?;
+            clocks.barrier(rep.time);
+            m.inter_bytes += rep.inter_bytes;
+            m.intra_bytes += rep.intra_bytes;
+            m.add_phase(PHASE_GRAD_EXCHANGE, rep.time);
+            for (s, incoming) in grad_recv.iter().enumerate() {
+                for (rows, grads) in incoming {
+                    self.embedding.apply_grads(
+                        s,
+                        rows,
+                        grads,
+                        self.cfg.train.emb_lr,
+                        Optimizer::Adagrad { eps: 1e-8 },
+                    )?;
+                }
+            }
+
+            // --- Phase 5: dense outer update (line 12 / §2.1.3). ---
+            let t_dense = if self.cfg.train.reordered_outer_update {
+                let rep = if self.cfg.train.hierarchical_allreduce {
+                    hierarchical_allreduce(&mut g_dense, &self.topo)?
+                } else {
+                    ring_allreduce(&mut g_dense, &self.topo)?
+                };
+                m.inter_bytes += rep.inter_bytes;
+                m.intra_bytes += rep.intra_bytes;
+                rep.time
+            } else {
+                // Central variant: Gather K from every worker, reduce at
+                // the root (O(KN) central compute), Broadcast K back.
+                let (gathered, rep_g) = gather(&g_dense, 0, &self.topo)?;
+                let k = gathered[0].len();
+                let mut sum = vec![0.0f32; k];
+                for g in &gathered {
+                    for (s, x) in sum.iter_mut().zip(g) {
+                        *s += *x;
+                    }
+                }
+                // Central reduce cost: stream K*N floats through root mem.
+                let central = self.device.mem_time((k * world * 4) as f64);
+                let (out, rep_b) = broadcast(&sum, 0, world, &self.topo)?;
+                for (dst, src) in g_dense.iter_mut().zip(out) {
+                    *dst = src;
+                }
+                m.inter_bytes += rep_g.inter_bytes + rep_b.inter_bytes;
+                m.intra_bytes += rep_g.intra_bytes + rep_b.intra_bytes;
+                rep_g.time + central + rep_b.time
+            };
+            clocks.barrier(t_dense);
+            m.add_phase(PHASE_DENSE_ALLREDUCE, t_dense);
+            // Meta update θ ← θ − β·mean_i(g_i): the AllReduce buffer holds
+            // the sum; dividing by N keeps β scale-free in world size (the
+            // paper's Σ convention differs by the constant factor N, which
+            // is absorbed into β).
+            let scale = 1.0 / world as f32;
+            for replica in &mut self.replicas {
+                let scaled: Vec<f32> = g_dense[0].iter().map(|g| g * scale).collect();
+                replica.sgd_step(&scaled, self.cfg.train.beta)?;
+            }
+
+            m.samples += (world * 2 * b) as u64;
+            m.steps += 1;
+        }
+        m.virtual_time = clocks.max_now();
+        if let Some(rt) = self.runtime {
+            m.real_compute_secs = rt.exec_secs.get();
+            let tail = (self.losses.len() / 10).max(1);
+            let last: Vec<_> = self.losses.iter().rev().take(tail).collect();
+            m.tail_loss_sup =
+                Some(last.iter().map(|(s, _)| *s as f64).sum::<f64>() / last.len() as f64);
+            m.tail_loss_qry =
+                Some(last.iter().map(|(_, q)| *q as f64).sum::<f64>() / last.len() as f64);
+        }
+        Ok(m)
+    }
+
+    /// Evaluate AUC of the current meta model on held-out episodes with
+    /// *task adaptation* (the standard meta-learning protocol and the
+    /// paper's Figure-3 measurement): for each episode, run one inner-loop
+    /// step on its support set, then score its query set with the adapted
+    /// parameters — all through the fused `{variant}_metatrain` artifact,
+    /// whose `probs_qry` output is exactly the adapted prediction.
+    pub fn evaluate(&mut self, episodes: &[Episode]) -> Result<Option<f64>> {
+        let rt = self
+            .runtime
+            .ok_or_else(|| anyhow::anyhow!("evaluate() requires a runtime"))?;
+        let mut probs = Vec::new();
+        let mut labels = Vec::new();
+        for ep in episodes {
+            let (sup_ids, qry_ids) = (ep.support_ids(), ep.query_ids());
+            let emb_sup = self.gather_local(&sup_ids);
+            let emb_qry = self.gather_local(&qry_ids);
+            let out = rt.metatrain(
+                &self.variant,
+                &MetatrainInputs {
+                    emb_sup,
+                    y_sup: ep.support_labels(),
+                    emb_qry,
+                    y_qry: ep.query_labels(),
+                    overlap: build_overlap(&sup_ids, &qry_ids),
+                },
+                &self.replicas[0],
+            )?;
+            probs.extend(out.probs_qry);
+            labels.extend(ep.query_labels());
+        }
+        Ok(crate::eval::auc(&probs, &labels))
+    }
+
+    /// Zero-shot AUC: score query sets with the meta parameters directly
+    /// (no adaptation) via the `{variant}_forward` artifact.  The gap
+    /// between this and [`Self::evaluate`] is what meta learning buys.
+    pub fn evaluate_zero_shot(&mut self, episodes: &[Episode]) -> Result<Option<f64>> {
+        let rt = self
+            .runtime
+            .ok_or_else(|| anyhow::anyhow!("evaluate_zero_shot() requires a runtime"))?;
+        let mut probs = Vec::new();
+        let mut labels = Vec::new();
+        for ep in episodes {
+            let emb = self.gather_local(&ep.query_ids());
+            probs.extend(rt.forward(&self.variant, &emb, &self.replicas[0])?);
+            labels.extend(ep.query_labels());
+        }
+        Ok(crate::eval::auc(&probs, &labels))
+    }
+
+    /// Direct (non-distributed) row gather for evaluation paths.
+    fn gather_local(&mut self, ids: &[u64]) -> Vec<f32> {
+        let d = self.cfg.dims.emb_dim;
+        let mut emb = Vec::with_capacity(ids.len() * d);
+        for &id in ids {
+            emb.extend_from_slice(&self.embedding.read(id));
+        }
+        emb
+    }
+
+    /// Save the full meta state (step counter, dense replica, touched
+    /// embedding rows) for later [`Self::resume`] — possibly at a
+    /// different world size (elastic resharding).
+    pub fn save_checkpoint(&mut self, dir: &std::path::Path, step: u64) -> Result<()> {
+        let dims = self.cfg.dims;
+        let variant = self.variant.clone();
+        crate::checkpoint::save(
+            dir,
+            step,
+            &variant,
+            &dims,
+            &self.replicas[0].clone(),
+            &mut self.embedding,
+        )
+    }
+
+    /// Restore meta state saved by [`Self::save_checkpoint`]; returns the
+    /// step counter to resume from.
+    pub fn resume(&mut self, dir: &std::path::Path) -> Result<u64> {
+        let ckpt = crate::checkpoint::load(dir)?;
+        if ckpt.variant != self.variant {
+            anyhow::bail!(
+                "checkpoint is for variant {:?}, trainer runs {:?}",
+                ckpt.variant,
+                self.variant
+            );
+        }
+        for replica in &mut self.replicas {
+            replica.unflatten_into(&ckpt.dense)?;
+        }
+        // Restore rows through the resharding path (world may differ).
+        for (row, vals) in &ckpt.rows {
+            self.embedding.import_row(*row, vals)?;
+        }
+        Ok(ckpt.step)
+    }
+
+    /// Invariant: all dense replicas are bit-identical (AllReduce keeps
+    /// them in lockstep).  Exposed for tests and debug assertions.
+    pub fn replicas_in_sync(&self) -> bool {
+        self.replicas
+            .windows(2)
+            .all(|w| w[0].max_abs_diff(&w[1]) == 0.0)
+    }
+}
+
+/// Build per-worker episode streams from a generator spec (throughput
+/// harnesses; statistical runs load from the Meta-IO pipeline instead).
+///
+/// The generator's slot structure is forced to match `dims` — the gathered
+/// blocks must be exactly `[batch, slots, valency, emb_dim]`.
+pub fn episodes_from_generator(
+    spec: crate::data::DatasetSpec,
+    dims: &crate::config::ModelDims,
+    world: usize,
+    per_worker: usize,
+) -> Vec<Vec<Episode>> {
+    use std::collections::HashMap;
+    let batch = dims.batch;
+    let spec = crate::data::DatasetSpec {
+        slots: dims.slots,
+        valency: dims.valency,
+        ..spec
+    };
+    let mut gen = crate::data::Generator::new(spec);
+    let mut by_task: HashMap<u64, Vec<crate::meta::Sample>> = HashMap::new();
+    // Generate enough samples to fill the requested episode counts.
+    let need = world * per_worker * batch * 2;
+    for s in gen.take(need * 2) {
+        by_task.entry(s.task).or_default().push(s);
+    }
+    let mut batches: Vec<crate::meta::TaskBatch> = by_task
+        .into_iter()
+        .filter(|(_, v)| v.len() >= 2)
+        .map(|(task, samples)| crate::meta::TaskBatch {
+            task,
+            batch_id: task,
+            samples,
+        })
+        .collect();
+    batches.sort_by_key(|tb| tb.task);
+    let mut out = vec![Vec::with_capacity(per_worker); world];
+    let mut i = 0;
+    while out.iter().any(|v| v.len() < per_worker) {
+        let tb = &batches[i % batches.len()];
+        if let Some(ep) = Episode::from_task_batch(tb, batch) {
+            let rank = i % world;
+            if out[rank].len() < per_worker {
+                out[rank].push(ep);
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::movielens_like;
+
+    fn small_cfg(nodes: usize, gpus: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::gmeta(nodes, gpus);
+        cfg.dims.batch = 16;
+        cfg.dims.slots = 4;
+        cfg.dims.valency = 2;
+        cfg.dims.emb_dim = 8;
+        cfg
+    }
+
+    fn eps(world: usize, n: usize, dims: &crate::config::ModelDims) -> Vec<Vec<Episode>> {
+        episodes_from_generator(movielens_like(), dims, world, n)
+    }
+
+    #[test]
+    fn sim_run_produces_phase_breakdown() {
+        let cfg = small_cfg(2, 2);
+        let e = eps(4, 4, &cfg.dims);
+        let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+        let m = t.run(&e, 8).unwrap();
+        assert_eq!(m.steps, 8);
+        assert!(m.virtual_time > 0.0);
+        for phase in [
+            PHASE_IO,
+            PHASE_EMB_EXCHANGE,
+            PHASE_COMPUTE,
+            PHASE_GRAD_EXCHANGE,
+            PHASE_DENSE_ALLREDUCE,
+        ] {
+            assert!(m.phase(phase) > 0.0, "phase {phase} empty");
+        }
+        assert!(t.replicas_in_sync());
+    }
+
+    #[test]
+    fn fused_prefetch_reduces_exchange_time() {
+        let mk = |fused: bool| {
+            let mut cfg = small_cfg(2, 2);
+            cfg.train.fused_prefetch = fused;
+            let e = eps(4, 4, &cfg.dims);
+            let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+            t.run(&e, 6).unwrap()
+        };
+        let fused = mk(true);
+        let unfused = mk(false);
+        assert!(
+            fused.phase(PHASE_EMB_EXCHANGE) < unfused.phase(PHASE_EMB_EXCHANGE),
+            "fused {} !< unfused {}",
+            fused.phase(PHASE_EMB_EXCHANGE),
+            unfused.phase(PHASE_EMB_EXCHANGE)
+        );
+    }
+
+    #[test]
+    fn reordered_update_beats_central_gather() {
+        let mk = |reordered: bool| {
+            let mut cfg = small_cfg(2, 4);
+            // The §2.1.3 claim is about non-trivial K: use a realistic
+            // tower so bandwidth (not the ring's 2(N-1) α terms) dominates.
+            cfg.dims.hidden1 = 512;
+            cfg.dims.hidden2 = 256;
+            cfg.train.reordered_outer_update = reordered;
+            let e = eps(8, 3, &cfg.dims);
+            let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+            t.run(&e, 5).unwrap()
+        };
+        let ring = mk(true);
+        let central = mk(false);
+        assert!(
+            ring.phase(PHASE_DENSE_ALLREDUCE) < central.phase(PHASE_DENSE_ALLREDUCE),
+            "ring {} !< central {}",
+            ring.phase(PHASE_DENSE_ALLREDUCE),
+            central.phase(PHASE_DENSE_ALLREDUCE)
+        );
+    }
+
+    #[test]
+    fn optimized_transports_beat_commodity() {
+        let mk = |optimized: bool| {
+            let mut cfg = small_cfg(2, 2);
+            if !optimized {
+                cfg.cluster = crate::config::ClusterSpec::gpu_commodity(2, 2);
+            }
+            let e = eps(4, 4, &cfg.dims);
+            let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+            t.run(&e, 6).unwrap()
+        };
+        let fast = mk(true);
+        let slow = mk(false);
+        assert!(fast.throughput() > slow.throughput());
+    }
+
+    #[test]
+    fn world_size_mismatch_rejected() {
+        let cfg = small_cfg(2, 2);
+        let e = eps(3, 2, &cfg.dims);
+        let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+        assert!(t.run(&e, 1).is_err());
+    }
+
+    #[test]
+    fn episode_generator_fills_all_workers() {
+        let dims = crate::config::ModelDims {
+            batch: 16,
+            slots: 4,
+            valency: 2,
+            ..Default::default()
+        };
+        let e = eps(4, 5, &dims);
+        assert_eq!(e.len(), 4);
+        for w in &e {
+            assert_eq!(w.len(), 5);
+            for ep in w {
+                assert_eq!(ep.support.len(), 16);
+                assert_eq!(ep.query.len(), 16);
+                assert!(ep.support.iter().all(|s| s.task == ep.task));
+            }
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Synthetic workload generators standing in for the paper's datasets.
+//!
+//! Substitution (DESIGN.md §1): we do not have MovieLens preprocessed into
+//! meta-tasks, Ali-CCP, or Ant's in-house 1.6B-sample log, so we generate
+//! click logs with the *properties that drive the paper's experiments*:
+//!
+//! * a task structure (users/scenarios) with Zipf-skewed sample counts —
+//!   meta learning exists because most tasks are cold;
+//! * multi-slot categorical features hashed into one huge id space
+//!   (embedding rows), with per-task popular-id skew;
+//! * labels generated from a *ground-truth latent model* —
+//!   `p(click) = sigmoid(global latent(id) + task-specific latent)` — so
+//!   that (a) a DLRM can actually learn (AUC > 0.5), and (b) per-task
+//!   adaptation genuinely helps (task latents differ), making Figure 3's
+//!   meta-learning comparison meaningful rather than noise.
+//!
+//! All generation is deterministic in the seed.
+
+use crate::meta::Sample;
+use crate::util::Rng;
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Ground-truth latent for an id (the signal embeddings must learn).
+fn id_latent(seed: u64, id: u64) -> f64 {
+    let h = splitmix64(seed ^ id.wrapping_mul(0xD1B54A32D192ED03));
+    (h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+/// Ground-truth per-task latent shift (what the inner loop adapts to).
+fn task_latent(seed: u64, task: u64) -> f64 {
+    let h = splitmix64(seed ^ 0xABCD ^ task.wrapping_mul(0x2545F4914F6CDD1D));
+    ((h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) * 2.0
+}
+
+/// Workload description (one per paper dataset).
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub tasks: usize,
+    pub samples: usize,
+    /// Feature slots and values-per-slot (must match the artifact dims for
+    /// real-numerics runs).
+    pub slots: usize,
+    pub valency: usize,
+    /// Hashed embedding-row space.
+    pub emb_rows: u64,
+    /// Zipf exponent for samples-per-task skew (0 = uniform).
+    pub task_skew: f64,
+    /// Average payload bytes per record on disk (drives the I/O model; KB
+    /// level per the paper §2.2.2).
+    pub record_bytes: usize,
+    /// World seed: fixes the id hashing and the ground-truth latents.
+    /// Two specs sharing `seed` describe the SAME underlying world.
+    pub seed: u64,
+    /// Draw seed: the sampling stream.  Vary this (keeping `seed`) to get
+    /// held-out samples/tasks from the same world — e.g. evaluation sets.
+    pub draw_seed: u64,
+    /// Shift applied to every generated task id.  Setting this to
+    /// `tasks` yields a disjoint population of *genuinely unseen* tasks
+    /// from the same world — the cold-start evaluation setting.
+    pub task_offset: u64,
+}
+
+impl DatasetSpec {
+    /// The same world, sampled with a different stream (held-out data).
+    pub fn held_out(mut self, salt: u64) -> Self {
+        self.draw_seed = self.seed ^ 0x9E37_79B9 ^ salt.wrapping_mul(0x1000_0001);
+        self
+    }
+
+    /// A disjoint population of brand-new tasks from the same world
+    /// (cold-start users/advertisers the meta model has never trained on).
+    pub fn cold_tasks(mut self, salt: u64) -> Self {
+        self = self.held_out(salt);
+        self.task_offset = self.tasks as u64;
+        self
+    }
+}
+
+/// MovieLens-like: small, dense tasks — the statistical testbed (Fig. 3).
+pub fn movielens_like() -> DatasetSpec {
+    DatasetSpec {
+        name: "movielens",
+        tasks: 120,
+        samples: 60_000,
+        slots: 16,
+        valency: 2,
+        emb_rows: 1 << 16,
+        task_skew: 0.6,
+        record_bytes: 300,
+        seed: 101,
+        draw_seed: 101,
+        task_offset: 0,
+    }
+}
+
+/// Ali-CCP-like: the paper's public efficiency dataset (85M impressions;
+/// we keep the task/id structure and scale sample count per run).
+pub fn aliccp_like(samples: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "aliccp",
+        tasks: 4_000,
+        samples,
+        slots: 16,
+        valency: 2,
+        emb_rows: 1 << 22,
+        task_skew: 1.1,
+        record_bytes: 600,
+        seed: 202,
+        draw_seed: 202,
+        task_offset: 0,
+    }
+}
+
+/// In-house-like: "more complicated" (paper §3.2) — more slots, higher
+/// valency, heavier records, bigger id space.
+pub fn inhouse_like(samples: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "inhouse",
+        tasks: 20_000,
+        samples,
+        slots: 16,
+        valency: 2,
+        emb_rows: 1 << 26,
+        task_skew: 1.3,
+        record_bytes: 1_400,
+        seed: 303,
+        draw_seed: 303,
+        task_offset: 0,
+    }
+}
+
+/// Deterministic sample generator.
+pub struct Generator {
+    spec: DatasetSpec,
+    rng: Rng,
+    /// Pre-computed Zipf CDF over tasks.
+    task_cdf: Vec<f64>,
+}
+
+impl Generator {
+    pub fn new(spec: DatasetSpec) -> Self {
+        let mut weights: Vec<f64> = (0..spec.tasks)
+            .map(|t| 1.0 / ((t + 1) as f64).powf(spec.task_skew))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in &mut weights {
+            acc += *w / total;
+            *w = acc;
+        }
+        Self {
+            rng: Rng::seed_from_u64(spec.draw_seed),
+            task_cdf: weights,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.spec
+    }
+
+    fn draw_task(&mut self) -> u64 {
+        let u: f64 = self.rng.f64();
+        match self
+            .task_cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) | Err(i) => i.min(self.spec.tasks - 1) as u64,
+        }
+    }
+
+    /// Hash (slot, value) into the global row space. Slot-partitioned so
+    /// different slots never collide on a row (standard feature hashing).
+    fn hash_id(&self, slot: usize, value: u64) -> u64 {
+        let h = splitmix64((slot as u64) << 48 ^ value ^ self.spec.seed);
+        h % self.spec.emb_rows
+    }
+
+    /// Generate one sample.
+    pub fn sample(&mut self) -> Sample {
+        let task = self.draw_task() + self.spec.task_offset;
+        let mut ids = Vec::with_capacity(self.spec.slots * self.spec.valency);
+        let mut logit = task_latent(self.spec.seed, task);
+        for slot in 0..self.spec.slots {
+            for _ in 0..self.spec.valency {
+                // Per-task id skew: tasks prefer a window of the value
+                // space; cold ids happen via the uniform tail.
+                let base: u64 = self.rng.gen_range(0, 1024);
+                let value = if self.rng.gen_bool(0.7) {
+                    task.wrapping_mul(7919).wrapping_add(base % 64)
+                } else {
+                    base
+                };
+                let id = self.hash_id(slot, value);
+                logit += id_latent(self.spec.seed, id) * 0.35;
+                ids.push(id);
+            }
+        }
+        let p = 1.0 / (1.0 + (-logit).exp());
+        let label = if self.rng.gen_bool(p.clamp(0.02, 0.98)) {
+            1.0
+        } else {
+            0.0
+        };
+        Sample { task, ids, label }
+    }
+
+    /// Generate `n` samples.
+    pub fn take(&mut self, n: usize) -> Vec<Sample> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Generator::new(movielens_like()).take(100);
+        let b = Generator::new(movielens_like()).take(100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ids_stay_in_row_space() {
+        let spec = movielens_like();
+        let samples = Generator::new(spec).take(1000);
+        for s in &samples {
+            assert_eq!(s.ids.len(), spec.slots * spec.valency);
+            assert!(s.ids.iter().all(|&id| id < spec.emb_rows));
+        }
+    }
+
+    #[test]
+    fn labels_are_binary_and_mixed() {
+        let samples = Generator::new(movielens_like()).take(2000);
+        let pos = samples.iter().filter(|s| s.label > 0.5).count();
+        assert!(pos > 200 && pos < 1800, "pos={pos} — labels degenerate");
+    }
+
+    #[test]
+    fn task_skew_concentrates_samples() {
+        let samples = Generator::new(aliccp_like(20_000)).take(20_000);
+        let head = samples.iter().filter(|s| s.task < 40).count();
+        // With skew 1.1 over 4000 tasks, the top 1% of tasks must hold far
+        // more than 1% of samples.
+        assert!(
+            head as f64 / 20_000.0 > 0.05,
+            "head tasks hold {head} samples"
+        );
+    }
+
+    #[test]
+    fn labels_correlate_with_task_latent() {
+        // Samples of a task with a strongly positive latent must be mostly
+        // positive — the learnable signal for adaptation.
+        let spec = movielens_like();
+        let samples = Generator::new(spec).take(30_000);
+        let mut best_task = 0u64;
+        let mut best = f64::MIN;
+        for t in 0..spec.tasks as u64 {
+            let l = task_latent(spec.seed, t);
+            if l > best {
+                best = l;
+                best_task = t;
+            }
+        }
+        let of_task: Vec<_> = samples.iter().filter(|s| s.task == best_task).collect();
+        if of_task.len() >= 20 {
+            let pos = of_task.iter().filter(|s| s.label > 0.5).count();
+            assert!(
+                pos as f64 / of_task.len() as f64 > 0.5,
+                "high-latent task not positive-skewed"
+            );
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Replicated dense parameters θ (the MLP tower) and their flattening.
+//!
+//! Paper §2.1: the dense layer is small enough to replicate on every
+//! worker; gradients are combined with Ring-AllReduce (Algorithm 1
+//! line 12).  This module owns the replica representation, deterministic
+//! initialization (bit-identical across architectures for the Figure-3
+//! parity run), flatten/unflatten into the single AllReduce buffer, and
+//! the meta SGD update.
+
+use crate::config::ModelDims;
+use crate::embedding::init_row;
+use crate::Result;
+
+/// Names + shapes of the dense tensors, in artifact ABI order
+/// (`model.DENSE_ORDER` on the Python side; task_emb appended for cbml).
+pub fn dense_shapes(dims: &ModelDims, variant: &str) -> Vec<(String, Vec<usize>)> {
+    let d_in = dims.slots * dims.emb_dim + if variant == "cbml" { dims.task_dim } else { 0 };
+    let mut v = vec![
+        ("w1".into(), vec![d_in, dims.hidden1]),
+        ("b1".into(), vec![dims.hidden1]),
+        ("w2".into(), vec![dims.hidden1, dims.hidden2]),
+        ("b2".into(), vec![dims.hidden2]),
+        ("w3".into(), vec![dims.hidden2, 1]),
+        ("b3".into(), vec![1]),
+    ];
+    if variant == "cbml" {
+        v.push(("task_emb".into(), vec![dims.task_dim]));
+    }
+    v
+}
+
+/// One replica of the dense parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseParams {
+    /// (name, shape, values) in ABI order.
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl DenseParams {
+    /// Deterministic He-style init (reuses the SplitMix64 hash stream so
+    /// every architecture / world size starts identically).
+    pub fn init(dims: &ModelDims, variant: &str, seed: u64) -> Self {
+        let tensors = dense_shapes(dims, variant)
+            .into_iter()
+            .enumerate()
+            .map(|(ti, (name, shape))| {
+                let n: usize = shape.iter().product();
+                let fan_in = if shape.len() == 2 { shape[0] } else { n };
+                let scale = if name.starts_with('w') {
+                    (2.0 / fan_in as f32).sqrt()
+                } else {
+                    0.0 // biases and task_emb start at zero
+                };
+                let mut vals = Vec::with_capacity(n);
+                let mut off = 0usize;
+                while off < n {
+                    let chunk = init_row(seed ^ ((ti as u64) << 40), off as u64, (n - off).min(8));
+                    for v in chunk {
+                        // init_row is U[-0.05, 0.05); rescale to ~N-ish width.
+                        vals.push(v * 20.0 * scale);
+                    }
+                    off += 8;
+                }
+                vals.truncate(n);
+                (name, shape, vals)
+            })
+            .collect();
+        Self { tensors }
+    }
+
+    /// Total parameter count.
+    pub fn len(&self) -> usize {
+        self.tensors.iter().map(|(_, _, v)| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flatten all tensors into one contiguous AllReduce buffer.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        for (_, _, v) in &self.tensors {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::flatten`] (shapes must match this replica).
+    pub fn unflatten_into(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.len() {
+            anyhow::bail!("unflatten: {} floats for {} params", flat.len(), self.len());
+        }
+        let mut off = 0;
+        for (_, _, v) in &mut self.tensors {
+            let n = v.len();
+            v.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Meta update: θ ← θ − β·g (Algorithm 1 line 12, after AllReduce).
+    pub fn sgd_step(&mut self, flat_grads: &[f32], beta: f32) -> Result<()> {
+        if flat_grads.len() != self.len() {
+            anyhow::bail!(
+                "sgd_step: {} grads for {} params",
+                flat_grads.len(),
+                self.len()
+            );
+        }
+        let mut off = 0;
+        for (_, _, v) in &mut self.tensors {
+            for x in v.iter_mut() {
+                *x -= beta * flat_grads[off];
+                off += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Max |a - b| across replicas (parity checks).
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        self.flatten()
+            .iter()
+            .zip(other.flatten())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            batch: 8,
+            slots: 2,
+            valency: 2,
+            emb_dim: 4,
+            hidden1: 8,
+            hidden2: 4,
+            task_dim: 4,
+            emb_rows: 100,
+        }
+    }
+
+    #[test]
+    fn shapes_match_manifest_convention() {
+        let s = dense_shapes(&dims(), "maml");
+        assert_eq!(s.len(), 6);
+        assert_eq!(s[0].1, vec![8, 8]); // w1: [slots*emb_dim, hidden1]
+        let s = dense_shapes(&dims(), "cbml");
+        assert_eq!(s.len(), 7);
+        assert_eq!(s[0].1, vec![12, 8]); // +task_dim on the input
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = DenseParams::init(&dims(), "maml", 1);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.len());
+        let mut q = DenseParams::init(&dims(), "maml", 2);
+        q.unflatten_into(&flat).unwrap();
+        assert_eq!(q.flatten(), flat);
+    }
+
+    #[test]
+    fn init_deterministic_and_biases_zero() {
+        let a = DenseParams::init(&dims(), "maml", 5);
+        let b = DenseParams::init(&dims(), "maml", 5);
+        assert_eq!(a, b);
+        let b1 = &a.tensors[1];
+        assert!(b1.2.iter().all(|&x| x == 0.0));
+        // weights are not all zero
+        assert!(a.tensors[0].2.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn sgd_step_applies_beta() {
+        let mut p = DenseParams::init(&dims(), "maml", 1);
+        let before = p.flatten();
+        let grads = vec![1.0f32; p.len()];
+        p.sgd_step(&grads, 0.5).unwrap();
+        let after = p.flatten();
+        for (a, b) in after.iter().zip(before) {
+            assert!((a - (b - 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn size_mismatches_rejected() {
+        let mut p = DenseParams::init(&dims(), "maml", 1);
+        assert!(p.sgd_step(&[0.0], 0.1).is_err());
+        assert!(p.unflatten_into(&[0.0]).is_err());
+    }
+}

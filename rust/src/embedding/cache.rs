@@ -1,0 +1,210 @@
+//! Worker-local hot-row cache with bounded staleness.
+//!
+//! Extension beyond the paper (HugeCTR-style): recommender id streams are
+//! Zipf-skewed, so a small per-worker cache of hot embedding rows absorbs
+//! a large fraction of lookups, shrinking the AlltoAll request/response
+//! volume.  The price is *bounded staleness*: a cached row misses updates
+//! applied on its owner shard for up to `ttl` iterations.  Sparse-Adagrad
+//! steps shrink quickly, so a few-step-old hot row is a standard
+//! industrial trade (ablated in `benches/hotpath.rs` and unit tests;
+//! disabled by default — the paper's own pipeline always refetches).
+//!
+//! Eviction: TTL-based (a row expires `ttl` steps after it was cached) +
+//! capacity cap with random-slot eviction (cheap, adequate under Zipf).
+
+use crate::util::fxhash::FxHashMap;
+use crate::util::Rng;
+
+/// One worker's row cache.
+#[derive(Debug, Clone)]
+pub struct RowCache {
+    ttl: u64,
+    capacity: usize,
+    dim: usize,
+    now: u64,
+    map: FxHashMap<u64, (u64, Vec<f32>)>,
+    rng: Rng,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RowCache {
+    /// `ttl` = iterations a cached row stays valid; `capacity` = max rows.
+    pub fn new(ttl: u64, capacity: usize, dim: usize, seed: u64) -> Self {
+        Self {
+            ttl,
+            capacity,
+            dim,
+            now: 0,
+            map: FxHashMap::default(),
+            rng: Rng::seed_from_u64(seed ^ 0xCAC4E),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Advance the iteration counter (call once per training step).
+    pub fn tick(&mut self) {
+        self.now += 1;
+        // Lazy expiry: drop entries only when the map is large; cheaper
+        // than a scan per tick.
+        if self.map.len() > self.capacity {
+            let ttl = self.ttl;
+            let now = self.now;
+            self.map.retain(|_, (stamp, _)| now.saturating_sub(*stamp) < ttl);
+        }
+    }
+
+    /// Look up a row; counts hit/miss.
+    pub fn get(&mut self, row: u64) -> Option<&[f32]> {
+        match self.map.get(&row) {
+            Some((stamp, vals)) if self.now.saturating_sub(*stamp) < self.ttl => {
+                self.hits += 1;
+                Some(vals)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly fetched row.
+    pub fn put(&mut self, row: u64, vals: &[f32]) {
+        debug_assert_eq!(vals.len(), self.dim);
+        if self.map.len() >= self.capacity && !self.map.contains_key(&row) {
+            // Random eviction: remove an arbitrary existing key.
+            if let Some(&victim) = self
+                .map
+                .keys()
+                .nth((self.rng.next_u64() as usize) % self.map.len())
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(row, (self.now, vals.to_vec()));
+    }
+
+    /// Invalidate a row (e.g. this worker just pushed a gradient for it).
+    pub fn invalidate(&mut self, row: u64) {
+        self.map.remove(&row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Split a lookup id list into (cached block positions, rows to fetch):
+/// returns per-position `Option<Vec<f32>>` for hits and the miss list.
+pub fn partition_lookups(
+    cache: &mut RowCache,
+    ids: &[u64],
+) -> (Vec<Option<Vec<f32>>>, Vec<u64>) {
+    let mut missing = Vec::new();
+    let mut seen_missing = crate::util::fxhash::FxHashMap::default();
+    let hits: Vec<Option<Vec<f32>>> = ids
+        .iter()
+        .map(|&id| match cache.get(id) {
+            Some(v) => Some(v.to_vec()),
+            None => {
+                if seen_missing.insert(id, ()).is_none() {
+                    missing.push(id);
+                }
+                None
+            }
+        })
+        .collect();
+    (hits, missing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_put_miss_after_ttl() {
+        let mut c = RowCache::new(2, 100, 4, 0);
+        assert!(c.get(7).is_none());
+        c.put(7, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.get(7).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        c.tick();
+        assert!(c.get(7).is_some(), "within ttl");
+        c.tick();
+        assert!(c.get(7).is_none(), "expired after ttl");
+    }
+
+    #[test]
+    fn invalidation_forces_refetch() {
+        let mut c = RowCache::new(10, 100, 2, 0);
+        c.put(1, &[1.0, 1.0]);
+        assert!(c.get(1).is_some());
+        c.invalidate(1);
+        assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let mut c = RowCache::new(100, 16, 1, 0);
+        for i in 0..100u64 {
+            c.put(i, &[i as f32]);
+        }
+        assert!(c.len() <= 17, "len={}", c.len());
+    }
+
+    #[test]
+    fn hit_rate_counts() {
+        let mut c = RowCache::new(10, 100, 1, 0);
+        c.put(1, &[1.0]);
+        let _ = c.get(1); // hit
+        let _ = c.get(2); // miss
+        let _ = c.get(1); // hit
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_separates_hits_and_unique_misses() {
+        let mut c = RowCache::new(10, 100, 2, 0);
+        c.put(5, &[5.0, 5.0]);
+        let (hits, missing) = partition_lookups(&mut c, &[5, 6, 5, 7, 6]);
+        assert!(hits[0].is_some() && hits[2].is_some());
+        assert!(hits[1].is_none() && hits[3].is_none() && hits[4].is_none());
+        assert_eq!(missing, vec![6, 7]); // deduplicated, order-preserved
+    }
+
+    #[test]
+    fn zipf_stream_gets_high_hit_rate() {
+        // Hot ids (Zipf-ish: 80% of lookups over 20 ids) should mostly hit
+        // after warmup.
+        let mut c = RowCache::new(50, 1000, 1, 0);
+        let mut rng = Rng::seed_from_u64(3);
+        for step in 0..50 {
+            c.tick();
+            for _ in 0..200 {
+                let id = if rng.gen_bool(0.8) {
+                    rng.gen_range(0, 20)
+                } else {
+                    rng.gen_range(20, 100_000)
+                };
+                if c.get(id).is_none() {
+                    c.put(id, &[id as f32]);
+                }
+            }
+            let _ = step;
+        }
+        assert!(c.hit_rate() > 0.5, "hit rate {}", c.hit_rate());
+    }
+}

@@ -1,0 +1,270 @@
+//! Lookup planning: dedup, shard routing, block assembly, and the
+//! support/query overlap map.
+//!
+//! Paper §2.1.1: the embedding lookup is "I/O and communication-intensive";
+//! G-Meta (a) deduplicates ids within a batch, (b) *prefetches the support
+//! and query lookups together* so the AlltoAll runs once per iteration
+//! instead of twice, and (c) records which query positions alias support
+//! rows so the outer loop can read inner-adapted values (Algorithm 1
+//! line 9) instead of a second fetch.
+
+use crate::util::fxhash::FxHashMap;
+use crate::Result;
+
+/// One worker's deduplicated lookup against the sharded table.
+///
+/// `index[p]` maps flat position `p` (over `B*F*V` id slots) to an index
+/// into `unique`; the gathered block is assembled by expanding unique row
+/// vectors back through `index`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerLookup {
+    pub unique: Vec<u64>,
+    pub index: Vec<u32>,
+}
+
+impl WorkerLookup {
+    /// Deduplicate a flat id list, preserving first-seen order.
+    pub fn build(ids: &[u64]) -> Self {
+        let mut seen: FxHashMap<u64, u32> =
+            FxHashMap::with_capacity_and_hasher(ids.len(), Default::default());
+        let mut unique = Vec::new();
+        let index = ids
+            .iter()
+            .map(|&id| {
+                *seen.entry(id).or_insert_with(|| {
+                    unique.push(id);
+                    (unique.len() - 1) as u32
+                })
+            })
+            .collect();
+        Self { unique, index }
+    }
+
+    /// Dedup ratio (unique / total) — the comm-volume saving from (a).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.index.is_empty() {
+            1.0
+        } else {
+            self.unique.len() as f64 / self.index.len() as f64
+        }
+    }
+
+    /// Expand unique row vectors (concatenated, `dim` floats each) into the
+    /// positional block (one `dim`-vector per flat position).
+    pub fn assemble(&self, unique_vecs: &[f32], dim: usize) -> Result<Vec<f32>> {
+        if unique_vecs.len() != self.unique.len() * dim {
+            anyhow::bail!(
+                "assemble: got {} floats for {} unique rows x dim {}",
+                unique_vecs.len(),
+                self.unique.len(),
+                dim
+            );
+        }
+        let mut out = Vec::with_capacity(self.index.len() * dim);
+        for &u in &self.index {
+            let off = u as usize * dim;
+            out.extend_from_slice(&unique_vecs[off..off + dim]);
+        }
+        Ok(out)
+    }
+
+    /// Reduce positional gradients back to unique-row gradients
+    /// (sum-duplicates — the transpose of [`Self::assemble`]).
+    pub fn reduce_grads(&self, pos_grads: &[f32], dim: usize) -> Result<Vec<f32>> {
+        if pos_grads.len() != self.index.len() * dim {
+            anyhow::bail!(
+                "reduce_grads: got {} floats for {} positions x dim {}",
+                pos_grads.len(),
+                self.index.len(),
+                dim
+            );
+        }
+        let mut out = vec![0.0f32; self.unique.len() * dim];
+        for (p, &u) in self.index.iter().enumerate() {
+            let src = p * dim;
+            let dst = u as usize * dim;
+            for c in 0..dim {
+                out[dst + c] += pos_grads[src + c];
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Routing of one worker's unique rows to owner shards.
+///
+/// `per_shard[s]` lists (unique_idx, row) requested from shard `s`; the
+/// response vectors are written back into the unique-row buffer by
+/// `unique_idx`.
+#[derive(Debug, Clone)]
+pub struct LookupPlan {
+    pub lookup: WorkerLookup,
+    pub per_shard: Vec<Vec<(u32, u64)>>,
+}
+
+impl LookupPlan {
+    /// Plan a lookup of `ids` against a `world`-way row-sharded table
+    /// (owner = row % world — must match [`super::ShardedEmbedding`]).
+    pub fn build(ids: &[u64], world: usize) -> Self {
+        let lookup = WorkerLookup::build(ids);
+        let mut per_shard = vec![Vec::new(); world];
+        for (i, &row) in lookup.unique.iter().enumerate() {
+            per_shard[(row % world as u64) as usize].push((i as u32, row));
+        }
+        Self { lookup, per_shard }
+    }
+
+    /// Rows requested from shard `s` (in request order).
+    pub fn rows_for_shard(&self, s: usize) -> Vec<u64> {
+        self.per_shard[s].iter().map(|&(_, r)| r).collect()
+    }
+
+    /// Scatter shard responses (`resp[s]` = concatenated vectors for
+    /// shard `s`'s rows) into a dense unique-row buffer.
+    pub fn scatter_responses(&self, resp: &[Vec<f32>], dim: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.lookup.unique.len() * dim];
+        if resp.len() != self.per_shard.len() {
+            anyhow::bail!(
+                "scatter: {} responses for {} shards",
+                resp.len(),
+                self.per_shard.len()
+            );
+        }
+        for (s, entries) in self.per_shard.iter().enumerate() {
+            if resp[s].len() != entries.len() * dim {
+                anyhow::bail!(
+                    "scatter: shard {s} returned {} floats for {} rows",
+                    resp[s].len(),
+                    entries.len()
+                );
+            }
+            for (j, &(uidx, _)) in entries.iter().enumerate() {
+                let dst = uidx as usize * dim;
+                out[dst..dst + dim].copy_from_slice(&resp[s][j * dim..(j + 1) * dim]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Split unique-row gradients into per-shard return messages
+    /// (`(rows, grads)` per shard) for the sparse-update AlltoAll.
+    pub fn split_grads(&self, unique_grads: &[f32], dim: usize) -> Result<Vec<(Vec<u64>, Vec<f32>)>> {
+        if unique_grads.len() != self.lookup.unique.len() * dim {
+            anyhow::bail!("split_grads: bad buffer size");
+        }
+        Ok(self
+            .per_shard
+            .iter()
+            .map(|entries| {
+                let rows: Vec<u64> = entries.iter().map(|&(_, r)| r).collect();
+                let mut grads = Vec::with_capacity(entries.len() * dim);
+                for &(uidx, _) in entries {
+                    let off = uidx as usize * dim;
+                    grads.extend_from_slice(&unique_grads[off..off + dim]);
+                }
+                (rows, grads)
+            })
+            .collect())
+    }
+}
+
+/// Build the overlap map (Algorithm 1 line 9): for each query position,
+/// the flat support position holding the same embedding row, or -1.
+///
+/// When a row occurs multiple times in the support block, the *last*
+/// occurrence wins — all duplicates of a row receive the same inner-SGD
+/// update in the L2 graph, so any occurrence is equivalent; taking the
+/// last matches the sequential-update intuition and is deterministic.
+pub fn build_overlap(sup_ids: &[u64], qry_ids: &[u64]) -> Vec<i32> {
+    let mut last_pos: FxHashMap<u64, i32> =
+        FxHashMap::with_capacity_and_hasher(sup_ids.len(), Default::default());
+    for (p, &id) in sup_ids.iter().enumerate() {
+        last_pos.insert(id, p as i32);
+    }
+    qry_ids
+        .iter()
+        .map(|id| last_pos.get(id).copied().unwrap_or(-1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_preserves_first_seen_order() {
+        let l = WorkerLookup::build(&[5, 3, 5, 7, 3]);
+        assert_eq!(l.unique, vec![5, 3, 7]);
+        assert_eq!(l.index, vec![0, 1, 0, 2, 1]);
+        assert!((l.dedup_ratio() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assemble_then_reduce_roundtrip() {
+        let l = WorkerLookup::build(&[1, 2, 1]);
+        let unique_vecs = vec![1.0, 2.0, 10.0, 20.0]; // dim=2
+        let block = l.assemble(&unique_vecs, 2).unwrap();
+        assert_eq!(block, vec![1.0, 2.0, 10.0, 20.0, 1.0, 2.0]);
+        // Positional grads of 1s: duplicated row 1 accumulates 2x.
+        let g = l.reduce_grads(&[1.0; 6], 2).unwrap();
+        assert_eq!(g, vec![2.0, 2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn plan_routes_to_owner_shards() {
+        let p = LookupPlan::build(&[0, 1, 2, 3, 4, 2], 2);
+        assert_eq!(p.rows_for_shard(0), vec![0, 2, 4]);
+        assert_eq!(p.rows_for_shard(1), vec![1, 3]);
+    }
+
+    #[test]
+    fn scatter_responses_places_rows() {
+        let p = LookupPlan::build(&[0, 1, 2], 2); // shard0: {0,2}, shard1: {1}
+        let resp = vec![vec![1.0, 1.5, 3.0, 3.5], vec![2.0, 2.5]];
+        let uniq = p.scatter_responses(&resp, 2).unwrap();
+        assert_eq!(uniq, vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5]);
+        let block = p.lookup.assemble(&uniq, 2).unwrap();
+        assert_eq!(block, vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn split_grads_inverse_of_scatter() {
+        let p = LookupPlan::build(&[10, 11, 12, 13], 3);
+        let dim = 2;
+        let uniq_grads: Vec<f32> = (0..4 * dim).map(|x| x as f32).collect();
+        let per_shard = p.split_grads(&uniq_grads, dim).unwrap();
+        // Every unique row appears exactly once across shards with its grads.
+        let mut seen: Vec<(u64, Vec<f32>)> = Vec::new();
+        for (rows, grads) in per_shard {
+            for (j, &r) in rows.iter().enumerate() {
+                seen.push((r, grads[j * dim..(j + 1) * dim].to_vec()));
+            }
+        }
+        seen.sort_by_key(|(r, _)| *r);
+        assert_eq!(seen.len(), 4);
+        for (i, (r, g)) in seen.iter().enumerate() {
+            assert_eq!(*r, 10 + i as u64);
+            let uidx = p.lookup.unique.iter().position(|&u| u == *r).unwrap();
+            assert_eq!(*g, uniq_grads[uidx * dim..(uidx + 1) * dim].to_vec());
+        }
+    }
+
+    #[test]
+    fn overlap_last_occurrence_wins() {
+        let sup = [7u64, 8, 7];
+        let qry = [7u64, 9, 8];
+        assert_eq!(build_overlap(&sup, &qry), vec![2, -1, 1]);
+    }
+
+    #[test]
+    fn overlap_empty_support() {
+        assert_eq!(build_overlap(&[], &[1, 2]), vec![-1, -1]);
+    }
+
+    #[test]
+    fn assemble_checks_sizes() {
+        let l = WorkerLookup::build(&[1]);
+        assert!(l.assemble(&[0.0; 3], 2).is_err());
+        assert!(l.reduce_grads(&[0.0; 3], 2).is_err());
+    }
+}

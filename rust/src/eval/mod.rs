@@ -1,0 +1,117 @@
+//! Statistical evaluation: AUC and log-loss (the paper's Figure-3 metric).
+
+/// Area under the ROC curve via the rank-sum (Mann-Whitney U) estimator,
+/// with proper tie handling (average ranks).
+///
+/// Returns `None` when AUC is undefined (single-class labels).
+pub fn auc(scores: &[f32], labels: &[f32]) -> Option<f64> {
+    assert_eq!(scores.len(), labels.len(), "scores/labels length mismatch");
+    let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return None;
+    }
+    // Sort indices by score; assign average ranks to ties.
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut ranks = vec![0.0f64; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for k in i..=j {
+            ranks[idx[k]] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 = labels
+        .iter()
+        .enumerate()
+        .filter(|(_, &y)| y > 0.5)
+        .map(|(i, _)| ranks[i])
+        .sum();
+    let u = rank_sum_pos - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    Some(u / (n_pos as f64 * n_neg as f64))
+}
+
+/// Mean binary log-loss from probabilities (clipped for stability).
+pub fn log_loss(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let eps = 1e-7f64;
+    probs
+        .iter()
+        .zip(labels)
+        .map(|(&p, &y)| {
+            let p = (p as f64).clamp(eps, 1.0 - eps);
+            if y > 0.5 {
+                -p.ln()
+            } else {
+                -(1.0 - p).ln()
+            }
+        })
+        .sum::<f64>()
+        / probs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_auc_is_one() {
+        let s = [0.1f32, 0.2, 0.8, 0.9];
+        let y = [0.0f32, 0.0, 1.0, 1.0];
+        assert!((auc(&s, &y).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_ranking_auc_is_zero() {
+        let s = [0.9f32, 0.8, 0.2, 0.1];
+        let y = [0.0f32, 0.0, 1.0, 1.0];
+        assert!(auc(&s, &y).unwrap().abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_ties_auc_is_half() {
+        let s = [0.5f32; 10];
+        let y = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert!((auc(&s, &y).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_class_is_undefined() {
+        assert!(auc(&[0.5, 0.6], &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn auc_matches_pairwise_definition() {
+        // Brute-force check on a small mixed example.
+        let s = [0.3f32, 0.7, 0.5, 0.2, 0.9];
+        let y = [0.0f32, 1.0, 0.0, 1.0, 1.0];
+        let mut wins = 0.0;
+        let mut total = 0.0;
+        for (i, &yi) in y.iter().enumerate() {
+            for (j, &yj) in y.iter().enumerate() {
+                if yi > 0.5 && yj < 0.5 {
+                    total += 1.0;
+                    if s[i] > s[j] {
+                        wins += 1.0;
+                    } else if s[i] == s[j] {
+                        wins += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc(&s, &y).unwrap() - wins / total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_loss_prefers_confident_correct() {
+        let good = log_loss(&[0.9, 0.1], &[1.0, 0.0]);
+        let bad = log_loss(&[0.6, 0.4], &[1.0, 0.0]);
+        assert!(good < bad);
+    }
+}

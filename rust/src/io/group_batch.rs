@@ -1,0 +1,135 @@
+//! GroupBatchOp: assemble decoded records into task-pure batches.
+//!
+//! Paper §2.2.1: "only records from the same tasks are ensembled in a
+//! batch using our GroupBatchOp according to both task id and batch_id"
+//! (implemented in C++ inside their trainer; here it is the Rust op the
+//! loader feeds).
+//!
+//! The op consumes `(sample, batch_id)` pairs in stream order, groups
+//! consecutive runs of equal `batch_id`, and validates that every group is
+//! task-pure — a corrupted index or a sample-level shuffle upstream is
+//! detected here rather than silently producing cross-task episodes.
+
+use crate::meta::{Sample, TaskBatch};
+use crate::Result;
+
+/// Streaming grouper keyed by batch_id.
+#[derive(Debug, Default)]
+pub struct GroupBatchOp {
+    current: Option<TaskBatch>,
+}
+
+impl GroupBatchOp {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Push one record; returns a completed batch when `batch_id` rolls
+    /// over.  Errors if a record's task contradicts its group.
+    pub fn push(&mut self, sample: Sample, batch_id: u64) -> Result<Option<TaskBatch>> {
+        match &mut self.current {
+            Some(tb) if tb.batch_id == batch_id => {
+                if sample.task != tb.task {
+                    anyhow::bail!(
+                        "GroupBatchOp: batch {batch_id} mixes task {} with task {} — \
+                         upstream shuffle/index is not task-pure",
+                        tb.task,
+                        sample.task
+                    );
+                }
+                tb.samples.push(sample);
+                Ok(None)
+            }
+            _ => {
+                let done = self.current.take();
+                self.current = Some(TaskBatch {
+                    task: sample.task,
+                    batch_id,
+                    samples: vec![sample],
+                });
+                Ok(done)
+            }
+        }
+    }
+
+    /// Flush the trailing group.
+    pub fn finish(&mut self) -> Option<TaskBatch> {
+        self.current.take()
+    }
+}
+
+/// Convenience: group a fully-decoded vector of `(sample, batch_id)`.
+pub fn group_all(records: Vec<(Sample, u64)>) -> Result<Vec<TaskBatch>> {
+    let mut op = GroupBatchOp::new();
+    let mut out = Vec::new();
+    for (s, bid) in records {
+        if let Some(tb) = op.push(s, bid)? {
+            out.push(tb);
+        }
+    }
+    if let Some(tb) = op.finish() {
+        out.push(tb);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(task: u64, id: u64) -> Sample {
+        Sample {
+            task,
+            ids: vec![id],
+            label: 0.0,
+        }
+    }
+
+    #[test]
+    fn groups_by_batch_id() {
+        let recs = vec![
+            (s(1, 0), 0),
+            (s(1, 1), 0),
+            (s(2, 2), 1),
+            (s(2, 3), 1),
+            (s(2, 4), 2),
+        ];
+        let batches = group_all(recs).unwrap();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].samples.len(), 2);
+        assert_eq!(batches[0].task, 1);
+        assert_eq!(batches[2].samples.len(), 1);
+        assert!(batches.iter().all(|b| b.is_pure()));
+    }
+
+    #[test]
+    fn rejects_mixed_tasks_in_one_batch() {
+        let recs = vec![(s(1, 0), 0), (s(2, 1), 0)];
+        let err = group_all(recs).unwrap_err();
+        assert!(err.to_string().contains("mixes task"));
+    }
+
+    #[test]
+    fn same_task_different_batches_kept_separate() {
+        let recs = vec![(s(1, 0), 0), (s(1, 1), 1)];
+        let batches = group_all(recs).unwrap();
+        assert_eq!(batches.len(), 2);
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        assert!(group_all(vec![]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn streaming_interface_flushes_tail() {
+        let mut op = GroupBatchOp::new();
+        assert!(op.push(s(1, 0), 0).unwrap().is_none());
+        assert!(op.push(s(1, 1), 0).unwrap().is_none());
+        let done = op.push(s(2, 2), 1).unwrap().unwrap();
+        assert_eq!(done.batch_id, 0);
+        let tail = op.finish().unwrap();
+        assert_eq!(tail.batch_id, 1);
+        assert!(op.finish().is_none());
+    }
+}

@@ -1,0 +1,31 @@
+//! Meta-IO: the high-throughput data-ingestion pipeline (paper §2.2).
+//!
+//! Conventional DL pipelines batch at the sample level; meta learning
+//! additionally requires every batch to contain samples of a *single
+//! task*.  The pipeline reproduces the paper's dataflow (Figure 2):
+//!
+//! 1. **Preprocess** ([`preprocess`]): sort samples by the task column,
+//!    assign a `batch_id` per `batch_size` run within a task, emit an
+//!    `offset` column so each batch is a contiguous byte range
+//!    (MapReduce in the paper; a staged map→sort→reduce pipeline here).
+//! 2. **Batch-level shuffle** ([`shuffle`]): permute whole batches, never
+//!    samples — sample-level shuffling would mix tasks (§2.2.1).
+//! 3. **GroupBatchOp** ([`group_batch`]): assemble loaded records into
+//!    task-pure batches keyed by (task, batch_id), rejecting mixed input.
+//! 4. **Load** ([`loader`]): each worker reads its contiguous
+//!    `(offset*i, offset*i + total/N)` range sequentially — the
+//!    block-FS-friendly access pattern of §2.2.2 — decoding the binary
+//!    framed format ([`codec`]); the string codec and random-access path
+//!    exist as the Figure-4 ablation arms.
+
+pub mod codec;
+pub mod group_batch;
+pub mod loader;
+pub mod preprocess;
+pub mod shuffle;
+
+pub use codec::{decode_binary, decode_string, encode_binary, encode_string, Codec};
+pub use group_batch::GroupBatchOp;
+pub use loader::{Loader, LoaderStats};
+pub use preprocess::{preprocess, BatchEntry, DatasetOnDisk};
+pub use shuffle::{batch_level_shuffle, sample_level_shuffle};

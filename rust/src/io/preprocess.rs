@@ -1,0 +1,307 @@
+//! Preprocessing: sort-by-task, batch_id assignment, offset column.
+//!
+//! Paper §2.2.1 (Figure 2 dataflow): "we first sort the samples by the
+//! order of task column … and generate a batch_id for each sample
+//! according to the batch size and task column … we first generate an
+//! extra offset column in the preprocessing phase and sequentially store
+//! samples according to the offset column."
+//!
+//! The paper runs this in MapReduce; we run the same three stages
+//! (map: extract keys → shuffle/sort: order by (task, arrival) →
+//! reduce: assign batch ids, serialize, record offsets) on threads over
+//! in-memory shards, writing a real on-disk dataset: one data file plus a
+//! JSON batch index (the offset column).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::io::codec::{encode_all, Codec};
+use crate::meta::Sample;
+use crate::Result;
+
+/// One batch's entry in the offset index (the paper's offset column,
+/// lifted to batch granularity since batches are the read unit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchEntry {
+    pub task: u64,
+    pub batch_id: u64,
+    /// Byte offset of the batch's first record in the data file.
+    pub offset: u64,
+    /// Encoded byte length of the whole batch.
+    pub len: u64,
+    pub n_samples: u32,
+}
+
+/// A preprocessed dataset on disk: data file + offset index.
+#[derive(Debug, Clone)]
+pub struct DatasetOnDisk {
+    pub data_path: PathBuf,
+    pub index: Vec<BatchEntry>,
+    pub codec_binary: bool,
+    pub batch_size: usize,
+    pub total_samples: usize,
+}
+
+impl DatasetOnDisk {
+    pub fn codec(&self) -> Codec {
+        if self.codec_binary {
+            Codec::Binary
+        } else {
+            Codec::String
+        }
+    }
+
+    /// Persist the index next to the data file.
+    pub fn save_index(&self) -> Result<PathBuf> {
+        use crate::util::json::{num, obj, s, Value};
+        let path = self.data_path.with_extension("index.json");
+        let entries: Vec<Value> = self
+            .index
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("task", num(e.task as f64)),
+                    ("batch_id", num(e.batch_id as f64)),
+                    ("offset", num(e.offset as f64)),
+                    ("len", num(e.len as f64)),
+                    ("n_samples", num(e.n_samples as f64)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("data_path", s(&self.data_path.to_string_lossy())),
+            ("codec_binary", Value::Bool(self.codec_binary)),
+            ("batch_size", num(self.batch_size as f64)),
+            ("total_samples", num(self.total_samples as f64)),
+            ("index", Value::Arr(entries)),
+        ]);
+        fs::write(&path, crate::util::json::write(&doc))?;
+        Ok(path)
+    }
+
+    pub fn load_index(path: &Path) -> Result<Self> {
+        let doc = crate::util::json::parse(&fs::read_to_string(path)?)?;
+        let need_u64 = |v: &crate::util::json::Value, k: &str| -> Result<u64> {
+            v.field(k)?
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("field {k:?} is not a number"))
+        };
+        let index = doc
+            .field("index")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("index is not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(BatchEntry {
+                    task: need_u64(e, "task")?,
+                    batch_id: need_u64(e, "batch_id")?,
+                    offset: need_u64(e, "offset")?,
+                    len: need_u64(e, "len")?,
+                    n_samples: need_u64(e, "n_samples")? as u32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            data_path: PathBuf::from(
+                doc.field("data_path")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("data_path not a string"))?,
+            ),
+            codec_binary: doc
+                .field("codec_binary")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("codec_binary not a bool"))?,
+            batch_size: doc.field("batch_size")?.as_usize().unwrap_or(0),
+            total_samples: doc.field("total_samples")?.as_usize().unwrap_or(0),
+            index,
+        })
+    }
+}
+
+/// Run the preprocessing pipeline over `samples`, writing `dir/name.dat`.
+///
+/// Stages (mirroring the MapReduce phases):
+/// 1. *map*: tag each sample with its task key (implicit — key is a field);
+/// 2. *sort*: stable sort by task (stability preserves log order within a
+///    task, like a secondary sort on arrival time);
+/// 3. *reduce*: walk runs of equal task, cut them into `batch_size` chunks,
+///    assign global `batch_id`s, serialize chunks contiguously and record
+///    each chunk's `(offset, len)`.
+/// `shuffle_seed`: when set, batches are written in *batch-level shuffled*
+/// order (paper §2.2.1) — offsets are assigned after the shuffle, so each
+/// worker's index slice is one contiguous byte range and training-time
+/// reads are sequential.  `None` keeps task-sorted order (tests/ablation).
+pub fn preprocess(
+    mut samples: Vec<Sample>,
+    batch_size: usize,
+    codec: Codec,
+    dir: &Path,
+    name: &str,
+    shuffle_seed: Option<u64>,
+) -> Result<DatasetOnDisk> {
+    if batch_size == 0 {
+        anyhow::bail!("batch_size must be positive");
+    }
+    let total = samples.len();
+    // Stage 2: sort by task column.
+    samples.sort_by_key(|s| s.task);
+
+    // Stage 3a: batch cutting (record ranges, no serialization yet).
+    let mut cuts: Vec<(u64, usize, usize)> = Vec::new(); // (task, start, end)
+    let mut i = 0usize;
+    while i < samples.len() {
+        let task = samples[i].task;
+        let mut j = i;
+        while j < samples.len() && samples[j].task == task {
+            j += 1;
+        }
+        let mut k = i;
+        while k < j {
+            let end = (k + batch_size).min(j);
+            cuts.push((task, k, end));
+            k = end;
+        }
+        i = j;
+    }
+
+    // Stage 3b: batch-level shuffle BEFORE assigning offsets, so the
+    // randomized consumption order is also the physical layout order.
+    let mut order: Vec<usize> = (0..cuts.len()).collect();
+    if let Some(seed) = shuffle_seed {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        rng.shuffle(&mut order);
+    }
+
+    // Stage 3c: serialize in layout order, recording the offset column.
+    fs::create_dir_all(dir)?;
+    let data_path = dir.join(format!("{name}.dat"));
+    let mut data = Vec::new();
+    let mut index = Vec::new();
+    for (batch_id, &ci) in order.iter().enumerate() {
+        let (task, start, end) = cuts[ci];
+        let chunk = &samples[start..end];
+        let offset = data.len() as u64;
+        let bytes = encode_all(chunk, codec);
+        data.extend_from_slice(&bytes);
+        index.push(BatchEntry {
+            task,
+            batch_id: batch_id as u64,
+            offset,
+            len: bytes.len() as u64,
+            n_samples: (end - start) as u32,
+        });
+    }
+    fs::write(&data_path, &data)?;
+
+    let ds = DatasetOnDisk {
+        data_path,
+        index,
+        codec_binary: codec == Codec::Binary,
+        batch_size,
+        total_samples: total,
+    };
+    ds.save_index()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::codec::decode_n;
+
+    fn samples() -> Vec<Sample> {
+        // Interleaved tasks on purpose: preprocessing must sort them.
+        vec![
+            Sample { task: 2, ids: vec![1], label: 0.0 },
+            Sample { task: 1, ids: vec![2], label: 1.0 },
+            Sample { task: 2, ids: vec![3], label: 0.0 },
+            Sample { task: 1, ids: vec![4], label: 1.0 },
+            Sample { task: 1, ids: vec![5], label: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn batches_are_task_pure_and_offsets_correct() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        assert_eq!(ds.total_samples, 5);
+        // task 1 has 3 samples -> batches of 2 and 1; task 2 has 2 -> one batch.
+        assert_eq!(ds.index.len(), 3);
+        let data = std::fs::read(&ds.data_path).unwrap();
+        for e in &ds.index {
+            let buf = &data[e.offset as usize..(e.offset + e.len) as usize];
+            let (batch, used) = decode_n(buf, e.n_samples as usize, Codec::Binary).unwrap();
+            assert_eq!(used, e.len as usize);
+            assert!(batch.iter().all(|s| s.task == e.task));
+        }
+    }
+
+    #[test]
+    fn batch_ids_are_unique_and_dense() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        let mut ids: Vec<u64> = ds.index.iter().map(|e| e.batch_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stable_sort_preserves_within_task_order() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let ds = preprocess(samples(), 10, Codec::Binary, tmp.path(), "t", None).unwrap();
+        let data = std::fs::read(&ds.data_path).unwrap();
+        let e = ds.index.iter().find(|e| e.task == 1).unwrap();
+        let (batch, _) = decode_n(
+            &data[e.offset as usize..],
+            e.n_samples as usize,
+            Codec::Binary,
+        )
+        .unwrap();
+        // Task-1 samples in original order: ids 2, 4, 5.
+        assert_eq!(
+            batch.iter().map(|s| s.ids[0]).collect::<Vec<_>>(),
+            vec![2, 4, 5]
+        );
+    }
+
+    #[test]
+    fn string_codec_dataset_roundtrips() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let ds = preprocess(samples(), 2, Codec::String, tmp.path(), "t", None).unwrap();
+        let data = std::fs::read(&ds.data_path).unwrap();
+        for e in &ds.index {
+            let buf = &data[e.offset as usize..(e.offset + e.len) as usize];
+            let (batch, _) = decode_n(buf, e.n_samples as usize, Codec::String).unwrap();
+            assert!(batch.iter().all(|s| s.task == e.task));
+        }
+    }
+
+    #[test]
+    fn index_persists_and_reloads() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        let idx_path = ds.data_path.with_extension("index.json");
+        let back = DatasetOnDisk::load_index(&idx_path).unwrap();
+        assert_eq!(back.index, ds.index);
+        assert_eq!(back.batch_size, 2);
+    }
+
+    #[test]
+    fn zero_batch_size_rejected() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        assert!(preprocess(samples(), 0, Codec::Binary, tmp.path(), "t", None).is_err());
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        let mut expected = 0u64;
+        for e in &ds.index {
+            assert_eq!(e.offset, expected);
+            expected += e.len;
+        }
+        let file_len = std::fs::metadata(&ds.data_path).unwrap().len();
+        assert_eq!(expected, file_len);
+    }
+}

@@ -1,0 +1,97 @@
+//! Shuffling: batch-level (the Meta-IO way) vs sample-level (the
+//! conventional way that breaks task purity — kept to demonstrate why the
+//! paper rejects it, §2.2.1).
+
+use crate::io::preprocess::BatchEntry;
+use crate::util::Rng;
+use crate::meta::Sample;
+
+/// Batch-level shuffle: permute whole batch-index entries.  Every batch
+/// remains task-pure by construction; randomization happens at the
+/// granularity tasks are consumed.
+pub fn batch_level_shuffle(index: &mut [BatchEntry], seed: u64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(index);
+}
+
+/// Sample-level shuffle (the conventional pipeline): permutes raw samples,
+/// mixing tasks — after this, contiguous reads no longer yield task-pure
+/// batches and the trainer would need expensive re-grouping.  Exists so
+/// tests and the ablation can quantify exactly that.
+pub fn sample_level_shuffle(samples: &mut [Sample], seed: u64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(samples);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(n: u64) -> Vec<BatchEntry> {
+        (0..n)
+            .map(|i| BatchEntry {
+                task: i / 3,
+                batch_id: i,
+                offset: i * 100,
+                len: 100,
+                n_samples: 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_shuffle_is_a_permutation() {
+        let orig = entries(50);
+        let mut shuf = orig.clone();
+        batch_level_shuffle(&mut shuf, 7);
+        assert_ne!(orig, shuf, "seeded shuffle should move something");
+        let mut a: Vec<u64> = orig.iter().map(|e| e.batch_id).collect();
+        let mut b: Vec<u64> = shuf.iter().map(|e| e.batch_id).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_shuffle_preserves_entry_integrity() {
+        // Entries move as units: (task, batch_id, offset) stay glued.
+        let orig = entries(20);
+        let mut shuf = orig.clone();
+        batch_level_shuffle(&mut shuf, 3);
+        for e in &shuf {
+            let o = orig.iter().find(|o| o.batch_id == e.batch_id).unwrap();
+            assert_eq!(o, e);
+        }
+    }
+
+    #[test]
+    fn shuffles_are_deterministic_in_seed() {
+        let mut a = entries(30);
+        let mut b = entries(30);
+        batch_level_shuffle(&mut a, 11);
+        batch_level_shuffle(&mut b, 11);
+        assert_eq!(a, b);
+        let mut c = entries(30);
+        batch_level_shuffle(&mut c, 12);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sample_shuffle_breaks_task_runs() {
+        // 100 samples of 10 tasks in sorted runs; after sample-level
+        // shuffle, contiguous batch_size-10 windows mix tasks.
+        let mut samples: Vec<Sample> = (0..100)
+            .map(|i| Sample {
+                task: i / 10,
+                ids: vec![i],
+                label: 0.0,
+            })
+            .collect();
+        sample_level_shuffle(&mut samples, 5);
+        let mixed_windows = samples
+            .chunks(10)
+            .filter(|w| w.iter().any(|s| s.task != w[0].task))
+            .count();
+        assert!(mixed_windows > 5, "only {mixed_windows} mixed windows");
+    }
+}

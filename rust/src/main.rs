@@ -1,0 +1,196 @@
+//! gmeta — CLI for the G-Meta reproduction.
+//!
+//! Subcommands map 1:1 to the paper's experiments (see DESIGN.md §4):
+//!
+//! ```text
+//! gmeta preprocess       [--dataset movielens|aliccp|inhouse] [--samples N]
+//!                        [--batch B] [--out-dir DIR] [--string-codec]
+//! gmeta train            [--variant maml|melu|cbml] [--nodes N] [--gpus G]
+//!                        [--steps S] [--artifacts DIR] [--log-every K]
+//! gmeta bench-table1     [--steps S] [--quick]
+//! gmeta bench-fig3       [--steps S] [--artifacts DIR] [--variants a,b]
+//! gmeta bench-fig4       [--steps S] [--quick]
+//! gmeta bench-outer-rule
+//! ```
+
+use gmeta::config::{ExperimentConfig, ModelDims};
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::{aliccp_like, inhouse_like, movielens_like, DatasetSpec};
+use gmeta::harness;
+use gmeta::io::{preprocess as meta_preprocess, Codec};
+use gmeta::runtime::Runtime;
+use gmeta::util::args::Args;
+use gmeta::Result;
+
+const USAGE: &str = "gmeta <preprocess|train|bench-table1|bench-fig3|bench-fig4|bench-outer-rule> [options]
+See `rust/src/main.rs` header or README.md for per-command options.";
+
+fn pick_dataset(name: &str, samples: usize) -> Result<DatasetSpec> {
+    Ok(match name {
+        "movielens" => movielens_like(),
+        "aliccp" => aliccp_like(samples),
+        "inhouse" => inhouse_like(samples),
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    })
+}
+
+fn cmd_preprocess(a: &Args) -> Result<()> {
+    let samples = a.usize_or("samples", 20_000)?;
+    let spec = pick_dataset(a.get_or("dataset", "movielens"), samples)?;
+    let mut gen = gmeta::data::Generator::new(spec);
+    let data = gen.take(samples);
+    let codec = if a.flag("string-codec") {
+        Codec::String
+    } else {
+        Codec::Binary
+    };
+    let ds = meta_preprocess(
+        data,
+        a.usize_or("batch", 256)?,
+        codec,
+        std::path::Path::new(a.get_or("out-dir", "/tmp/gmeta-data")),
+        spec.name,
+        Some(spec.seed),
+    )?;
+    println!(
+        "preprocessed {} samples -> {} task-pure batches at {:?} ({} bytes)",
+        ds.total_samples,
+        ds.index.len(),
+        ds.data_path,
+        std::fs::metadata(&ds.data_path)?.len()
+    );
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let variant = a.get_or("variant", "maml").to_string();
+    let steps = a.usize_or("steps", 50)?;
+    let log_every = a.usize_or("log-every", 10)?;
+    let ckpt_dir = a.get("checkpoint-dir").map(std::path::PathBuf::from);
+    let resume = a.flag("resume");
+    let rt = Runtime::load(
+        std::path::Path::new(a.get_or("artifacts", "artifacts")),
+        &[variant.as_str()],
+    )?;
+    let spec = movielens_like();
+    let mut cfg = ExperimentConfig::gmeta(a.usize_or("nodes", 1)?, a.usize_or("gpus", 4)?);
+    cfg.dims = ModelDims {
+        emb_rows: spec.emb_rows as usize,
+        ..ModelDims::default()
+    };
+    cfg.train.steps = steps;
+    let world = cfg.cluster.world_size();
+    let eps = episodes_from_generator(spec, &cfg.dims, world, 16);
+    let mut t = GMetaTrainer::new(cfg, &variant, spec.record_bytes, Some(&rt))?;
+    let mut start_step = 0u64;
+    if resume {
+        let dir = ckpt_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--resume requires --checkpoint-dir"))?;
+        start_step = t.resume(&dir)?;
+        println!("resumed from {dir:?} at step {start_step}");
+    }
+    let m = t.run(&eps, steps)?;
+    for (i, (ls, lq)) in t.losses.iter().enumerate() {
+        if i % log_every == 0 || i + 1 == t.losses.len() {
+            println!("step {i:>4}  loss_sup={ls:.4}  loss_qry={lq:.4}");
+        }
+    }
+    println!("{m}");
+    println!("replicas in sync: {}", t.replicas_in_sync());
+    if let Some(dir) = ckpt_dir {
+        t.save_checkpoint(&dir, start_step + steps as u64)?;
+        println!("checkpoint written to {dir:?}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(a: &Args) -> Result<()> {
+    let rows = harness::table1(a.usize_or("steps", 30)?, a.flag("quick"))?;
+    println!(
+        "{:<34} {:>8} {:>14} {:>9}",
+        "configuration", "workers", "samples/s", "speedup"
+    );
+    for r in rows {
+        println!(
+            "{:<34} {:>8} {:>14.0} {:>9.2}",
+            r.label, r.world, r.throughput, r.speedup_ratio
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig3(a: &Args) -> Result<()> {
+    let variants = a.list_or("variants", &["maml", "melu", "cbml"]);
+    let names: Vec<&str> = variants.iter().map(String::as_str).collect();
+    let rt = Runtime::load(std::path::Path::new(a.get_or("artifacts", "artifacts")), &names)?;
+    let rows = harness::fig3(&rt, a.usize_or("steps", 60)?, &names)?;
+    println!(
+        "{:<8} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "variant", "AUC(G-Meta)", "AUC(ref)", "|dAUC|", "loss(G-Meta)", "loss(ref)"
+    );
+    for r in rows {
+        println!(
+            "{:<8} {:>12.4} {:>12.4} {:>10.4} {:>12.4} {:>12.4}",
+            r.variant,
+            r.auc_gmeta,
+            r.auc_reference,
+            (r.auc_gmeta - r.auc_reference).abs(),
+            r.final_loss_gmeta,
+            r.final_loss_reference
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig4(a: &Args) -> Result<()> {
+    let rows = harness::fig4(a.usize_or("steps", 30)?, a.flag("quick"))?;
+    println!(
+        "{:<22} {:>14} {:>12}",
+        "configuration", "samples/s", "vs baseline"
+    );
+    for r in rows {
+        println!(
+            "{:<22} {:>14.0} {:>11.2}x",
+            r.label, r.throughput, r.speedup_ratio
+        );
+    }
+    Ok(())
+}
+
+fn cmd_outer_rule() -> Result<()> {
+    let rows = harness::outer_rule_sweep()?;
+    println!(
+        "{:>10} {:>6} {:>14} {:>14} {:>8} {:>14} {:>14}",
+        "K(floats)", "N", "central(s)", "ring(s)", "speedup", "central(B)", "ring(B)"
+    );
+    for r in rows {
+        println!(
+            "{:>10} {:>6} {:>14.6} {:>14.6} {:>7.1}x {:>14.0} {:>14.0}",
+            r.k_floats,
+            r.world,
+            r.central_time,
+            r.ring_time,
+            r.central_time / r.ring_time,
+            r.central_bytes,
+            r.ring_bytes
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env()?;
+    match a.subcommand.as_deref() {
+        Some("preprocess") => cmd_preprocess(&a),
+        Some("train") => cmd_train(&a),
+        Some("bench-table1") => cmd_table1(&a),
+        Some("bench-fig3") => cmd_fig3(&a),
+        Some("bench-fig4") => cmd_fig4(&a),
+        Some("bench-outer-rule") => cmd_outer_rule(),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

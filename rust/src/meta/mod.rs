@@ -1,0 +1,160 @@
+//! Meta-learning task abstractions: samples, task batches, episodes.
+//!
+//! Meta-DLRM training data is organized at two levels (paper §2.2.1): the
+//! *task* level (all samples of one batch must come from the same task —
+//! e.g. one user or one scenario) and the *batch* level.  A [`TaskBatch`]
+//! is the unit the Meta-IO pipeline emits; an [`Episode`] splits it into
+//! the support/query halves Algorithm 1 consumes (line 4).
+
+/// One logged impression: task id, `F*V` hashed categorical ids, label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub task: u64,
+    pub ids: Vec<u64>,
+    pub label: f32,
+}
+
+impl Sample {
+    /// Serialized payload size (binary codec): used by both the real codec
+    /// and the storage cost model.
+    pub fn encoded_len(&self) -> usize {
+        8 + 4 + 2 + 8 * self.ids.len()
+    }
+}
+
+/// A batch of samples guaranteed to share one task (GroupBatchOp output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskBatch {
+    pub task: u64,
+    pub batch_id: u64,
+    pub samples: Vec<Sample>,
+}
+
+impl TaskBatch {
+    /// Invariant check: every sample belongs to `self.task`.
+    pub fn is_pure(&self) -> bool {
+        self.samples.iter().all(|s| s.task == self.task)
+    }
+}
+
+/// Support/query split of one task batch (Algorithm 1 line 4).
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub task: u64,
+    pub support: Vec<Sample>,
+    pub query: Vec<Sample>,
+}
+
+impl Episode {
+    /// Split a task batch into equal support/query halves of exactly
+    /// `batch` samples each, cycling samples if the task batch is short
+    /// (cold tasks have few impressions; cycling matches how industrial
+    /// meta-DLRM pipelines pad episodes rather than dropping cold tasks).
+    pub fn from_task_batch(tb: &TaskBatch, batch: usize) -> Option<Episode> {
+        if tb.samples.is_empty() {
+            return None;
+        }
+        let take = |offset: usize| -> Vec<Sample> {
+            (0..batch)
+                .map(|i| tb.samples[(offset + i) % tb.samples.len()].clone())
+                .collect()
+        };
+        let half = tb.samples.len() / 2;
+        let support = take(0);
+        let query = take(half.max(1).min(tb.samples.len() - 1));
+        Some(Episode {
+            task: tb.task,
+            support,
+            query,
+        })
+    }
+
+    /// Flat id arrays for the support/query blocks (row lookups).
+    pub fn support_ids(&self) -> Vec<u64> {
+        self.support.iter().flat_map(|s| s.ids.iter().copied()).collect()
+    }
+
+    pub fn query_ids(&self) -> Vec<u64> {
+        self.query.iter().flat_map(|s| s.ids.iter().copied()).collect()
+    }
+
+    pub fn support_labels(&self) -> Vec<f32> {
+        self.support.iter().map(|s| s.label).collect()
+    }
+
+    pub fn query_labels(&self) -> Vec<f32> {
+        self.query.iter().map(|s| s.label).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(task: u64, id: u64, label: f32) -> Sample {
+        Sample {
+            task,
+            ids: vec![id, id + 1],
+            label,
+        }
+    }
+
+    #[test]
+    fn encoded_len_counts_ids() {
+        assert_eq!(sample(1, 2, 0.0).encoded_len(), 8 + 4 + 2 + 16);
+    }
+
+    #[test]
+    fn purity_check() {
+        let tb = TaskBatch {
+            task: 3,
+            batch_id: 0,
+            samples: vec![sample(3, 1, 0.0), sample(3, 2, 1.0)],
+        };
+        assert!(tb.is_pure());
+        let bad = TaskBatch {
+            task: 3,
+            batch_id: 0,
+            samples: vec![sample(3, 1, 0.0), sample(4, 2, 1.0)],
+        };
+        assert!(!bad.is_pure());
+    }
+
+    #[test]
+    fn episode_pads_by_cycling() {
+        let tb = TaskBatch {
+            task: 1,
+            batch_id: 0,
+            samples: vec![sample(1, 10, 0.0), sample(1, 20, 1.0), sample(1, 30, 0.0)],
+        };
+        let ep = Episode::from_task_batch(&tb, 4).unwrap();
+        assert_eq!(ep.support.len(), 4);
+        assert_eq!(ep.query.len(), 4);
+        assert_eq!(ep.support[0].ids[0], 10);
+        assert_eq!(ep.support[3].ids[0], 10); // cycled
+        // Query starts at the second half.
+        assert_eq!(ep.query[0].ids[0], 20);
+    }
+
+    #[test]
+    fn empty_batch_yields_none() {
+        let tb = TaskBatch {
+            task: 1,
+            batch_id: 0,
+            samples: vec![],
+        };
+        assert!(Episode::from_task_batch(&tb, 4).is_none());
+    }
+
+    #[test]
+    fn id_and_label_flattening() {
+        let tb = TaskBatch {
+            task: 1,
+            batch_id: 0,
+            samples: vec![sample(1, 10, 1.0), sample(1, 20, 0.0)],
+        };
+        let ep = Episode::from_task_batch(&tb, 2).unwrap();
+        assert_eq!(ep.support_ids(), vec![10, 11, 20, 21]);
+        assert_eq!(ep.support_labels(), vec![1.0, 0.0]);
+    }
+}

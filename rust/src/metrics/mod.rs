@@ -1,0 +1,137 @@
+//! Phase-level metrics: virtual-time breakdowns, throughput, speedup.
+//!
+//! Every trainer (G-Meta and PS) reports the same [`RunMetrics`] so the
+//! bench harnesses print paper-comparable rows (Table 1 throughput +
+//! speedup ratio, Figure 4 phase breakdowns).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Named training phases (keys into the time breakdown).
+pub const PHASE_IO: &str = "io";
+pub const PHASE_EMB_EXCHANGE: &str = "emb_exchange";
+pub const PHASE_COMPUTE: &str = "compute";
+pub const PHASE_GRAD_EXCHANGE: &str = "grad_exchange";
+pub const PHASE_DENSE_ALLREDUCE: &str = "dense_allreduce";
+pub const PHASE_PS_PULL: &str = "ps_pull";
+pub const PHASE_PS_PUSH: &str = "ps_push";
+
+/// Aggregated result of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Samples fully processed (support + query counted once per task
+    /// sample pair, matching how the paper reports "samples/second").
+    pub samples: u64,
+    pub steps: u64,
+    /// Total virtual wall time of the synchronous job, seconds.
+    pub virtual_time: f64,
+    /// Virtual seconds per phase, summed over iterations (per-job, i.e.
+    /// the barrier-aligned critical path contribution of that phase).
+    pub phase_time: BTreeMap<String, f64>,
+    /// Bytes crossing node boundaries / staying intra-node.
+    pub inter_bytes: f64,
+    pub intra_bytes: f64,
+    /// Real wall time spent in PJRT executions (real-numerics runs only;
+    /// excluded from virtual accounting).
+    pub real_compute_secs: f64,
+    /// Mean losses of the final 10% of steps (real-numerics runs).
+    pub tail_loss_sup: Option<f64>,
+    pub tail_loss_qry: Option<f64>,
+}
+
+impl RunMetrics {
+    pub fn throughput(&self) -> f64 {
+        if self.virtual_time > 0.0 {
+            self.samples as f64 / self.virtual_time
+        } else {
+            0.0
+        }
+    }
+
+    pub fn add_phase(&mut self, phase: &str, secs: f64) {
+        *self.phase_time.entry(phase.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn phase(&self, phase: &str) -> f64 {
+        self.phase_time.get(phase).copied().unwrap_or(0.0)
+    }
+}
+
+impl fmt::Display for RunMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "samples={} steps={} vtime={:.4}s throughput={:.0} samples/s",
+            self.samples,
+            self.steps,
+            self.virtual_time,
+            self.throughput()
+        )?;
+        for (k, v) in &self.phase_time {
+            writeln!(f, "  {k:<16} {v:>10.4}s")?;
+        }
+        write!(
+            f,
+            "  traffic: inter={:.1} MiB intra={:.1} MiB",
+            self.inter_bytes / (1 << 20) as f64,
+            self.intra_bytes / (1 << 20) as f64
+        )
+    }
+}
+
+/// Speedup-ratio table helper: given (world_size, throughput) points,
+/// compute the paper's "speedup ratio" — throughput normalized by the
+/// smallest configuration scaled by relative world size.
+///
+/// ratio_i = (T_i / T_0) / (W_i / W_0); ratio_0 == 1 by construction.
+pub fn speedup_ratios(points: &[(usize, f64)]) -> Vec<f64> {
+    if points.is_empty() {
+        return vec![];
+    }
+    let (w0, t0) = points[0];
+    points
+        .iter()
+        .map(|&(w, t)| (t / t0) / (w as f64 / w0 as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_division() {
+        let m = RunMetrics {
+            samples: 1000,
+            virtual_time: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(m.throughput(), 500.0);
+        assert_eq!(RunMetrics::default().throughput(), 0.0);
+    }
+
+    #[test]
+    fn phase_accumulates() {
+        let mut m = RunMetrics::default();
+        m.add_phase(PHASE_IO, 1.0);
+        m.add_phase(PHASE_IO, 0.5);
+        assert_eq!(m.phase(PHASE_IO), 1.5);
+        assert_eq!(m.phase(PHASE_COMPUTE), 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio_matches_paper_convention() {
+        // Paper Table 1 PS row: 29k@20, 51k@40 -> ratio 0.88.
+        let r = speedup_ratios(&[(20, 29_000.0), (40, 51_000.0)]);
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!((r[1] - 0.879).abs() < 1e-2);
+    }
+
+    #[test]
+    fn perfect_scaling_is_ratio_one() {
+        let r = speedup_ratios(&[(4, 100.0), (8, 200.0), (16, 400.0)]);
+        for x in r {
+            assert!((x - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Network transports and the α-β communication cost model.
+//!
+//! Paper §2.1.4: AlltoAll and AllReduce are "highly-connected
+//! communication patterns" that a socket-based datacenter network impedes;
+//! G-Meta moves inter-node traffic to RDMA/RoCE and intra-node traffic to
+//! NVLink.  We model each link class with the standard α-β model
+//! (`time = α + bytes/β`) using published per-class numbers, and expose a
+//! [`Topology`] that charges every point-to-point transfer the class of
+//! the link it actually crosses.
+//!
+//! The collectives in [`crate::collectives`] route real buffers and ask
+//! this module what the routing costs; that keeps the cost accounting
+//! honest — e.g. the AlltoAll cost automatically shifts between intra- and
+//! inter-node terms as the topology changes, which is precisely what
+//! Figure 4's network ablation measures.
+
+use crate::config::ClusterSpec;
+
+/// Transport classes from the paper's §2.1.4 comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Kernel TCP over the datacenter fabric (the unoptimized inter-node
+    /// path): 100 GbE raw, but kernel TCP with many concurrent flows under
+    /// incast sustains only ~3 GB/s effective per host, α ≈ 30 µs.
+    Socket,
+    /// RDMA over Converged Ethernet: same fabric, kernel-bypass — ~90%
+    /// achievable bandwidth, α ≈ 3 µs.
+    RoCE,
+    /// Intra-node staging through system memory / PCIe 4.0 x16: ~32 GB/s
+    /// raw, but staging doubles the copies (device→host→device), ~8 GB/s
+    /// effective, α ≈ 10 µs.
+    Pcie,
+    /// NVLink 3 (A100): 600 GB/s aggregate; we charge the per-pair
+    /// bidirectional ~250 GB/s at 80%, α ≈ 2 µs.
+    NvLink,
+}
+
+impl LinkClass {
+    /// (α seconds, β bytes/second achieved).
+    pub fn alpha_beta(self) -> (f64, f64) {
+        match self {
+            LinkClass::Socket => (30e-6, 3.0e9),
+            LinkClass::RoCE => (3e-6, 11.2e9),
+            LinkClass::Pcie => (10e-6, 8.0e9),
+            LinkClass::NvLink => (2e-6, 200e9),
+        }
+    }
+
+    /// α-β time for one message of `bytes`.
+    pub fn transfer_time(self, bytes: f64) -> f64 {
+        let (a, b) = self.alpha_beta();
+        a + bytes / b
+    }
+}
+
+/// Cluster communication topology: picks the link class per rank pair and
+/// accumulates traffic statistics.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cluster: ClusterSpec,
+}
+
+/// Byte/volume accounting for one collective or one training phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrafficReport {
+    /// Bytes that crossed node boundaries.
+    pub inter_bytes: f64,
+    /// Bytes that moved within a node.
+    pub intra_bytes: f64,
+    /// Modeled wall time of the phase, seconds.
+    pub time: f64,
+}
+
+impl TrafficReport {
+    pub fn total_bytes(&self) -> f64 {
+        self.inter_bytes + self.intra_bytes
+    }
+
+    pub fn merge(&mut self, other: &TrafficReport) {
+        self.inter_bytes += other.inter_bytes;
+        self.intra_bytes += other.intra_bytes;
+        self.time += other.time;
+    }
+
+    /// Two phases overlapping in time: bytes add, time takes the max.
+    pub fn merge_parallel(&mut self, other: &TrafficReport) {
+        self.inter_bytes += other.inter_bytes;
+        self.intra_bytes += other.intra_bytes;
+        self.time = self.time.max(other.time);
+    }
+}
+
+impl Topology {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        Self { cluster }
+    }
+
+    /// Link class used between two ranks.
+    pub fn link(&self, a: usize, b: usize) -> LinkClass {
+        if self.cluster.same_node(a, b) {
+            self.cluster.intra_link
+        } else {
+            self.cluster.inter_link
+        }
+    }
+
+    /// α-β time for one `src -> dst` message of `bytes`.
+    pub fn p2p_time(&self, src: usize, dst: usize, bytes: f64) -> f64 {
+        self.link(src, dst).transfer_time(bytes)
+    }
+
+    /// Account a point-to-point transfer into `report` (time NOT summed —
+    /// callers decide serialization vs overlap).
+    pub fn account(&self, src: usize, dst: usize, bytes: f64, report: &mut TrafficReport) {
+        if self.cluster.same_node(src, dst) {
+            report.intra_bytes += bytes;
+        } else {
+            report.inter_bytes += bytes;
+        }
+    }
+
+    /// The bottleneck link class on a ring over all ranks: if the ring
+    /// crosses nodes anywhere, the inter-node class bounds progress.
+    pub fn ring_bottleneck(&self) -> LinkClass {
+        if self.cluster.nodes > 1 {
+            self.cluster.inter_link
+        } else {
+            self.cluster.intra_link
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roce_beats_socket() {
+        let b = 1e8;
+        assert!(LinkClass::RoCE.transfer_time(b) < LinkClass::Socket.transfer_time(b));
+    }
+
+    #[test]
+    fn nvlink_beats_pcie() {
+        let b = 1e8;
+        assert!(LinkClass::NvLink.transfer_time(b) < LinkClass::Pcie.transfer_time(b));
+    }
+
+    #[test]
+    fn alpha_dominates_small_messages() {
+        // For 1-byte messages the latency term must dominate: RoCE's lower
+        // α wins even though bandwidth is irrelevant.
+        assert!(LinkClass::RoCE.transfer_time(1.0) < LinkClass::Socket.transfer_time(1.0));
+    }
+
+    #[test]
+    fn topology_selects_links_by_node() {
+        let t = Topology::new(ClusterSpec::gpu(2, 4));
+        assert_eq!(t.link(0, 3), LinkClass::NvLink);
+        assert_eq!(t.link(3, 4), LinkClass::RoCE);
+        assert_eq!(t.ring_bottleneck(), LinkClass::RoCE);
+        let single = Topology::new(ClusterSpec::gpu(1, 4));
+        assert_eq!(single.ring_bottleneck(), LinkClass::NvLink);
+    }
+
+    #[test]
+    fn traffic_report_accounting() {
+        let t = Topology::new(ClusterSpec::gpu(2, 2));
+        let mut r = TrafficReport::default();
+        t.account(0, 1, 100.0, &mut r); // intra
+        t.account(0, 2, 50.0, &mut r); // inter
+        assert_eq!(r.intra_bytes, 100.0);
+        assert_eq!(r.inter_bytes, 50.0);
+        assert_eq!(r.total_bytes(), 150.0);
+    }
+
+    #[test]
+    fn merge_parallel_takes_max_time() {
+        let mut a = TrafficReport {
+            inter_bytes: 1.0,
+            intra_bytes: 0.0,
+            time: 2.0,
+        };
+        let b = TrafficReport {
+            inter_bytes: 1.0,
+            intra_bytes: 3.0,
+            time: 1.0,
+        };
+        a.merge_parallel(&b);
+        assert_eq!(a.time, 2.0);
+        assert_eq!(a.total_bytes(), 5.0);
+    }
+}

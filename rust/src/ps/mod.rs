@@ -1,0 +1,481 @@
+//! DMAML parameter-server baseline (the paper's comparison system).
+//!
+//! Bollenbacher et al.'s DMAML parallelizes MAML on a Parameter Server
+//! architecture in a CPU cluster: dedicated *server* nodes hold both the
+//! sharded embedding table and the dense parameters; *worker* nodes pull
+//! parameters, run the inner/outer loops locally, and push gradients back
+//! (paper §1, §3.1.2 — the PS rows of Table 1).
+//!
+//! Why it loses (and what this module models explicitly):
+//! * CPU compute: the doubled meta-learning compute runs on CPU workers
+//!   ([`DeviceModel::cpu_worker`]), not GPUs.
+//! * Incast: every pull/push funnels through S server NICs shared by all
+//!   W workers (bandwidth queueing per server, α per request), instead of
+//!   the all-to-all bisection bandwidth G-Meta uses.
+//! * Synchronous barrier: per-iteration straggler jitter grows with W —
+//!   the paper's own explanation for the PS speedup-ratio collapse.
+//!
+//! For fairness the baseline uses the same Meta-IO pipeline (the paper
+//! does exactly this: "we also use optimized Meta-IO to avoid I/O
+//! bottlenecks for fairness").
+
+use crate::config::ExperimentConfig;
+use crate::dense::DenseParams;
+use crate::embedding::plan::LookupPlan;
+use crate::embedding::{Optimizer, ShardedEmbedding};
+use crate::meta::Episode;
+use crate::metrics::{
+    RunMetrics, PHASE_COMPUTE, PHASE_IO, PHASE_PS_PULL, PHASE_PS_PUSH,
+};
+use crate::net::LinkClass;
+use crate::sim::{DeviceModel, ReadPattern, StorageModel, WorkerClocks};
+use crate::Result;
+
+/// Deterministic per-(seed, worker, iteration) straggler jitter:
+/// multiplicative lognormal-ish factor ≥ ~e^{-2σ}.
+pub fn jitter(seed: u64, worker: usize, iter: usize, sigma: f64) -> f64 {
+    // Box-Muller on two SplitMix64 streams.
+    let mut z = seed ^ ((worker as u64) << 32) ^ iter as u64;
+    let mut next = || {
+        z = z.wrapping_add(0x9E3779B97F4A7C15);
+        let mut x = z;
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+        (x ^ (x >> 31)) as f64 / u64::MAX as f64
+    };
+    let (u1, u2) = (next().max(1e-12), next());
+    let n = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+    (sigma * n).exp()
+}
+
+/// Synchronization discipline of the PS job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PsMode {
+    /// Barrier per iteration (DMAML, the paper's baseline configuration —
+    /// its Table-1 rows and the straggler collapse are sync artifacts).
+    Sync,
+    /// Classic asynchronous PS: workers pull/compute/push at their own
+    /// pace; no barrier, but gradients are applied against *stale*
+    /// parameters.  Kept as the ablation arm showing why the paper still
+    /// runs synchronously (statistical quality), with the staleness the
+    /// async arm would suffer reported alongside its higher throughput.
+    Async,
+}
+
+/// The PS trainer: runs the same meta-learning math as G-Meta (identical
+/// update rules — the Figure-3 parity precondition) on the PS topology.
+pub struct PsTrainer {
+    pub cfg: ExperimentConfig,
+    /// Embedding table sharded across *servers* (S-way, not W-way).
+    pub embedding: ShardedEmbedding,
+    /// Dense parameters: canonical copy on the servers.
+    pub dense: DenseParams,
+    pub storage: StorageModel,
+    pub device: DeviceModel,
+    pub variant: String,
+    /// Record payload size charged to I/O per sample.
+    pub record_bytes: usize,
+    /// Server-side handling cost per worker request (deserialize, lock,
+    /// apply): the incast term that grows linearly in W per server phase.
+    pub server_request_cost: f64,
+    pub mode: PsMode,
+    /// Async only: mean parameter staleness (in update rounds) observed by
+    /// workers, measured from the virtual completion times.
+    pub mean_staleness: f64,
+}
+
+impl PsTrainer {
+    pub fn new(cfg: ExperimentConfig, variant: &str, record_bytes: usize) -> Self {
+        let servers = cfg.cluster.servers.max(1);
+        Self {
+            embedding: ShardedEmbedding::new(servers, cfg.dims.emb_dim, cfg.train.seed),
+            dense: DenseParams::init(&cfg.dims, variant, cfg.train.seed),
+            storage: StorageModel::default(),
+            device: DeviceModel::cpu_worker(),
+            variant: variant.to_string(),
+            record_bytes,
+            server_request_cost: 0.45e-3,
+            mode: PsMode::Sync,
+            mean_staleness: 0.0,
+            cfg,
+        }
+    }
+
+    /// Per-server NIC model: socket link (CPU cluster has no RDMA in the
+    /// baseline configuration).
+    fn server_link(&self) -> LinkClass {
+        LinkClass::Socket
+    }
+
+    /// Incast phase: every worker moves `per_worker_bytes[w]` to/from its
+    /// servers.  Bytes to one server queue on that server's NIC; the phase
+    /// completes when the busiest server drains, plus one α per request.
+    fn incast_time(&self, per_worker_bytes: &[f64]) -> f64 {
+        let servers = self.cfg.cluster.servers.max(1);
+        let (alpha, beta) = self.server_link().alpha_beta();
+        let mut per_server = vec![0.0f64; servers];
+        for (w, &b) in per_worker_bytes.iter().enumerate() {
+            // Rows are spread uniformly over servers (row % S); each
+            // worker talks to every server.
+            for s in per_server.iter_mut() {
+                *s += b / servers as f64;
+            }
+            let _ = w;
+        }
+        let drain = per_server.iter().cloned().fold(0.0, f64::max) / beta;
+        // Every server fields one request per worker per phase, handled
+        // serially (deserialize, shard lock, apply) — the W-linear incast
+        // term that caps PS scalability (paper Table 1's ratio collapse).
+        let requests_per_server = per_worker_bytes.len() as f64;
+        drain + (alpha + self.server_request_cost) * requests_per_server
+    }
+
+    /// Run `steps` iterations over `episodes[worker]` streams (cycled)
+    /// under the configured [`PsMode`].  Simulation-only compute (the PS
+    /// arm is an efficiency baseline; its statistical parity is checked at
+    /// small scale in the integration tests via the shared update rules).
+    pub fn run(&mut self, episodes: &[Vec<Episode>], steps: usize) -> Result<RunMetrics> {
+        match self.mode {
+            PsMode::Sync => self.run_sync(episodes, steps),
+            PsMode::Async => self.run_async(episodes, steps),
+        }
+    }
+
+    fn run_sync(&mut self, episodes: &[Vec<Episode>], steps: usize) -> Result<RunMetrics> {
+        let w = self.cfg.cluster.world_size();
+        if episodes.len() != w {
+            anyhow::bail!("episodes for {} workers, cluster has {w}", episodes.len());
+        }
+        let servers = self.cfg.cluster.servers.max(1);
+        let dims = self.cfg.dims;
+        let mut clocks = WorkerClocks::new(w);
+        let mut m = RunMetrics::default();
+        let dense_bytes = (self.dense.len() * 4) as f64;
+
+        for it in 0..steps {
+            // --- Phase 1: Meta-IO (same optimized pipeline as G-Meta). ---
+            let mut io_max = 0.0f64;
+            for rank in 0..w {
+                let ep = &episodes[rank][it % episodes[rank].len()];
+                let records = ep.support.len() + ep.query.len();
+                let t = self.storage.read_time(
+                    records,
+                    self.record_bytes,
+                    2, // one support + one query batch extent
+                    if self.cfg.io.sequential_reads {
+                        ReadPattern::Sequential
+                    } else {
+                        ReadPattern::Random
+                    },
+                    self.cfg.io.binary_format,
+                ) * jitter(self.cfg.train.seed, rank, it, self.cfg.cluster.io_jitter);
+                clocks.charge(rank, t);
+                io_max = io_max.max(t);
+            }
+            m.add_phase(PHASE_IO, io_max);
+
+            // --- Phase 2: pull parameters (embedding rows + dense). ---
+            let mut pull_bytes = Vec::with_capacity(w);
+            let mut plans: Vec<(LookupPlan, LookupPlan)> = Vec::with_capacity(w);
+            for (rank, eps) in episodes.iter().enumerate() {
+                let ep = &eps[it % eps.len()];
+                let plan_sup = LookupPlan::build(&ep.support_ids(), servers);
+                let plan_qry = LookupPlan::build(&ep.query_ids(), servers);
+                let rows = plan_sup.lookup.unique.len() + plan_qry.lookup.unique.len();
+                // id request up + row vectors down + full dense replica down
+                let b = rows as f64 * (8.0 + (dims.emb_dim * 4) as f64) + dense_bytes;
+                let _ = rank;
+                pull_bytes.push(b);
+                plans.push((plan_sup, plan_qry));
+            }
+            let t_pull = self.incast_time(&pull_bytes);
+            let sync = clocks.barrier(t_pull); // pulls start after slowest IO
+            let _ = sync;
+            m.add_phase(PHASE_PS_PULL, t_pull);
+
+            // Actually serve the rows so the table materializes/updates
+            // like the real system would.
+            for (plan_sup, plan_qry) in &plans {
+                for s in 0..servers {
+                    let _ = self.embedding.serve(s, &plan_sup.rows_for_shard(s))?;
+                    let _ = self.embedding.serve(s, &plan_qry.rows_for_shard(s))?;
+                }
+            }
+
+            // --- Phase 3: local inner+outer compute on CPU workers. ---
+            let mut comp_max = 0.0f64;
+            for rank in 0..w {
+                let flops = dims.metatrain_flops(dims.batch);
+                let gathered =
+                    (dims.batch * dims.lookups_per_sample() * dims.emb_dim * 4 * 2) as f64;
+                let lookups = (2 * dims.batch * dims.lookups_per_sample()) as f64;
+                let t = (self.device.dense_time(flops)
+                    + self.device.mem_time(gathered)
+                    + self.device.lookup_time(lookups))
+                    * jitter(self.cfg.train.seed ^ 0xC0FFEE, rank, it, self.cfg.cluster.compute_jitter);
+                clocks.charge(rank, t);
+                comp_max = comp_max.max(t);
+            }
+            m.add_phase(PHASE_COMPUTE, comp_max);
+
+            // --- Phase 4: push gradients (sparse rows + dense). ---
+            let push_bytes: Vec<f64> = plans
+                .iter()
+                .map(|(ps, pq)| {
+                    let rows = ps.lookup.unique.len() + pq.lookup.unique.len();
+                    rows as f64 * (8.0 + (dims.emb_dim * 4) as f64) + dense_bytes
+                })
+                .collect();
+            let t_push = self.incast_time(&push_bytes);
+            clocks.barrier(t_push);
+            m.add_phase(PHASE_PS_PUSH, t_push);
+            m.inter_bytes += pull_bytes.iter().sum::<f64>() + push_bytes.iter().sum::<f64>();
+
+            // Server-side update: apply zero-valued grads through the real
+            // sparse-update path (values are irrelevant for the efficiency
+            // run; the code path and its cost are not).
+            for (plan_sup, _) in &plans {
+                for s in 0..servers {
+                    let rows = plan_sup.rows_for_shard(s);
+                    let grads = vec![0.0f32; rows.len() * dims.emb_dim];
+                    self.embedding.apply_grads(
+                        s,
+                        &rows,
+                        &grads,
+                        self.cfg.train.emb_lr,
+                        Optimizer::Adagrad { eps: 1e-8 },
+                    )?;
+                }
+            }
+
+            m.samples += (w * 2 * dims.batch) as u64;
+            m.steps += 1;
+        }
+        m.virtual_time = clocks.max_now();
+        Ok(m)
+    }
+}
+
+impl PsTrainer {
+    /// Asynchronous execution: every worker advances its own clock through
+    /// io → pull → compute → push rounds with NO barrier.  Server-side
+    /// incast still queues (each phase charges the per-request handling
+    /// cost against the shared servers), but a slow worker no longer drags
+    /// the others.  Staleness of a worker's round = number of other
+    /// workers' pushes that completed between its pull and its push.
+    fn run_async(&mut self, episodes: &[Vec<Episode>], steps: usize) -> Result<RunMetrics> {
+        let w = self.cfg.cluster.world_size();
+        if episodes.len() != w {
+            anyhow::bail!("episodes for {} workers, cluster has {w}", episodes.len());
+        }
+        let servers = self.cfg.cluster.servers.max(1);
+        let dims = self.cfg.dims;
+        let (alpha, beta) = self.server_link().alpha_beta();
+        let mut m = RunMetrics::default();
+
+        // Per-worker event streams: (pull_time, push_time) per round.
+        let mut pulls: Vec<Vec<f64>> = vec![Vec::with_capacity(steps); w];
+        let mut pushes: Vec<Vec<f64>> = vec![Vec::with_capacity(steps); w];
+        let dense_bytes = (self.dense.len() * 4) as f64;
+
+        for rank in 0..w {
+            let mut now = 0.0f64;
+            for it in 0..steps {
+                let ep = &episodes[rank][it % episodes[rank].len()];
+                let records = ep.support.len() + ep.query.len();
+                now += self.storage.read_time(
+                    records,
+                    self.record_bytes,
+                    2,
+                    if self.cfg.io.sequential_reads {
+                        ReadPattern::Sequential
+                    } else {
+                        ReadPattern::Random
+                    },
+                    self.cfg.io.binary_format,
+                ) * jitter(self.cfg.train.seed, rank, it, self.cfg.cluster.io_jitter);
+
+                // Pull: this worker's bytes through its share of servers,
+                // plus per-request handling (no cross-worker barrier, but
+                // the handling cost is a real queue on the server).
+                let plan_sup = LookupPlan::build(&ep.support_ids(), servers);
+                let plan_qry = LookupPlan::build(&ep.query_ids(), servers);
+                let rows = plan_sup.lookup.unique.len() + plan_qry.lookup.unique.len();
+                let bytes = rows as f64 * (8.0 + (dims.emb_dim * 4) as f64) + dense_bytes;
+                let t_pull =
+                    bytes / (servers as f64 * beta / w as f64) + alpha + self.server_request_cost;
+                now += t_pull;
+                pulls[rank].push(now);
+                m.add_phase(PHASE_PS_PULL, t_pull / w as f64);
+
+                // Local compute.
+                let flops = dims.metatrain_flops(dims.batch);
+                let gathered =
+                    (dims.batch * dims.lookups_per_sample() * dims.emb_dim * 4 * 2) as f64;
+                let lookups = (2 * dims.batch * dims.lookups_per_sample()) as f64;
+                let t_comp = (self.device.dense_time(flops)
+                    + self.device.mem_time(gathered)
+                    + self.device.lookup_time(lookups))
+                    * jitter(
+                        self.cfg.train.seed ^ 0xC0FFEE,
+                        rank,
+                        it,
+                        self.cfg.cluster.compute_jitter,
+                    );
+                now += t_comp;
+                m.add_phase(PHASE_COMPUTE, t_comp / w as f64);
+
+                // Push.
+                let t_push =
+                    bytes / (servers as f64 * beta / w as f64) + alpha + self.server_request_cost;
+                now += t_push;
+                pushes[rank].push(now);
+                m.add_phase(PHASE_PS_PUSH, t_push / w as f64);
+                m.inter_bytes += 2.0 * bytes;
+                m.samples += (2 * dims.batch) as u64;
+            }
+            m.steps += steps as u64;
+        }
+
+        // Job time = slowest worker's finish (no intermediate barriers).
+        m.virtual_time = pushes
+            .iter()
+            .filter_map(|p| p.last().copied())
+            .fold(0.0, f64::max);
+
+        // Staleness: pushes by OTHER workers between my pull and my push.
+        let mut all_pushes: Vec<(f64, usize)> = pushes
+            .iter()
+            .enumerate()
+            .flat_map(|(r, ps)| ps.iter().map(move |&t| (t, r)))
+            .collect();
+        all_pushes.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let times: Vec<f64> = all_pushes.iter().map(|(t, _)| *t).collect();
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for rank in 0..w {
+            for (p, q) in pulls[rank].iter().zip(&pushes[rank]) {
+                let lo = times.partition_point(|&t| t < *p);
+                let hi = times.partition_point(|&t| t < *q);
+                // Exclude this worker's own push inside the window.
+                total += (hi - lo).saturating_sub(1) as f64;
+                count += 1;
+            }
+        }
+        self.mean_staleness = if count > 0 { total / count as f64 } else { 0.0 };
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{movielens_like, Generator};
+    use crate::meta::TaskBatch;
+
+    fn episodes(world: usize, n: usize, batch: usize) -> Vec<Vec<Episode>> {
+        let mut gen = Generator::new(movielens_like());
+        (0..world)
+            .map(|_| {
+                (0..n)
+                    .map(|i| {
+                        let samples = gen.take(batch * 2);
+                        let tb = TaskBatch {
+                            task: i as u64,
+                            batch_id: i as u64,
+                            samples: samples
+                                .into_iter()
+                                .map(|mut s| {
+                                    s.task = i as u64;
+                                    s
+                                })
+                                .collect(),
+                        };
+                        Episode::from_task_batch(&tb, batch).unwrap()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn small_cfg(workers: usize, servers: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::ps(workers, servers);
+        cfg.dims.batch = 32;
+        cfg.dims.slots = 4;
+        cfg.dims.valency = 2;
+        cfg.dims.emb_dim = 8;
+        cfg
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_centered() {
+        assert_eq!(jitter(1, 2, 3, 0.3), jitter(1, 2, 3, 0.3));
+        assert_ne!(jitter(1, 2, 3, 0.3), jitter(1, 2, 4, 0.3));
+        let mean: f64 =
+            (0..1000).map(|i| jitter(9, 0, i, 0.2)).sum::<f64>() / 1000.0;
+        assert!((mean - 1.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn ps_run_produces_metrics() {
+        let cfg = small_cfg(4, 2);
+        let eps = episodes(4, 5, cfg.dims.batch);
+        let mut t = PsTrainer::new(cfg, "maml", 500);
+        let m = t.run(&eps, 10).unwrap();
+        assert_eq!(m.steps, 10);
+        assert_eq!(m.samples, (4 * 2 * 32 * 10) as u64);
+        assert!(m.virtual_time > 0.0);
+        assert!(m.phase(PHASE_PS_PULL) > 0.0);
+        assert!(m.phase(PHASE_PS_PUSH) > 0.0);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn ps_speedup_ratio_decays_with_scale() {
+        // The Table-1 shape: speedup ratio falls as workers scale out.
+        let mut points = Vec::new();
+        for &(w, s) in &[(4usize, 1usize), (16, 4)] {
+            let cfg = small_cfg(w, s);
+            let eps = episodes(w, 3, cfg.dims.batch);
+            let mut t = PsTrainer::new(cfg, "maml", 500);
+            let m = t.run(&eps, 6).unwrap();
+            points.push((w, m.throughput()));
+        }
+        let ratios = crate::metrics::speedup_ratios(&points);
+        assert!(
+            ratios[1] < 1.0,
+            "PS should scale sublinearly: {ratios:?}"
+        );
+    }
+
+    #[test]
+    fn async_mode_outpaces_sync_but_is_stale() {
+        let cfg = small_cfg(8, 2);
+        let eps = episodes(8, 4, cfg.dims.batch);
+        let mut sync = PsTrainer::new(cfg.clone(), "maml", 500);
+        let ms = sync.run(&eps, 10).unwrap();
+        let mut asy = PsTrainer::new(cfg, "maml", 500);
+        asy.mode = PsMode::Async;
+        let ma = asy.run(&eps, 10).unwrap();
+        assert!(
+            ma.throughput() > ms.throughput(),
+            "async {} !> sync {}",
+            ma.throughput(),
+            ms.throughput()
+        );
+        assert!(
+            asy.mean_staleness > 0.0,
+            "async must observe staleness (got {})",
+            asy.mean_staleness
+        );
+        assert_eq!(sync.mean_staleness, 0.0);
+    }
+
+    #[test]
+    fn episode_count_mismatch_rejected() {
+        let cfg = small_cfg(4, 2);
+        let eps = episodes(3, 2, cfg.dims.batch);
+        let mut t = PsTrainer::new(cfg, "maml", 500);
+        assert!(t.run(&eps, 1).is_err());
+    }
+}

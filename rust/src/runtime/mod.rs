@@ -1,0 +1,375 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The bridge between L3 and the L2/L1 compute graphs: `make artifacts`
+//! lowers the JAX/Pallas model to `artifacts/*.hlo.txt` + `manifest.json`,
+//! and this module compiles each entry once on the PJRT CPU client and
+//! exposes typed step functions.  Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::config::ModelDims;
+use crate::dense::DenseParams;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// manifest.json mirror (written by python/compile/aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub dims: ManifestDims,
+    pub alpha: f32,
+    pub dense_order: Vec<String>,
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestDims {
+    pub batch: usize,
+    pub slots: usize,
+    pub valency: usize,
+    pub emb_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub task_dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub variant: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Manifest {
+    /// Parse a manifest document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let need_usize = |v: &Value, k: &str| -> Result<usize> {
+            v.field(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest field {k:?} not a number"))
+        };
+        let need_str = |v: &Value, k: &str| -> Result<String> {
+            Ok(v.field(k)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest field {k:?} not a string"))?
+                .to_string())
+        };
+        let d = doc.field("dims")?;
+        let dims = ManifestDims {
+            batch: need_usize(d, "batch")?,
+            slots: need_usize(d, "slots")?,
+            valency: need_usize(d, "valency")?,
+            emb_dim: need_usize(d, "emb_dim")?,
+            hidden1: need_usize(d, "hidden1")?,
+            hidden2: need_usize(d, "hidden2")?,
+            task_dim: need_usize(d, "task_dim")?,
+        };
+        let str_arr = |v: &Value| -> Vec<String> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        let mut entries = HashMap::new();
+        for (name, e) in doc
+            .field("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest entries not an object"))?
+        {
+            let inputs = e
+                .field("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        name: need_str(t, "name")?,
+                        shape: t
+                            .field("shape")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(Value::as_usize)
+                            .collect(),
+                        dtype: need_str(t, "dtype")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    file: need_str(e, "file")?,
+                    variant: need_str(e, "variant")?,
+                    inputs,
+                    outputs: str_arr(e.field("outputs")?),
+                },
+            );
+        }
+        Ok(Manifest {
+            version: doc.field("version")?.as_usize().unwrap_or(0) as u32,
+            dims,
+            alpha: doc.field("alpha")?.as_f64().unwrap_or(0.0) as f32,
+            dense_order: str_arr(doc.field("dense_order")?),
+            entries,
+        })
+    }
+}
+
+impl ManifestDims {
+    /// Check compatibility with a run's [`ModelDims`] (emb_rows is
+    /// L3-only, so it is not compared).
+    pub fn matches(&self, d: &ModelDims) -> bool {
+        self.batch == d.batch
+            && self.slots == d.slots
+            && self.valency == d.valency
+            && self.emb_dim == d.emb_dim
+            && self.hidden1 == d.hidden1
+            && self.hidden2 == d.hidden2
+            && self.task_dim == d.task_dim
+    }
+}
+
+/// Inputs to one fused meta-train step (one worker's task batch).
+#[derive(Debug, Clone)]
+pub struct MetatrainInputs {
+    /// `[B, F, V, D]` gathered support embeddings, row-major flat.
+    pub emb_sup: Vec<f32>,
+    pub y_sup: Vec<f32>,
+    pub emb_qry: Vec<f32>,
+    pub y_qry: Vec<f32>,
+    /// `[B, F, V]` overlap map (flat support position or -1).
+    pub overlap: Vec<i32>,
+}
+
+/// Outputs of one fused meta-train step.
+#[derive(Debug, Clone)]
+pub struct MetatrainOutputs {
+    pub loss_sup: f32,
+    pub loss_qry: f32,
+    pub probs_qry: Vec<f32>,
+    /// `[B, F, V, D]` gradient w.r.t. the effective query embeddings.
+    pub g_emb_qry: Vec<f32>,
+    /// Flattened dense gradients in ABI order (matches
+    /// [`DenseParams::flatten`]).
+    pub g_dense_flat: Vec<f32>,
+}
+
+/// A compiled artifact set bound to a PJRT client.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative wall time inside PJRT executions.
+    pub exec_secs: std::cell::Cell<f64>,
+}
+
+impl Runtime {
+    /// Load `manifest.json` from `dir` and compile the listed entries.
+    /// `variants`: compile only these (e.g. `["maml"]`) or all when empty.
+    pub fn load(dir: &Path, variants: &[&str]) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("reading {manifest_path:?}: {e}. Run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            if !variants.is_empty() && !variants.contains(&entry.variant.as_str()) {
+                continue;
+            }
+            let path: PathBuf = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Self {
+            client,
+            manifest,
+            executables,
+            exec_secs: std::cell::Cell::new(0.0),
+        })
+    }
+
+    /// Default artifact directory: `$GMETA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GMETA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn dims(&self) -> &ManifestDims {
+        &self.manifest.dims
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    fn entry(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact entry {name:?} not loaded"))
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.entry(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        self.exec_secs
+            .set(self.exec_secs.get() + t0.elapsed().as_secs_f64());
+        // aot.py lowers with return_tuple=True: always a tuple.
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
+    }
+
+    fn dense_literals(&self, dense: &DenseParams) -> Result<Vec<xla::Literal>> {
+        dense
+            .tensors
+            .iter()
+            .map(|(_, shape, vals)| {
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(vals)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshaping dense tensor: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Execute `{variant}_metatrain` for one worker's episode.
+    pub fn metatrain(
+        &self,
+        variant: &str,
+        inp: &MetatrainInputs,
+        dense: &DenseParams,
+    ) -> Result<MetatrainOutputs> {
+        let d = &self.manifest.dims;
+        let (b, f, v, e) = (d.batch, d.slots, d.valency, d.emb_dim);
+        let n_emb = b * f * v * e;
+        if inp.emb_sup.len() != n_emb || inp.emb_qry.len() != n_emb {
+            anyhow::bail!(
+                "metatrain: embedding block size {} != B*F*V*D = {n_emb}",
+                inp.emb_sup.len()
+            );
+        }
+        if inp.y_sup.len() != b || inp.y_qry.len() != b || inp.overlap.len() != b * f * v {
+            anyhow::bail!("metatrain: label/overlap sizes do not match batch {b}");
+        }
+        let emb_dims = [b as i64, f as i64, v as i64, e as i64];
+        let mut literals = vec![
+            xla::Literal::vec1(&inp.emb_sup)
+                .reshape(&emb_dims)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            xla::Literal::vec1(&inp.y_sup),
+            xla::Literal::vec1(&inp.emb_qry)
+                .reshape(&emb_dims)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            xla::Literal::vec1(&inp.y_qry),
+            xla::Literal::vec1(&inp.overlap)
+                .reshape(&[b as i64, f as i64, v as i64])
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        ];
+        literals.extend(self.dense_literals(dense)?);
+
+        let outs = self.run(&format!("{variant}_metatrain"), &literals)?;
+        if outs.len() != 4 + dense.tensors.len() {
+            anyhow::bail!(
+                "metatrain returned {} outputs, expected {}",
+                outs.len(),
+                4 + dense.tensors.len()
+            );
+        }
+        let loss_sup: f32 = outs[0]
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let loss_qry: f32 = outs[1]
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let probs_qry = outs[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let g_emb_qry = outs[3].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut g_dense_flat = Vec::with_capacity(dense.len());
+        for o in &outs[4..] {
+            g_dense_flat.extend(o.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        }
+        Ok(MetatrainOutputs {
+            loss_sup,
+            loss_qry,
+            probs_qry,
+            g_emb_qry,
+            g_dense_flat,
+        })
+    }
+
+    /// Execute `{variant}_forward`: eval probabilities for one block.
+    pub fn forward(&self, variant: &str, emb: &[f32], dense: &DenseParams) -> Result<Vec<f32>> {
+        let d = &self.manifest.dims;
+        let emb_dims = [
+            d.batch as i64,
+            d.slots as i64,
+            d.valency as i64,
+            d.emb_dim as i64,
+        ];
+        if emb.len() != d.batch * d.slots * d.valency * d.emb_dim {
+            anyhow::bail!("forward: embedding block has wrong size {}", emb.len());
+        }
+        let mut literals = vec![xla::Literal::vec1(emb)
+            .reshape(&emb_dims)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?];
+        literals.extend(self.dense_literals(dense)?);
+        let outs = self.run(&format!("{variant}_forward"), &literals)?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_dims_match() {
+        let json = r#"{
+            "version": 2,
+            "dims": {"batch":256,"slots":16,"valency":2,"emb_dim":16,
+                     "hidden1":128,"hidden2":64,"task_dim":16},
+            "alpha": 0.1,
+            "dense_order": ["w1","b1","w2","b2","w3","b3"],
+            "entries": {
+                "maml_metatrain": {"file":"maml_metatrain.hlo.txt","variant":"maml",
+                                    "inputs":[],"outputs":["loss_sup"]}
+            }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.dims.batch, 256);
+        assert!(m.entries.contains_key("maml_metatrain"));
+        let dims = ModelDims::default();
+        assert!(m.dims.matches(&dims));
+        let other = ModelDims {
+            batch: 64,
+            ..ModelDims::default()
+        };
+        assert!(!m.dims.matches(&other));
+    }
+}

@@ -1,0 +1,149 @@
+//! Per-worker virtual clocks with synchronous-training barrier semantics.
+
+/// A monotonically advancing virtual clock, in seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Clock(f64);
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock(0.0)
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.0
+    }
+
+    /// Advance by `dt` seconds (`dt >= 0`).
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time charge: {dt}");
+        self.0 += dt.max(0.0);
+    }
+
+    /// Jump forward to `t` if `t` is later (used by barrier sync).
+    pub fn sync_to(&mut self, t: f64) {
+        if t > self.0 {
+            self.0 = t;
+        }
+    }
+}
+
+/// The clocks of all workers in a synchronous-training job.
+///
+/// Synchronous data-parallel training (both G-Meta and the PS baseline run
+/// synchronously in the paper's evaluation) means every collective /
+/// barrier aligns all participants to the slowest one — this is exactly
+/// the straggler effect the paper's Figure-4 discussion appeals to
+/// ("the I/O stage in one node may block the whole iteration").
+#[derive(Debug, Clone)]
+pub struct WorkerClocks {
+    clocks: Vec<Clock>,
+}
+
+impl WorkerClocks {
+    pub fn new(n: usize) -> Self {
+        Self {
+            clocks: vec![Clock::new(); n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clocks.is_empty()
+    }
+
+    /// Charge `dt` seconds to worker `rank` only (local phase).
+    pub fn charge(&mut self, rank: usize, dt: f64) {
+        self.clocks[rank].advance(dt);
+    }
+
+    /// Charge every worker the same duration (perfectly parallel phase).
+    pub fn charge_all(&mut self, dt: f64) {
+        for c in &mut self.clocks {
+            c.advance(dt);
+        }
+    }
+
+    pub fn now(&self, rank: usize) -> f64 {
+        self.clocks[rank].now()
+    }
+
+    /// Latest clock across workers — the job's logical time at a barrier.
+    pub fn max_now(&self) -> f64 {
+        self.clocks.iter().map(|c| c.now()).fold(0.0, f64::max)
+    }
+
+    /// Synchronous barrier: all clocks jump to the slowest participant,
+    /// then advance by the collective's own duration `dt`.
+    pub fn barrier(&mut self, dt: f64) -> f64 {
+        let t = self.max_now();
+        for c in &mut self.clocks {
+            c.sync_to(t);
+            c.advance(dt);
+        }
+        t + dt
+    }
+
+    /// Barrier over a subset of ranks (e.g. PS workers without servers).
+    pub fn barrier_among(&mut self, ranks: &[usize], dt: f64) -> f64 {
+        let t = ranks
+            .iter()
+            .map(|&r| self.clocks[r].now())
+            .fold(0.0, f64::max);
+        for &r in ranks {
+            self.clocks[r].sync_to(t);
+            self.clocks[r].advance(dt);
+        }
+        t + dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_and_syncs() {
+        let mut c = Clock::new();
+        c.advance(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.sync_to(1.0); // earlier: no-op
+        assert_eq!(c.now(), 1.5);
+        c.sync_to(2.0);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn barrier_aligns_to_slowest() {
+        let mut w = WorkerClocks::new(3);
+        w.charge(0, 1.0);
+        w.charge(1, 3.0);
+        w.charge(2, 2.0);
+        let t = w.barrier(0.5);
+        assert_eq!(t, 3.5);
+        for r in 0..3 {
+            assert_eq!(w.now(r), 3.5);
+        }
+    }
+
+    #[test]
+    fn subset_barrier_ignores_others() {
+        let mut w = WorkerClocks::new(4);
+        w.charge(3, 100.0); // not in the subset
+        w.charge(0, 1.0);
+        let t = w.barrier_among(&[0, 1, 2], 0.0);
+        assert_eq!(t, 1.0);
+        assert_eq!(w.now(3), 100.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn negative_charge_panics_in_debug() {
+        let mut c = Clock::new();
+        c.advance(-1.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Compute device models: the A100-like GPU worker and the CPU PS worker.
+//!
+//! Calibration constants and their provenance
+//! -------------------------------------------
+//! The paper's testbed is 32×A100 (GPU cluster) vs 160 workers × 18 cores
+//! (CPU cluster).  We charge compute time analytically:
+//!
+//! * A100 fp32 dense peak is 19.5 TFLOP/s; small DLRM towers reach a small
+//!   fraction of peak (launch overhead, thin matrices).  We use an achieved
+//!   efficiency of 6% → ~1.17 TFLOP/s, consistent with profiles of small
+//!   DLRM towers in HugeCTR-class workloads, plus a per-step kernel launch
+//!   overhead.
+//! * The CPU worker (18 cores × ~2.5 GHz × 8 fp32 FMA lanes) peaks ~720
+//!   GFLOP/s but achieves far less on embedding-heavy meta steps; we use
+//!   3% → ~21 GFLOP/s plus a much larger per-step framework overhead —
+//!   matching the paper's observation that the doubled meta-learning
+//!   compute makes CPU workers the bottleneck (§1).
+//! * Embedding-side work (gather/scatter of rows held in device memory) is
+//!   charged against memory bandwidth, not FLOPs: HBM2e ~1.6 TB/s at 50%
+//!   achieved for the GPU, ~60 GB/s (DDR4, shared) for CPU workers.
+//!
+//! With these constants a 1×4 A100 node lands at the paper's ~90k
+//! samples/s on the public-dataset model, and 20 CPU workers at ~29k —
+//! see EXPERIMENTS.md for calibration evidence; the claims we reproduce
+//! are *relative* (speedup-ratio decay, crossover points), which are
+//! insensitive to the absolute constants.
+
+/// Class of compute device a worker runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// One A100-class GPU (G-Meta worker).
+    GpuA100,
+    /// One 18-core CPU worker process (DMAML/PS worker).
+    CpuWorker,
+}
+
+/// Analytic compute-time model for a device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub kind: DeviceKind,
+    /// Achieved dense throughput, FLOP/s.
+    pub dense_flops: f64,
+    /// Achieved memory bandwidth for gather/scatter, bytes/s.
+    pub mem_bw: f64,
+    /// Fixed overhead charged per executed step (kernel launches,
+    /// framework dispatch), seconds.
+    pub step_overhead: f64,
+    /// Per-feature-lookup processing cost, seconds: embedding-op dispatch,
+    /// feature transformation, id hashing — the term that dominates DLRM
+    /// steps in TF-based trainers (the paper's system is TensorFlow).
+    pub per_lookup: f64,
+}
+
+impl DeviceModel {
+    pub fn a100() -> Self {
+        Self {
+            kind: DeviceKind::GpuA100,
+            dense_flops: 1.17e12, // 6% of 19.5 TFLOP/s fp32
+            mem_bw: 0.8e12,       // 50% of 1.6 TB/s HBM2e
+            step_overhead: 120e-6,
+            per_lookup: 0.28e-6,
+        }
+    }
+
+    pub fn cpu_worker() -> Self {
+        Self {
+            kind: DeviceKind::CpuWorker,
+            dense_flops: 21e9, // 3% of 18-core AVX2 peak
+            mem_bw: 30e9,      // shared DDR4, effective per worker
+            step_overhead: 1.2e-3,
+            per_lookup: 0.6e-6,
+        }
+    }
+
+    /// Seconds to execute `flops` of dense compute.
+    pub fn dense_time(&self, flops: f64) -> f64 {
+        self.step_overhead + flops / self.dense_flops
+    }
+
+    /// Seconds to move `bytes` through device memory (gather/scatter).
+    pub fn mem_time(&self, bytes: f64) -> f64 {
+        bytes / self.mem_bw
+    }
+
+    /// Seconds of per-lookup op-dispatch work for `lookups` total feature
+    /// lookups (samples x slots x valency).
+    pub fn lookup_time(&self, lookups: f64) -> f64 {
+        lookups * self.per_lookup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_is_much_faster_than_cpu_on_dense() {
+        let g = DeviceModel::a100();
+        let c = DeviceModel::cpu_worker();
+        let flops = 1e9;
+        assert!(g.dense_time(flops) * 10.0 < c.dense_time(flops));
+    }
+
+    #[test]
+    fn overhead_dominates_tiny_steps() {
+        let g = DeviceModel::a100();
+        let t = g.dense_time(1.0);
+        assert!((t - g.step_overhead).abs() / g.step_overhead < 1e-6);
+    }
+
+    #[test]
+    fn mem_time_linear() {
+        let g = DeviceModel::a100();
+        assert!((g.mem_time(2e9) - 2.0 * g.mem_time(1e9)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Deterministic discrete-event simulation substrate.
+//!
+//! The paper's efficiency numbers (Table 1, Figure 4) were measured on a
+//! 32×A100 / 200-node-CPU testbed we do not have.  Per the substitution
+//! rule (DESIGN.md §1/§5) we reproduce their *shape* with a virtual clock:
+//! every phase of every worker charges time from calibrated device /
+//! network / storage models, while the data itself moves through the real
+//! implemented algorithms.  Numbers are deterministic functions of
+//! (algorithm, topology, calibration constants).
+
+pub mod clock;
+pub mod device;
+pub mod storage;
+
+pub use clock::{Clock, WorkerClocks};
+pub use device::{DeviceModel, DeviceKind};
+pub use storage::{StorageModel, ReadPattern};

@@ -1,0 +1,13 @@
+//! In-tree substrates for ecosystem crates unavailable in the offline
+//! vendored build (DESIGN.md §1): a seedable RNG (`rand`), a minimal JSON
+//! parser/writer (`serde_json`), RAII temp dirs (`tempfile`), and a tiny
+//! CLI argument parser (`clap`).
+
+pub mod args;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+pub mod tempdir;
+
+pub use rng::Rng;
+pub use tempdir::TempDir;

@@ -1,0 +1,323 @@
+//! Cross-module integration tests: the full pipeline from raw samples
+//! through Meta-IO, the distributed trainers (simulated and real-numerics)
+//! and the experiment harnesses; plus failure injection across module
+//! boundaries.
+
+use std::path::Path;
+
+use gmeta::config::{ClusterSpec, ExperimentConfig, IoConfig, ModelDims};
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::{movielens_like, Generator};
+use gmeta::io::codec::Codec;
+use gmeta::io::loader::Loader;
+use gmeta::io::preprocess::preprocess;
+use gmeta::meta::Episode;
+use gmeta::metrics::{PHASE_COMPUTE, PHASE_EMB_EXCHANGE, PHASE_IO};
+use gmeta::ps::PsTrainer;
+use gmeta::runtime::Runtime;
+use gmeta::sim::{ReadPattern, StorageModel};
+use gmeta::util::TempDir;
+
+fn small_dims() -> ModelDims {
+    ModelDims {
+        batch: 16,
+        slots: 4,
+        valency: 2,
+        emb_dim: 8,
+        hidden1: 16,
+        hidden2: 8,
+        task_dim: 8,
+        emb_rows: 1 << 12,
+    }
+}
+
+/// Raw samples -> preprocess -> loader -> episodes -> simulated G-Meta run:
+/// the entire Meta-IO + trainer pipeline wired end to end from disk.
+#[test]
+fn full_pipeline_from_disk_to_training() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let samples = Generator::new(spec).take(8_000);
+
+    let tmp = TempDir::new().unwrap();
+    let ds = preprocess(samples, dims.batch * 2, Codec::Binary, tmp.path(), "ml", Some(9))
+        .unwrap();
+    let loader = Loader::new(ds, StorageModel::default(), ReadPattern::Sequential);
+
+    let world = 4;
+    let mut per_worker: Vec<Vec<Episode>> = Vec::new();
+    for rank in 0..world {
+        let (batches, stats) = loader.load_worker(rank, world).unwrap();
+        assert!(stats.records > 0);
+        let eps: Vec<Episode> = batches
+            .iter()
+            .filter_map(|tb| Episode::from_task_batch(tb, dims.batch))
+            .collect();
+        assert!(!eps.is_empty(), "worker {rank} got no episodes");
+        per_worker.push(eps);
+    }
+
+    let mut cfg = ExperimentConfig::gmeta(2, 2);
+    cfg.dims = dims;
+    let mut t = GMetaTrainer::new(cfg, "maml", 300, None).unwrap();
+    let m = t.run(&per_worker, 6).unwrap();
+    assert_eq!(m.steps, 6);
+    assert!(m.throughput() > 0.0);
+    assert!(t.replicas_in_sync());
+    // The table materialized rows actually touched by the data.
+    assert!(t.embedding.touched() > 0);
+}
+
+/// Real numerics: a few meta-steps through PJRT must reduce the query loss
+/// (the end-to-end learning signal through all three layers).
+#[test]
+fn real_training_reduces_query_loss() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let spec = movielens_like();
+    let mut cfg = ExperimentConfig::gmeta(1, 2);
+    cfg.dims = ModelDims {
+        emb_rows: spec.emb_rows as usize,
+        ..ModelDims::default()
+    };
+    cfg.train.beta = 0.1;
+    let eps = episodes_from_generator(spec, &cfg.dims, 2, 6);
+    let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, Some(&rt)).unwrap();
+    let m = t.run(&eps, 12).unwrap();
+    assert_eq!(t.losses.len(), 12);
+    let first: f64 = t.losses[..3].iter().map(|(_, q)| *q as f64).sum::<f64>() / 3.0;
+    let last: f64 = t.losses[9..].iter().map(|(_, q)| *q as f64).sum::<f64>() / 3.0;
+    assert!(
+        last < first,
+        "query loss did not improve: first3={first:.4} last3={last:.4}"
+    );
+    assert!(t.replicas_in_sync());
+    assert!(m.real_compute_secs > 0.0);
+    // AUC on held-out episodes is computable and sane.
+    let held_out = episodes_from_generator(spec, &t.cfg.dims, 1, 4);
+    let auc = t.evaluate(&held_out[0]).unwrap().unwrap();
+    assert!((0.0..=1.0).contains(&auc), "auc={auc}");
+}
+
+/// Table-1 shape (quick): G-Meta on a 2x4 GPU cluster beats the PS
+/// baseline with 16 CPU workers; both scale sublinearly.
+#[test]
+fn gmeta_beats_ps_at_comparable_scale() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+
+    let mut cfg = ExperimentConfig::gmeta(2, 4);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 8, 4);
+    let mut g = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
+    let gm = g.run(&eps, 8).unwrap();
+
+    let mut cfg = ExperimentConfig::ps(16, 4);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 16, 4);
+    let mut p = PsTrainer::new(cfg, "maml", spec.record_bytes);
+    let pm = p.run(&eps, 8).unwrap();
+
+    assert!(
+        gm.throughput() > pm.throughput(),
+        "G-Meta {} !> PS {}",
+        gm.throughput(),
+        pm.throughput()
+    );
+}
+
+/// Figure-4 shape (quick): each optimization individually helps, and both
+/// together help the most.
+#[test]
+fn ablation_arms_order_correctly() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let run = |io_opt: bool, net_opt: bool| {
+        let mut cfg = ExperimentConfig::gmeta(2, 2);
+        cfg.cluster = if net_opt {
+            ClusterSpec::gpu(2, 2)
+        } else {
+            ClusterSpec::gpu_commodity(2, 2)
+        };
+        cfg.dims = dims;
+        cfg.io = if io_opt {
+            IoConfig::default()
+        } else {
+            IoConfig::unoptimized()
+        };
+        let eps = episodes_from_generator(spec, &dims, 4, 4);
+        let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
+        t.run(&eps, 8).unwrap().throughput()
+    };
+    let baseline = run(false, false);
+    let io = run(true, false);
+    let net = run(false, true);
+    let both = run(true, true);
+    assert!(io > baseline, "io {io} !> baseline {baseline}");
+    assert!(net > baseline, "net {net} !> baseline {baseline}");
+    assert!(both > io.max(net), "both {both} !> max(io, net)");
+}
+
+/// Phase accounting is complete: the barrier-aligned phase times are
+/// consistent with the total virtual time.
+#[test]
+fn phase_times_account_for_virtual_time() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let mut cfg = ExperimentConfig::gmeta(2, 2);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 4, 4);
+    let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
+    let m = t.run(&eps, 10).unwrap();
+    let phase_sum: f64 = m.phase_time.values().sum();
+    // Phases record per-phase maxima; barrier alignment means the total
+    // virtual time is bounded by the straggler-aligned sum (within 2x) and
+    // must be at least the largest single phase.
+    assert!(m.virtual_time <= phase_sum * 2.0 + 1e-9);
+    assert!(m.virtual_time >= m.phase(PHASE_COMPUTE));
+    assert!(m.phase(PHASE_IO) > 0.0);
+    assert!(m.phase(PHASE_EMB_EXCHANGE) > 0.0);
+}
+
+/// Failure injection: a corrupted data file is detected at load time, not
+/// silently consumed.
+#[test]
+fn corrupted_dataset_detected_across_pipeline() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let samples = Generator::new(spec).take(2_000);
+    let tmp = TempDir::new().unwrap();
+    let ds = preprocess(samples, 32, Codec::Binary, tmp.path(), "bad", Some(1)).unwrap();
+
+    // Flip bytes in the middle of the data file (inside some record).
+    let mut data = std::fs::read(&ds.data_path).unwrap();
+    let mid = data.len() / 2;
+    for b in &mut data[mid..mid + 16] {
+        *b ^= 0xA5;
+    }
+    std::fs::write(&ds.data_path, &data).unwrap();
+
+    let loader = Loader::new(ds, StorageModel::default(), ReadPattern::Sequential);
+    let mut failed = false;
+    for rank in 0..2 {
+        if loader.load_worker(rank, 2).is_err() {
+            failed = true;
+        }
+    }
+    assert!(failed, "corruption was not detected by any worker");
+}
+
+/// Failure injection: dims mismatch between run config and artifacts is
+/// rejected before any training step.
+#[test]
+fn artifact_dims_mismatch_rejected() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let mut cfg = ExperimentConfig::gmeta(1, 1);
+    cfg.dims = small_dims(); // does not match the compiled artifacts
+    match GMetaTrainer::new(cfg, "maml", 300, Some(&rt)) {
+        Ok(_) => panic!("dims mismatch was accepted"),
+        Err(err) => assert!(err.to_string().contains("do not match"), "{err}"),
+    }
+}
+
+/// Checkpoint/recovery across a world-size change (elastic resharding):
+/// state written by a 4-worker job resumes bit-identically in a 6-worker
+/// job — dense replicas equal, every touched row preserved on its new
+/// owner shard.
+#[test]
+fn checkpoint_recovery_across_world_sizes() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let tmp = TempDir::new().unwrap();
+
+    // Train 6 steps at world 4 and checkpoint.
+    let mut cfg = ExperimentConfig::gmeta(2, 2);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 4, 4);
+    let mut t1 = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
+    t1.run(&eps, 6).unwrap();
+    let sample_rows: Vec<u64> = eps[0][0].support_ids().into_iter().take(8).collect();
+    let want_rows: Vec<(u64, Vec<f32>)> = sample_rows
+        .iter()
+        .map(|&r| (r, t1.embedding.read(r)))
+        .collect();
+    let want_dense = t1.replicas[0].flatten();
+    t1.save_checkpoint(tmp.path(), 6).unwrap();
+
+    // Resume at world 6.
+    let mut cfg = ExperimentConfig::gmeta(3, 2);
+    cfg.dims = dims;
+    let mut t2 = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
+    let step = t2.resume(tmp.path()).unwrap();
+    assert_eq!(step, 6);
+    assert_eq!(t2.replicas[0].flatten(), want_dense);
+    assert!(t2.replicas_in_sync());
+    for (row, vals) in want_rows {
+        assert_eq!(t2.embedding.read(row), vals, "row {row} lost in reshard");
+    }
+    // And training continues from the restored state.
+    let eps6 = episodes_from_generator(spec, &dims, 6, 3);
+    let m = t2.run(&eps6, 3).unwrap();
+    assert_eq!(m.steps, 3);
+}
+
+/// Resuming a checkpoint from a different variant is refused.
+#[test]
+fn checkpoint_variant_mismatch_rejected() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let tmp = TempDir::new().unwrap();
+    let mut cfg = ExperimentConfig::gmeta(1, 2);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 2, 2);
+    let mut t1 = GMetaTrainer::new(cfg.clone(), "maml", spec.record_bytes, None).unwrap();
+    t1.run(&eps, 2).unwrap();
+    t1.save_checkpoint(tmp.path(), 2).unwrap();
+
+    let mut t2 = GMetaTrainer::new(cfg, "melu", spec.record_bytes, None).unwrap();
+    let err = t2.resume(tmp.path()).unwrap_err();
+    assert!(err.to_string().contains("variant"), "{err}");
+}
+
+/// The index file written by preprocess reloads into an equivalent loader.
+#[test]
+fn index_persistence_roundtrips_through_loader() {
+    let dims = small_dims();
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    let samples = Generator::new(spec).take(3_000);
+    let tmp = TempDir::new().unwrap();
+    let ds = preprocess(samples, 64, Codec::Binary, tmp.path(), "persist", Some(3)).unwrap();
+    let idx_path = ds.data_path.with_extension("index.json");
+    let reloaded = gmeta::io::preprocess::DatasetOnDisk::load_index(&idx_path).unwrap();
+    assert_eq!(reloaded.index, ds.index);
+
+    let a = Loader::new(ds, StorageModel::default(), ReadPattern::Sequential);
+    let b = Loader::new(reloaded, StorageModel::default(), ReadPattern::Sequential);
+    let (ba, _) = a.load_worker(0, 2).unwrap();
+    let (bb, _) = b.load_worker(0, 2).unwrap();
+    assert_eq!(ba, bb);
+}

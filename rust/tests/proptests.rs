@@ -1,0 +1,390 @@
+//! Property-based tests over randomized inputs (seeded, deterministic).
+//!
+//! The offline build has no proptest crate; `cases` runs a property over
+//! many seeded random cases and reports the failing seed for replay —
+//! the shrinking-free core of the same methodology.
+//!
+//! Invariants covered (DESIGN.md §6):
+//! * collectives: AllReduce ≡ per-element sum for arbitrary N/len; ring ≡
+//!   naive; AlltoAll is the transpose permutation; Gather/Broadcast
+//!   deliver exact copies.
+//! * sharding: every row has exactly one owner; plan-based distributed
+//!   lookup ≡ naive direct lookup; grad split/scatter round-trips.
+//! * Meta-IO: codecs round-trip arbitrary samples; preprocessed batches
+//!   are task-pure and cover the multiset of inputs; batch-level shuffle
+//!   preserves the batch multiset; offset ranges tile the file exactly.
+//! * dense: flatten/unflatten round-trip; AllReduce keeps replicas equal.
+
+use gmeta::collectives::{allreduce_naive, alltoall_bytes, broadcast, gather, ring_allreduce};
+use gmeta::config::ClusterSpec;
+use gmeta::embedding::plan::{build_overlap, LookupPlan, WorkerLookup};
+use gmeta::embedding::ShardedEmbedding;
+use gmeta::io::codec::{decode_n, encode_all, Codec};
+use gmeta::io::preprocess::preprocess;
+use gmeta::io::shuffle::batch_level_shuffle;
+use gmeta::meta::Sample;
+use gmeta::net::Topology;
+use gmeta::util::{Rng, TempDir};
+
+/// Run `body(seed, rng)` for `n` seeded cases; panic with the seed on
+/// failure so the case is replayable.
+fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(0xFEED ^ seed);
+        body(seed, &mut rng);
+    }
+}
+
+fn random_samples(rng: &mut Rng, n: usize, tasks: u64, max_ids: u64) -> Vec<Sample> {
+    (0..n)
+        .map(|_| {
+            let n_ids = rng.gen_range(0, 9) as usize;
+            Sample {
+                task: rng.gen_range(0, tasks),
+                ids: (0..n_ids).map(|_| rng.gen_range(0, max_ids)).collect(),
+                label: if rng.gen_bool(0.4) { 1.0 } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+fn topo(world: usize) -> Topology {
+    let nodes = world.div_ceil(4).max(1);
+    let wpn = world.div_ceil(nodes);
+    Topology::new(ClusterSpec::gpu(nodes, wpn))
+}
+
+// ---------------------------------------------------------------------------
+// Collectives
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ring_allreduce_is_elementwise_sum() {
+    cases(40, |seed, rng| {
+        let n = rng.gen_range(1, 12) as usize;
+        let len = rng.gen_range(0, 300) as usize;
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect())
+            .collect();
+        let want: Vec<f32> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum::<f64>() as f32)
+            .collect();
+        let mut got = bufs.clone();
+        ring_allreduce(&mut got, &topo(n)).unwrap();
+        for b in &got {
+            for (g, w) in b.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-3, "seed={seed} n={n} len={len}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ring_equals_naive_allreduce() {
+    cases(30, |seed, rng| {
+        let n = rng.gen_range(2, 10) as usize;
+        let len = rng.gen_range(1, 200) as usize;
+        let root = rng.gen_range(0, n as u64) as usize;
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut a = bufs.clone();
+        let mut b = bufs;
+        ring_allreduce(&mut a, &topo(n)).unwrap();
+        allreduce_naive(&mut b, root, &topo(n)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            for (u, v) in x.iter().zip(y) {
+                assert!((u - v).abs() <= 1e-3, "seed={seed}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_alltoall_is_transpose() {
+    cases(30, |seed, rng| {
+        let n = rng.gen_range(1, 10) as usize;
+        let sends: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|s| {
+                (0..n)
+                    .map(|d| {
+                        let len = rng.gen_range(0, 20) as usize;
+                        let mut v = vec![(s * n + d) as f32];
+                        v.extend((0..len).map(|_| rng.f64() as f32));
+                        v
+                    })
+                    .collect()
+            })
+            .collect();
+        let expect = sends.clone();
+        let (recv, _) = alltoall_bytes(sends, &topo(n)).unwrap();
+        for dst in 0..n {
+            for src in 0..n {
+                assert_eq!(recv[dst][src], expect[src][dst], "seed={seed}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gather_broadcast_identity() {
+    cases(25, |seed, rng| {
+        let n = rng.gen_range(1, 12) as usize;
+        let root = rng.gen_range(0, n as u64) as usize;
+        let data: Vec<f32> = (0..rng.gen_range(0, 100))
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let bufs: Vec<Vec<f32>> = (0..n).map(|_| data.clone()).collect();
+        let (g, _) = gather(&bufs, root, &topo(n)).unwrap();
+        assert_eq!(g, bufs, "seed={seed}");
+        let (b, _) = broadcast(&data, root, n, &topo(n)).unwrap();
+        for out in b {
+            assert_eq!(out, data, "seed={seed}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Embedding sharding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_plan_lookup_equals_naive_lookup() {
+    cases(30, |seed, rng| {
+        let world = rng.gen_range(1, 9) as usize;
+        let dim = rng.gen_range(1, 9) as usize;
+        let n_ids = rng.gen_range(1, 120) as usize;
+        let ids: Vec<u64> = (0..n_ids).map(|_| rng.gen_range(0, 64)).collect();
+
+        // Distributed: plan + per-shard serve + scatter + assemble.
+        let mut table = ShardedEmbedding::new(world, dim, 42);
+        let plan = LookupPlan::build(&ids, world);
+        let resp: Vec<Vec<f32>> = (0..world)
+            .map(|s| table.serve(s, &plan.rows_for_shard(s)).unwrap())
+            .collect();
+        let uniq = plan.scatter_responses(&resp, dim).unwrap();
+        let block = plan.lookup.assemble(&uniq, dim).unwrap();
+
+        // Naive: read each id directly.
+        let mut naive_table = ShardedEmbedding::new(world, dim, 42);
+        let naive: Vec<f32> = ids.iter().flat_map(|&id| naive_table.read(id)).collect();
+        assert_eq!(block, naive, "seed={seed} world={world} dim={dim}");
+    });
+}
+
+#[test]
+fn prop_every_row_has_exactly_one_owner() {
+    cases(20, |_seed, rng| {
+        let world = rng.gen_range(1, 16) as usize;
+        let table = ShardedEmbedding::new(world, 4, 0);
+        for _ in 0..50 {
+            let row = rng.gen_range(0, 1 << 40);
+            let owner = table.owner(row);
+            assert!(owner < world);
+            // Round-robin: owner is unique and stable.
+            assert_eq!(owner, (row % world as u64) as usize);
+        }
+    });
+}
+
+#[test]
+fn prop_grad_split_preserves_total_mass() {
+    cases(25, |seed, rng| {
+        let world = rng.gen_range(1, 7) as usize;
+        let dim = 4usize;
+        let n_ids = rng.gen_range(1, 60) as usize;
+        let ids: Vec<u64> = (0..n_ids).map(|_| rng.gen_range(0, 40)).collect();
+        let plan = LookupPlan::build(&ids, world);
+        let pos_grads: Vec<f32> = (0..ids.len() * dim).map(|_| rng.normal() as f32).collect();
+        let uniq = plan.lookup.reduce_grads(&pos_grads, dim).unwrap();
+        let split = plan.split_grads(&uniq, dim).unwrap();
+        let total_pos: f64 = pos_grads.iter().map(|&x| x as f64).sum();
+        let total_split: f64 = split
+            .iter()
+            .flat_map(|(_, g)| g.iter().map(|&x| x as f64))
+            .sum();
+        assert!(
+            (total_pos - total_split).abs() < 1e-3,
+            "seed={seed}: {total_pos} vs {total_split}"
+        );
+    });
+}
+
+#[test]
+fn prop_overlap_indices_point_at_equal_rows() {
+    cases(25, |seed, rng| {
+        let n_sup = rng.gen_range(0, 50) as usize;
+        let n_qry = rng.gen_range(0, 50) as usize;
+        let sup: Vec<u64> = (0..n_sup).map(|_| rng.gen_range(0, 20)).collect();
+        let qry: Vec<u64> = (0..n_qry).map(|_| rng.gen_range(0, 20)).collect();
+        let overlap = build_overlap(&sup, &qry);
+        assert_eq!(overlap.len(), qry.len());
+        for (q, &o) in qry.iter().zip(&overlap) {
+            if o >= 0 {
+                assert_eq!(sup[o as usize], *q, "seed={seed}");
+            } else {
+                assert!(!sup.contains(q), "seed={seed}: missed overlap for {q}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dedup_assemble_roundtrip() {
+    cases(25, |seed, rng| {
+        let n = rng.gen_range(1, 100) as usize;
+        let dim = rng.gen_range(1, 6) as usize;
+        let ids: Vec<u64> = (0..n).map(|_| rng.gen_range(0, 30)).collect();
+        let l = WorkerLookup::build(&ids);
+        // Unique vectors = the row id repeated, so positions are checkable.
+        let uniq: Vec<f32> = l
+            .unique
+            .iter()
+            .flat_map(|&u| std::iter::repeat(u as f32).take(dim))
+            .collect();
+        let block = l.assemble(&uniq, dim).unwrap();
+        for (p, &id) in ids.iter().enumerate() {
+            for c in 0..dim {
+                assert_eq!(block[p * dim + c], id as f32, "seed={seed}");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Meta-IO
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codecs_roundtrip_arbitrary_samples() {
+    cases(30, |seed, rng| {
+        let n = rng.gen_range(0, 40) as usize;
+        let samples = random_samples(rng, n, 1000, u64::MAX);
+        for codec in [Codec::Binary, Codec::String] {
+            let buf = encode_all(&samples, codec);
+            let (back, used) = decode_n(&buf, n, codec).unwrap();
+            assert_eq!(back, samples, "seed={seed} codec={codec:?}");
+            assert_eq!(used, buf.len(), "seed={seed} codec={codec:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_preprocess_batches_are_pure_and_cover_input() {
+    cases(15, |seed, rng| {
+        let n = rng.gen_range(1, 300) as usize;
+        let batch = rng.gen_range(1, 20) as usize;
+        let samples = random_samples(rng, n, 12, 1000);
+        let tmp = TempDir::new().unwrap();
+        let ds = preprocess(
+            samples.clone(),
+            batch,
+            Codec::Binary,
+            tmp.path(),
+            "p",
+            Some(seed),
+        )
+        .unwrap();
+        let data = std::fs::read(&ds.data_path).unwrap();
+        let mut seen = Vec::new();
+        for e in &ds.index {
+            let (b, _) = decode_n(
+                &data[e.offset as usize..(e.offset + e.len) as usize],
+                e.n_samples as usize,
+                Codec::Binary,
+            )
+            .unwrap();
+            assert!(b.iter().all(|s| s.task == e.task), "seed={seed}: impure");
+            assert!(b.len() <= batch, "seed={seed}: oversized batch");
+            seen.extend(b);
+        }
+        // Multiset equality via sorted comparison.
+        let key = |s: &Sample| (s.task, s.ids.clone(), s.label.to_bits());
+        let mut a: Vec<_> = samples.iter().map(key).collect();
+        let mut b: Vec<_> = seen.iter().map(key).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "seed={seed}: sample multiset changed");
+    });
+}
+
+#[test]
+fn prop_offsets_tile_the_file() {
+    cases(10, |seed, rng| {
+        let n = rng.gen_range(1, 200) as usize;
+        let samples = random_samples(rng, n, 8, 500);
+        let tmp = TempDir::new().unwrap();
+        let ds = preprocess(samples, 7, Codec::Binary, tmp.path(), "p", Some(seed)).unwrap();
+        let mut expected = 0u64;
+        for e in &ds.index {
+            assert_eq!(e.offset, expected, "seed={seed}: gap/overlap in layout");
+            expected += e.len;
+        }
+        assert_eq!(
+            expected,
+            std::fs::metadata(&ds.data_path).unwrap().len(),
+            "seed={seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_batch_shuffle_preserves_multiset() {
+    cases(20, |seed, rng| {
+        let n = rng.gen_range(1, 150) as usize;
+        let samples = random_samples(rng, n, 10, 100);
+        let tmp = TempDir::new().unwrap();
+        let ds = preprocess(samples, 5, Codec::Binary, tmp.path(), "p", None).unwrap();
+        let mut index = ds.index.clone();
+        batch_level_shuffle(&mut index, seed);
+        let mut a: Vec<u64> = ds.index.iter().map(|e| e.batch_id).collect();
+        let mut b: Vec<u64> = index.iter().map(|e| e.batch_id).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "seed={seed}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dense replicas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_flatten_unflatten_roundtrip() {
+    use gmeta::config::ModelDims;
+    use gmeta::dense::DenseParams;
+    cases(15, |seed, rng| {
+        let dims = ModelDims {
+            batch: 8,
+            slots: rng.gen_range(1, 6) as usize,
+            valency: rng.gen_range(1, 4) as usize,
+            emb_dim: rng.gen_range(1, 10) as usize,
+            hidden1: rng.gen_range(1, 30) as usize,
+            hidden2: rng.gen_range(1, 20) as usize,
+            task_dim: rng.gen_range(1, 8) as usize,
+            emb_rows: 100,
+        };
+        for variant in ["maml", "melu", "cbml"] {
+            let p = DenseParams::init(&dims, variant, seed);
+            let flat = p.flatten();
+            let mut q = DenseParams::init(&dims, variant, seed ^ 1);
+            q.unflatten_into(&flat).unwrap();
+            assert_eq!(q.flatten(), flat, "seed={seed} variant={variant}");
+        }
+    });
+}
+
+#[test]
+fn prop_allreduced_replicas_stay_identical() {
+    cases(15, |seed, rng| {
+        let n = rng.gen_range(2, 9) as usize;
+        let len = rng.gen_range(1, 500) as usize;
+        let mut bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        ring_allreduce(&mut bufs, &topo(n)).unwrap();
+        for w in bufs.windows(2) {
+            assert_eq!(w[0], w[1], "seed={seed}: replicas diverged");
+        }
+    });
+}

@@ -1,0 +1,192 @@
+//! Runtime integration: load real artifacts, execute, and check numerics
+//! against independent expectations (the rust-side half of the AOT
+//! contract; the python side is checked by pytest against ref.py).
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works on a fresh checkout).
+
+use std::path::Path;
+
+use gmeta::config::ModelDims;
+use gmeta::dense::DenseParams;
+use gmeta::runtime::{MetatrainInputs, Runtime};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime tests: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn dims_from(rt: &Runtime) -> ModelDims {
+    let d = rt.dims();
+    ModelDims {
+        batch: d.batch,
+        slots: d.slots,
+        valency: d.valency,
+        emb_dim: d.emb_dim,
+        hidden1: d.hidden1,
+        hidden2: d.hidden2,
+        task_dim: d.task_dim,
+        emb_rows: 1 << 16,
+    }
+}
+
+/// Deterministic pseudo-random block in [-0.5, 0.5).
+fn block(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = gmeta::util::Rng::seed_from_u64(seed);
+    (0..n).map(|_| (rng.f64() - 0.5) as f32).collect()
+}
+
+fn labels(seed: u64, n: usize) -> Vec<f32> {
+    block(seed, n)
+        .iter()
+        .map(|x| (*x > 0.0) as u8 as f32)
+        .collect()
+}
+
+#[test]
+fn forward_returns_probabilities() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let d = dims_from(&rt);
+    let dense = DenseParams::init(&d, "maml", 7);
+    let emb = block(1, d.batch * d.slots * d.valency * d.emb_dim);
+    let probs = rt.forward("maml", &emb, &dense).unwrap();
+    assert_eq!(probs.len(), d.batch);
+    assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+    // Not all identical (the block is random).
+    assert!(probs.iter().any(|&p| (p - probs[0]).abs() > 1e-6));
+}
+
+#[test]
+fn forward_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let d = dims_from(&rt);
+    let dense = DenseParams::init(&d, "maml", 7);
+    let emb = block(2, d.batch * d.slots * d.valency * d.emb_dim);
+    let a = rt.forward("maml", &emb, &dense).unwrap();
+    let b = rt.forward("maml", &emb, &dense).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn metatrain_outputs_are_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let d = dims_from(&rt);
+    let dense = DenseParams::init(&d, "maml", 7);
+    let n_emb = d.batch * d.slots * d.valency * d.emb_dim;
+    let inp = MetatrainInputs {
+        emb_sup: block(3, n_emb),
+        y_sup: labels(4, d.batch),
+        emb_qry: block(5, n_emb),
+        y_qry: labels(6, d.batch),
+        overlap: vec![-1; d.batch * d.slots * d.valency],
+    };
+    let out = rt.metatrain("maml", &inp, &dense).unwrap();
+    assert!(out.loss_sup.is_finite() && out.loss_sup > 0.0);
+    assert!(out.loss_qry.is_finite() && out.loss_qry > 0.0);
+    assert_eq!(out.probs_qry.len(), d.batch);
+    assert_eq!(out.g_emb_qry.len(), n_emb);
+    assert_eq!(out.g_dense_flat.len(), dense.len());
+    // Gradients are non-trivial.
+    let gnorm: f32 = out.g_dense_flat.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-6, "dense grad norm {gnorm}");
+}
+
+#[test]
+fn metatrain_gradient_descends_query_loss() {
+    // One meta step along -g should reduce the query loss re-evaluated at
+    // the same episode — a real end-to-end gradient check through the
+    // whole Pallas/JAX/HLO/PJRT stack.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let d = dims_from(&rt);
+    let mut dense = DenseParams::init(&d, "maml", 11);
+    let n_emb = d.batch * d.slots * d.valency * d.emb_dim;
+    let inp = MetatrainInputs {
+        emb_sup: block(13, n_emb),
+        y_sup: labels(14, d.batch),
+        emb_qry: block(15, n_emb),
+        y_qry: labels(16, d.batch),
+        overlap: vec![-1; d.batch * d.slots * d.valency],
+    };
+    let before = rt.metatrain("maml", &inp, &dense).unwrap();
+    dense.sgd_step(&before.g_dense_flat, 0.1).unwrap();
+    let after = rt.metatrain("maml", &inp, &dense).unwrap();
+    assert!(
+        after.loss_qry < before.loss_qry,
+        "loss_qry did not descend: {} -> {}",
+        before.loss_qry,
+        after.loss_qry
+    );
+}
+
+#[test]
+fn overlap_patching_changes_outputs() {
+    // With full overlap, query positions read inner-adapted support rows;
+    // outputs must differ from the no-overlap run.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let d = dims_from(&rt);
+    let dense = DenseParams::init(&d, "maml", 21);
+    let n_emb = d.batch * d.slots * d.valency * d.emb_dim;
+    let n_pos = d.batch * d.slots * d.valency;
+    let mk = |overlap: Vec<i32>| MetatrainInputs {
+        emb_sup: block(23, n_emb),
+        y_sup: labels(24, d.batch),
+        emb_qry: block(25, n_emb),
+        y_qry: labels(26, d.batch),
+        overlap,
+    };
+    let none = rt.metatrain("maml", &mk(vec![-1; n_pos]), &dense).unwrap();
+    let full = rt
+        .metatrain("maml", &mk((0..n_pos as i32).collect()), &dense)
+        .unwrap();
+    assert!((none.loss_qry - full.loss_qry).abs() > 1e-7);
+}
+
+#[test]
+fn all_variants_load_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    for variant in ["maml", "melu", "cbml"] {
+        let rt = Runtime::load(dir, &[variant]).unwrap();
+        let d = dims_from(&rt);
+        let dense = DenseParams::init(&d, variant, 3);
+        let n_emb = d.batch * d.slots * d.valency * d.emb_dim;
+        let inp = MetatrainInputs {
+            emb_sup: block(31, n_emb),
+            y_sup: vec![1.0; d.batch],
+            emb_qry: block(32, n_emb),
+            y_qry: vec![0.0; d.batch],
+            overlap: vec![-1; d.batch * d.slots * d.valency],
+        };
+        let out = rt.metatrain(variant, &inp, &dense).unwrap();
+        assert!(out.loss_sup.is_finite(), "{variant} loss_sup");
+        let probs = rt.forward(variant, &block(33, n_emb), &dense).unwrap();
+        assert_eq!(probs.len(), d.batch, "{variant} forward");
+    }
+}
+
+#[test]
+fn wrong_sizes_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["maml"]).unwrap();
+    let d = dims_from(&rt);
+    let dense = DenseParams::init(&d, "maml", 3);
+    assert!(rt.forward("maml", &[0.0; 7], &dense).is_err());
+    let bad = MetatrainInputs {
+        emb_sup: vec![0.0; 3],
+        y_sup: vec![],
+        emb_qry: vec![],
+        y_qry: vec![],
+        overlap: vec![],
+    };
+    assert!(rt.metatrain("maml", &bad, &dense).is_err());
+    assert!(rt.forward("missing_variant", &[0.0; 7], &dense).is_err());
+}
