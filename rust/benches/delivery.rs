@@ -1,0 +1,85 @@
+//! Bench: continuous-delivery latency — the paper's §3.4 claim that
+//! delta-based delivery shrinks the data-ready→model-published path
+//! (~4× in production).  Runs both pipelines on the same virtual 2×4
+//! cluster and reports per-version latency plus wall-time of the real
+//! delta-ingest and delta-publish legs.
+//!
+//! Run: `cargo bench --bench delivery`
+
+mod common;
+
+use gmeta::config::ExperimentConfig;
+use gmeta::data::aliccp_like;
+use gmeta::io::preprocess::preprocess;
+use gmeta::io::Codec;
+use gmeta::stream::{ingest, DeltaFeed, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
+use gmeta::util::TempDir;
+
+fn run_arm(mode: PublishMode) -> anyhow::Result<gmeta::metrics::DeliveryMetrics> {
+    let tmp = TempDir::new()?;
+    let cfg = ExperimentConfig::gmeta(2, 4);
+    let online = OnlineConfig {
+        warmup_samples: 24_000,
+        warmup_steps: 12,
+        steps_per_window: 6,
+        mode,
+        compact_every: 4,
+        feed: DeltaFeedConfig {
+            n_deltas: 5,
+            samples_per_delta: 2048,
+            interval: 120.0,
+            start_ts: 0.0,
+            cold_start_at: Some(2),
+            cold_fraction: 0.5,
+        },
+        ..OnlineConfig::default()
+    };
+    let mut s = OnlineSession::new(cfg, online, aliccp_like(40_000), "maml", tmp.path(), None)?;
+    s.run()?;
+    Ok(s.delivery.clone())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== continuous-delivery latency (virtual-clock measurement) ===\n");
+
+    println!("--- full-republish ---");
+    let full = run_arm(PublishMode::FullRepublish)?;
+    println!("{full}\n");
+    println!("--- delta-republish ---");
+    let delta = run_arm(PublishMode::DeltaRepublish)?;
+    println!("{delta}\n");
+
+    let speedup = full.mean_streamed_latency() / delta.mean_streamed_latency();
+    println!("delivery-latency speedup: {speedup:.2}x (paper reports ~4x in production)");
+    assert!(
+        delta.mean_streamed_latency() < full.mean_streamed_latency(),
+        "delta-republish must lower mean delivery latency"
+    );
+    assert!(
+        delta.published_bytes() < full.published_bytes(),
+        "delta-republish must publish fewer bytes"
+    );
+
+    println!("\n=== wall-time of the real delivery legs ===");
+    let spec = aliccp_like(20_000);
+    common::bench("delta ingest (2048 samples, append+readback)", 1, 8, || {
+        let tmp = TempDir::new().unwrap();
+        let base = gmeta::data::Generator::new(spec).take(4_000);
+        let mut ds = preprocess(base, 256, Codec::Binary, tmp.path(), "bench", Some(1)).unwrap();
+        let delta = DeltaFeed::new(
+            spec,
+            DeltaFeedConfig {
+                n_deltas: 1,
+                samples_per_delta: 2048,
+                interval: 1.0,
+                start_ts: 0.0,
+                cold_start_at: None,
+                cold_fraction: 0.0,
+            },
+        )
+        .next()
+        .unwrap();
+        ingest(&mut ds, &delta, &gmeta::sim::StorageModel::default(), Some(2)).unwrap();
+    });
+    Ok(())
+}

@@ -43,7 +43,7 @@ pub struct Checkpoint {
     pub rows: Vec<(u64, Vec<f32>)>,
 }
 
-fn frame(payload: &[u8]) -> Vec<u8> {
+pub(crate) fn frame(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 8);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&crc32fast::hash(payload).to_le_bytes());
@@ -51,7 +51,7 @@ fn frame(payload: &[u8]) -> Vec<u8> {
     out
 }
 
-fn unframe(buf: &[u8], what: &str) -> Result<Vec<u8>> {
+pub(crate) fn unframe(buf: &[u8], what: &str) -> Result<Vec<u8>> {
     if buf.len() < 8 {
         anyhow::bail!("{what}: truncated frame header");
     }
@@ -67,7 +67,7 @@ fn unframe(buf: &[u8], what: &str) -> Result<Vec<u8>> {
     Ok(payload.to_vec())
 }
 
-fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+pub(crate) fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(vals.len() * 4);
     for v in vals {
         out.extend_from_slice(&v.to_le_bytes());
@@ -75,13 +75,74 @@ fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
     out
 }
 
-fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
     if b.len() % 4 != 0 {
         anyhow::bail!("f32 payload not a multiple of 4");
     }
     Ok(b.chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect())
+}
+
+/// Serialize model dims as a JSON object (shared by the full-checkpoint
+/// header and the versioned delta-checkpoint headers in [`crate::stream`]).
+pub(crate) fn dims_to_json(dims: &ModelDims) -> Value {
+    obj(vec![
+        ("batch", num(dims.batch as f64)),
+        ("slots", num(dims.slots as f64)),
+        ("valency", num(dims.valency as f64)),
+        ("emb_dim", num(dims.emb_dim as f64)),
+        ("hidden1", num(dims.hidden1 as f64)),
+        ("hidden2", num(dims.hidden2 as f64)),
+        ("task_dim", num(dims.task_dim as f64)),
+        ("emb_rows", num(dims.emb_rows as f64)),
+    ])
+}
+
+/// Inverse of [`dims_to_json`].
+pub(crate) fn dims_from_json(d: &Value) -> Result<ModelDims> {
+    let need = |k: &str| -> Result<usize> {
+        d.field(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint header field {k:?} bad"))
+    };
+    Ok(ModelDims {
+        batch: need("batch")?,
+        slots: need("slots")?,
+        valency: need("valency")?,
+        emb_dim: need("emb_dim")?,
+        hidden1: need("hidden1")?,
+        hidden2: need("hidden2")?,
+        task_dim: need("task_dim")?,
+        emb_rows: need("emb_rows")?,
+    })
+}
+
+/// Capture the live trainer state as an in-memory [`Checkpoint`] without
+/// touching disk — the publishing path: the [`crate::stream`] delta store
+/// diffs two captures to decide which rows cross the wire.  Rows are
+/// sorted by id so captures of identical state are bit-identical.
+pub fn capture(
+    step: u64,
+    variant: &str,
+    dims: &ModelDims,
+    dense: &DenseParams,
+    embedding: &mut ShardedEmbedding,
+) -> Checkpoint {
+    let world = embedding.world();
+    let mut rows = Vec::new();
+    for rank in 0..world {
+        rows.extend(embedding.export_shard(rank));
+    }
+    rows.sort_by_key(|(r, _)| *r);
+    Checkpoint {
+        step,
+        variant: variant.to_string(),
+        dims: *dims,
+        world,
+        dense: dense.flatten(),
+        rows,
+    }
 }
 
 /// Write a checkpoint of the trainer state into `dir`.
@@ -101,19 +162,7 @@ pub fn save(
         ("step", num(step as f64)),
         ("variant", s(variant)),
         ("world", num(world as f64)),
-        (
-            "dims",
-            obj(vec![
-                ("batch", num(dims.batch as f64)),
-                ("slots", num(dims.slots as f64)),
-                ("valency", num(dims.valency as f64)),
-                ("emb_dim", num(dims.emb_dim as f64)),
-                ("hidden1", num(dims.hidden1 as f64)),
-                ("hidden2", num(dims.hidden2 as f64)),
-                ("task_dim", num(dims.task_dim as f64)),
-                ("emb_rows", num(dims.emb_rows as f64)),
-            ]),
-        ),
+        ("dims", dims_to_json(dims)),
     ]);
     fs::write(dir.join("meta.json"), json::write(&header))?;
 
@@ -135,23 +184,11 @@ pub fn save(
 /// Load a checkpoint from `dir` (shards from whatever world size wrote it).
 pub fn load(dir: &Path) -> Result<Checkpoint> {
     let header = json::parse(&fs::read_to_string(dir.join("meta.json"))?)?;
-    let need = |v: &Value, k: &str| -> Result<usize> {
-        v.field(k)?
-            .as_usize()
-            .ok_or_else(|| anyhow::anyhow!("checkpoint header field {k:?} bad"))
-    };
-    let d = header.field("dims")?;
-    let dims = ModelDims {
-        batch: need(d, "batch")?,
-        slots: need(d, "slots")?,
-        valency: need(d, "valency")?,
-        emb_dim: need(d, "emb_dim")?,
-        hidden1: need(d, "hidden1")?,
-        hidden2: need(d, "hidden2")?,
-        task_dim: need(d, "task_dim")?,
-        emb_rows: need(d, "emb_rows")?,
-    };
-    let world = need(&header, "world")?;
+    let dims = dims_from_json(header.field("dims")?)?;
+    let world = header
+        .field("world")?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint header field \"world\" bad"))?;
     let variant = header
         .field("variant")?
         .as_str()
@@ -282,6 +319,25 @@ mod tests {
             assert_eq!(table2.read(row), vals, "row {row} wrong after reshard");
             assert_eq!(table2.owner(row), (row % 7) as usize);
         }
+    }
+
+    #[test]
+    fn capture_matches_saved_state() {
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(4);
+        save(tmp.path(), 11, "maml", &d, &dense, &mut table).unwrap();
+        let from_disk = load(tmp.path()).unwrap();
+        let mut in_mem = capture(11, "maml", &d, &dense, &mut table);
+        // load() concatenates shards; normalize both row orders by id.
+        let mut disk_rows = from_disk.rows.clone();
+        disk_rows.sort_by_key(|(r, _)| *r);
+        in_mem.rows.sort_by_key(|(r, _)| *r);
+        assert_eq!(in_mem.step, from_disk.step);
+        assert_eq!(in_mem.world, from_disk.world);
+        assert_eq!(in_mem.dense, from_disk.dense);
+        assert_eq!(in_mem.rows, disk_rows);
     }
 
     #[test]

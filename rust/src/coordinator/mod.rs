@@ -504,6 +504,13 @@ impl<'rt> GMetaTrainer<'rt> {
     /// step counter to resume from.
     pub fn resume(&mut self, dir: &std::path::Path) -> Result<u64> {
         let ckpt = crate::checkpoint::load(dir)?;
+        self.restore_from(&ckpt)
+    }
+
+    /// Restore meta state from an in-memory checkpoint (the warm-start
+    /// path [`crate::stream::OnlineSession`] uses between delivery
+    /// windows); returns the checkpoint's step counter.
+    pub fn restore_from(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<u64> {
         if ckpt.variant != self.variant {
             anyhow::bail!(
                 "checkpoint is for variant {:?}, trainer runs {:?}",
@@ -519,6 +526,15 @@ impl<'rt> GMetaTrainer<'rt> {
             self.embedding.import_row(*row, vals)?;
         }
         Ok(ckpt.step)
+    }
+
+    /// Capture the full meta state in memory (no disk) — what the online
+    /// publishing path diffs and ships as a delta checkpoint.
+    pub fn capture(&mut self, step: u64) -> crate::checkpoint::Checkpoint {
+        let variant = self.variant.clone();
+        let dims = self.cfg.dims;
+        let dense = self.replicas[0].clone();
+        crate::checkpoint::capture(step, &variant, &dims, &dense, &mut self.embedding)
     }
 
     /// Invariant: all dense replicas are bit-identical (AllReduce keeps

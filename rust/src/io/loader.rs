@@ -62,25 +62,48 @@ impl Loader {
     /// [`GroupBatchOp`].  Returns the batches plus I/O accounting.
     pub fn load_worker(&self, rank: usize, world: usize) -> Result<(Vec<TaskBatch>, LoaderStats)> {
         let entries = self.worker_slice(rank, world);
+        self.load_entries(entries)
+    }
+
+    /// Load and decode an explicit set of index entries — e.g. the window
+    /// of batches a delta append just produced ([`crate::stream`]'s
+    /// ingestion path) — verifying task purity via [`GroupBatchOp`].
+    ///
+    /// Only the byte span covering `entries` is read (the entries a
+    /// caller passes are a contiguous layout range: a worker's slice or
+    /// a freshly appended extent), so the cost tracks the window, not
+    /// the accumulated file.
+    pub fn load_entries(&self, entries: &[BatchEntry]) -> Result<(Vec<TaskBatch>, LoaderStats)> {
+        use std::io::{Read as _, Seek as _, SeekFrom};
+
         let mut stats = LoaderStats::default();
         if entries.is_empty() {
             return Ok((vec![], stats));
         }
-        let data = fs::read(&self.ds.data_path)?;
+        let span_lo = entries.iter().map(|e| e.offset).min().unwrap_or(0);
+        let span_hi = entries
+            .iter()
+            .map(|e| e.offset + e.len)
+            .max()
+            .unwrap_or(span_lo);
+        let file_len = fs::metadata(&self.ds.data_path)?.len();
+        if span_hi > file_len {
+            anyhow::bail!(
+                "index range {span_lo}..{span_hi} exceeds data file ({file_len} bytes) — \
+                 stale index?"
+            );
+        }
+        let mut data = vec![0u8; (span_hi - span_lo) as usize];
+        let mut file = fs::File::open(&self.ds.data_path)?;
+        file.seek(SeekFrom::Start(span_lo))?;
+        file.read_exact(&mut data)?;
         let codec = self.ds.codec();
 
         let mut op = GroupBatchOp::new();
         let mut out = Vec::with_capacity(entries.len());
         for e in entries {
-            let lo = e.offset as usize;
+            let lo = (e.offset - span_lo) as usize;
             let hi = lo + e.len as usize;
-            if hi > data.len() {
-                anyhow::bail!(
-                    "batch {} range {lo}..{hi} exceeds data file ({} bytes) — stale index?",
-                    e.batch_id,
-                    data.len()
-                );
-            }
             let (samples, used) = decode_n(&data[lo..hi], e.n_samples as usize, codec)?;
             if used != e.len as usize {
                 anyhow::bail!(

@@ -8,6 +8,8 @@
 //!    assign a `batch_id` per `batch_size` run within a task, emit an
 //!    `offset` column so each batch is a contiguous byte range
 //!    (MapReduce in the paper; a staged map→sort→reduce pipeline here).
+//!    [`append`] runs the same stages incrementally over a freshly
+//!    arrived delta (the [`crate::stream`] continuous-delivery path).
 //! 2. **Batch-level shuffle** ([`shuffle`]): permute whole batches, never
 //!    samples — sample-level shuffling would mix tasks (§2.2.1).
 //! 3. **GroupBatchOp** ([`group_batch`]): assemble loaded records into
@@ -27,5 +29,5 @@ pub mod shuffle;
 pub use codec::{decode_binary, decode_string, encode_binary, encode_string, Codec};
 pub use group_batch::GroupBatchOp;
 pub use loader::{Loader, LoaderStats};
-pub use preprocess::{preprocess, BatchEntry, DatasetOnDisk};
+pub use preprocess::{append, preprocess, AppendStats, BatchEntry, DatasetOnDisk};
 pub use shuffle::{batch_level_shuffle, sample_level_shuffle};

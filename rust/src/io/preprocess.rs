@@ -118,6 +118,28 @@ impl DatasetOnDisk {
     }
 }
 
+/// Stage 3a of the pipeline: walk runs of equal task in task-sorted
+/// `samples` and cut them into `batch_size` chunks `(task, start, end)`.
+pub(crate) fn cut_batches(samples: &[Sample], batch_size: usize) -> Vec<(u64, usize, usize)> {
+    let mut cuts: Vec<(u64, usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < samples.len() {
+        let task = samples[i].task;
+        let mut j = i;
+        while j < samples.len() && samples[j].task == task {
+            j += 1;
+        }
+        let mut k = i;
+        while k < j {
+            let end = (k + batch_size).min(j);
+            cuts.push((task, k, end));
+            k = end;
+        }
+        i = j;
+    }
+    cuts
+}
+
 /// Run the preprocessing pipeline over `samples`, writing `dir/name.dat`.
 ///
 /// Stages (mirroring the MapReduce phases):
@@ -147,22 +169,7 @@ pub fn preprocess(
     samples.sort_by_key(|s| s.task);
 
     // Stage 3a: batch cutting (record ranges, no serialization yet).
-    let mut cuts: Vec<(u64, usize, usize)> = Vec::new(); // (task, start, end)
-    let mut i = 0usize;
-    while i < samples.len() {
-        let task = samples[i].task;
-        let mut j = i;
-        while j < samples.len() && samples[j].task == task {
-            j += 1;
-        }
-        let mut k = i;
-        while k < j {
-            let end = (k + batch_size).min(j);
-            cuts.push((task, k, end));
-            k = end;
-        }
-        i = j;
-    }
+    let cuts = cut_batches(&samples, batch_size);
 
     // Stage 3b: batch-level shuffle BEFORE assigning offsets, so the
     // randomized consumption order is also the physical layout order.
@@ -202,6 +209,81 @@ pub fn preprocess(
     };
     ds.save_index()?;
     Ok(ds)
+}
+
+/// Accounting for one incremental append (the delta-ingestion path).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AppendStats {
+    /// Index position of the first appended entry — the new window is
+    /// `ds.index[first_index..]`.
+    pub first_index: usize,
+    pub batches: usize,
+    pub samples: usize,
+    pub bytes_appended: u64,
+}
+
+/// Incrementally extend an on-disk dataset with freshly arrived samples
+/// (paper §3.4: micro-batches of logs stream in between continuous
+/// delivery windows).  Runs the same sort→cut→serialize stages as
+/// [`preprocess`] but only over the delta: existing batches keep their
+/// offsets, new batches append at the end of the data file with batch ids
+/// continuing after the current maximum, and the offset index is re-saved
+/// — no full re-preprocess of the accumulated corpus.
+///
+/// `shuffle_seed` batch-shuffles the delta among itself (arrival order is
+/// already time order; cross-epoch shuffling stays batch-level, §2.2.1).
+pub fn append(
+    ds: &mut DatasetOnDisk,
+    mut samples: Vec<Sample>,
+    shuffle_seed: Option<u64>,
+) -> Result<AppendStats> {
+    if ds.batch_size == 0 {
+        anyhow::bail!("append: dataset has batch_size 0");
+    }
+    let mut stats = AppendStats {
+        first_index: ds.index.len(),
+        samples: samples.len(),
+        ..AppendStats::default()
+    };
+    if samples.is_empty() {
+        return Ok(stats);
+    }
+    let codec = ds.codec();
+    samples.sort_by_key(|s| s.task);
+    let cuts = cut_batches(&samples, ds.batch_size);
+
+    let mut order: Vec<usize> = (0..cuts.len()).collect();
+    if let Some(seed) = shuffle_seed {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        rng.shuffle(&mut order);
+    }
+
+    let mut next_id = ds.index.iter().map(|e| e.batch_id + 1).max().unwrap_or(0);
+    let mut offset = fs::metadata(&ds.data_path)?.len();
+    let mut data = Vec::new();
+    for &ci in &order {
+        let (task, start, end) = cuts[ci];
+        let bytes = encode_all(&samples[start..end], codec);
+        ds.index.push(BatchEntry {
+            task,
+            batch_id: next_id,
+            offset,
+            len: bytes.len() as u64,
+            n_samples: (end - start) as u32,
+        });
+        next_id += 1;
+        offset += bytes.len() as u64;
+        data.extend_from_slice(&bytes);
+        stats.batches += 1;
+    }
+    stats.bytes_appended = data.len() as u64;
+
+    use std::io::Write as _;
+    let mut f = fs::OpenOptions::new().append(true).open(&ds.data_path)?;
+    f.write_all(&data)?;
+    ds.total_samples += samples.len();
+    ds.save_index()?;
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -303,5 +385,79 @@ mod tests {
         }
         let file_len = std::fs::metadata(&ds.data_path).unwrap().len();
         assert_eq!(expected, file_len);
+    }
+
+    fn delta_samples() -> Vec<Sample> {
+        vec![
+            Sample { task: 1, ids: vec![10], label: 1.0 },
+            Sample { task: 9, ids: vec![11], label: 0.0 },
+            Sample { task: 9, ids: vec![12], label: 1.0 },
+            Sample { task: 9, ids: vec![13], label: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn append_extends_without_rewriting() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        let base_batches = ds.index.len();
+        let base_bytes = std::fs::metadata(&ds.data_path).unwrap().len();
+        let base_prefix = std::fs::read(&ds.data_path).unwrap();
+
+        let stats = append(&mut ds, delta_samples(), None).unwrap();
+        assert_eq!(stats.first_index, base_batches);
+        assert_eq!(stats.samples, 4);
+        // task 1 -> one batch of 1; task 9 (3 samples, batch 2) -> 2 batches.
+        assert_eq!(stats.batches, 3);
+        assert_eq!(ds.total_samples, 9);
+
+        // Existing bytes untouched; new bytes appended after them.
+        let data = std::fs::read(&ds.data_path).unwrap();
+        assert_eq!(&data[..base_bytes as usize], &base_prefix[..]);
+        assert_eq!(
+            data.len() as u64,
+            base_bytes + stats.bytes_appended,
+            "append must be additive"
+        );
+
+        // Offsets still tile the file; batch ids stay unique and dense.
+        let mut expected = 0u64;
+        for e in &ds.index {
+            assert_eq!(e.offset, expected);
+            expected += e.len;
+        }
+        let mut ids: Vec<u64> = ds.index.iter().map(|e| e.batch_id).collect();
+        ids.sort_unstable();
+        let want: Vec<u64> = (0..ds.index.len() as u64).collect();
+        assert_eq!(ids, want);
+
+        // Appended batches decode task-pure.
+        for e in &ds.index[stats.first_index..] {
+            let buf = &data[e.offset as usize..(e.offset + e.len) as usize];
+            let (batch, used) = decode_n(buf, e.n_samples as usize, Codec::Binary).unwrap();
+            assert_eq!(used, e.len as usize);
+            assert!(batch.iter().all(|s| s.task == e.task));
+        }
+    }
+
+    #[test]
+    fn append_persists_index() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        append(&mut ds, delta_samples(), Some(5)).unwrap();
+        let back =
+            DatasetOnDisk::load_index(&ds.data_path.with_extension("index.json")).unwrap();
+        assert_eq!(back.index, ds.index);
+        assert_eq!(back.total_samples, ds.total_samples);
+    }
+
+    #[test]
+    fn append_empty_delta_is_a_noop() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut ds = preprocess(samples(), 2, Codec::Binary, tmp.path(), "t", None).unwrap();
+        let before = ds.index.clone();
+        let stats = append(&mut ds, vec![], Some(1)).unwrap();
+        assert_eq!(stats, AppendStats { first_index: before.len(), ..Default::default() });
+        assert_eq!(ds.index, before);
     }
 }

@@ -13,6 +13,12 @@
 //!   communication cost accounting ([`net`]), and the Meta-IO ingestion
 //!   pipeline ([`io`]).  A full parameter-server baseline ([`ps`],
 //!   DMAML-style) is included for every comparison the paper makes.
+//!   On top sits the **continuous-delivery layer** ([`stream`], paper
+//!   §3.4): delta ingestion through the incremental Meta-IO path,
+//!   warm-start training windows, delta checkpoints layered on
+//!   [`checkpoint`], and versioned publishing with per-version
+//!   data-ready→servable latency accounting — the online loop a
+//!   production recommender actually runs.
 //! - **L2/L1 (build-time Python)** — the Meta-DLRM forward/backward with
 //!   fused MAML inner+outer steps, built on Pallas kernels, AOT-lowered to
 //!   HLO text artifacts loaded by [`runtime`] via PJRT.
@@ -45,9 +51,10 @@ pub mod net;
 pub mod ps;
 pub mod runtime;
 pub mod sim;
+pub mod stream;
 pub mod util;
 
 pub use config::{ClusterSpec, ExperimentConfig};
 
-/// Crate-wide result alias (eyre for rich error contexts).
+/// Crate-wide result alias (anyhow for rich error contexts).
 pub type Result<T> = anyhow::Result<T>;

@@ -15,6 +15,15 @@ pub const PHASE_GRAD_EXCHANGE: &str = "grad_exchange";
 pub const PHASE_DENSE_ALLREDUCE: &str = "dense_allreduce";
 pub const PHASE_PS_PULL: &str = "ps_pull";
 pub const PHASE_PS_PUSH: &str = "ps_push";
+/// Continuous-delivery phases (the [`crate::stream`] subsystem).
+/// Offline warm-up preprocessing (not part of streamed delivery).
+pub const PHASE_PREPROCESS: &str = "preprocess";
+/// Per-window ingestion leg: incremental append (delta mode) or the
+/// full corpus re-preprocess (full-republish mode).
+pub const PHASE_DELTA_INGEST: &str = "delta_ingest";
+pub const PHASE_RESTORE: &str = "restore";
+pub const PHASE_PUBLISH: &str = "publish";
+pub const PHASE_COLD_EVAL: &str = "cold_eval";
 
 /// Aggregated result of one training run.
 #[derive(Debug, Clone, Default)]
@@ -55,6 +64,28 @@ impl RunMetrics {
     pub fn phase(&self, phase: &str) -> f64 {
         self.phase_time.get(phase).copied().unwrap_or(0.0)
     }
+
+    /// Accumulate another run's totals into this one — multi-window
+    /// sessions (warm-start online training) aggregate per-window
+    /// [`RunMetrics`] into one job-level view.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.samples += other.samples;
+        self.steps += other.steps;
+        self.virtual_time += other.virtual_time;
+        for (k, v) in &other.phase_time {
+            *self.phase_time.entry(k.clone()).or_insert(0.0) += v;
+        }
+        self.inter_bytes += other.inter_bytes;
+        self.intra_bytes += other.intra_bytes;
+        self.real_compute_secs += other.real_compute_secs;
+        // Tail losses: keep the freshest window's view.
+        if other.tail_loss_sup.is_some() {
+            self.tail_loss_sup = other.tail_loss_sup;
+        }
+        if other.tail_loss_qry.is_some() {
+            self.tail_loss_qry = other.tail_loss_qry;
+        }
+    }
 }
 
 impl fmt::Display for RunMetrics {
@@ -75,6 +106,122 @@ impl fmt::Display for RunMetrics {
             "  traffic: inter={:.1} MiB intra={:.1} MiB",
             self.inter_bytes / (1 << 20) as f64,
             self.intra_bytes / (1 << 20) as f64
+        )
+    }
+}
+
+/// One published model version in a continuous-delivery session
+/// (paper §3.4: models are re-delivered on a fixed cadence; the headline
+/// operational claim is shrinking that cadence's latency ~4×).
+#[derive(Debug, Clone)]
+pub struct VersionRecord {
+    pub version: u64,
+    /// What crossed the wire to the registry: `"full"` or `"delta"`.
+    pub kind: String,
+    /// Virtual timestamp the version's freshest data finished arriving.
+    pub data_ready: f64,
+    /// Virtual timestamp the version became servable.
+    pub published: f64,
+    /// Bytes uploaded to the model registry for this version.
+    pub bytes: u64,
+    /// Embedding rows shipped (all touched rows for a full snapshot,
+    /// changed rows only for a delta).
+    pub rows: usize,
+    /// Cold-start tasks first seen in this version's delta window.
+    pub cold_tasks: Vec<u64>,
+    /// Zero-shot AUC of the *previously serving* model over the window's
+    /// cold tasks, scored at data arrival — before the window trains on
+    /// them (real-numerics runs; `None` in virtual-clock-only mode,
+    /// where the zero-shot serving check is charged but produces no
+    /// numerics).
+    pub zero_shot_auc: Option<f64>,
+}
+
+impl VersionRecord {
+    /// Data-ready → model-published delivery latency, seconds.
+    pub fn latency(&self) -> f64 {
+        self.published - self.data_ready
+    }
+}
+
+/// Aggregated result of one online continuous-delivery session.
+#[derive(Debug, Clone, Default)]
+pub struct DeliveryMetrics {
+    /// Every published version, in publish order (index 0 is the warm-up
+    /// model; the rest are streamed delivery windows).
+    pub versions: Vec<VersionRecord>,
+    /// Training/ingest/publish phase totals across all windows.
+    pub train: RunMetrics,
+}
+
+impl DeliveryMetrics {
+    /// Mean delivery latency over every published version.
+    pub fn mean_latency(&self) -> f64 {
+        if self.versions.is_empty() {
+            return 0.0;
+        }
+        self.versions.iter().map(VersionRecord::latency).sum::<f64>() / self.versions.len() as f64
+    }
+
+    /// Mean delivery latency over the *streamed* versions only (skips the
+    /// warm-up version, whose latency is just its publish leg).
+    pub fn mean_streamed_latency(&self) -> f64 {
+        let streamed = &self.versions[self.versions.len().min(1)..];
+        if streamed.is_empty() {
+            return 0.0;
+        }
+        streamed.iter().map(VersionRecord::latency).sum::<f64>() / streamed.len() as f64
+    }
+
+    pub fn max_latency(&self) -> f64 {
+        self.versions
+            .iter()
+            .map(VersionRecord::latency)
+            .fold(0.0, f64::max)
+    }
+
+    /// Total bytes uploaded to the registry across all versions.
+    pub fn published_bytes(&self) -> u64 {
+        self.versions.iter().map(|v| v.bytes).sum()
+    }
+
+    /// All cold-start tasks observed mid-stream, in version order.
+    pub fn cold_tasks(&self) -> Vec<u64> {
+        self.versions
+            .iter()
+            .flat_map(|v| v.cold_tasks.iter().copied())
+            .collect()
+    }
+}
+
+impl fmt::Display for DeliveryMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:>7} {:>6} {:>12} {:>12} {:>10} {:>10} {:>8} {:>5}",
+            "version", "kind", "ready(s)", "published(s)", "latency(s)", "KiB", "rows", "cold"
+        )?;
+        for v in &self.versions {
+            writeln!(
+                f,
+                "{:>7} {:>6} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>5}",
+                v.version,
+                v.kind,
+                v.data_ready,
+                v.published,
+                v.latency(),
+                v.bytes as f64 / 1024.0,
+                v.rows,
+                v.cold_tasks.len()
+            )?;
+        }
+        write!(
+            f,
+            "mean latency {:.3}s (streamed {:.3}s), max {:.3}s, {:.2} MiB published",
+            self.mean_latency(),
+            self.mean_streamed_latency(),
+            self.max_latency(),
+            self.published_bytes() as f64 / (1 << 20) as f64
         )
     }
 }
@@ -117,6 +264,71 @@ mod tests {
         m.add_phase(PHASE_IO, 0.5);
         assert_eq!(m.phase(PHASE_IO), 1.5);
         assert_eq!(m.phase(PHASE_COMPUTE), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_all_counters() {
+        let mut a = RunMetrics {
+            samples: 10,
+            steps: 2,
+            virtual_time: 1.0,
+            inter_bytes: 5.0,
+            ..Default::default()
+        };
+        a.add_phase(PHASE_IO, 0.5);
+        let mut b = RunMetrics {
+            samples: 30,
+            steps: 3,
+            virtual_time: 2.0,
+            tail_loss_qry: Some(0.4),
+            ..Default::default()
+        };
+        b.add_phase(PHASE_IO, 0.25);
+        b.add_phase(PHASE_COMPUTE, 1.0);
+        a.merge(&b);
+        assert_eq!(a.samples, 40);
+        assert_eq!(a.steps, 5);
+        assert_eq!(a.virtual_time, 3.0);
+        assert_eq!(a.phase(PHASE_IO), 0.75);
+        assert_eq!(a.phase(PHASE_COMPUTE), 1.0);
+        assert_eq!(a.inter_bytes, 5.0);
+        assert_eq!(a.tail_loss_qry, Some(0.4));
+    }
+
+    fn rec(version: u64, ready: f64, published: f64, bytes: u64) -> VersionRecord {
+        VersionRecord {
+            version,
+            kind: "delta".into(),
+            data_ready: ready,
+            published,
+            bytes,
+            rows: 1,
+            cold_tasks: vec![],
+            zero_shot_auc: None,
+        }
+    }
+
+    #[test]
+    fn delivery_latency_statistics() {
+        let d = DeliveryMetrics {
+            versions: vec![rec(0, 0.0, 4.0, 100), rec(1, 10.0, 11.0, 50), rec(2, 20.0, 23.0, 50)],
+            train: RunMetrics::default(),
+        };
+        assert!((d.versions[0].latency() - 4.0).abs() < 1e-12);
+        assert!((d.mean_latency() - (4.0 + 1.0 + 3.0) / 3.0).abs() < 1e-12);
+        assert!((d.mean_streamed_latency() - 2.0).abs() < 1e-12);
+        assert!((d.max_latency() - 4.0).abs() < 1e-12);
+        assert_eq!(d.published_bytes(), 200);
+        assert!(d.cold_tasks().is_empty());
+    }
+
+    #[test]
+    fn empty_delivery_metrics_are_zero() {
+        let d = DeliveryMetrics::default();
+        assert_eq!(d.mean_latency(), 0.0);
+        assert_eq!(d.mean_streamed_latency(), 0.0);
+        assert_eq!(d.max_latency(), 0.0);
+        assert_eq!(d.published_bytes(), 0);
     }
 
     #[test]

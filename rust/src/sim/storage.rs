@@ -88,6 +88,24 @@ impl StorageModel {
             };
         io + decode
     }
+
+    /// Seconds for one worker to encode and append `disk_bytes` as one
+    /// sequential extent — the delta-ingestion and checkpoint-staging
+    /// write path.  `disk_bytes` is the **on-disk** byte count (already
+    /// codec-inflated for string formats — callers pass real file/append
+    /// sizes, so no inflation is applied here).  Writes are symmetric to
+    /// sequential reads on the HDD DFS (one positioning seek + streaming
+    /// bandwidth), plus the codec's encode cost, mirroring its decode
+    /// cost.
+    pub fn write_time(&self, disk_bytes: f64, binary_format: bool) -> f64 {
+        let encode = disk_bytes
+            * if binary_format {
+                self.binary_decode
+            } else {
+                self.string_decode
+            };
+        self.seek_time + disk_bytes / self.seq_bw + encode
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +130,22 @@ mod tests {
         let bin = s.read_time(10_000, 1024, 1, ReadPattern::Sequential, true);
         let txt = s.read_time(10_000, 1024, 1, ReadPattern::Sequential, false);
         assert!(txt > 2.0 * bin, "bin={bin} txt={txt}");
+    }
+
+    #[test]
+    fn binary_write_beats_string_write() {
+        let s = StorageModel::default();
+        let bin = s.write_time(10e6, true);
+        let txt = s.write_time(10e6, false);
+        assert!(txt > bin, "bin={bin} txt={txt}");
+    }
+
+    #[test]
+    fn write_time_linear_past_the_seek() {
+        let s = StorageModel::default();
+        let one = s.write_time(1e6, true);
+        let two = s.write_time(2e6, true);
+        assert!(((two - s.seek_time) - 2.0 * (one - s.seek_time)).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! Delta checkpoints: publish only what changed since the last version.
+//!
+//! A full Meta-DLRM snapshot is dominated by the embedding table ξ, but
+//! between two delivery windows only the rows the window's data touched
+//! move — the dense replica θ is small and always ships.  Layered on the
+//! [`crate::checkpoint`] framed binary format, the store keeps an ordered
+//! chain of versions:
+//!
+//! ```text
+//! <root>/versions.json        manifest: ordered version headers
+//! <root>/v<NNNNNN>/publish.json   {version, kind, parent, step, variant,
+//!                                  world, dims}
+//! <root>/v<NNNNNN>/dense.bin      [u32 len][u32 crc][f32 values...]
+//! <root>/v<NNNNNN>/rows.bin       [u32 len][u32 crc][(u64 row)(f32 x D)...]
+//! ```
+//!
+//! A **full** version's `rows.bin` holds every touched row; a **delta**'s
+//! holds only rows whose values bit-changed (or appeared) since `parent`.
+//! [`DeltaStore::load`] reconstructs any version by walking back to the
+//! nearest full ancestor and applying deltas forward — the result must
+//! equal the full snapshot *bit-for-bit* (property-tested).  Periodic
+//! [`DeltaStore::compact`] rewrites a version in place as a full snapshot,
+//! bounding reconstruction chains without breaking later deltas.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::checkpoint::{
+    bytes_to_f32s, dims_from_json, dims_to_json, f32s_to_bytes, frame, unframe, Checkpoint,
+};
+use crate::util::json::{self, num, obj, s, Value};
+use crate::Result;
+
+/// What a version's `rows.bin` means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VersionKind {
+    /// Complete state: every touched row.
+    Full,
+    /// Overlay on `parent`: changed/new rows only.
+    Delta,
+}
+
+impl VersionKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            VersionKind::Full => "full",
+            VersionKind::Delta => "delta",
+        }
+    }
+
+    fn parse(text: &str) -> Result<Self> {
+        match text {
+            "full" => Ok(VersionKind::Full),
+            "delta" => Ok(VersionKind::Delta),
+            other => anyhow::bail!("unknown version kind {other:?}"),
+        }
+    }
+}
+
+/// Manifest entry for one published version.
+#[derive(Debug, Clone)]
+pub struct VersionMeta {
+    pub version: u64,
+    pub kind: VersionKind,
+    /// The version this delta overlays (`None` for full snapshots).
+    pub parent: Option<u64>,
+    pub step: u64,
+}
+
+/// What one publish actually uploaded.
+#[derive(Debug, Clone, Copy)]
+pub struct PublishStats {
+    pub kind: VersionKind,
+    /// Bytes written for this version (header + dense + rows).
+    pub bytes: u64,
+    /// Embedding rows shipped.
+    pub rows: usize,
+}
+
+/// The versioned checkpoint store backing continuous delivery.
+#[derive(Debug)]
+pub struct DeltaStore {
+    root: PathBuf,
+    versions: Vec<VersionMeta>,
+}
+
+/// Bit-exact row-value equality (f32 `==` would treat -0.0 == 0.0 and
+/// NaN != NaN; published bytes must round-trip exactly).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl DeltaStore {
+    /// Create a fresh store at `root` (parent directories are created).
+    /// Refuses to clobber an existing store — reopen those with
+    /// [`DeltaStore::open`] instead of silently wiping their manifest.
+    pub fn create(root: &Path) -> Result<Self> {
+        if root.join("versions.json").exists() {
+            anyhow::bail!(
+                "a delta-checkpoint store already exists at {root:?} — open it instead of \
+                 creating over it"
+            );
+        }
+        fs::create_dir_all(root)?;
+        let store = Self {
+            root: root.to_path_buf(),
+            versions: Vec::new(),
+        };
+        store.save_manifest()?;
+        Ok(store)
+    }
+
+    /// Open an existing store.
+    pub fn open(root: &Path) -> Result<Self> {
+        let doc = json::parse(&fs::read_to_string(root.join("versions.json"))?)?;
+        let versions = doc
+            .field("versions")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("versions.json: versions is not an array"))?
+            .iter()
+            .map(Self::meta_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            root: root.to_path_buf(),
+            versions,
+        })
+    }
+
+    pub fn versions(&self) -> &[VersionMeta] {
+        &self.versions
+    }
+
+    pub fn latest(&self) -> Option<&VersionMeta> {
+        self.versions.last()
+    }
+
+    fn dir(&self, version: u64) -> PathBuf {
+        self.root.join(format!("v{version:06}"))
+    }
+
+    fn meta_to_json(m: &VersionMeta) -> Value {
+        obj(vec![
+            ("version", num(m.version as f64)),
+            ("kind", s(m.kind.as_str())),
+            (
+                "parent",
+                match m.parent {
+                    Some(p) => num(p as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("step", num(m.step as f64)),
+        ])
+    }
+
+    fn meta_from_json(v: &Value) -> Result<VersionMeta> {
+        let need_u64 = |k: &str| -> Result<u64> {
+            v.field(k)?
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("version header field {k:?} bad"))
+        };
+        let parent = match v.field("parent")? {
+            Value::Null => None,
+            p => Some(
+                p.as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("version header field \"parent\" bad"))?,
+            ),
+        };
+        Ok(VersionMeta {
+            version: need_u64("version")?,
+            kind: VersionKind::parse(
+                v.field("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("version header field \"kind\" bad"))?,
+            )?,
+            parent,
+            step: need_u64("step")?,
+        })
+    }
+
+    fn save_manifest(&self) -> Result<()> {
+        let doc = obj(vec![(
+            "versions",
+            Value::Arr(self.versions.iter().map(Self::meta_to_json).collect()),
+        )]);
+        fs::write(self.root.join("versions.json"), json::write(&doc))?;
+        Ok(())
+    }
+
+    fn meta_of(&self, version: u64) -> Result<&VersionMeta> {
+        self.versions
+            .iter()
+            .find(|m| m.version == version)
+            .ok_or_else(|| anyhow::anyhow!("version {version} not in the store"))
+    }
+
+    /// Rows in `cur` that are new or bit-changed relative to `prev`.
+    /// (Rows are never deleted: the touched set only grows.)
+    pub fn changed_rows(prev: &Checkpoint, cur: &Checkpoint) -> Vec<(u64, Vec<f32>)> {
+        let prev_map: HashMap<u64, &Vec<f32>> = prev.rows.iter().map(|(r, v)| (*r, v)).collect();
+        cur.rows
+            .iter()
+            .filter(|(r, v)| match prev_map.get(r) {
+                Some(pv) => !bits_eq(pv, v),
+                None => true,
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Publish `cur` as `version`.  With `prev = None` the version is a
+    /// full snapshot; with `prev = Some((parent, state))` it is a delta
+    /// holding only the rows that changed since `state` (which must be
+    /// the reconstructed state of `parent`, an existing version).
+    pub fn publish(
+        &mut self,
+        version: u64,
+        cur: &Checkpoint,
+        prev: Option<(u64, &Checkpoint)>,
+    ) -> Result<PublishStats> {
+        if let Some(latest) = self.latest() {
+            if version <= latest.version {
+                anyhow::bail!(
+                    "version {version} not after latest published {}",
+                    latest.version
+                );
+            }
+        }
+        let (kind, parent, rows) = match prev {
+            None => (VersionKind::Full, None, cur.rows.clone()),
+            Some((parent, state)) => {
+                self.meta_of(parent)?; // must exist
+                (
+                    VersionKind::Delta,
+                    Some(parent),
+                    Self::changed_rows(state, cur),
+                )
+            }
+        };
+        let meta = VersionMeta {
+            version,
+            kind,
+            parent,
+            step: cur.step,
+        };
+        let bytes = self.write_version(&meta, cur, &rows)?;
+        self.versions.push(meta);
+        self.save_manifest()?;
+        Ok(PublishStats {
+            kind,
+            bytes,
+            rows: rows.len(),
+        })
+    }
+
+    fn write_version(
+        &self,
+        meta: &VersionMeta,
+        cur: &Checkpoint,
+        rows: &[(u64, Vec<f32>)],
+    ) -> Result<u64> {
+        let dir = self.dir(meta.version);
+        fs::create_dir_all(&dir)?;
+        let header = obj(vec![
+            ("version", num(meta.version as f64)),
+            ("kind", s(meta.kind.as_str())),
+            (
+                "parent",
+                match meta.parent {
+                    Some(p) => num(p as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("step", num(cur.step as f64)),
+            ("variant", s(&cur.variant)),
+            ("world", num(cur.world as f64)),
+            ("dims", dims_to_json(&cur.dims)),
+        ]);
+        let header_bytes = json::write(&header).into_bytes();
+        fs::write(dir.join("publish.json"), &header_bytes)?;
+
+        let dense = frame(&f32s_to_bytes(&cur.dense));
+        fs::write(dir.join("dense.bin"), &dense)?;
+
+        let mut payload = Vec::new();
+        for (row, vals) in rows {
+            payload.extend_from_slice(&row.to_le_bytes());
+            payload.extend_from_slice(&f32s_to_bytes(vals));
+        }
+        let rows_framed = frame(&payload);
+        fs::write(dir.join("rows.bin"), &rows_framed)?;
+
+        Ok((header_bytes.len() + dense.len() + rows_framed.len()) as u64)
+    }
+
+    /// Read one version's files verbatim (full state for a full version,
+    /// overlay rows for a delta).
+    fn read_version(&self, version: u64) -> Result<Checkpoint> {
+        let dir = self.dir(version);
+        let header = json::parse(&fs::read_to_string(dir.join("publish.json"))?)?;
+        let dims = dims_from_json(header.field("dims")?)?;
+        let variant = header
+            .field("variant")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("publish.json: bad variant"))?
+            .to_string();
+        let world = header
+            .field("world")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("publish.json: bad world"))?;
+        let step = header
+            .field("step")?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("publish.json: bad step"))?;
+
+        let dense = bytes_to_f32s(&unframe(&fs::read(dir.join("dense.bin"))?, "dense.bin")?)?;
+        let payload = unframe(&fs::read(dir.join("rows.bin"))?, "rows.bin")?;
+        let stride = 8 + dims.emb_dim * 4;
+        if payload.len() % stride != 0 {
+            anyhow::bail!("v{version}: rows.bin not a multiple of the row stride");
+        }
+        let mut rows = Vec::with_capacity(payload.len() / stride);
+        for rec in payload.chunks_exact(stride) {
+            let row = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+            rows.push((row, bytes_to_f32s(&rec[8..])?));
+        }
+        Ok(Checkpoint {
+            step,
+            variant,
+            dims,
+            world,
+            dense,
+            rows,
+        })
+    }
+
+    /// The chain `[nearest full ancestor, …, version]`.
+    fn chain_to_full(&self, version: u64) -> Result<Vec<VersionMeta>> {
+        let mut chain = vec![self.meta_of(version)?.clone()];
+        while chain.last().unwrap().kind == VersionKind::Delta {
+            let parent = chain
+                .last()
+                .unwrap()
+                .parent
+                .ok_or_else(|| anyhow::anyhow!("delta version without a parent"))?;
+            chain.push(self.meta_of(parent)?.clone());
+        }
+        chain.reverse();
+        Ok(chain)
+    }
+
+    /// Reconstruct the complete state of `version` from the nearest full
+    /// ancestor plus its delta chain.  Rows come back sorted by id, so a
+    /// reconstruction equals the matching full snapshot bit-for-bit.
+    pub fn load(&self, version: u64) -> Result<Checkpoint> {
+        let chain = self.chain_to_full(version)?;
+        let mut state = self.read_version(chain[0].version)?;
+        let mut rows: BTreeMap<u64, Vec<f32>> =
+            std::mem::take(&mut state.rows).into_iter().collect();
+        for meta in &chain[1..] {
+            let overlay = self.read_version(meta.version)?;
+            state.step = overlay.step;
+            state.world = overlay.world;
+            state.dense = overlay.dense;
+            for (row, vals) in overlay.rows {
+                rows.insert(row, vals);
+            }
+        }
+        state.rows = rows.into_iter().collect();
+        Ok(state)
+    }
+
+    /// Compact `version` in place: rewrite it as a full snapshot of its
+    /// reconstructed state.  Readers of `version` (and of any later delta
+    /// whose chain passes through it) now stop here instead of walking
+    /// further back, so the chain behind it can be retired.
+    pub fn compact(&mut self, version: u64) -> Result<()> {
+        let state = self.load(version)?;
+        let idx = self
+            .versions
+            .iter()
+            .position(|m| m.version == version)
+            .ok_or_else(|| anyhow::anyhow!("version {version} not in the store"))?;
+        let meta = VersionMeta {
+            version,
+            kind: VersionKind::Full,
+            parent: None,
+            step: state.step,
+        };
+        self.write_version(&meta, &state, &state.rows)?;
+        self.versions[idx] = meta;
+        self.save_manifest()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+    use crate::util::TempDir;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            batch: 8,
+            slots: 2,
+            valency: 2,
+            emb_dim: 4,
+            hidden1: 8,
+            hidden2: 4,
+            task_dim: 4,
+            emb_rows: 1000,
+        }
+    }
+
+    fn ckpt(step: u64, dense_seed: f32, rows: &[(u64, f32)]) -> Checkpoint {
+        Checkpoint {
+            step,
+            variant: "maml".into(),
+            dims: dims(),
+            world: 4,
+            dense: vec![dense_seed; 6],
+            rows: rows.iter().map(|&(r, v)| (r, vec![v; 4])).collect(),
+        }
+    }
+
+    fn assert_state_eq(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.world, b.world);
+        assert_eq!(
+            a.dense.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.dense.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.rows.len(), b.rows.len());
+        for ((ra, va), (rb, vb)) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra, rb);
+            assert!(bits_eq(va, vb), "row {ra} differs");
+        }
+    }
+
+    #[test]
+    fn full_then_deltas_reconstruct_every_version() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(10, 0.5, &[(1, 1.0), (5, 5.0)]);
+        let v1 = ckpt(20, 0.6, &[(1, 1.5), (5, 5.0), (9, 9.0)]);
+        let v2 = ckpt(30, 0.7, &[(1, 1.5), (5, -5.0), (9, 9.0), (12, 2.0)]);
+
+        store.publish(0, &v0, None).unwrap();
+        let s1 = store.publish(1, &v1, Some((0, &v0))).unwrap();
+        let s2 = store.publish(2, &v2, Some((1, &v1))).unwrap();
+
+        // Deltas carry only the changed/new rows.
+        assert_eq!(s1.kind, VersionKind::Delta);
+        assert_eq!(s1.rows, 2); // row 1 changed, row 9 new
+        assert_eq!(s2.rows, 2); // row 5 changed, row 12 new
+
+        assert_state_eq(&store.load(0).unwrap(), &v0);
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+        assert_state_eq(&store.load(2).unwrap(), &v2);
+    }
+
+    #[test]
+    fn delta_is_smaller_than_full() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let rows: Vec<(u64, f32)> = (0..200).map(|r| (r, r as f32)).collect();
+        let v0 = ckpt(1, 0.1, &rows);
+        let mut rows1 = rows.clone();
+        rows1[3].1 = 99.0; // one changed row
+        let v1 = ckpt(2, 0.2, &rows1);
+        let full = store.publish(0, &v0, None).unwrap();
+        let delta = store.publish(1, &v1, Some((0, &v0))).unwrap();
+        assert!(delta.bytes * 10 < full.bytes, "delta {delta:?} vs full {full:?}");
+        assert_eq!(delta.rows, 1);
+    }
+
+    #[test]
+    fn compact_rewrites_in_place_and_preserves_chain() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        let v1 = ckpt(2, 0.2, &[(1, 2.0), (2, 2.0)]);
+        let v2 = ckpt(3, 0.3, &[(1, 2.0), (2, 3.0), (7, 7.0)]);
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        store.publish(2, &v2, Some((1, &v1))).unwrap();
+
+        store.compact(1).unwrap();
+        assert_eq!(store.versions()[1].kind, VersionKind::Full);
+        assert!(store.versions()[1].parent.is_none());
+        // Both the compacted version and its descendant still reconstruct.
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+        assert_state_eq(&store.load(2).unwrap(), &v2);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.publish(0, &ckpt(1, 0.1, &[(1, 1.0)]), None).unwrap();
+        let err = DeltaStore::create(tmp.path()).unwrap_err();
+        assert!(err.to_string().contains("already exists"), "{err}");
+        // The original store is untouched.
+        let reopened = DeltaStore::open(tmp.path()).unwrap();
+        assert_eq!(reopened.versions().len(), 1);
+    }
+
+    #[test]
+    fn manifest_reopens() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        let v1 = ckpt(2, 0.2, &[(1, 2.0)]);
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        drop(store);
+        let store = DeltaStore::open(tmp.path()).unwrap();
+        assert_eq!(store.versions().len(), 2);
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.publish(0, &ckpt(1, 0.1, &[(1, 1.0)]), None).unwrap();
+        let path = tmp.path().join("v000000").join("rows.bin");
+        let mut data = fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0xFF;
+        fs::write(&path, data).unwrap();
+        let err = store.load(0).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn bad_publishes_rejected() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        store.publish(3, &v0, None).unwrap();
+        // Non-monotonic version.
+        assert!(store.publish(3, &v0, None).is_err());
+        assert!(store.publish(2, &v0, None).is_err());
+        // Delta against a parent that does not exist.
+        assert!(store.publish(4, &v0, Some((99, &v0))).is_err());
+        // Unknown version load.
+        assert!(store.load(7).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Online continuous delivery (paper §3.4): delta ingestion, warm-start
+//! training, delta checkpoints, versioned model publishing.
+//!
+//! Offline training answers "how fast is one job"; production recommender
+//! systems live on a loop — logs keep arriving, cold-start users appear,
+//! and a model is only as good as its freshness.  The paper's headline
+//! deployment claim is operational: continuous delivery of models shrunk
+//! ~4× in Alipay's advertising stack.  This subsystem models that loop
+//! end-to-end on the discrete-event cluster:
+//!
+//! * [`delta`] — a [`DeltaFeed`] emits micro-batches of new task data at
+//!   virtual timestamps (including a disjoint cold-start population) and
+//!   [`ingest`] appends them through the incremental Meta-IO path
+//!   ([`crate::io::preprocess::append`] + `GroupBatchOp` read-back) —
+//!   never a full re-preprocess.
+//! * [`delta_ckpt`] — a [`DeltaStore`] of published versions: full
+//!   snapshots plus deltas holding only rows that bit-changed since the
+//!   parent, with periodic compaction; any version reconstructs from
+//!   base + deltas bit-for-bit.
+//! * [`publisher`] — the registry-upload cost model and the full-vs-delta
+//!   publish policy ([`PublishMode`]).
+//! * [`session`] — the [`OnlineSession`] driver: warm-up, then per
+//!   window resume → train on the delta → publish, charging every leg to
+//!   [`crate::sim::Clock`] and recording per-version data-ready →
+//!   model-published latency in [`crate::metrics::DeliveryMetrics`].
+
+pub mod delta;
+pub mod delta_ckpt;
+pub mod publisher;
+pub mod session;
+
+pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
+pub use delta_ckpt::{DeltaStore, PublishStats, VersionKind, VersionMeta};
+pub use publisher::{PublishMode, PublishModel, Publisher};
+pub use session::{OnlineConfig, OnlineSession};

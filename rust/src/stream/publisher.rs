@@ -1,0 +1,263 @@
+//! Versioned model publishing: the serving-side leg of continuous
+//! delivery.
+//!
+//! After a delivery window trains on its delta, the new model must reach
+//! the serving fleet: upload to the model registry (the shared DFS the
+//! servers pull from), register the version, coordinate the swap.  The
+//! conventional pipeline re-uploads the *whole* model every window —
+//! paper §3.4's bottleneck; the embedding table dominates the bytes.  The
+//! delta pipeline ships only the rows the window touched plus the dense
+//! replica, with a periodic full snapshot so reconstruction chains stay
+//! bounded (compaction cadence).
+//!
+//! The [`Publisher`] owns the [`DeltaStore`], decides full-vs-delta per
+//! version, really writes the version (bytes on disk, CRC-framed), and
+//! charges the virtual clock from the actually-published byte count.
+
+use std::path::Path;
+
+use crate::checkpoint::Checkpoint;
+use crate::metrics::VersionRecord;
+use crate::sim::Clock;
+use crate::stream::delta_ckpt::{DeltaStore, VersionKind};
+use crate::Result;
+
+/// Delivery strategy for the embedding-dominated model state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishMode {
+    /// Conventional pipeline: every version uploads the full snapshot.
+    FullRepublish,
+    /// G-Meta continuous delivery: rows touched since the last version
+    /// plus the dense replica; periodic full snapshots (compaction).
+    DeltaRepublish,
+}
+
+/// Cost model of the registry upload path.
+#[derive(Debug, Clone, Copy)]
+pub struct PublishModel {
+    /// Sustained upload bandwidth into the model registry, bytes/s.  The
+    /// registry is replicated toward the serving regions, so the
+    /// effective rate is well below the local DFS's sequential bandwidth.
+    pub upload_bw: f64,
+    /// Fixed per-version overhead: registration, validation, serving
+    /// swap coordination — seconds.
+    pub overhead: f64,
+}
+
+impl Default for PublishModel {
+    fn default() -> Self {
+        Self {
+            upload_bw: 40e6,
+            overhead: 0.1,
+        }
+    }
+}
+
+/// Publishes trainer captures as store versions and keeps the delivery
+/// log the session aggregates into [`crate::metrics::DeliveryMetrics`].
+#[derive(Debug)]
+pub struct Publisher {
+    pub store: DeltaStore,
+    pub mode: PublishMode,
+    /// Delta mode: every `compact_every`-th version ships full.
+    pub compact_every: usize,
+    pub model: PublishModel,
+    /// Last published (version, reconstructed state) — the delta base.
+    last: Option<(u64, Checkpoint)>,
+    next_version: u64,
+}
+
+impl Publisher {
+    pub fn new(
+        root: &Path,
+        mode: PublishMode,
+        compact_every: usize,
+        model: PublishModel,
+    ) -> Result<Self> {
+        Ok(Self {
+            store: DeltaStore::create(root)?,
+            mode,
+            compact_every: compact_every.max(1),
+            model,
+            last: None,
+            next_version: 0,
+        })
+    }
+
+    /// Version number the next publish will use.
+    pub fn next_version(&self) -> u64 {
+        self.next_version
+    }
+
+    /// The last published state (what the serving fleet currently runs).
+    pub fn last_published(&self) -> Option<&Checkpoint> {
+        self.last.as_ref().map(|(_, c)| c)
+    }
+
+    /// Seconds to upload `bytes` and register one version.
+    pub fn publish_secs(&self, bytes: u64) -> f64 {
+        self.model.overhead + bytes as f64 / self.model.upload_bw
+    }
+
+    /// Publish `ckpt` as the next version, charging the virtual clock for
+    /// the upload; `data_ready` is when the version's freshest data
+    /// landed, so the returned record's latency is the full data-ready →
+    /// servable path as seen by this publish call.
+    pub fn publish(
+        &mut self,
+        ckpt: Checkpoint,
+        data_ready: f64,
+        clock: &mut Clock,
+    ) -> Result<VersionRecord> {
+        let version = self.next_version;
+        let full = match self.mode {
+            PublishMode::FullRepublish => true,
+            PublishMode::DeltaRepublish => {
+                self.last.is_none() || version % self.compact_every as u64 == 0
+            }
+        };
+        let stats = if full {
+            self.store.publish(version, &ckpt, None)?
+        } else {
+            let (parent, prev) = self.last.as_ref().expect("delta publish without a base");
+            self.store.publish(version, &ckpt, Some((*parent, prev)))?
+        };
+        debug_assert_eq!(stats.kind == VersionKind::Full, full);
+        clock.advance(self.publish_secs(stats.bytes));
+        let record = VersionRecord {
+            version,
+            kind: stats.kind.as_str().to_string(),
+            data_ready,
+            published: clock.now(),
+            bytes: stats.bytes,
+            rows: stats.rows,
+            cold_tasks: Vec::new(),
+            zero_shot_auc: None,
+        };
+        self.last = Some((version, ckpt));
+        self.next_version = version + 1;
+        Ok(record)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+    use crate::util::TempDir;
+
+    fn ckpt(step: u64, rows: &[(u64, f32)]) -> Checkpoint {
+        Checkpoint {
+            step,
+            variant: "maml".into(),
+            dims: ModelDims {
+                batch: 8,
+                slots: 2,
+                valency: 2,
+                emb_dim: 4,
+                hidden1: 8,
+                hidden2: 4,
+                task_dim: 4,
+                emb_rows: 100,
+            },
+            world: 2,
+            dense: vec![step as f32; 5],
+            rows: rows.iter().map(|&(r, v)| (r, vec![v; 4])).collect(),
+        }
+    }
+
+    #[test]
+    fn full_mode_always_ships_full() {
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::FullRepublish,
+            4,
+            PublishModel::default(),
+        )
+        .unwrap();
+        let mut clock = Clock::new();
+        let rows: Vec<(u64, f32)> = (0..50).map(|r| (r, r as f32)).collect();
+        for step in 0..3u64 {
+            let rec = p.publish(ckpt(step, &rows), clock.now(), &mut clock).unwrap();
+            assert_eq!(rec.kind, "full");
+            assert_eq!(rec.rows, 50);
+            assert!(rec.latency() >= p.model.overhead);
+        }
+    }
+
+    #[test]
+    fn delta_mode_compacts_on_cadence() {
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::DeltaRepublish,
+            3,
+            PublishModel::default(),
+        )
+        .unwrap();
+        let mut clock = Clock::new();
+        let mut kinds = Vec::new();
+        for step in 0..6u64 {
+            let rows: Vec<(u64, f32)> = (0..=step).map(|r| (r, r as f32 + step as f32)).collect();
+            let rec = p.publish(ckpt(step, &rows), clock.now(), &mut clock).unwrap();
+            kinds.push(rec.kind);
+        }
+        assert_eq!(kinds, vec!["full", "delta", "delta", "full", "delta", "delta"]);
+    }
+
+    #[test]
+    fn deltas_cost_less_clock_than_fulls() {
+        let rows: Vec<(u64, f32)> = (0..5000).map(|r| (r, r as f32)).collect();
+        let mut rows1 = rows.clone();
+        rows1[17].1 = -1.0;
+
+        let run = |mode: PublishMode| {
+            let tmp = TempDir::new().unwrap();
+            let mut p = Publisher::new(tmp.path(), mode, 100, PublishModel::default()).unwrap();
+            let mut clock = Clock::new();
+            p.publish(ckpt(0, &rows), 0.0, &mut clock).unwrap();
+            let t0 = clock.now();
+            p.publish(ckpt(1, &rows1), t0, &mut clock).unwrap();
+            clock.now() - t0
+        };
+        let full = run(PublishMode::FullRepublish);
+        let delta = run(PublishMode::DeltaRepublish);
+        assert!(
+            delta < full,
+            "delta publish {delta}s must beat full publish {full}s"
+        );
+    }
+
+    #[test]
+    fn published_versions_reconstruct() {
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::DeltaRepublish,
+            4,
+            PublishModel::default(),
+        )
+        .unwrap();
+        let mut clock = Clock::new();
+        let states: Vec<Checkpoint> = (0..5u64)
+            .map(|step| {
+                let rows: Vec<(u64, f32)> =
+                    (0..=step * 2).map(|r| (r, (r + step) as f32)).collect();
+                ckpt(step, &rows)
+            })
+            .collect();
+        for st in &states {
+            p.publish(st.clone(), clock.now(), &mut clock).unwrap();
+        }
+        for (v, want) in states.iter().enumerate() {
+            let got = p.store.load(v as u64).unwrap();
+            assert_eq!(got.step, want.step);
+            assert_eq!(got.rows.len(), want.rows.len());
+            for ((ra, va), (rb, vb)) in got.rows.iter().zip(&want.rows) {
+                assert_eq!(ra, rb);
+                assert_eq!(va, vb);
+            }
+        }
+    }
+}

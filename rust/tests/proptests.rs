@@ -15,15 +15,19 @@
 //!   preserves the batch multiset; offset ranges tile the file exactly.
 //! * dense: flatten/unflatten round-trip; AllReduce keeps replicas equal.
 
+use std::collections::BTreeMap;
+
+use gmeta::checkpoint::Checkpoint;
 use gmeta::collectives::{allreduce_naive, alltoall_bytes, broadcast, gather, ring_allreduce};
-use gmeta::config::ClusterSpec;
+use gmeta::config::{ClusterSpec, ModelDims};
 use gmeta::embedding::plan::{build_overlap, LookupPlan, WorkerLookup};
 use gmeta::embedding::ShardedEmbedding;
 use gmeta::io::codec::{decode_n, encode_all, Codec};
-use gmeta::io::preprocess::preprocess;
+use gmeta::io::preprocess::{append, preprocess};
 use gmeta::io::shuffle::batch_level_shuffle;
 use gmeta::meta::Sample;
 use gmeta::net::Topology;
+use gmeta::stream::DeltaStore;
 use gmeta::util::{Rng, TempDir};
 
 /// Run `body(seed, rng)` for `n` seeded cases; panic with the seed on
@@ -342,6 +346,208 @@ fn prop_batch_shuffle_preserves_multiset() {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b, "seed={seed}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Delta checkpoints (stream subsystem)
+// ---------------------------------------------------------------------------
+
+fn ckpt_dims(emb_dim: usize) -> ModelDims {
+    ModelDims {
+        batch: 8,
+        slots: 2,
+        valency: 2,
+        emb_dim,
+        hidden1: 8,
+        hidden2: 4,
+        task_dim: 4,
+        emb_rows: 1 << 12,
+    }
+}
+
+/// Evolve a random chain of checkpoint states: each step mutates a random
+/// subset of rows, adds some new rows, and perturbs the dense replica.
+fn random_state_chain(
+    rng: &mut Rng,
+    dim: usize,
+    dense_len: usize,
+    versions: usize,
+) -> Vec<Checkpoint> {
+    let mut rows: BTreeMap<u64, Vec<f32>> = BTreeMap::new();
+    let mut dense: Vec<f32> = (0..dense_len).map(|_| rng.normal() as f32).collect();
+    let mut out = Vec::with_capacity(versions);
+    for step in 0..versions {
+        // Mutate some existing rows…
+        let keys: Vec<u64> = rows.keys().copied().collect();
+        for &k in &keys {
+            if rng.gen_bool(0.3) {
+                rows.insert(k, (0..dim).map(|_| rng.normal() as f32).collect());
+            }
+        }
+        // …add new rows…
+        for _ in 0..rng.gen_range(1, 20) {
+            let row = rng.gen_range(0, 500);
+            rows.entry(row)
+                .or_insert_with(|| (0..dim).map(|_| rng.normal() as f32).collect());
+        }
+        // …and nudge the dense replica.
+        for v in &mut dense {
+            if rng.gen_bool(0.5) {
+                *v += rng.normal() as f32 * 0.1;
+            }
+        }
+        out.push(Checkpoint {
+            step: step as u64,
+            variant: "maml".into(),
+            dims: ckpt_dims(dim),
+            world: 4,
+            dense: dense.clone(),
+            rows: rows.iter().map(|(k, v)| (*k, v.clone())).collect(),
+        });
+    }
+    out
+}
+
+fn assert_bitexact(got: &Checkpoint, want: &Checkpoint, seed: u64, v: usize) {
+    let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(got.step, want.step, "seed={seed} v={v}");
+    assert_eq!(bits(&got.dense), bits(&want.dense), "seed={seed} v={v}");
+    assert_eq!(got.rows.len(), want.rows.len(), "seed={seed} v={v}");
+    for ((ra, va), (rb, vb)) in got.rows.iter().zip(&want.rows) {
+        assert_eq!(ra, rb, "seed={seed} v={v}");
+        assert_eq!(bits(va), bits(vb), "seed={seed} v={v} row={ra}");
+    }
+}
+
+#[test]
+fn prop_delta_chain_reconstructs_every_version_bitexact() {
+    cases(12, |seed, rng| {
+        let dim = rng.gen_range(1, 6) as usize;
+        let n_versions = rng.gen_range(2, 7) as usize;
+        let dense_len = rng.gen_range(1, 30) as usize;
+        let states = random_state_chain(rng, dim, dense_len, n_versions);
+
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        for (v, cur) in states.iter().enumerate() {
+            // Random interleaving of full snapshots and deltas.
+            if v == 0 || rng.gen_bool(0.3) {
+                store.publish(v as u64, cur, None).unwrap();
+            } else {
+                store
+                    .publish(v as u64, cur, Some(((v - 1) as u64, &states[v - 1])))
+                    .unwrap();
+            }
+        }
+        for (v, want) in states.iter().enumerate() {
+            let got = store.load(v as u64).unwrap();
+            assert_bitexact(&got, want, seed, v);
+        }
+    });
+}
+
+#[test]
+fn prop_compaction_preserves_every_version() {
+    cases(10, |seed, rng| {
+        let dim = rng.gen_range(1, 5) as usize;
+        let n_versions = rng.gen_range(3, 7) as usize;
+        let states = random_state_chain(rng, dim, 10, n_versions);
+
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.publish(0, &states[0], None).unwrap();
+        for v in 1..n_versions {
+            store
+                .publish(v as u64, &states[v], Some(((v - 1) as u64, &states[v - 1])))
+                .unwrap();
+        }
+        // Compact a random middle version in place.
+        let target = rng.gen_range(1, n_versions as u64);
+        store.compact(target).unwrap();
+        // Every version — before, at, and after the compaction point —
+        // still reconstructs bit-for-bit.
+        for (v, want) in states.iter().enumerate() {
+            let got = store.load(v as u64).unwrap();
+            assert_bitexact(&got, want, seed, v);
+        }
+    });
+}
+
+#[test]
+fn prop_delta_ships_exactly_the_changed_rows() {
+    cases(15, |seed, rng| {
+        let dim = rng.gen_range(1, 5) as usize;
+        let states = random_state_chain(rng, dim, 8, 2);
+        let changed = DeltaStore::changed_rows(&states[0], &states[1]);
+        let prev: BTreeMap<u64, &Vec<f32>> =
+            states[0].rows.iter().map(|(r, v)| (*r, v)).collect();
+        let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        // Everything shipped really changed (or is new)…
+        for (row, vals) in &changed {
+            if let Some(pv) = prev.get(row) {
+                assert_ne!(bits(pv), bits(vals), "seed={seed} row={row}");
+            }
+        }
+        // …and everything that changed is shipped.
+        let shipped: BTreeMap<u64, &Vec<f32>> = changed.iter().map(|(r, v)| (*r, v)).collect();
+        for (row, vals) in &states[1].rows {
+            let same = prev.get(row).is_some_and(|pv| bits(pv) == bits(vals));
+            assert_eq!(
+                !same,
+                shipped.contains_key(row),
+                "seed={seed} row={row} shipped-set wrong"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Incremental append (stream ingestion)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_append_equals_one_shot_preprocess_multiset() {
+    cases(12, |seed, rng| {
+        let n_base = rng.gen_range(1, 150) as usize;
+        let n_delta = rng.gen_range(1, 100) as usize;
+        let batch = rng.gen_range(1, 12) as usize;
+        let base = random_samples(rng, n_base, 10, 500);
+        let delta = random_samples(rng, n_delta, 14, 500);
+
+        let tmp = TempDir::new().unwrap();
+        let mut ds =
+            preprocess(base.clone(), batch, Codec::Binary, tmp.path(), "a", None).unwrap();
+        let stats = append(&mut ds, delta.clone(), Some(seed)).unwrap();
+        assert_eq!(stats.samples, n_delta, "seed={seed}");
+
+        // Offsets tile the grown file exactly.
+        let mut expected = 0u64;
+        for e in &ds.index {
+            assert_eq!(e.offset, expected, "seed={seed}: layout gap/overlap");
+            expected += e.len;
+        }
+        assert_eq!(expected, std::fs::metadata(&ds.data_path).unwrap().len());
+
+        // Decoding everything back yields base ∪ delta as a multiset.
+        let data = std::fs::read(&ds.data_path).unwrap();
+        let mut seen = Vec::new();
+        for e in &ds.index {
+            let (b, _) = decode_n(
+                &data[e.offset as usize..(e.offset + e.len) as usize],
+                e.n_samples as usize,
+                Codec::Binary,
+            )
+            .unwrap();
+            assert!(b.iter().all(|s| s.task == e.task), "seed={seed}: impure");
+            seen.extend(b);
+        }
+        let key = |s: &Sample| (s.task, s.ids.clone(), s.label.to_bits());
+        let mut want: Vec<_> = base.iter().chain(&delta).map(key).collect();
+        let mut got: Vec<_> = seen.iter().map(key).collect();
+        want.sort();
+        got.sort();
+        assert_eq!(want, got, "seed={seed}: sample multiset changed");
     });
 }
 

@@ -1,0 +1,133 @@
+//! In-tree substrate for the `anyhow` error-handling crate.
+//!
+//! The offline vendored build pulls nothing from the registry (same
+//! policy as `gmeta::util`), so this crate implements exactly the subset
+//! the workspace uses: [`Error`] (a printable dynamic error), [`Result`]
+//! with a defaulted error type, the [`anyhow!`] / [`bail!`] macros, and
+//! `?`-conversion from any `std::error::Error` type.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic, message-carrying error.
+///
+/// Unlike the real crate there is no backtrace capture; the message
+/// (usually built by [`anyhow!`]) carries all the context.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any printable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error value, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Self {
+        Self {
+            msg: err.to_string(),
+            source: Some(Box::new(err)),
+        }
+    }
+
+    /// The wrapped source error, if this came from a `?` conversion.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` itself does not implement `std::error::Error`, so this blanket
+// impl is coherent — exactly the trick the real crate uses.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`]-formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn display_and_debug_show_message() {
+        let e = anyhow!("value {} is {what}", 3, what = "bad");
+        assert_eq!(e.to_string(), "value 3 is bad");
+        assert_eq!(format!("{e:?}"), "value 3 is bad");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 7");
+    }
+
+    #[test]
+    fn expr_form_accepts_strings() {
+        let owned = String::from("plain");
+        let e = anyhow!(owned);
+        assert_eq!(e.to_string(), "plain");
+    }
+}

@@ -1,0 +1,81 @@
+//! In-tree substrate for the `crc32fast` crate: CRC-32/IEEE (reflected
+//! polynomial `0xEDB88320`, init `!0`, final xor `!0`) with a const-built
+//! lookup table.  Digest-compatible with the real crate's `hash`; a
+//! byte-at-a-time table walk is ample for checkpoint/record framing.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `buf` (same digest as `crc32fast::hash`).
+pub fn hash(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+/// Streaming hasher (API parity with the real crate).
+#[derive(Debug, Clone, Default)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Self { state: !0 }
+    }
+
+    pub fn update(&mut self, buf: &[u8]) {
+        for &b in buf {
+            self.state = TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The CRC-32 check value from the catalogue of parametrised CRCs.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"hello crc world";
+        let mut h = Hasher::new();
+        h.update(&data[..5]);
+        h.update(&data[5..]);
+        assert_eq!(h.finalize(), hash(data));
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut data = vec![0u8; 64];
+        let base = hash(&data);
+        data[17] ^= 0x01;
+        assert_ne!(hash(&data), base);
+    }
+}

@@ -1,0 +1,262 @@
+//! In-tree substrate for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The offline vendored build has no XLA/PJRT shared library, so this
+//! crate mirrors exactly the API surface `gmeta::runtime` uses.  Host
+//! [`Literal`] values are fully functional (vec1 / reshape / to_vec /
+//! tuples); the PJRT pieces fail cleanly at *client construction* with an
+//! actionable message.  Callers already gate real-numerics runs on the
+//! presence of `artifacts/manifest.json`, and `Runtime::load` reads the
+//! manifest before touching PJRT, so a missing-artifacts setup reports
+//! the missing manifest — this error only surfaces when artifacts exist
+//! but no real PJRT backend does.  Swap this vendor crate for the real
+//! `xla` registry crate to execute artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type (the real crate's errors are only ever `{:?}`-formatted by
+/// callers, so a message-carrying struct suffices).
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in the offline vendored build — replace \
+         rust/vendor/xla with the real `xla` crate (xla-rs + libpjrt) to execute artifacts"
+    ))
+}
+
+/// Host tensor element types the runtime moves across the PJRT ABI.
+pub trait ArrayElement: Copy {
+    #[doc(hidden)]
+    fn wrap(v: &[Self]) -> Payload;
+    #[doc(hidden)]
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn type_name() -> &'static str;
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl ArrayElement for f32 {
+    fn wrap(v: &[Self]) -> Payload {
+        Payload::F32(v.to_vec())
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "f32"
+    }
+}
+
+impl ArrayElement for i32 {
+    fn wrap(v: &[Self]) -> Payload {
+        Payload::I32(v.to_vec())
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "i32"
+    }
+}
+
+/// A host-side tensor value (array or tuple).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    payload: Payload,
+    shape: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: ArrayElement>(v: &[T]) -> Literal {
+        Literal {
+            payload: T::wrap(v),
+            shape: vec![v.len() as i64],
+        }
+    }
+
+    /// Tuple literal (what PJRT entry points return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            payload: Payload::Tuple(elems),
+            shape: Vec::new(),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Reinterpret the element buffer under a new shape.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            payload: self.payload.clone(),
+            shape: dims.to_vec(),
+        })
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| Error(format!("to_vec: literal is not {}", T::type_name())))
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element: empty literal".to_string()))
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple: literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (text form).  Parsing requires the real bindings.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(unavailable(&format!(
+            "parsing HLO text {:?}",
+            path.as_ref()
+        )))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching a device buffer"))
+    }
+}
+
+/// A compiled executable bound to a client.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a PJRT program"))
+    }
+}
+
+/// A PJRT client.  Construction fails in the offline build.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("creating the PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling a computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.shape(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.shape(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn typed_extraction_is_checked() {
+        let l = Literal::vec1(&[1i32, -1]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -1]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 1);
+    }
+
+    #[test]
+    fn tuples_destructure() {
+        let t = Literal::tuple(vec![Literal::vec1(&[0.5f32]), Literal::vec1(&[7i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].get_first_element::<f32>().unwrap(), 0.5);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_fail_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("offline"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
