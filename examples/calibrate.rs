@@ -3,18 +3,21 @@
 //!
 //! Grid-searches (gpu per_lookup) and (cpu per_lookup, server request
 //! cost, PS compute jitter) minimizing squared log-error against the 16
-//! paper cells.  The winning constants are hard-coded in
-//! `sim/device.rs` / `ps/mod.rs` / `config.rs`; re-run this tool after
-//! changing any cost model to re-fit.
+//! paper cells.  Candidate constants go in through the [`TrainJob`]
+//! builder's pluggable [`DeviceModel`] / jitter / request-cost knobs.
+//! The winning constants are hard-coded in `sim/device.rs` /
+//! `ps/mod.rs` / `config.rs`; re-run this tool after changing any cost
+//! model to re-fit.
 //!
 //! Run: `cargo run --release --example calibrate`
 
-use gmeta::config::{ExperimentConfig, ModelDims};
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::config::ModelDims;
+use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::{aliccp_like, inhouse_like, DatasetSpec};
 use gmeta::harness::{inhouse_scale_dims, paper_scale_dims};
+use gmeta::job::TrainJob;
 use gmeta::meta::Episode;
-use gmeta::ps::PsTrainer;
+use gmeta::sim::DeviceModel;
 
 // Paper Table 1 targets (samples/s).
 const PS_SIZES: [usize; 4] = [20, 40, 80, 160];
@@ -58,11 +61,15 @@ fn main() -> anyhow::Result<()> {
         let mut err = 0.0;
         for (wl, targets) in [(&pub_wl, &GMETA_PUBLIC), (&inh_wl, &GMETA_INHOUSE)] {
             for (i, &n) in GPU_NODES.iter().enumerate() {
-                let mut cfg = ExperimentConfig::gmeta(n, 4);
-                cfg.dims = wl.dims;
-                let mut t = GMetaTrainer::new(cfg, "maml", wl.spec.record_bytes, None)?;
-                t.device.per_lookup = pl;
-                let thr = t.run(&wl.eps[i], STEPS)?.throughput();
+                let mut device = DeviceModel::a100();
+                device.per_lookup = pl;
+                let mut job = TrainJob::builder()
+                    .gmeta(n, 4)
+                    .dims(wl.dims)
+                    .dataset(wl.spec)
+                    .device(device)
+                    .build()?;
+                let thr = job.run_episodes(&wl.eps[i], STEPS)?.throughput();
                 err += log_err(thr, targets[i]);
             }
         }
@@ -83,13 +90,17 @@ fn main() -> anyhow::Result<()> {
                 let mut err = 0.0;
                 for (wl, targets) in [(&pub_ps, &PS_PUBLIC), (&inh_ps, &PS_INHOUSE)] {
                     for (i, &w) in PS_SIZES.iter().enumerate() {
-                        let mut cfg = ExperimentConfig::ps(w, (w / 4).max(1));
-                        cfg.dims = wl.dims;
-                        cfg.cluster.compute_jitter = jit;
-                        let mut t = PsTrainer::new(cfg, "maml", wl.spec.record_bytes);
-                        t.device.per_lookup = pl;
-                        t.server_request_cost = rc;
-                        let thr = t.run(&wl.eps[i], STEPS)?.throughput();
+                        let mut device = DeviceModel::cpu_worker();
+                        device.per_lookup = pl;
+                        let mut job = TrainJob::builder()
+                            .parameter_server(w, (w / 4).max(1))
+                            .dims(wl.dims)
+                            .dataset(wl.spec)
+                            .device(device)
+                            .server_request_cost(rc)
+                            .compute_jitter(jit)
+                            .build()?;
+                        let thr = job.run_episodes(&wl.eps[i], STEPS)?.throughput();
                         err += log_err(thr, targets[i]);
                     }
                 }

@@ -1,9 +1,9 @@
 //! Cold-start adaptation: the scenario that motivates meta learning for
 //! recommenders (paper §1).
 //!
-//! Meta-trains on a population of tasks, then presents *unseen* tasks
-//! (new users/advertisers with only a handful of impressions) and
-//! compares:
+//! Meta-trains on a population of tasks (through the [`TrainJob`]
+//! builder), then presents *unseen* tasks (new users/advertisers with
+//! only a handful of impressions) and compares:
 //!   (a) zero-shot: the meta model applied directly to the new task;
 //!   (b) adapted: one inner-loop step on the task's tiny support set
 //!       (what MAML buys you), evaluated on the task's query set.
@@ -11,10 +11,11 @@
 //!
 //! Run: `cargo run --release --example cold_start`
 
-use gmeta::config::{ExperimentConfig, ModelDims};
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
-use gmeta::data::{movielens_like, DatasetSpec};
+use gmeta::config::ModelDims;
+use gmeta::coordinator::episodes_from_generator;
+use gmeta::data::movielens_like;
 use gmeta::eval::auc;
+use gmeta::job::{TrainJob, Variant};
 use gmeta::runtime::{MetatrainInputs, Runtime};
 
 fn main() -> anyhow::Result<()> {
@@ -24,27 +25,30 @@ fn main() -> anyhow::Result<()> {
     }
     let rt = Runtime::load(&dir, &["maml"])?;
     let spec = movielens_like();
-    let mut cfg = ExperimentConfig::gmeta(1, 2);
-    cfg.dims = ModelDims {
-        emb_rows: spec.emb_rows as usize,
-        ..ModelDims::default()
-    };
-    let world = cfg.cluster.world_size();
 
     // --- Meta-train on the task population. ---
     println!("meta-training on the warm task population…");
-    let episodes = episodes_from_generator(spec, &cfg.dims, world, 12);
-    let mut trainer = GMetaTrainer::new(cfg, "maml", spec.record_bytes, Some(&rt))?;
-    trainer.run(&episodes, 120)?;
+    let mut job = TrainJob::builder()
+        .gmeta(1, 2)
+        .variant(Variant::Maml)
+        .dims(ModelDims {
+            emb_rows: spec.emb_rows as usize,
+            ..ModelDims::default()
+        })
+        .dataset(spec)
+        .runtime(&rt)
+        .build()?;
+    let episodes = job.episodes(12)?;
+    job.run_episodes(&episodes, 120)?;
+    let trainer = job.gmeta_mut().expect("G-Meta architecture");
     let (ls, lq) = *trainer.losses.last().unwrap();
     println!("final losses: sup={ls:.4} qry={lq:.4}\n");
 
     // --- Cold tasks: a disjoint task population the meta model never saw
     // (new users/advertisers), drawn from the same underlying world. ---
-    let cold = episodes_from_generator(spec.cold_tasks(1000), &trainer.cfg.dims, 1, 10);
-
     let dims = trainer.cfg.dims;
-    let d = dims.emb_dim;
+    let cold = episodes_from_generator(spec.cold_tasks(1000), &dims, 1, 10);
+
     let mut zero_probs = Vec::new();
     let mut adapted_probs = Vec::new();
     let mut labels = Vec::new();
@@ -83,10 +87,7 @@ fn main() -> anyhow::Result<()> {
     println!("cold-start evaluation over {} unseen tasks:", cold[0].len());
     println!("  zero-shot AUC : {auc_zero:.4}");
     println!("  adapted  AUC  : {auc_adapted:.4}  (one inner-loop step)");
-    println!(
-        "  adaptation gain: {:+.4} AUC",
-        auc_adapted - auc_zero
-    );
+    println!("  adaptation gain: {:+.4} AUC", auc_adapted - auc_zero);
     if auc_adapted <= auc_zero {
         println!("  (no gain on this draw — try more meta-train steps)");
     }

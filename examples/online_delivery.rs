@@ -11,7 +11,8 @@
 //! * **delta-republish** (G-Meta): the delta appends through the
 //!   incremental Meta-IO path, the trainer stays warm in memory, and
 //!   only rows touched since the last version ship (periodic full
-//!   snapshots bound the reconstruction chain).
+//!   snapshots bound the reconstruction chain, and retention GC retires
+//!   dead chains from the registry).
 //!
 //! Training is identical in both arms; only the delivery legs differ.
 //! Mid-stream, one delta carries a *cold-start* task population the model
@@ -19,23 +20,38 @@
 //! path against the freshly published version (with real numerics when
 //! `artifacts/` exists; cost-only in pure simulation).
 //!
+//! The delivery loop itself is architecture-agnostic: it drives whatever
+//! `Box<dyn Trainer>` the [`TrainJob`] builder assembled.  Set `ARCH`
+//! below to [`Architecture::ParameterServer`] to model the conventional
+//! CPU/PS pipeline's delivery latency instead — nothing else changes.
+//!
 //! Run: `cargo run --release --example online_delivery`
 
-use gmeta::config::ExperimentConfig;
+use gmeta::config::Architecture;
 use gmeta::data::aliccp_like;
+use gmeta::job::{TrainJob, Variant};
 use gmeta::metrics::DeliveryMetrics;
 use gmeta::stream::{DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
 use gmeta::util::TempDir;
 
+/// Swap to `Architecture::ParameterServer` to run the PS baseline's
+/// online arm — the only line that changes.
+const ARCH: Architecture = Architecture::GMeta;
+
 fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
     let tmp = TempDir::new()?;
-    let cfg = ExperimentConfig::gmeta(1, 4);
+    let job = TrainJob::builder()
+        .architecture(ARCH)
+        .variant(Variant::Maml)
+        .dataset(aliccp_like(60_000))
+        .build()?;
     let online = OnlineConfig {
         warmup_samples: 40_000,
         warmup_steps: 20,
         steps_per_window: 10,
         mode,
         compact_every: 4,
+        retain_fulls: Some(2),
         feed: DeltaFeedConfig {
             n_deltas: 6,
             samples_per_delta: 2048,
@@ -46,14 +62,7 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
         },
         ..OnlineConfig::default()
     };
-    let mut session = OnlineSession::new(
-        cfg,
-        online,
-        aliccp_like(60_000),
-        "maml",
-        tmp.path(),
-        None,
-    )?;
+    let mut session = OnlineSession::new(job, online, tmp.path())?;
     session.run()?;
     Ok(session.delivery.clone())
 }

@@ -1,29 +1,46 @@
-//! Quickstart: the smallest complete G-Meta run.
+//! Quickstart: the smallest complete G-Meta run, through the unified
+//! [`TrainJob`] builder.
 //!
-//! Builds a synthetic meta-learning workload, runs a few iterations of the
-//! hybrid-parallelism trainer on a simulated 1×4 GPU node, and prints the
-//! phase breakdown.  If `artifacts/` exists (run `make artifacts`), it
-//! also runs *real numerics* through the PJRT runtime and prints the loss
-//! curve.
+//! ```no_run
+//! use gmeta::job::{TrainJob, Variant};
+//! use gmeta::data::movielens_like;
+//!
+//! let mut job = TrainJob::builder()
+//!     .gmeta(1, 4)                      // 1 node x 4 GPUs
+//!     .variant(Variant::Maml)
+//!     .dataset(movielens_like())
+//!     .build()?;
+//! println!("{}", job.run(20)?);         // phase breakdown + throughput
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Builds a synthetic meta-learning workload, runs a few iterations of
+//! the hybrid-parallelism trainer on a simulated 1×4 GPU node, and
+//! prints the phase breakdown.  If `artifacts/` exists (run
+//! `make artifacts`), it also runs *real numerics* through the PJRT
+//! runtime and prints the loss curve.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use gmeta::config::{ExperimentConfig, ModelDims};
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::config::ModelDims;
+use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::movielens_like;
+use gmeta::job::{TrainJob, Trainer, Variant};
 use gmeta::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let spec = movielens_like();
 
     // --- 1. Simulated cluster run (no artifacts needed). ---------------
-    let cfg = ExperimentConfig::gmeta(1, 4);
-    let world = cfg.cluster.world_size();
-    let episodes = episodes_from_generator(spec, &cfg.dims, world, 8);
-    let mut trainer = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None)?;
-    let metrics = trainer.run(&episodes, 20)?;
+    let mut job = TrainJob::builder()
+        .gmeta(1, 4)
+        .variant(Variant::Maml)
+        .dataset(spec)
+        .build()?;
+    let metrics = job.run(20)?;
     println!("--- simulated 1x4 GPU cluster, 20 iterations ---");
     println!("{metrics}");
+    let trainer = job.gmeta_mut().expect("G-Meta architecture");
     println!("dense replicas in sync: {}\n", trainer.replicas_in_sync());
 
     // --- 2. Real numerics through PJRT (needs `make artifacts`). -------
@@ -34,18 +51,21 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let rt = Runtime::load(&dir, &["maml"])?;
-    let mut cfg = ExperimentConfig::gmeta(1, 2);
-    cfg.dims = ModelDims {
-        emb_rows: spec.emb_rows as usize,
-        ..ModelDims::default()
-    };
-    let world = cfg.cluster.world_size();
-    let episodes = episodes_from_generator(spec, &cfg.dims, world, 8);
-    let mut trainer = GMetaTrainer::new(cfg, "maml", spec.record_bytes, Some(&rt))?;
-    let metrics = trainer.run(&episodes, 30)?;
+    let mut job = TrainJob::builder()
+        .gmeta(1, 2)
+        .variant(Variant::Maml)
+        .dims(ModelDims {
+            emb_rows: spec.emb_rows as usize,
+            ..ModelDims::default()
+        })
+        .dataset(spec)
+        .runtime(&rt)
+        .build()?;
+    let metrics = job.run(30)?;
     println!("--- real numerics (PJRT), 30 meta-steps ---");
-    for (i, (ls, lq)) in trainer.losses.iter().enumerate() {
-        if i % 5 == 0 || i + 1 == trainer.losses.len() {
+    let losses = job.trainer_mut().losses().to_vec();
+    for (i, (ls, lq)) in losses.iter().enumerate() {
+        if i % 5 == 0 || i + 1 == losses.len() {
             println!("step {i:>3}  loss_sup={ls:.4}  loss_qry={lq:.4}");
         }
     }
@@ -53,8 +73,8 @@ fn main() -> anyhow::Result<()> {
         "tail losses: sup={:?} qry={:?}",
         metrics.tail_loss_sup, metrics.tail_loss_qry
     );
-    let held_out = episodes_from_generator(spec, &trainer.cfg.dims, 1, 4);
-    if let Some(auc) = trainer.evaluate(&held_out[0])? {
+    let held_out = episodes_from_generator(spec, &job.cfg().dims, 1, 4);
+    if let Some(auc) = job.trainer_mut().evaluate(&held_out[0])? {
         println!("held-out AUC: {auc:.4}");
     }
     Ok(())

@@ -2,14 +2,15 @@
 //! the Table-1-style throughput/speedup curves, plus a per-phase
 //! breakdown showing *where* each architecture loses efficiency.
 //!
+//! Both sweeps run through the same [`TrainJob`] builder — the
+//! architecture is one call, everything else is shared.
+//!
 //! Run: `cargo run --release --example scaling`
 
-use gmeta::config::ExperimentConfig;
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
 use gmeta::data::aliccp_like;
 use gmeta::harness::paper_scale_dims;
+use gmeta::job::TrainJob;
 use gmeta::metrics::speedup_ratios;
-use gmeta::ps::PsTrainer;
 
 fn main() -> anyhow::Result<()> {
     let spec = aliccp_like(80_000);
@@ -19,12 +20,13 @@ fn main() -> anyhow::Result<()> {
     println!("=== G-Meta (hybrid parallelism, GPU cluster) ===");
     let mut pts = Vec::new();
     for nodes in [1usize, 2, 4, 8] {
-        let mut cfg = ExperimentConfig::gmeta(nodes, 4);
-        cfg.dims = dims;
-        let world = cfg.cluster.world_size();
-        let eps = episodes_from_generator(spec, &dims, world, 6);
-        let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None)?;
-        let m = t.run(&eps, steps)?;
+        let mut job = TrainJob::builder()
+            .gmeta(nodes, 4)
+            .dims(dims)
+            .dataset(spec)
+            .build()?;
+        let eps = job.episodes(6)?;
+        let m = job.run_episodes(&eps, steps)?;
         println!(
             "{nodes}x4 GPUs: {:>9.0} samples/s   phases: io={:.1}% emb={:.1}% compute={:.1}% grads={:.1}% allreduce={:.1}%",
             m.throughput(),
@@ -34,19 +36,24 @@ fn main() -> anyhow::Result<()> {
             100.0 * m.phase("grad_exchange") / m.virtual_time,
             100.0 * m.phase("dense_allreduce") / m.virtual_time,
         );
-        pts.push((world, m.throughput()));
+        pts.push((job.cfg().cluster.world_size(), m.throughput()));
     }
     let ratios = speedup_ratios(&pts);
-    println!("speedup ratios: {:?}\n", ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!(
+        "speedup ratios: {:?}\n",
+        ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
 
     println!("=== DMAML (parameter server, CPU cluster) ===");
     let mut pts = Vec::new();
     for workers in [20usize, 40, 80, 160] {
-        let mut cfg = ExperimentConfig::ps(workers, workers / 4);
-        cfg.dims = dims;
-        let eps = episodes_from_generator(spec, &dims, workers, 4);
-        let mut t = PsTrainer::new(cfg, "maml", spec.record_bytes);
-        let m = t.run(&eps, steps)?;
+        let mut job = TrainJob::builder()
+            .parameter_server(workers, workers / 4)
+            .dims(dims)
+            .dataset(spec)
+            .build()?;
+        let eps = job.episodes(4)?;
+        let m = job.run_episodes(&eps, steps)?;
         println!(
             "{workers:>3} workers: {:>9.0} samples/s   phases: io={:.1}% pull={:.1}% compute={:.1}% push={:.1}%",
             m.throughput(),
@@ -58,7 +65,10 @@ fn main() -> anyhow::Result<()> {
         pts.push((workers, m.throughput()));
     }
     let ratios = speedup_ratios(&pts);
-    println!("speedup ratios: {:?}", ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!(
+        "speedup ratios: {:?}",
+        ratios.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
 
     println!(
         "\nThe G-Meta curve stays near-linear (AlltoAll uses full bisection \

@@ -7,7 +7,8 @@
 //!   per-worker sequential loads + GroupBatchOp  ->  episodes  ->
 //!   G-Meta hybrid-parallelism trainer with REAL numerics (Pallas/JAX
 //!   artifacts through PJRT; AlltoAll embedding exchange; Ring-AllReduce
-//!   dense update)  ->  loss curve + held-out AUC.
+//!   dense update), assembled through the [`TrainJob`] builder  ->
+//!   loss curve + held-out AUC.
 //!
 //! The model is a real Meta-DLRM: a 2^20-row embedding table (~16.8M
 //! parameters at D=16) plus the dense tower, trained for a few hundred
@@ -17,12 +18,12 @@
 
 use std::time::Instant;
 
-use gmeta::config::{ExperimentConfig, ModelDims};
-use gmeta::coordinator::GMetaTrainer;
+use gmeta::config::ModelDims;
 use gmeta::data::{movielens_like, DatasetSpec, Generator};
 use gmeta::io::codec::Codec;
 use gmeta::io::loader::Loader;
 use gmeta::io::preprocess::preprocess;
+use gmeta::job::{TrainJob, Variant};
 use gmeta::meta::Episode;
 use gmeta::runtime::Runtime;
 use gmeta::sim::{ReadPattern, StorageModel};
@@ -45,16 +46,22 @@ fn main() -> anyhow::Result<()> {
         emb_rows: 1 << 20,
         ..movielens_like()
     };
-    let mut cfg = ExperimentConfig::gmeta(1, 4);
-    cfg.dims = ModelDims {
-        emb_rows: spec.emb_rows as usize,
-        ..ModelDims::default()
-    };
-    let world = cfg.cluster.world_size();
+    let mut job = TrainJob::builder()
+        .gmeta(1, 4)
+        .variant(Variant::Maml)
+        .dims(ModelDims {
+            emb_rows: spec.emb_rows as usize,
+            ..ModelDims::default()
+        })
+        .dataset(spec)
+        .runtime(&rt)
+        .build()?;
+    let dims = job.cfg().dims;
+    let world = job.cfg().cluster.world_size();
     println!(
         "model: {} embedding params + {} dense params; {} workers",
-        cfg.dims.embedding_params(),
-        cfg.dims.dense_params(),
+        dims.embedding_params(),
+        dims.dense_params(),
         world
     );
 
@@ -64,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let tmp = TempDir::new()?;
     let ds = preprocess(
         samples,
-        cfg.dims.batch * 2,
+        dims.batch * 2,
         Codec::Binary,
         tmp.path(),
         spec.name,
@@ -84,7 +91,7 @@ fn main() -> anyhow::Result<()> {
         let (batches, stats) = loader.load_worker(rank, world)?;
         let eps: Vec<Episode> = batches
             .iter()
-            .filter_map(|tb| Episode::from_task_batch(tb, cfg.dims.batch))
+            .filter_map(|tb| Episode::from_task_batch(tb, dims.batch))
             .collect();
         println!(
             "worker {rank}: {} batches, {} records, modeled io {:.3}s",
@@ -95,9 +102,12 @@ fn main() -> anyhow::Result<()> {
 
     // --- Train with real numerics. ---------------------------------------
     let t0 = Instant::now();
-    let mut trainer = GMetaTrainer::new(cfg, "maml", spec.record_bytes, Some(&rt))?;
-    let metrics = trainer.run(&episodes, steps)?;
-    println!("\n--- loss curve ({steps} meta-steps, wall {:.1?}) ---", t0.elapsed());
+    let metrics = job.run_episodes(&episodes, steps)?;
+    let trainer = job.gmeta_mut().expect("G-Meta architecture");
+    println!(
+        "\n--- loss curve ({steps} meta-steps, wall {:.1?}) ---",
+        t0.elapsed()
+    );
     for (i, (ls, lq)) in trainer.losses.iter().enumerate() {
         if i % (steps / 20).max(1) == 0 || i + 1 == trainer.losses.len() {
             println!("step {i:>4}  loss_sup={ls:.4}  loss_qry={lq:.4}");
@@ -107,19 +117,14 @@ fn main() -> anyhow::Result<()> {
     assert!(trainer.replicas_in_sync(), "replica divergence!");
 
     // --- Held-out evaluation. --------------------------------------------
-    let held = gmeta::coordinator::episodes_from_generator(
-        spec.held_out(7),
-        &trainer.cfg.dims,
-        1,
-        8,
-    );
+    let held = gmeta::coordinator::episodes_from_generator(spec.held_out(7), &dims, 1, 8);
     if let Some(auc) = trainer.evaluate(&held[0])? {
         println!("held-out AUC: {auc:.4}");
     }
     println!(
         "embedding rows touched: {} ({:.1}% of table)",
         trainer.embedding.touched(),
-        100.0 * trainer.embedding.touched() as f64 / trainer.cfg.dims.emb_rows as f64
+        100.0 * trainer.embedding.touched() as f64 / dims.emb_rows as f64
     );
     Ok(())
 }

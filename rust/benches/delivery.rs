@@ -8,16 +8,20 @@
 
 mod common;
 
-use gmeta::config::ExperimentConfig;
 use gmeta::data::aliccp_like;
 use gmeta::io::preprocess::preprocess;
 use gmeta::io::Codec;
+use gmeta::job::{TrainJob, Variant};
 use gmeta::stream::{ingest, DeltaFeed, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
 use gmeta::util::TempDir;
 
 fn run_arm(mode: PublishMode) -> anyhow::Result<gmeta::metrics::DeliveryMetrics> {
     let tmp = TempDir::new()?;
-    let cfg = ExperimentConfig::gmeta(2, 4);
+    let job = TrainJob::builder()
+        .gmeta(2, 4)
+        .variant(Variant::Maml)
+        .dataset(aliccp_like(40_000))
+        .build()?;
     let online = OnlineConfig {
         warmup_samples: 24_000,
         warmup_steps: 12,
@@ -34,7 +38,7 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<gmeta::metrics::DeliveryMetrics>
         },
         ..OnlineConfig::default()
     };
-    let mut s = OnlineSession::new(cfg, online, aliccp_like(40_000), "maml", tmp.path(), None)?;
+    let mut s = OnlineSession::new(job, online, tmp.path())?;
     s.run()?;
     Ok(s.delivery.clone())
 }

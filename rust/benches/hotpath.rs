@@ -11,9 +11,10 @@
 mod common;
 
 use gmeta::collectives::{alltoall_bytes, ring_allreduce};
-use gmeta::config::{ClusterSpec, ExperimentConfig};
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::config::ClusterSpec;
+use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::aliccp_like;
+use gmeta::job::TrainJob;
 use gmeta::embedding::plan::LookupPlan;
 use gmeta::embedding::ShardedEmbedding;
 use gmeta::harness::paper_scale_dims;
@@ -90,12 +91,16 @@ fn main() {
     });
 
     println!();
-    let mut cfg = ExperimentConfig::gmeta(2, 4);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(aliccp_like(10_000), &dims, 8, 2);
-    let mut trainer = GMetaTrainer::new(cfg, "maml", 600, None).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(2, 4)
+        .dims(dims)
+        .dataset(aliccp_like(10_000))
+        .record_bytes(600)
+        .build()
+        .unwrap();
+    let eps = job.episodes(2).unwrap();
     common::bench("full coordinator step (sim, 2x4, paper dims)", 2, 20, || {
-        trainer.run(&eps, 1).unwrap();
+        job.run_episodes(&eps, 1).unwrap();
     });
     common::bench("episode generation (8 workers x 2)", 1, 5, || {
         std::hint::black_box(episodes_from_generator(aliccp_like(10_000), &dims, 8, 2).len());

@@ -50,17 +50,15 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== harness overhead ===");
     common::bench("gmeta 2x4 step (sim, public dims)", 1, 5, || {
-        let mut cfg = gmeta::config::ExperimentConfig::gmeta(2, 4);
-        cfg.dims = gmeta::harness::paper_scale_dims();
-        let eps = gmeta::coordinator::episodes_from_generator(
-            gmeta::data::aliccp_like(10_000),
-            &cfg.dims,
-            8,
-            2,
-        );
-        let mut t =
-            gmeta::coordinator::GMetaTrainer::new(cfg, "maml", 600, None).unwrap();
-        t.run(&eps, 4).unwrap();
+        let mut job = gmeta::job::TrainJob::builder()
+            .gmeta(2, 4)
+            .dims(gmeta::harness::paper_scale_dims())
+            .dataset(gmeta::data::aliccp_like(10_000))
+            .record_bytes(600)
+            .build()
+            .unwrap();
+        let eps = job.episodes(2).unwrap();
+        job.run_episodes(&eps, 4).unwrap();
     });
     Ok(())
 }

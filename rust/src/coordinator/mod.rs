@@ -29,6 +29,7 @@ use crate::config::ExperimentConfig;
 use crate::dense::DenseParams;
 use crate::embedding::plan::{build_overlap, LookupPlan};
 use crate::embedding::{Optimizer, ShardedEmbedding};
+use crate::job::Variant;
 use crate::meta::Episode;
 use crate::metrics::{
     RunMetrics, PHASE_COMPUTE, PHASE_DENSE_ALLREDUCE, PHASE_EMB_EXCHANGE, PHASE_GRAD_EXCHANGE,
@@ -51,26 +52,36 @@ struct WorkerBlocks {
 }
 
 /// The distributed G-Meta training job.
+///
+/// Construct through [`crate::job::TrainJob`] (which also supplies
+/// non-default [`DeviceModel`]/[`StorageModel`] cost models); direct
+/// construction is for this module's unit tests.
 pub struct GMetaTrainer<'rt> {
     pub cfg: ExperimentConfig,
     pub topo: Topology,
     pub embedding: ShardedEmbedding,
     /// One dense replica per worker (kept bit-identical by AllReduce).
     pub replicas: Vec<DenseParams>,
+    /// Compute cost model; defaults to [`DeviceModel::a100`], overridden
+    /// via [`crate::job::TrainJobBuilder::device`].
     pub device: DeviceModel,
+    /// Storage cost model; defaults to [`StorageModel::default`],
+    /// overridden via [`crate::job::TrainJobBuilder::storage`].
     pub storage: StorageModel,
-    pub variant: String,
+    pub variant: Variant,
     pub record_bytes: usize,
     /// Real numerics through PJRT when set; virtual-clock-only otherwise.
     pub runtime: Option<&'rt Runtime>,
     /// (loss_sup, loss_qry) per step, averaged over workers (real mode).
     pub losses: Vec<(f32, f32)>,
+    /// Metrics accumulated across every [`Self::run`] call.
+    pub metrics: RunMetrics,
 }
 
 impl<'rt> GMetaTrainer<'rt> {
     pub fn new(
         cfg: ExperimentConfig,
-        variant: &str,
+        variant: Variant,
         record_bytes: usize,
         runtime: Option<&'rt Runtime>,
     ) -> Result<Self> {
@@ -89,14 +100,15 @@ impl<'rt> GMetaTrainer<'rt> {
             topo: Topology::new(cfg.cluster),
             embedding: ShardedEmbedding::new(world, cfg.dims.emb_dim, cfg.train.seed),
             replicas: (0..world)
-                .map(|_| DenseParams::init(&cfg.dims, variant, cfg.train.seed))
+                .map(|_| DenseParams::init(&cfg.dims, variant.as_str(), cfg.train.seed))
                 .collect(),
             device: DeviceModel::a100(),
             storage: StorageModel::default(),
-            variant: variant.to_string(),
+            variant,
             record_bytes,
             runtime,
             losses: Vec::new(),
+            metrics: RunMetrics::default(),
             cfg,
         })
     }
@@ -299,7 +311,7 @@ impl<'rt> GMetaTrainer<'rt> {
                 if let Some(rt) = self.runtime {
                     let wb = &blocks[rank];
                     let out = rt.metatrain(
-                        &self.variant,
+                        self.variant.as_str(),
                         &MetatrainInputs {
                             emb_sup: wb.emb_sup.clone(),
                             y_sup: wb.y_sup.clone(),
@@ -421,6 +433,7 @@ impl<'rt> GMetaTrainer<'rt> {
             m.tail_loss_qry =
                 Some(last.iter().map(|(_, q)| *q as f64).sum::<f64>() / last.len() as f64);
         }
+        self.metrics.merge(&m);
         Ok(m)
     }
 
@@ -441,7 +454,7 @@ impl<'rt> GMetaTrainer<'rt> {
             let emb_sup = self.gather_local(&sup_ids);
             let emb_qry = self.gather_local(&qry_ids);
             let out = rt.metatrain(
-                &self.variant,
+                self.variant.as_str(),
                 &MetatrainInputs {
                     emb_sup,
                     y_sup: ep.support_labels(),
@@ -468,7 +481,7 @@ impl<'rt> GMetaTrainer<'rt> {
         let mut labels = Vec::new();
         for ep in episodes {
             let emb = self.gather_local(&ep.query_ids());
-            probs.extend(rt.forward(&self.variant, &emb, &self.replicas[0])?);
+            probs.extend(rt.forward(self.variant.as_str(), &emb, &self.replicas[0])?);
             labels.extend(ep.query_labels());
         }
         Ok(crate::eval::auc(&probs, &labels))
@@ -489,11 +502,11 @@ impl<'rt> GMetaTrainer<'rt> {
     /// different world size (elastic resharding).
     pub fn save_checkpoint(&mut self, dir: &std::path::Path, step: u64) -> Result<()> {
         let dims = self.cfg.dims;
-        let variant = self.variant.clone();
+        let variant = self.variant;
         crate::checkpoint::save(
             dir,
             step,
-            &variant,
+            variant.as_str(),
             &dims,
             &self.replicas[0].clone(),
             &mut self.embedding,
@@ -511,11 +524,11 @@ impl<'rt> GMetaTrainer<'rt> {
     /// path [`crate::stream::OnlineSession`] uses between delivery
     /// windows); returns the checkpoint's step counter.
     pub fn restore_from(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<u64> {
-        if ckpt.variant != self.variant {
+        if ckpt.variant != self.variant.as_str() {
             anyhow::bail!(
                 "checkpoint is for variant {:?}, trainer runs {:?}",
                 ckpt.variant,
-                self.variant
+                self.variant.as_str()
             );
         }
         for replica in &mut self.replicas {
@@ -531,10 +544,10 @@ impl<'rt> GMetaTrainer<'rt> {
     /// Capture the full meta state in memory (no disk) — what the online
     /// publishing path diffs and ships as a delta checkpoint.
     pub fn capture(&mut self, step: u64) -> crate::checkpoint::Checkpoint {
-        let variant = self.variant.clone();
+        let variant = self.variant;
         let dims = self.cfg.dims;
         let dense = self.replicas[0].clone();
-        crate::checkpoint::capture(step, &variant, &dims, &dense, &mut self.embedding)
+        crate::checkpoint::capture(step, variant.as_str(), &dims, &dense, &mut self.embedding)
     }
 
     /// Invariant: all dense replicas are bit-identical (AllReduce keeps
@@ -618,7 +631,7 @@ mod tests {
     fn sim_run_produces_phase_breakdown() {
         let cfg = small_cfg(2, 2);
         let e = eps(4, 4, &cfg.dims);
-        let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+        let mut t = GMetaTrainer::new(cfg, Variant::Maml, 400, None).unwrap();
         let m = t.run(&e, 8).unwrap();
         assert_eq!(m.steps, 8);
         assert!(m.virtual_time > 0.0);
@@ -640,7 +653,7 @@ mod tests {
             let mut cfg = small_cfg(2, 2);
             cfg.train.fused_prefetch = fused;
             let e = eps(4, 4, &cfg.dims);
-            let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+            let mut t = GMetaTrainer::new(cfg, Variant::Maml, 400, None).unwrap();
             t.run(&e, 6).unwrap()
         };
         let fused = mk(true);
@@ -663,7 +676,7 @@ mod tests {
             cfg.dims.hidden2 = 256;
             cfg.train.reordered_outer_update = reordered;
             let e = eps(8, 3, &cfg.dims);
-            let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+            let mut t = GMetaTrainer::new(cfg, Variant::Maml, 400, None).unwrap();
             t.run(&e, 5).unwrap()
         };
         let ring = mk(true);
@@ -684,7 +697,7 @@ mod tests {
                 cfg.cluster = crate::config::ClusterSpec::gpu_commodity(2, 2);
             }
             let e = eps(4, 4, &cfg.dims);
-            let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+            let mut t = GMetaTrainer::new(cfg, Variant::Maml, 400, None).unwrap();
             t.run(&e, 6).unwrap()
         };
         let fast = mk(true);
@@ -696,7 +709,7 @@ mod tests {
     fn world_size_mismatch_rejected() {
         let cfg = small_cfg(2, 2);
         let e = eps(3, 2, &cfg.dims);
-        let mut t = GMetaTrainer::new(cfg, "maml", 400, None).unwrap();
+        let mut t = GMetaTrainer::new(cfg, Variant::Maml, 400, None).unwrap();
         assert!(t.run(&e, 1).is_err());
     }
 

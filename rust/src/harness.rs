@@ -4,11 +4,11 @@
 //! and the integration tests all run the *same* code and print the same
 //! numbers recorded in EXPERIMENTS.md.
 
-use crate::config::{ClusterSpec, ExperimentConfig, ModelDims};
-use crate::coordinator::{episodes_from_generator, GMetaTrainer};
+use crate::config::{Architecture, ClusterSpec, ModelDims};
+use crate::coordinator::episodes_from_generator;
 use crate::data::{aliccp_like, inhouse_like, movielens_like, DatasetSpec};
+use crate::job::{TrainJob, Trainer, Variant};
 use crate::metrics::{speedup_ratios, RunMetrics};
-use crate::ps::PsTrainer;
 use crate::runtime::Runtime;
 use crate::Result;
 
@@ -60,22 +60,23 @@ fn run_gmeta(
     steps: usize,
     dims: ModelDims,
 ) -> Result<RunMetrics> {
-    let mut cfg = ExperimentConfig::gmeta(cluster.nodes, cluster.workers_per_node);
-    cfg.cluster = cluster;
-    cfg.dims = dims;
-    let world = cfg.cluster.world_size();
-    let eps = episodes_from_generator(spec, &cfg.dims, world, steps.min(16).max(4));
-    let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None)?;
-    t.run(&eps, steps)
+    TrainJob::builder()
+        .architecture(Architecture::GMeta)
+        .cluster(cluster)
+        .dims(dims)
+        .dataset(spec)
+        .build()?
+        .run(steps)
 }
 
 fn run_ps(workers: usize, spec: DatasetSpec, steps: usize, dims: ModelDims) -> Result<RunMetrics> {
     let servers = (workers / 4).max(1);
-    let mut cfg = ExperimentConfig::ps(workers, servers);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(spec, &cfg.dims, workers, steps.min(16).max(4));
-    let mut t = PsTrainer::new(cfg, "maml", spec.record_bytes);
-    t.run(&eps, steps)
+    TrainJob::builder()
+        .parameter_server(workers, servers)
+        .dims(dims)
+        .dataset(spec)
+        .build()?
+        .run(steps)
 }
 
 /// Table 1: PS @ {20,40,80,160} CPU workers vs G-Meta @ {1×4,…,8×4} GPUs,
@@ -156,18 +157,20 @@ pub fn fig4(steps: usize, quick: bool) -> Result<Vec<ScalePoint>> {
             } else {
                 ClusterSpec::gpu_commodity(n, g)
             };
-            let mut cfg = ExperimentConfig::gmeta(n, g);
-            cfg.cluster = cluster;
-            cfg.dims = dims;
-            cfg.io = if io_opt {
+            let io = if io_opt {
                 crate::config::IoConfig::default()
             } else {
                 crate::config::IoConfig::unoptimized()
             };
-            let world = cfg.cluster.world_size();
-            let eps = episodes_from_generator(spec, &cfg.dims, world, 8);
-            let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None)?;
-            let m = t.run(&eps, steps)?;
+            let mut job = TrainJob::builder()
+                .architecture(Architecture::GMeta)
+                .cluster(cluster)
+                .dims(dims)
+                .io(io)
+                .dataset(spec)
+                .build()?;
+            let eps = job.episodes(8)?;
+            let m = job.run_episodes(&eps, steps)?;
             rows.push(ScalePoint {
                 label: format!("{n}x{g} {name}"),
                 world: n * g,
@@ -246,22 +249,28 @@ pub struct ParityPoint {
 pub fn fig3(runtime: &Runtime, steps: usize, variants: &[&str]) -> Result<Vec<ParityPoint>> {
     let spec = movielens_like();
     let mut out = Vec::new();
-    for &variant in variants {
-        let run_one = |world: usize, nodes: usize, gpus: usize| -> Result<(f64, f64)> {
-            let mut cfg = ExperimentConfig::gmeta(nodes, gpus);
-            cfg.dims = ModelDims {
+    for &variant_name in variants {
+        let variant = Variant::parse(variant_name)?;
+        let run_one = |nodes: usize, gpus: usize| -> Result<(f64, f64)> {
+            let dims = ModelDims {
                 emb_rows: spec.emb_rows as usize,
                 ..ModelDims::default()
             };
-            let eps = episodes_from_generator(spec, &cfg.dims, world, 8);
-            let mut t = GMetaTrainer::new(cfg, variant, spec.record_bytes, Some(runtime))?;
-            let m = t.run(&eps, steps)?;
-            let held_out = episodes_from_generator(spec.held_out(1), &t.cfg.dims, 1, 6);
-            let auc = t.evaluate(&held_out[0])?.unwrap_or(f64::NAN);
+            let mut job = TrainJob::builder()
+                .gmeta(nodes, gpus)
+                .dims(dims)
+                .dataset(spec)
+                .variant(variant)
+                .runtime(runtime)
+                .build()?;
+            let eps = job.episodes(8)?;
+            let m = job.run_episodes(&eps, steps)?;
+            let held_out = episodes_from_generator(spec.held_out(1), &dims, 1, 6);
+            let auc = job.trainer_mut().evaluate(&held_out[0])?.unwrap_or(f64::NAN);
             Ok((auc, m.tail_loss_qry.unwrap_or(f64::NAN)))
         };
-        let (auc_g, loss_g) = run_one(4, 1, 4)?;
-        let (auc_r, loss_r) = run_one(1, 1, 1)?;
+        let (auc_g, loss_g) = run_one(1, 4)?;
+        let (auc_r, loss_r) = run_one(1, 1)?;
         out.push(ParityPoint {
             variant: variant.to_string(),
             auc_gmeta: auc_g,

@@ -13,12 +13,17 @@
 //!   communication cost accounting ([`net`]), and the Meta-IO ingestion
 //!   pipeline ([`io`]).  A full parameter-server baseline ([`ps`],
 //!   DMAML-style) is included for every comparison the paper makes.
+//!   Both architectures are driven through the unified **job layer**
+//!   ([`job`]): a typed [`job::TrainJob`] builder (cluster, dims,
+//!   dataset, [`config::Architecture`], [`job::Variant`], pluggable cost
+//!   models, optional PJRT runtime, per-phase [`job::Observer`]) and the
+//!   [`job::Trainer`] trait every architecture implements.
 //!   On top sits the **continuous-delivery layer** ([`stream`], paper
 //!   §3.4): delta ingestion through the incremental Meta-IO path,
-//!   warm-start training windows, delta checkpoints layered on
-//!   [`checkpoint`], and versioned publishing with per-version
-//!   data-ready→servable latency accounting — the online loop a
-//!   production recommender actually runs.
+//!   warm-start training windows over any `Box<dyn job::Trainer>`, delta
+//!   checkpoints layered on [`checkpoint`] (with retention GC), and
+//!   versioned publishing with per-version data-ready→servable latency
+//!   accounting — the online loop a production recommender actually runs.
 //! - **L2/L1 (build-time Python)** — the Meta-DLRM forward/backward with
 //!   fused MAML inner+outer steps, built on Pallas kernels, AOT-lowered to
 //!   HLO text artifacts loaded by [`runtime`] via PJRT.
@@ -45,6 +50,7 @@ pub mod embedding;
 pub mod eval;
 pub mod io;
 pub mod harness;
+pub mod job;
 pub mod meta;
 pub mod metrics;
 pub mod net;
@@ -54,7 +60,8 @@ pub mod sim;
 pub mod stream;
 pub mod util;
 
-pub use config::{ClusterSpec, ExperimentConfig};
+pub use config::{Architecture, ClusterSpec, ExperimentConfig};
+pub use job::{Observer, PhaseLog, TrainJob, TrainJobBuilder, Trainer, Variant};
 
 /// Crate-wide result alias (anyhow for rich error contexts).
 pub type Result<T> = anyhow::Result<T>;

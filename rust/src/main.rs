@@ -13,11 +13,11 @@
 //! gmeta bench-outer-rule
 //! ```
 
-use gmeta::config::{ExperimentConfig, ModelDims};
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::config::ModelDims;
 use gmeta::data::{aliccp_like, inhouse_like, movielens_like, DatasetSpec};
 use gmeta::harness;
 use gmeta::io::{preprocess as meta_preprocess, Codec};
+use gmeta::job::{TrainJob, Variant};
 use gmeta::runtime::Runtime;
 use gmeta::util::args::Args;
 use gmeta::Result;
@@ -63,7 +63,7 @@ fn cmd_preprocess(a: &Args) -> Result<()> {
 }
 
 fn cmd_train(a: &Args) -> Result<()> {
-    let variant = a.get_or("variant", "maml").to_string();
+    let variant = Variant::parse(a.get_or("variant", "maml"))?;
     let steps = a.usize_or("steps", 50)?;
     let log_every = a.usize_or("log-every", 10)?;
     let ckpt_dir = a.get("checkpoint-dir").map(std::path::PathBuf::from);
@@ -73,15 +73,23 @@ fn cmd_train(a: &Args) -> Result<()> {
         &[variant.as_str()],
     )?;
     let spec = movielens_like();
-    let mut cfg = ExperimentConfig::gmeta(a.usize_or("nodes", 1)?, a.usize_or("gpus", 4)?);
-    cfg.dims = ModelDims {
-        emb_rows: spec.emb_rows as usize,
-        ..ModelDims::default()
+    let train = gmeta::config::TrainConfig {
+        steps,
+        ..Default::default()
     };
-    cfg.train.steps = steps;
-    let world = cfg.cluster.world_size();
-    let eps = episodes_from_generator(spec, &cfg.dims, world, 16);
-    let mut t = GMetaTrainer::new(cfg, &variant, spec.record_bytes, Some(&rt))?;
+    let mut job = TrainJob::builder()
+        .gmeta(a.usize_or("nodes", 1)?, a.usize_or("gpus", 4)?)
+        .dims(ModelDims {
+            emb_rows: spec.emb_rows as usize,
+            ..ModelDims::default()
+        })
+        .train(train)
+        .dataset(spec)
+        .variant(variant)
+        .runtime(&rt)
+        .build()?;
+    let eps = job.episodes(16)?;
+    let t = job.gmeta_mut().expect("gmeta builder yields the G-Meta trainer");
     let mut start_step = 0u64;
     if resume {
         let dir = ckpt_dir

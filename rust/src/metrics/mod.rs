@@ -23,6 +23,8 @@ pub const PHASE_PREPROCESS: &str = "preprocess";
 pub const PHASE_DELTA_INGEST: &str = "delta_ingest";
 pub const PHASE_RESTORE: &str = "restore";
 pub const PHASE_PUBLISH: &str = "publish";
+/// Delta-checkpoint retention GC (retiring dead chains from the registry).
+pub const PHASE_GC: &str = "gc";
 pub const PHASE_COLD_EVAL: &str = "cold_eval";
 
 /// Aggregated result of one training run.

@@ -19,10 +19,12 @@
 //! does exactly this: "we also use optimized Meta-IO to avoid I/O
 //! bottlenecks for fairness").
 
+use crate::checkpoint::Checkpoint;
 use crate::config::ExperimentConfig;
 use crate::dense::DenseParams;
 use crate::embedding::plan::LookupPlan;
 use crate::embedding::{Optimizer, ShardedEmbedding};
+use crate::job::Variant;
 use crate::meta::Episode;
 use crate::metrics::{
     RunMetrics, PHASE_COMPUTE, PHASE_IO, PHASE_PS_PULL, PHASE_PS_PUSH,
@@ -64,15 +66,23 @@ pub enum PsMode {
 
 /// The PS trainer: runs the same meta-learning math as G-Meta (identical
 /// update rules — the Figure-3 parity precondition) on the PS topology.
+///
+/// Construct through [`crate::job::TrainJob`] (which also supplies
+/// non-default cost models); direct construction is for this module's
+/// unit tests.
 pub struct PsTrainer {
     pub cfg: ExperimentConfig,
     /// Embedding table sharded across *servers* (S-way, not W-way).
     pub embedding: ShardedEmbedding,
     /// Dense parameters: canonical copy on the servers.
     pub dense: DenseParams,
+    /// Storage cost model; overridden via
+    /// [`crate::job::TrainJobBuilder::storage`].
     pub storage: StorageModel,
+    /// Compute cost model; defaults to [`DeviceModel::cpu_worker`],
+    /// overridden via [`crate::job::TrainJobBuilder::device`].
     pub device: DeviceModel,
-    pub variant: String,
+    pub variant: Variant,
     /// Record payload size charged to I/O per sample.
     pub record_bytes: usize,
     /// Server-side handling cost per worker request (deserialize, lock,
@@ -82,21 +92,24 @@ pub struct PsTrainer {
     /// Async only: mean parameter staleness (in update rounds) observed by
     /// workers, measured from the virtual completion times.
     pub mean_staleness: f64,
+    /// Metrics accumulated across every [`Self::run`] call.
+    pub metrics: RunMetrics,
 }
 
 impl PsTrainer {
-    pub fn new(cfg: ExperimentConfig, variant: &str, record_bytes: usize) -> Self {
+    pub fn new(cfg: ExperimentConfig, variant: Variant, record_bytes: usize) -> Self {
         let servers = cfg.cluster.servers.max(1);
         Self {
             embedding: ShardedEmbedding::new(servers, cfg.dims.emb_dim, cfg.train.seed),
-            dense: DenseParams::init(&cfg.dims, variant, cfg.train.seed),
+            dense: DenseParams::init(&cfg.dims, variant.as_str(), cfg.train.seed),
             storage: StorageModel::default(),
             device: DeviceModel::cpu_worker(),
-            variant: variant.to_string(),
+            variant,
             record_bytes,
             server_request_cost: 0.45e-3,
             mode: PsMode::Sync,
             mean_staleness: 0.0,
+            metrics: RunMetrics::default(),
             cfg,
         }
     }
@@ -135,10 +148,40 @@ impl PsTrainer {
     /// arm is an efficiency baseline; its statistical parity is checked at
     /// small scale in the integration tests via the shared update rules).
     pub fn run(&mut self, episodes: &[Vec<Episode>], steps: usize) -> Result<RunMetrics> {
-        match self.mode {
+        let m = match self.mode {
             PsMode::Sync => self.run_sync(episodes, steps),
             PsMode::Async => self.run_async(episodes, steps),
+        }?;
+        self.metrics.merge(&m);
+        Ok(m)
+    }
+
+    /// Capture the full server-side state (dense copy + touched
+    /// embedding rows) in memory — what the online publishing path diffs
+    /// and ships, giving the PS arm the same continuous-delivery loop as
+    /// G-Meta (ROADMAP: PS-baseline online arm).
+    pub fn capture(&mut self, step: u64) -> Checkpoint {
+        let variant = self.variant;
+        let dims = self.cfg.dims;
+        crate::checkpoint::capture(step, variant.as_str(), &dims, &self.dense, &mut self.embedding)
+    }
+
+    /// Restore server-side state from a checkpoint (possibly written at a
+    /// different shard count — rows reshard on import); returns the
+    /// checkpoint's step counter.
+    pub fn restore_from(&mut self, ckpt: &Checkpoint) -> Result<u64> {
+        if ckpt.variant != self.variant.as_str() {
+            anyhow::bail!(
+                "checkpoint is for variant {:?}, trainer runs {:?}",
+                ckpt.variant,
+                self.variant.as_str()
+            );
         }
+        self.dense.unflatten_into(&ckpt.dense)?;
+        for (row, vals) in &ckpt.rows {
+            self.embedding.import_row(*row, vals)?;
+        }
+        Ok(ckpt.step)
     }
 
     fn run_sync(&mut self, episodes: &[Vec<Episode>], steps: usize) -> Result<RunMetrics> {
@@ -420,7 +463,7 @@ mod tests {
     fn ps_run_produces_metrics() {
         let cfg = small_cfg(4, 2);
         let eps = episodes(4, 5, cfg.dims.batch);
-        let mut t = PsTrainer::new(cfg, "maml", 500);
+        let mut t = PsTrainer::new(cfg, Variant::Maml, 500);
         let m = t.run(&eps, 10).unwrap();
         assert_eq!(m.steps, 10);
         assert_eq!(m.samples, (4 * 2 * 32 * 10) as u64);
@@ -437,7 +480,7 @@ mod tests {
         for &(w, s) in &[(4usize, 1usize), (16, 4)] {
             let cfg = small_cfg(w, s);
             let eps = episodes(w, 3, cfg.dims.batch);
-            let mut t = PsTrainer::new(cfg, "maml", 500);
+            let mut t = PsTrainer::new(cfg, Variant::Maml, 500);
             let m = t.run(&eps, 6).unwrap();
             points.push((w, m.throughput()));
         }
@@ -452,9 +495,9 @@ mod tests {
     fn async_mode_outpaces_sync_but_is_stale() {
         let cfg = small_cfg(8, 2);
         let eps = episodes(8, 4, cfg.dims.batch);
-        let mut sync = PsTrainer::new(cfg.clone(), "maml", 500);
+        let mut sync = PsTrainer::new(cfg.clone(), Variant::Maml, 500);
         let ms = sync.run(&eps, 10).unwrap();
-        let mut asy = PsTrainer::new(cfg, "maml", 500);
+        let mut asy = PsTrainer::new(cfg, Variant::Maml, 500);
         asy.mode = PsMode::Async;
         let ma = asy.run(&eps, 10).unwrap();
         assert!(
@@ -475,7 +518,7 @@ mod tests {
     fn episode_count_mismatch_rejected() {
         let cfg = small_cfg(4, 2);
         let eps = episodes(3, 2, cfg.dims.batch);
-        let mut t = PsTrainer::new(cfg, "maml", 500);
+        let mut t = PsTrainer::new(cfg, Variant::Maml, 500);
         assert!(t.run(&eps, 1).is_err());
     }
 }

@@ -106,6 +106,14 @@ impl StorageModel {
             };
         self.seek_time + disk_bytes / self.seq_bw + encode
     }
+
+    /// Seconds to unlink `files` files from the DFS namespace — the
+    /// delta-checkpoint retention GC path.  Deletes are pure metadata
+    /// operations (no data streamed), each a seek-class namenode/disk
+    /// round trip.
+    pub fn delete_time(&self, files: usize) -> f64 {
+        files as f64 * self.seek_time
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +154,13 @@ mod tests {
         let one = s.write_time(1e6, true);
         let two = s.write_time(2e6, true);
         assert!(((two - s.seek_time) - 2.0 * (one - s.seek_time)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delete_time_is_per_file_metadata_cost() {
+        let s = StorageModel::default();
+        assert_eq!(s.delete_time(0), 0.0);
+        assert!((s.delete_time(6) - 6.0 * s.seek_time).abs() < 1e-12);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! [`DeltaStore::compact`] rewrites a version in place as a full snapshot,
 //! bounding reconstruction chains without breaking later deltas.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -76,6 +76,18 @@ pub struct PublishStats {
     pub bytes: u64,
     /// Embedding rows shipped.
     pub rows: usize,
+}
+
+/// What one [`DeltaStore::gc`] retention pass removed.
+#[derive(Debug, Clone, Default)]
+pub struct GcStats {
+    /// Retired version numbers, oldest first.
+    pub removed: Vec<u64>,
+    /// Bytes of version files deleted from disk.
+    pub bytes_deleted: u64,
+    /// Files unlinked — the metadata-operation count the storage model
+    /// charges (see [`crate::sim::StorageModel::delete_time`]).
+    pub files_deleted: usize,
 }
 
 /// The versioned checkpoint store backing continuous delivery.
@@ -393,6 +405,73 @@ impl DeltaStore {
         self.save_manifest()?;
         Ok(())
     }
+
+    /// Retention GC: keep the newest `keep_fulls` full snapshots, every
+    /// version published after the oldest retained full, and any version
+    /// a retained version's reconstruction chain still passes through
+    /// (live chains).  Everything older is retired: its files are
+    /// deleted from disk and its manifest entry dropped.  Returns what
+    /// was removed so the caller can charge the deletion against a
+    /// [`crate::sim::StorageModel`].  A no-op while the store holds
+    /// `keep_fulls` or fewer full snapshots.
+    pub fn gc(&mut self, keep_fulls: usize) -> Result<GcStats> {
+        let keep_fulls = keep_fulls.max(1);
+        let full_idxs: Vec<usize> = self
+            .versions
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.kind == VersionKind::Full)
+            .map(|(i, _)| i)
+            .collect();
+        if full_idxs.len() <= keep_fulls {
+            return Ok(GcStats::default());
+        }
+        let boundary = full_idxs[full_idxs.len() - keep_fulls];
+
+        // Live = every version some retained version's chain touches.
+        // Chains stop at the nearest full ancestor, so for deltas
+        // published in parent order this is exactly `[boundary..]`; the
+        // chain walk also protects any out-of-order parent an API user
+        // published explicitly.
+        let mut live: BTreeSet<u64> = BTreeSet::new();
+        for meta in &self.versions[boundary..] {
+            for link in self.chain_to_full(meta.version)? {
+                live.insert(link.version);
+            }
+        }
+
+        let mut stats = GcStats::default();
+        for meta in &self.versions[..boundary] {
+            if live.contains(&meta.version) {
+                continue;
+            }
+            let dir = self.dir(meta.version);
+            for name in ["publish.json", "dense.bin", "rows.bin"] {
+                if let Ok(md) = fs::metadata(dir.join(name)) {
+                    stats.bytes_deleted += md.len();
+                    stats.files_deleted += 1;
+                }
+            }
+            stats.removed.push(meta.version);
+        }
+        // Drop retired entries from the manifest BEFORE unlinking: if
+        // the process dies mid-deletion, the orphaned files merely leak
+        // (re-creatable by hand) instead of wedging every later GC on a
+        // manifest entry whose directory is already gone.
+        let removed: BTreeSet<u64> = stats.removed.iter().copied().collect();
+        self.versions.retain(|m| !removed.contains(&m.version));
+        self.save_manifest()?;
+        for &version in &stats.removed {
+            if let Err(err) = fs::remove_dir_all(self.dir(version)) {
+                // Already gone (e.g. a prior GC died between manifest
+                // write and unlink): nothing left to retire.
+                if err.kind() != std::io::ErrorKind::NotFound {
+                    return Err(err.into());
+                }
+            }
+        }
+        Ok(stats)
+    }
 }
 
 #[cfg(test)]
@@ -533,6 +612,82 @@ mod tests {
         fs::write(&path, data).unwrap();
         let err = store.load(0).unwrap_err();
         assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn gc_retires_dead_chains_and_keeps_live_ones() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        // full(0), delta(1), full(2), delta(3): keep_fulls=1 retires the
+        // v0..v1 chain, keeps the v2..v3 chain intact.  Row sets only
+        // grow (the store's touched-set invariant).
+        let states: Vec<Checkpoint> = (0..4u64)
+            .map(|i| {
+                let mut rows: Vec<(u64, f32)> = vec![(1, i as f32)];
+                rows.extend((0..=i).map(|j| (j + 5, 1.0)));
+                ckpt(10 * (i + 1), i as f32, &rows)
+            })
+            .collect();
+        store.publish(0, &states[0], None).unwrap();
+        store.publish(1, &states[1], Some((0, &states[0]))).unwrap();
+        store.publish(2, &states[2], None).unwrap();
+        store.publish(3, &states[3], Some((2, &states[2]))).unwrap();
+
+        let stats = store.gc(1).unwrap();
+        assert_eq!(stats.removed, vec![0, 1]);
+        assert!(stats.bytes_deleted > 0);
+        assert_eq!(stats.files_deleted, 6); // 3 files per retired version
+        assert!(!tmp.path().join("v000000").exists());
+        assert!(!tmp.path().join("v000001").exists());
+
+        // Retired versions are gone from the manifest and from disk…
+        assert_eq!(
+            store.versions().iter().map(|m| m.version).collect::<Vec<_>>(),
+            vec![2, 3]
+        );
+        assert!(store.load(0).is_err());
+        // …while the live chain still reconstructs, and survives reopen.
+        assert_state_eq(&store.load(3).unwrap(), &states[3]);
+        drop(store);
+        let store = DeltaStore::open(tmp.path()).unwrap();
+        assert_state_eq(&store.load(3).unwrap(), &states[3]);
+    }
+
+    #[test]
+    fn gc_tolerates_already_missing_version_dirs() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        let v1 = ckpt(2, 0.2, &[(1, 2.0), (2, 2.0)]);
+        let v2 = ckpt(3, 0.3, &[(1, 2.0), (2, 3.0)]);
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        store.publish(2, &v2, None).unwrap();
+        // Out-of-band loss of v0's files (e.g. a GC that died between
+        // its manifest write and the unlink) must not wedge retention.
+        fs::remove_dir_all(tmp.path().join("v000000")).unwrap();
+        let stats = store.gc(1).unwrap();
+        assert_eq!(stats.removed, vec![0, 1]);
+        assert_eq!(stats.files_deleted, 3); // only v1's files still existed
+        assert_state_eq(&store.load(2).unwrap(), &v2);
+    }
+
+    #[test]
+    fn gc_is_a_noop_until_enough_fulls_exist() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        let v1 = ckpt(2, 0.2, &[(1, 2.0)]);
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        let stats = store.gc(2).unwrap();
+        assert!(stats.removed.is_empty());
+        assert_eq!(stats.files_deleted, 0);
+        assert_eq!(store.versions().len(), 2);
+        // keep_fulls=0 is clamped to 1: the only full must survive.
+        let stats = store.gc(0).unwrap();
+        assert!(stats.removed.is_empty());
+        assert_state_eq(&store.load(1).unwrap(), &v1);
     }
 
     #[test]

@@ -16,13 +16,16 @@
 //! * [`delta_ckpt`] — a [`DeltaStore`] of published versions: full
 //!   snapshots plus deltas holding only rows that bit-changed since the
 //!   parent, with periodic compaction; any version reconstructs from
-//!   base + deltas bit-for-bit.
+//!   base + deltas bit-for-bit.  Retention ([`DeltaStore::gc`]) keeps
+//!   the newest N fulls + live chains and deletes retired chain files.
 //! * [`publisher`] — the registry-upload cost model and the full-vs-delta
-//!   publish policy ([`PublishMode`]).
-//! * [`session`] — the [`OnlineSession`] driver: warm-up, then per
-//!   window resume → train on the delta → publish, charging every leg to
-//!   [`crate::sim::Clock`] and recording per-version data-ready →
-//!   model-published latency in [`crate::metrics::DeliveryMetrics`].
+//!   publish policy ([`PublishMode`]), plus the retention GC charge.
+//! * [`session`] — the [`OnlineSession`] driver over any
+//!   [`crate::job::Trainer`] (G-Meta hybrid or the CPU/PS baseline):
+//!   warm-up, then per window resume → train on the delta → publish,
+//!   charging every leg to [`crate::sim::Clock`] and recording
+//!   per-version data-ready → model-published latency in
+//!   [`crate::metrics::DeliveryMetrics`].
 
 pub mod delta;
 pub mod delta_ckpt;
@@ -30,6 +33,6 @@ pub mod publisher;
 pub mod session;
 
 pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
-pub use delta_ckpt::{DeltaStore, PublishStats, VersionKind, VersionMeta};
+pub use delta_ckpt::{DeltaStore, GcStats, PublishStats, VersionKind, VersionMeta};
 pub use publisher::{PublishMode, PublishModel, Publisher};
 pub use session::{OnlineConfig, OnlineSession};

@@ -18,8 +18,8 @@ use std::path::Path;
 
 use crate::checkpoint::Checkpoint;
 use crate::metrics::VersionRecord;
-use crate::sim::Clock;
-use crate::stream::delta_ckpt::{DeltaStore, VersionKind};
+use crate::sim::{Clock, StorageModel};
+use crate::stream::delta_ckpt::{DeltaStore, GcStats, VersionKind};
 use crate::Result;
 
 /// Delivery strategy for the embedding-dominated model state.
@@ -62,6 +62,18 @@ pub struct Publisher {
     /// Delta mode: every `compact_every`-th version ships full.
     pub compact_every: usize,
     pub model: PublishModel,
+    /// Retention: keep the newest N full snapshots plus live delta
+    /// chains; retired chain files are deleted from the registry after
+    /// each publish, with the deletion's metadata ops charged to the
+    /// clock.  `None` keeps every version forever.
+    pub retain_fulls: Option<usize>,
+    /// Storage cost model charging the retention GC's deletions.
+    pub storage: StorageModel,
+    /// What the GC pass of the most recent publish removed (empty stats
+    /// when retention is off or nothing was eligible).
+    pub last_gc: GcStats,
+    /// Virtual seconds the most recent publish spent in the GC pass.
+    pub last_gc_secs: f64,
     /// Last published (version, reconstructed state) — the delta base.
     last: Option<(u64, Checkpoint)>,
     next_version: u64,
@@ -79,9 +91,20 @@ impl Publisher {
             mode,
             compact_every: compact_every.max(1),
             model,
+            retain_fulls: None,
+            storage: StorageModel::default(),
+            last_gc: GcStats::default(),
+            last_gc_secs: 0.0,
             last: None,
             next_version: 0,
         })
+    }
+
+    /// Enable retention: keep the newest `keep_fulls` full snapshots (+
+    /// live chains), GC the rest after every publish.
+    pub fn with_retention(mut self, keep_fulls: usize) -> Self {
+        self.retain_fulls = Some(keep_fulls);
+        self
     }
 
     /// Version number the next publish will use.
@@ -124,11 +147,28 @@ impl Publisher {
         };
         debug_assert_eq!(stats.kind == VersionKind::Full, full);
         clock.advance(self.publish_secs(stats.bytes));
+        // The version is servable the moment the upload registers; the
+        // retention pass below is housekeeping that only delays the
+        // *next* window.
+        let published = clock.now();
+
+        // Retention pass: retire dead chains, charging their deletion as
+        // registry metadata operations.
+        self.last_gc = GcStats::default();
+        self.last_gc_secs = 0.0;
+        if let Some(keep_fulls) = self.retain_fulls {
+            let gc = self.store.gc(keep_fulls)?;
+            if gc.files_deleted > 0 {
+                self.last_gc_secs = self.storage.delete_time(gc.files_deleted);
+                clock.advance(self.last_gc_secs);
+            }
+            self.last_gc = gc;
+        }
         let record = VersionRecord {
             version,
             kind: stats.kind.as_str().to_string(),
             data_ready,
-            published: clock.now(),
+            published,
             bytes: stats.bytes,
             rows: stats.rows,
             cold_tasks: Vec::new(),
@@ -227,6 +267,39 @@ mod tests {
             delta < full,
             "delta publish {delta}s must beat full publish {full}s"
         );
+    }
+
+    #[test]
+    fn retention_bounds_the_store_and_charges_the_clock() {
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::DeltaRepublish,
+            2,
+            PublishModel::default(),
+        )
+        .unwrap()
+        .with_retention(1);
+        let mut clock = Clock::new();
+        // compact_every = 2 -> kinds full,delta,full,delta,full,delta.
+        for step in 0..6u64 {
+            let rows: Vec<(u64, f32)> = (0..=step).map(|r| (r, (r + step) as f32)).collect();
+            let before = clock.now();
+            p.publish(ckpt(step, &rows), before, &mut clock).unwrap();
+            if !p.last_gc.removed.is_empty() {
+                assert!(p.last_gc_secs > 0.0, "GC must charge the clock");
+                assert!(clock.now() - before >= p.last_gc_secs);
+            }
+        }
+        // Only the newest full and its chain survive.
+        let kept: Vec<u64> = p.store.versions().iter().map(|m| m.version).collect();
+        assert_eq!(kept, vec![4, 5]);
+        assert!(p.store.load(0).is_err());
+        assert!(p.store.load(5).is_ok());
+        // The live base is untouched: the next delta still publishes.
+        let rows: Vec<(u64, f32)> = (0..=6u64).map(|r| (r, r as f32)).collect();
+        let rec = p.publish(ckpt(6, &rows), clock.now(), &mut clock).unwrap();
+        assert_eq!(rec.kind, "full"); // version 6, compact cadence
     }
 
     #[test]

@@ -10,35 +10,40 @@
 //!    meta-training run over it, and publication of the first servable
 //!    version (always a full snapshot).
 //! 2. **Stream** — per [`Delta`] window: wait for the data to land, run
-//!    the ingestion leg, warm-start-train [`GMetaTrainer`] for a few
-//!    meta-steps on the fresh episodes, capture the state, publish a
+//!    the ingestion leg, warm-start-train the job's [`Trainer`] for a
+//!    few meta-steps on the fresh episodes, capture the state, publish a
 //!    version, and zero-shot-check any cold-start tasks the window
 //!    introduced.  Every leg charges [`Clock`]; per-version
 //!    data-ready→servable latency lands in
 //!    [`crate::metrics::DeliveryMetrics`].
+//!
+//! The session is architecture-agnostic: it drives a `Box<dyn Trainer>`
+//! built by [`crate::job::TrainJob`], so the same delivery loop measures
+//! the G-Meta hybrid arm *and* the conventional CPU/PS baseline — the
+//! Table-1 comparison extended to §3.4's operational claim.
 //!
 //! The two [`PublishMode`]s differ only in the delivery legs, keeping the
 //! comparison honest: *full-republish* re-runs the whole preprocess over
 //! the accumulated corpus, reloads the previous full snapshot into a
 //! fresh training job, and uploads a full snapshot; *delta-republish*
 //! appends the delta incrementally, keeps the trainer warm in memory,
-//! and uploads changed rows only.  Training itself is identical.
+//! and uploads changed rows only.  Training itself is identical.  With
+//! [`OnlineConfig::retain_fulls`] set, the delta store additionally GCs
+//! retired chains after each publish (charged as registry metadata ops).
 
 use std::collections::BTreeSet;
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use crate::config::ExperimentConfig;
-use crate::coordinator::GMetaTrainer;
-use crate::data::{DatasetSpec, Generator};
+use crate::data::Generator;
 use crate::io::loader::Loader;
 use crate::io::preprocess::{preprocess, DatasetOnDisk};
+use crate::job::{Observer, TrainJob, Trainer};
 use crate::meta::{Episode, Sample, TaskBatch};
 use crate::metrics::{
-    DeliveryMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_PREPROCESS, PHASE_PUBLISH,
-    PHASE_RESTORE,
+    DeliveryMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_GC, PHASE_PREPROCESS,
+    PHASE_PUBLISH, PHASE_RESTORE,
 };
-use crate::runtime::Runtime;
 use crate::sim::{Clock, ReadPattern, StorageModel};
 use crate::stream::delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig};
 use crate::stream::publisher::{PublishMode, PublishModel, Publisher};
@@ -55,6 +60,9 @@ pub struct OnlineConfig {
     pub mode: PublishMode,
     /// Delta mode: every Nth version ships as a full snapshot.
     pub compact_every: usize,
+    /// Retention: keep the newest N full snapshots (+ live chains) in
+    /// the registry, GC the rest after each publish.  `None` keeps all.
+    pub retain_fulls: Option<usize>,
     pub publish: PublishModel,
     pub feed: DeltaFeedConfig,
     pub seed: u64,
@@ -68,6 +76,7 @@ impl Default for OnlineConfig {
             steps_per_window: 10,
             mode: PublishMode::DeltaRepublish,
             compact_every: 4,
+            retain_fulls: None,
             publish: PublishModel::default(),
             feed: DeltaFeedConfig::default(),
             seed: 0x5EED,
@@ -75,13 +84,15 @@ impl Default for OnlineConfig {
     }
 }
 
-/// The continuous-delivery driver.
+/// The continuous-delivery driver over any [`Trainer`] architecture.
 pub struct OnlineSession<'rt> {
-    pub trainer: GMetaTrainer<'rt>,
+    pub trainer: Box<dyn Trainer + 'rt>,
     pub clock: Clock,
     pub ds: DatasetOnDisk,
     pub publisher: Publisher,
     pub delivery: DeliveryMetrics,
+    /// Job observer, kept alive so per-phase hooks fire per window.
+    observer: Option<Box<dyn Observer + 'rt>>,
     feed: DeltaFeed,
     storage: StorageModel,
     online: OnlineConfig,
@@ -97,23 +108,18 @@ pub struct OnlineSession<'rt> {
 }
 
 impl<'rt> OnlineSession<'rt> {
-    /// Build a session: generates + preprocesses the warm-up corpus under
-    /// `work_dir` and wires the trainer, feed, and publisher.
-    pub fn new(
-        cfg: ExperimentConfig,
-        online: OnlineConfig,
-        spec: DatasetSpec,
-        variant: &str,
-        work_dir: &Path,
-        runtime: Option<&'rt Runtime>,
-    ) -> Result<Self> {
-        // Force the generator's slot structure to the model dims, as the
-        // offline harnesses do.
-        let spec = DatasetSpec {
-            slots: cfg.dims.slots,
-            valency: cfg.dims.valency,
-            ..spec
-        };
+    /// Build a session from an assembled [`TrainJob`] (which must carry
+    /// a dataset): generates + preprocesses the warm-up corpus under
+    /// `work_dir` and wires the trainer, feed, and publisher.  Swapping
+    /// the delivery loop between architectures is the job builder's
+    /// `architecture(...)` call — nothing here changes.
+    pub fn new(job: TrainJob<'rt>, online: OnlineConfig, work_dir: &Path) -> Result<Self> {
+        // The job builder already forced the generator's slot structure
+        // to the model dims.
+        let spec = job.dataset().ok_or_else(|| {
+            anyhow::anyhow!("online session needs a dataset — set TrainJobBuilder::dataset")
+        })?;
+        let batch = job.cfg().dims.batch;
         let warmup = Generator::new(spec).take(online.warmup_samples);
         // Only the full-republish arm ever re-reads the raw corpus; keep
         // the delta arm free of that memory.
@@ -123,27 +129,36 @@ impl<'rt> OnlineSession<'rt> {
         };
         let ds = preprocess(
             warmup,
-            cfg.dims.batch,
+            batch,
             crate::io::Codec::Binary,
             work_dir,
             "online",
             Some(online.seed),
         )?;
-        let trainer = GMetaTrainer::new(cfg, variant, spec.record_bytes, runtime)?;
-        let publisher = Publisher::new(
+        let mut publisher = Publisher::new(
             &work_dir.join("versions"),
             online.mode,
             online.compact_every,
             online.publish,
         )?;
+        if let Some(keep_fulls) = online.retain_fulls {
+            publisher = publisher.with_retention(keep_fulls);
+        }
+        // The job's pluggable storage model charges every session-side
+        // leg (preprocess, restore, retention GC), not just the
+        // trainer's per-step Meta-IO.
+        let storage = *job.trainer().storage();
+        publisher.storage = storage;
+        let (trainer, observer) = job.into_parts();
         Ok(Self {
             trainer,
             clock: Clock::new(),
             ds,
             publisher,
             delivery: DeliveryMetrics::default(),
+            observer,
             feed: DeltaFeed::new(spec, online.feed),
-            storage: StorageModel::default(),
+            storage,
             online,
             work_dir: work_dir.to_path_buf(),
             seen_tasks: BTreeSet::new(),
@@ -168,8 +183,8 @@ impl<'rt> OnlineSession<'rt> {
     /// Build per-worker episode streams from a window's task batches,
     /// cycling so every worker has work each step.
     fn episodes_for_world(&self, batches: &[TaskBatch]) -> Result<Vec<Vec<Episode>>> {
-        let world = self.trainer.cfg.cluster.world_size();
-        let batch = self.trainer.cfg.dims.batch;
+        let world = self.trainer.cfg().cluster.world_size();
+        let batch = self.trainer.cfg().dims.batch;
         let eps: Vec<Episode> = batches
             .iter()
             .filter_map(|tb| Episode::from_task_batch(tb, batch))
@@ -185,10 +200,30 @@ impl<'rt> OnlineSession<'rt> {
         Ok(out)
     }
 
+    /// One trainer run with the job observer's hooks honored (mirrors
+    /// [`TrainJob::run_episodes`], whose loop this session takes over).
+    fn run_trainer(
+        &mut self,
+        episodes: &[Vec<Episode>],
+        steps: usize,
+    ) -> Result<crate::metrics::RunMetrics> {
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_run_start(steps);
+        }
+        let m = self.trainer.run_steps(episodes, steps)?;
+        if let Some(obs) = self.observer.as_mut() {
+            for (phase, secs) in &m.phase_time {
+                obs.on_phase(phase, *secs);
+            }
+            obs.on_run_end(&m);
+        }
+        Ok(m)
+    }
+
     /// Train `steps` on the window's episodes, charging the clock.
     fn train_window(&mut self, batches: &[TaskBatch], steps: usize) -> Result<()> {
         let eps = self.episodes_for_world(batches)?;
-        let m = self.trainer.run(&eps, steps)?;
+        let m = self.run_trainer(&eps, steps)?;
         self.clock.advance(m.virtual_time);
         self.delivery.train.merge(&m);
         self.step += steps as u64;
@@ -196,14 +231,20 @@ impl<'rt> OnlineSession<'rt> {
     }
 
     /// Capture + publish the current state; returns the record for the
-    /// caller to annotate (cold tasks) before it is logged.
+    /// caller to annotate (cold tasks) before it is logged.  The
+    /// publisher's retention GC (when enabled) is charged separately as
+    /// [`PHASE_GC`].
     fn publish_version(&mut self, data_ready: f64) -> Result<crate::metrics::VersionRecord> {
         let ckpt = self.trainer.capture(self.step);
         let t0 = self.clock.now();
         let rec = self.publisher.publish(ckpt, data_ready, &mut self.clock)?;
+        let gc_secs = self.publisher.last_gc_secs;
         self.delivery
             .train
-            .add_phase(PHASE_PUBLISH, self.clock.now() - t0);
+            .add_phase(PHASE_PUBLISH, self.clock.now() - t0 - gc_secs);
+        if gc_secs > 0.0 {
+            self.delivery.train.add_phase(PHASE_GC, gc_secs);
+        }
         Ok(rec)
     }
 
@@ -217,8 +258,8 @@ impl<'rt> OnlineSession<'rt> {
 
         // Each worker loads its slice of the preprocessed set — the real
         // Meta-IO read path, task purity enforced by GroupBatchOp.
-        let world = self.trainer.cfg.cluster.world_size();
-        let batch = self.trainer.cfg.dims.batch;
+        let world = self.trainer.cfg().cluster.world_size();
+        let batch = self.trainer.cfg().dims.batch;
         let loader = Loader::new(self.ds.clone(), self.storage, ReadPattern::Sequential);
         let mut eps: Vec<Vec<Episode>> = Vec::with_capacity(world);
         for rank in 0..world {
@@ -243,7 +284,7 @@ impl<'rt> OnlineSession<'rt> {
                 }
             }
         }
-        let m = self.trainer.run(&eps, self.online.warmup_steps)?;
+        let m = self.run_trainer(&eps, self.online.warmup_steps)?;
         self.clock.advance(m.virtual_time);
         self.delivery.train.merge(&m);
         self.step += self.online.warmup_steps as u64;
@@ -302,7 +343,7 @@ impl<'rt> OnlineSession<'rt> {
                 let out_bytes = fs::metadata(&ds.data_path)?.len() as f64;
                 let t = self.storage.read_time(
                     self.accumulated.len(),
-                    self.trainer.record_bytes,
+                    self.trainer.record_bytes(),
                     1,
                     ReadPattern::Sequential,
                     true,
@@ -338,26 +379,22 @@ impl<'rt> OnlineSession<'rt> {
         // zero-shot performance. ---
         let mut zero_shot_auc = None;
         if !cold.is_empty() {
-            let batch = self.trainer.cfg.dims.batch;
+            let dims = self.trainer.cfg().dims;
             let cold_eps: Vec<Episode> = batches
                 .iter()
                 .filter(|tb| cold.contains(&tb.task))
-                .filter_map(|tb| Episode::from_task_batch(tb, batch))
+                .filter_map(|tb| Episode::from_task_batch(tb, dims.batch))
                 .collect();
             let t0 = self.clock.now();
-            zero_shot_auc = if self.trainer.runtime.is_some() {
-                self.trainer.evaluate_zero_shot(&cold_eps)?
-            } else {
-                None
-            };
+            // `None` in virtual-clock-only mode (no numerics to score).
+            zero_shot_auc = self.trainer.evaluate_zero_shot(&cold_eps)?;
             // Charge the forward-only serving cost either way.
-            let dims = self.trainer.cfg.dims;
             let n = cold_eps.len() * dims.batch;
             let lookups = (n * dims.lookups_per_sample()) as f64;
             let gathered = (n * dims.lookups_per_sample() * dims.emb_dim * 4) as f64;
-            let t = self.trainer.device.dense_time(dims.forward_flops(n))
-                + self.trainer.device.mem_time(gathered)
-                + self.trainer.device.lookup_time(lookups);
+            let t = self.trainer.device().dense_time(dims.forward_flops(n))
+                + self.trainer.device().mem_time(gathered)
+                + self.trainer.device().lookup_time(lookups);
             self.clock.advance(t);
             self.delivery
                 .train
@@ -380,21 +417,39 @@ impl<'rt> OnlineSession<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Architecture;
     use crate::data::movielens_like;
+    use crate::metrics::{PHASE_PS_PULL, PHASE_PS_PUSH};
     use crate::util::TempDir;
 
-    fn tiny_session(tmp: &TempDir, mode: PublishMode) -> OnlineSession<'static> {
-        let mut cfg = ExperimentConfig::gmeta(1, 2);
-        cfg.dims.batch = 8;
-        cfg.dims.slots = 4;
-        cfg.dims.valency = 2;
-        cfg.dims.emb_dim = 8;
-        let online = OnlineConfig {
+    fn tiny_job(arch: Architecture) -> TrainJob<'static> {
+        let dims = crate::config::ModelDims {
+            batch: 8,
+            slots: 4,
+            valency: 2,
+            emb_dim: 8,
+            ..Default::default()
+        };
+        TrainJob::builder()
+            .architecture(arch)
+            .cluster(match arch {
+                Architecture::GMeta => crate::config::ClusterSpec::gpu(1, 2),
+                Architecture::ParameterServer => crate::config::ClusterSpec::cpu_ps(2, 1),
+            })
+            .dims(dims)
+            .dataset(movielens_like())
+            .build()
+            .unwrap()
+    }
+
+    fn tiny_online(mode: PublishMode) -> OnlineConfig {
+        OnlineConfig {
             warmup_samples: 600,
             warmup_steps: 3,
             steps_per_window: 2,
             mode,
             compact_every: 2,
+            retain_fulls: None,
             publish: PublishModel::default(),
             feed: DeltaFeedConfig {
                 n_deltas: 3,
@@ -405,8 +460,12 @@ mod tests {
                 cold_fraction: 0.5,
             },
             seed: 3,
-        };
-        OnlineSession::new(cfg, online, movielens_like(), "maml", tmp.path(), None).unwrap()
+        }
+    }
+
+    fn tiny_session(tmp: &TempDir, mode: PublishMode) -> OnlineSession<'static> {
+        OnlineSession::new(tiny_job(Architecture::GMeta), tiny_online(mode), tmp.path())
+            .unwrap()
     }
 
     #[test]
@@ -436,5 +495,102 @@ mod tests {
         let kinds: Vec<&str> = s.delivery.versions.iter().map(|v| v.kind.as_str()).collect();
         // compact_every = 2: even versions full, odd versions delta.
         assert_eq!(kinds, vec!["full", "delta", "full", "delta"]);
+    }
+
+    #[test]
+    fn ps_arm_runs_the_same_delivery_loop() {
+        let tmp = TempDir::new().unwrap();
+        let mut s = OnlineSession::new(
+            tiny_job(Architecture::ParameterServer),
+            tiny_online(PublishMode::DeltaRepublish),
+            tmp.path(),
+        )
+        .unwrap();
+        s.run().unwrap();
+        assert_eq!(s.delivery.versions.len(), 4);
+        for v in &s.delivery.versions {
+            assert!(v.latency() > 0.0);
+            assert!(v.bytes > 0);
+        }
+        // It really was the PS trainer: PS phases charged, none of the
+        // hybrid-parallelism ones.
+        assert!(s.delivery.train.phase(PHASE_PS_PULL) > 0.0);
+        assert!(s.delivery.train.phase(PHASE_PS_PUSH) > 0.0);
+        assert_eq!(s.delivery.train.phase(crate::metrics::PHASE_EMB_EXCHANGE), 0.0);
+    }
+
+    #[test]
+    fn session_inherits_the_job_storage_model() {
+        let tmp = TempDir::new().unwrap();
+        let storage = StorageModel {
+            seek_time: 99e-3,
+            ..Default::default()
+        };
+        let job = TrainJob::builder()
+            .gmeta(1, 2)
+            .dims(crate::config::ModelDims {
+                batch: 8,
+                slots: 4,
+                valency: 2,
+                emb_dim: 8,
+                ..Default::default()
+            })
+            .dataset(movielens_like())
+            .storage(storage)
+            .build()
+            .unwrap();
+        let s = OnlineSession::new(job, tiny_online(PublishMode::DeltaRepublish), tmp.path())
+            .unwrap();
+        // Both the session legs and the publisher's GC charge against
+        // the job's pluggable model, not a fresh default.
+        assert_eq!(s.storage.seek_time, 99e-3);
+        assert_eq!(s.publisher.storage.seek_time, 99e-3);
+    }
+
+    #[test]
+    fn job_observer_fires_across_delivery_windows() {
+        let tmp = TempDir::new().unwrap();
+        let log = crate::job::PhaseLog::new();
+        let job = TrainJob::builder()
+            .gmeta(1, 2)
+            .dims(crate::config::ModelDims {
+                batch: 8,
+                slots: 4,
+                valency: 2,
+                emb_dim: 8,
+                ..Default::default()
+            })
+            .dataset(movielens_like())
+            .observer(Box::new(log.clone()))
+            .build()
+            .unwrap();
+        let mut s =
+            OnlineSession::new(job, tiny_online(PublishMode::DeltaRepublish), tmp.path())
+                .unwrap();
+        s.run().unwrap();
+        // Warm-up + 3 delta windows = 4 observed trainer runs.
+        assert_eq!(log.runs(), 4);
+        let phases = log.phases();
+        assert!(phases
+            .iter()
+            .any(|(p, secs)| p == crate::metrics::PHASE_COMPUTE && *secs > 0.0));
+    }
+
+    #[test]
+    fn retention_gc_is_charged_and_bounds_the_store() {
+        let tmp = TempDir::new().unwrap();
+        let mut online = tiny_online(PublishMode::DeltaRepublish);
+        online.retain_fulls = Some(1);
+        let mut s =
+            OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path()).unwrap();
+        s.run().unwrap();
+        // 4 versions at compact_every=2 -> kinds full,delta,full,delta;
+        // the first chain is retired once the second full lands.
+        assert_eq!(s.publisher.store.versions().len(), 2);
+        assert!(s.publisher.store.load(0).is_err());
+        assert!(s.publisher.store.load(3).is_ok());
+        assert!(s.delivery.train.phase(PHASE_GC) > 0.0);
+        // All four versions still published (delivery log is untouched).
+        assert_eq!(s.delivery.versions.len(), 4);
     }
 }

@@ -1,19 +1,21 @@
 //! Cross-module integration tests: the full pipeline from raw samples
 //! through Meta-IO, the distributed trainers (simulated and real-numerics)
 //! and the experiment harnesses; plus failure injection across module
-//! boundaries.
+//! boundaries.  Every training run is assembled through the unified
+//! [`TrainJob`] builder — the same entry point the CLI, examples, and
+//! benches use.
 
 use std::path::Path;
 
-use gmeta::config::{ClusterSpec, ExperimentConfig, IoConfig, ModelDims};
-use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::config::{Architecture, ClusterSpec, IoConfig, ModelDims, TrainConfig};
+use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::{movielens_like, Generator};
 use gmeta::io::codec::Codec;
 use gmeta::io::loader::Loader;
 use gmeta::io::preprocess::preprocess;
+use gmeta::job::{TrainJob, Trainer, Variant};
 use gmeta::meta::Episode;
 use gmeta::metrics::{PHASE_COMPUTE, PHASE_EMB_EXCHANGE, PHASE_IO};
-use gmeta::ps::PsTrainer;
 use gmeta::runtime::Runtime;
 use gmeta::sim::{ReadPattern, StorageModel};
 use gmeta::util::TempDir;
@@ -31,14 +33,19 @@ fn small_dims() -> ModelDims {
     }
 }
 
+fn small_spec(dims: &ModelDims) -> gmeta::data::DatasetSpec {
+    let mut spec = movielens_like();
+    spec.slots = dims.slots;
+    spec.valency = dims.valency;
+    spec
+}
+
 /// Raw samples -> preprocess -> loader -> episodes -> simulated G-Meta run:
 /// the entire Meta-IO + trainer pipeline wired end to end from disk.
 #[test]
 fn full_pipeline_from_disk_to_training() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
     let samples = Generator::new(spec).take(8_000);
 
     let tmp = TempDir::new().unwrap();
@@ -59,12 +66,16 @@ fn full_pipeline_from_disk_to_training() {
         per_worker.push(eps);
     }
 
-    let mut cfg = ExperimentConfig::gmeta(2, 2);
-    cfg.dims = dims;
-    let mut t = GMetaTrainer::new(cfg, "maml", 300, None).unwrap();
-    let m = t.run(&per_worker, 6).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(2, 2)
+        .dims(dims)
+        .record_bytes(300)
+        .build()
+        .unwrap();
+    let m = job.run_episodes(&per_worker, 6).unwrap();
     assert_eq!(m.steps, 6);
     assert!(m.throughput() > 0.0);
+    let t = job.gmeta_mut().unwrap();
     assert!(t.replicas_in_sync());
     // The table materialized rows actually touched by the data.
     assert!(t.embedding.touched() > 0);
@@ -81,15 +92,23 @@ fn real_training_reduces_query_loss() {
     }
     let rt = Runtime::load(dir, &["maml"]).unwrap();
     let spec = movielens_like();
-    let mut cfg = ExperimentConfig::gmeta(1, 2);
-    cfg.dims = ModelDims {
-        emb_rows: spec.emb_rows as usize,
-        ..ModelDims::default()
-    };
-    cfg.train.beta = 0.1;
-    let eps = episodes_from_generator(spec, &cfg.dims, 2, 6);
-    let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, Some(&rt)).unwrap();
-    let m = t.run(&eps, 12).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(1, 2)
+        .dims(ModelDims {
+            emb_rows: spec.emb_rows as usize,
+            ..ModelDims::default()
+        })
+        .train(TrainConfig {
+            beta: 0.1,
+            ..Default::default()
+        })
+        .dataset(spec)
+        .runtime(&rt)
+        .build()
+        .unwrap();
+    let eps = job.episodes(6).unwrap();
+    let m = job.run_episodes(&eps, 12).unwrap();
+    let t = job.gmeta_mut().unwrap();
     assert_eq!(t.losses.len(), 12);
     let first: f64 = t.losses[..3].iter().map(|(_, q)| *q as f64).sum::<f64>() / 3.0;
     let last: f64 = t.losses[9..].iter().map(|(_, q)| *q as f64).sum::<f64>() / 3.0;
@@ -110,21 +129,23 @@ fn real_training_reduces_query_loss() {
 #[test]
 fn gmeta_beats_ps_at_comparable_scale() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
 
-    let mut cfg = ExperimentConfig::gmeta(2, 4);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(spec, &dims, 8, 4);
-    let mut g = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
-    let gm = g.run(&eps, 8).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(2, 4)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let gm = job.run(8).unwrap();
 
-    let mut cfg = ExperimentConfig::ps(16, 4);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(spec, &dims, 16, 4);
-    let mut p = PsTrainer::new(cfg, "maml", spec.record_bytes);
-    let pm = p.run(&eps, 8).unwrap();
+    let mut job = TrainJob::builder()
+        .parameter_server(16, 4)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let pm = job.run(8).unwrap();
 
     assert!(
         gm.throughput() > pm.throughput(),
@@ -139,25 +160,28 @@ fn gmeta_beats_ps_at_comparable_scale() {
 #[test]
 fn ablation_arms_order_correctly() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
     let run = |io_opt: bool, net_opt: bool| {
-        let mut cfg = ExperimentConfig::gmeta(2, 2);
-        cfg.cluster = if net_opt {
+        let cluster = if net_opt {
             ClusterSpec::gpu(2, 2)
         } else {
             ClusterSpec::gpu_commodity(2, 2)
         };
-        cfg.dims = dims;
-        cfg.io = if io_opt {
+        let io = if io_opt {
             IoConfig::default()
         } else {
             IoConfig::unoptimized()
         };
-        let eps = episodes_from_generator(spec, &dims, 4, 4);
-        let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
-        t.run(&eps, 8).unwrap().throughput()
+        let mut job = TrainJob::builder()
+            .architecture(Architecture::GMeta)
+            .cluster(cluster)
+            .dims(dims)
+            .io(io)
+            .dataset(spec)
+            .build()
+            .unwrap();
+        let eps = job.episodes(4).unwrap();
+        job.run_episodes(&eps, 8).unwrap().throughput()
     };
     let baseline = run(false, false);
     let io = run(true, false);
@@ -173,14 +197,15 @@ fn ablation_arms_order_correctly() {
 #[test]
 fn phase_times_account_for_virtual_time() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
-    let mut cfg = ExperimentConfig::gmeta(2, 2);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(spec, &dims, 4, 4);
-    let mut t = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
-    let m = t.run(&eps, 10).unwrap();
+    let spec = small_spec(&dims);
+    let mut job = TrainJob::builder()
+        .gmeta(2, 2)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let eps = job.episodes(4).unwrap();
+    let m = job.run_episodes(&eps, 10).unwrap();
     let phase_sum: f64 = m.phase_time.values().sum();
     // Phases record per-phase maxima; barrier alignment means the total
     // virtual time is bounded by the straggler-aligned sum (within 2x) and
@@ -196,9 +221,7 @@ fn phase_times_account_for_virtual_time() {
 #[test]
 fn corrupted_dataset_detected_across_pipeline() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
     let samples = Generator::new(spec).take(2_000);
     let tmp = TempDir::new().unwrap();
     let ds = preprocess(samples, 32, Codec::Binary, tmp.path(), "bad", Some(1)).unwrap();
@@ -222,7 +245,7 @@ fn corrupted_dataset_detected_across_pipeline() {
 }
 
 /// Failure injection: dims mismatch between run config and artifacts is
-/// rejected before any training step.
+/// rejected before any training step (the builder surfaces it).
 #[test]
 fn artifact_dims_mismatch_rejected() {
     let dir = Path::new("artifacts");
@@ -230,9 +253,12 @@ fn artifact_dims_mismatch_rejected() {
         return;
     }
     let rt = Runtime::load(dir, &["maml"]).unwrap();
-    let mut cfg = ExperimentConfig::gmeta(1, 1);
-    cfg.dims = small_dims(); // does not match the compiled artifacts
-    match GMetaTrainer::new(cfg, "maml", 300, Some(&rt)) {
+    let result = TrainJob::builder()
+        .gmeta(1, 1)
+        .dims(small_dims()) // does not match the compiled artifacts
+        .runtime(&rt)
+        .build();
+    match result {
         Ok(_) => panic!("dims mismatch was accepted"),
         Err(err) => assert!(err.to_string().contains("do not match"), "{err}"),
     }
@@ -245,17 +271,19 @@ fn artifact_dims_mismatch_rejected() {
 #[test]
 fn checkpoint_recovery_across_world_sizes() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
     let tmp = TempDir::new().unwrap();
 
     // Train 6 steps at world 4 and checkpoint.
-    let mut cfg = ExperimentConfig::gmeta(2, 2);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(spec, &dims, 4, 4);
-    let mut t1 = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
-    t1.run(&eps, 6).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(2, 2)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let eps = job.episodes(4).unwrap();
+    job.run_episodes(&eps, 6).unwrap();
+    let t1 = job.gmeta_mut().unwrap();
     let sample_rows: Vec<u64> = eps[0][0].support_ids().into_iter().take(8).collect();
     let want_rows: Vec<(u64, Vec<f32>)> = sample_rows
         .iter()
@@ -265,9 +293,14 @@ fn checkpoint_recovery_across_world_sizes() {
     t1.save_checkpoint(tmp.path(), 6).unwrap();
 
     // Resume at world 6.
-    let mut cfg = ExperimentConfig::gmeta(3, 2);
-    cfg.dims = dims;
-    let mut t2 = GMetaTrainer::new(cfg, "maml", spec.record_bytes, None).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(3, 2)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let eps6 = job.episodes(3).unwrap();
+    let t2 = job.gmeta_mut().unwrap();
     let step = t2.resume(tmp.path()).unwrap();
     assert_eq!(step, 6);
     assert_eq!(t2.replicas[0].flatten(), want_dense);
@@ -276,28 +309,37 @@ fn checkpoint_recovery_across_world_sizes() {
         assert_eq!(t2.embedding.read(row), vals, "row {row} lost in reshard");
     }
     // And training continues from the restored state.
-    let eps6 = episodes_from_generator(spec, &dims, 6, 3);
     let m = t2.run(&eps6, 3).unwrap();
     assert_eq!(m.steps, 3);
 }
 
-/// Resuming a checkpoint from a different variant is refused.
+/// Resuming a checkpoint from a different variant is refused — and the
+/// variant is typed end to end through the builder.
 #[test]
 fn checkpoint_variant_mismatch_rejected() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
     let tmp = TempDir::new().unwrap();
-    let mut cfg = ExperimentConfig::gmeta(1, 2);
-    cfg.dims = dims;
-    let eps = episodes_from_generator(spec, &dims, 2, 2);
-    let mut t1 = GMetaTrainer::new(cfg.clone(), "maml", spec.record_bytes, None).unwrap();
-    t1.run(&eps, 2).unwrap();
-    t1.save_checkpoint(tmp.path(), 2).unwrap();
+    let mut job = TrainJob::builder()
+        .gmeta(1, 2)
+        .dims(dims)
+        .variant(Variant::Maml)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let eps = job.episodes(2).unwrap();
+    job.run_episodes(&eps, 2).unwrap();
+    job.gmeta_mut().unwrap().save_checkpoint(tmp.path(), 2).unwrap();
 
-    let mut t2 = GMetaTrainer::new(cfg, "melu", spec.record_bytes, None).unwrap();
-    let err = t2.resume(tmp.path()).unwrap_err();
+    let mut job = TrainJob::builder()
+        .gmeta(1, 2)
+        .dims(dims)
+        .variant(Variant::Melu)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    assert_eq!(job.trainer().variant(), Variant::Melu);
+    let err = job.gmeta_mut().unwrap().resume(tmp.path()).unwrap_err();
     assert!(err.to_string().contains("variant"), "{err}");
 }
 
@@ -305,9 +347,7 @@ fn checkpoint_variant_mismatch_rejected() {
 #[test]
 fn index_persistence_roundtrips_through_loader() {
     let dims = small_dims();
-    let mut spec = movielens_like();
-    spec.slots = dims.slots;
-    spec.valency = dims.valency;
+    let spec = small_spec(&dims);
     let samples = Generator::new(spec).take(3_000);
     let tmp = TempDir::new().unwrap();
     let ds = preprocess(samples, 64, Codec::Binary, tmp.path(), "persist", Some(3)).unwrap();

@@ -1,0 +1,124 @@
+//! Parity tests for the unified `TrainJob` API: a job-built run must be
+//! *bit-identical* to a direct trainer construction with the same
+//! configuration — the refactor moved wiring, not numerics.
+//!
+//! Direct `GMetaTrainer::new` / `PsTrainer::new` construction is allowed
+//! here only because these tests ARE the golden baseline the builder is
+//! checked against; every other call site goes through `TrainJob`.
+
+use gmeta::config::{ExperimentConfig, ModelDims};
+use gmeta::coordinator::{episodes_from_generator, GMetaTrainer};
+use gmeta::data::movielens_like;
+use gmeta::job::{TrainJob, Variant};
+use gmeta::metrics::RunMetrics;
+use gmeta::ps::PsTrainer;
+
+fn small_dims() -> ModelDims {
+    ModelDims {
+        batch: 16,
+        slots: 4,
+        valency: 2,
+        emb_dim: 8,
+        hidden1: 16,
+        hidden2: 8,
+        task_dim: 8,
+        emb_rows: 1 << 12,
+    }
+}
+
+/// Exact (bitwise) equality of every scalar and phase in two runs.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.samples, b.samples);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "virtual_time differs");
+    assert_eq!(a.inter_bytes.to_bits(), b.inter_bytes.to_bits(), "inter_bytes differs");
+    assert_eq!(a.intra_bytes.to_bits(), b.intra_bytes.to_bits(), "intra_bytes differs");
+    assert_eq!(
+        a.phase_time.keys().collect::<Vec<_>>(),
+        b.phase_time.keys().collect::<Vec<_>>(),
+        "phase sets differ"
+    );
+    for (phase, secs) in &a.phase_time {
+        assert_eq!(
+            secs.to_bits(),
+            b.phase_time[phase].to_bits(),
+            "phase {phase} differs"
+        );
+    }
+}
+
+#[test]
+fn gmeta_job_matches_direct_construction() {
+    let dims = small_dims();
+    let spec = movielens_like();
+    let steps = 8;
+
+    // Golden arm: the pre-refactor construction path, verbatim.
+    let mut cfg = ExperimentConfig::gmeta(2, 2);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 4, 4);
+    let mut direct = GMetaTrainer::new(cfg, Variant::Maml, spec.record_bytes, None).unwrap();
+    let want = direct.run(&eps, steps).unwrap();
+
+    // Job arm: same episodes, same config, through the builder.
+    let mut job = TrainJob::builder()
+        .gmeta(2, 2)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let got = job.run_episodes(&eps, steps).unwrap();
+
+    assert_metrics_identical(&want, &got);
+    // Sanity on the golden itself (regression guard for the cost model).
+    assert!(want.virtual_time > 0.0);
+    assert!(want.throughput() > 0.0);
+}
+
+#[test]
+fn ps_job_matches_direct_construction() {
+    let dims = small_dims();
+    let spec = movielens_like();
+    let steps = 8;
+
+    let mut cfg = ExperimentConfig::ps(8, 2);
+    cfg.dims = dims;
+    let eps = episodes_from_generator(spec, &dims, 8, 4);
+    let mut direct = PsTrainer::new(cfg, Variant::Maml, spec.record_bytes);
+    let want = direct.run(&eps, steps).unwrap();
+
+    let mut job = TrainJob::builder()
+        .parameter_server(8, 2)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let got = job.run_episodes(&eps, steps).unwrap();
+
+    assert_metrics_identical(&want, &got);
+}
+
+#[test]
+fn job_episode_generation_matches_the_harness_recipe() {
+    // TrainJob::episodes must produce exactly what the hand-rolled
+    // harness recipe produced (spec slots forced to dims, same seed).
+    let dims = small_dims();
+    let spec = movielens_like();
+    let job = TrainJob::builder()
+        .gmeta(1, 2)
+        .dims(dims)
+        .dataset(spec)
+        .build()
+        .unwrap();
+    let a = job.episodes(3).unwrap();
+    let b = episodes_from_generator(spec, &dims, 2, 3);
+    assert_eq!(a.len(), b.len());
+    for (wa, wb) in a.iter().zip(&b) {
+        assert_eq!(wa.len(), wb.len());
+        for (ea, eb) in wa.iter().zip(wb) {
+            assert_eq!(ea.task, eb.task);
+            assert_eq!(ea.support_ids(), eb.support_ids());
+            assert_eq!(ea.query_ids(), eb.query_ids());
+        }
+    }
+}

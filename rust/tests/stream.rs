@@ -2,20 +2,27 @@
 //! full loop from delta arrival through incremental ingest, warm-start
 //! training, delta checkpointing, and versioned publishing.
 
-use gmeta::config::ExperimentConfig;
+use gmeta::config::ModelDims;
 use gmeta::data::movielens_like;
+use gmeta::job::{TrainJob, Trainer};
 use gmeta::stream::{DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
 use gmeta::util::TempDir;
 
-fn small_cfg() -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::gmeta(1, 2);
-    cfg.dims.batch = 16;
-    cfg.dims.slots = 4;
-    cfg.dims.valency = 2;
-    cfg.dims.emb_dim = 8;
-    cfg.dims.hidden1 = 16;
-    cfg.dims.hidden2 = 8;
-    cfg
+fn small_job() -> TrainJob<'static> {
+    TrainJob::builder()
+        .gmeta(1, 2)
+        .dims(ModelDims {
+            batch: 16,
+            slots: 4,
+            valency: 2,
+            emb_dim: 8,
+            hidden1: 16,
+            hidden2: 8,
+            ..Default::default()
+        })
+        .dataset(movielens_like())
+        .build()
+        .unwrap()
 }
 
 fn online(mode: PublishMode) -> OnlineConfig {
@@ -40,15 +47,7 @@ fn online(mode: PublishMode) -> OnlineConfig {
 
 fn run_session(mode: PublishMode) -> (TempDir, OnlineSession<'static>) {
     let tmp = TempDir::new().unwrap();
-    let mut s = OnlineSession::new(
-        small_cfg(),
-        online(mode),
-        movielens_like(),
-        "maml",
-        tmp.path(),
-        None,
-    )
-    .unwrap();
+    let mut s = OnlineSession::new(small_job(), online(mode), tmp.path()).unwrap();
     s.run().unwrap();
     (tmp, s)
 }
@@ -156,15 +155,7 @@ fn overrunning_windows_queue_instead_of_time_travelling() {
     let mut cfg_online = online(PublishMode::FullRepublish);
     // Arrivals every 1e-3 virtual seconds: far faster than the pipeline.
     cfg_online.feed.interval = 1e-3;
-    let mut s = OnlineSession::new(
-        small_cfg(),
-        cfg_online,
-        movielens_like(),
-        "maml",
-        tmp.path(),
-        None,
-    )
-    .unwrap();
+    let mut s = OnlineSession::new(small_job(), cfg_online, tmp.path()).unwrap();
     s.run().unwrap();
     let v = &s.delivery.versions;
     // Later windows wait on earlier ones: latencies must grow.
