@@ -25,13 +25,24 @@
 //! below to [`Architecture::ParameterServer`] to model the conventional
 //! CPU/PS pipeline's delivery latency instead — nothing else changes.
 //!
-//! Run: `cargo run --release --example online_delivery`
+//! With `--elastic`, the example instead runs the failure-aware elastic
+//! scenario on **both** architectures: a delta cadence faster than the
+//! pipeline backlogs the stream, a [`gmeta::stream::BacklogPolicy`] grows
+//! the cluster (each grow paying its reshard latency cliff), a worker
+//! dies mid-window and the window redoes from the last published
+//! version, and a lognormal slow-registry tail stretches some publish
+//! legs (p99 ≫ p50).
+//!
+//! Run: `cargo run --release --example online_delivery [-- --elastic]`
 
 use gmeta::config::Architecture;
-use gmeta::data::aliccp_like;
+use gmeta::data::{aliccp_like, movielens_like};
 use gmeta::job::{TrainJob, Variant};
 use gmeta::metrics::DeliveryMetrics;
-use gmeta::stream::{DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
+use gmeta::stream::{
+    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
+};
+use gmeta::util::args::Args;
 use gmeta::util::TempDir;
 
 /// Swap to `Architecture::ParameterServer` to run the PS baseline's
@@ -67,7 +78,107 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
     Ok(session.delivery.clone())
 }
 
+/// One elastic + failure-aware session: backlogged stream, backlog-driven
+/// growth, a worker death at window 4, and a slow-registry tail.
+fn run_elastic_arm(arch: Architecture) -> anyhow::Result<()> {
+    let (label, start_world, max_world) = match arch {
+        Architecture::GMeta => ("G-Meta (GPU hybrid)", 2, 4),
+        Architecture::ParameterServer => ("parameter server (CPU baseline)", 2, 4),
+    };
+    println!("--- {label}: start world {start_world}, max {max_world} ---");
+    let tmp = TempDir::new()?;
+    // The 120-task movielens world keeps per-window episode counts (and
+    // therefore the data-driven step counts) example-sized.
+    let job = match arch {
+        Architecture::GMeta => TrainJob::builder().gmeta(1, start_world),
+        Architecture::ParameterServer => TrainJob::builder().parameter_server(start_world, 1),
+    }
+    .variant(Variant::Maml)
+    .dataset(movielens_like())
+    .build()?;
+
+    let mut online = OnlineConfig {
+        warmup_samples: 12_000,
+        warmup_steps: 10,
+        steps_per_window: 10,
+        mode: PublishMode::DeltaRepublish,
+        compact_every: 3,
+        retain_fulls: Some(2),
+        // Drops land every 100ms against multi-hundred-ms windows: the
+        // stream backlogs immediately, which is what elasticity is for.
+        feed: DeltaFeedConfig {
+            n_deltas: 6,
+            samples_per_delta: 2048,
+            interval: 0.1,
+            start_ts: 0.0,
+            cold_start_at: Some(2),
+            cold_fraction: 0.5,
+        },
+        // One pass over each window's episodes: growing the cluster
+        // genuinely shortens the window.
+        data_driven_steps: true,
+        ..OnlineConfig::default()
+    };
+    // A worker dies halfway through window 4; publishes see a lognormal
+    // registry tail.
+    online.failures.kill_at_window = Some(4);
+    online.failures.kill_fraction = 0.5;
+    online.failures.publish_tail_sigma = 0.6;
+
+    let mut policy = BacklogPolicy::new(start_world, max_world);
+    policy.cooldown = 0;
+    let mut session =
+        OnlineSession::new(job, online, tmp.path())?.with_policy(Box::new(policy))?;
+    session.run()?;
+
+    println!("{}", session.delivery);
+    println!();
+    for ev in &session.events {
+        println!(
+            "grow event: world {} -> {} before window {} — reshard cliff {:.3}s",
+            ev.from_world, ev.to_world, ev.before_window, ev.reshard_secs
+        );
+    }
+    // Window 4 publishes version 5 (v0 is warm-up).
+    let failed = &session.delivery.versions[5];
+    println!(
+        "worker failure in window 4: redo cost {:.3}s (wasted attempt + restore \
+         of the last published version); version {} still shipped, state \
+         bit-identical to a failure-free run (see tests/elastic.rs)",
+        failed.redo_secs, failed.version
+    );
+    println!(
+        "publish legs under the registry tail: p50 {:.3}s, p99 {:.3}s",
+        session.delivery.publish_p50(),
+        session.delivery.publish_p99()
+    );
+
+    assert!(
+        session.delivery.reshard_events() >= 1,
+        "backlogged stream triggered no grow event"
+    );
+    assert!(
+        session.events.iter().all(|ev| ev.reshard_secs > 0.0),
+        "reshard must charge a latency cliff"
+    );
+    assert!(failed.redo_secs > 0.0, "failed window charged no redo cost");
+    println!();
+    Ok(())
+}
+
+fn run_elastic() -> anyhow::Result<()> {
+    println!("=== elastic + failure-aware continuous delivery ===");
+    println!("(backlog-driven growth, mid-window worker death, slow-registry tail)\n");
+    run_elastic_arm(Architecture::GMeta)?;
+    run_elastic_arm(Architecture::ParameterServer)?;
+    println!("shape check passed: both architectures grew under backlog and recovered a failed window.");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    if Args::from_env()?.flag("elastic") {
+        return run_elastic();
+    }
     println!("=== continuous delivery on a virtual 1x4 GPU cluster ===");
     println!("(6 delivery windows, one carrying a cold-start task population)\n");
 

@@ -20,6 +20,9 @@
 //! `make artifacts`), it also runs *real numerics* through the PJRT
 //! runtime and prints the loss curve.
 //!
+//! How the pieces fit — the layer map, the two update loops, and the
+//! continuous-delivery window lifecycle — is in `docs/ARCHITECTURE.md`.
+//!
 //! Run: `cargo run --release --example quickstart`
 
 use gmeta::config::ModelDims;

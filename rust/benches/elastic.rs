@@ -1,0 +1,187 @@
+//! Bench: elastic rescaling + failure-aware delivery.
+//!
+//! Measures (on the virtual clock) what the elasticity layer costs and
+//! buys: the reshard latency cliff per grow size, delivery latency of a
+//! backlogged stream with and without a backlog-driven scale policy, the
+//! mid-window failure redo cost, and the publish p50/p99 spread under a
+//! slow-registry tail — plus the real wall time of the capture → rebuild
+//! → restore reshard round trip.
+//!
+//! Run: `cargo bench --bench elastic`
+//! CI smoke mode (small sizes, same paths): `cargo bench --bench elastic -- --smoke`
+
+mod common;
+
+use gmeta::config::ModelDims;
+use gmeta::data::aliccp_like;
+use gmeta::job::{TrainJob, Trainer};
+use gmeta::stream::{
+    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+};
+use gmeta::util::args::Args;
+use gmeta::util::TempDir;
+
+struct Scale {
+    warmup_samples: usize,
+    samples_per_delta: usize,
+    n_deltas: usize,
+    bench_iters: usize,
+}
+
+fn dims() -> ModelDims {
+    ModelDims {
+        batch: 32,
+        slots: 8,
+        valency: 2,
+        emb_dim: 16,
+        ..Default::default()
+    }
+}
+
+fn job(world: usize) -> TrainJob<'static> {
+    TrainJob::builder()
+        .gmeta(1, world)
+        .dims(dims())
+        .dataset(aliccp_like(20_000))
+        .build()
+        .unwrap()
+}
+
+fn online(scale: &Scale) -> OnlineConfig {
+    OnlineConfig {
+        warmup_samples: scale.warmup_samples,
+        warmup_steps: 6,
+        steps_per_window: 8,
+        mode: PublishMode::DeltaRepublish,
+        compact_every: 3,
+        feed: DeltaFeedConfig {
+            n_deltas: scale.n_deltas,
+            samples_per_delta: scale.samples_per_delta,
+            // Always backlogged: every detour is visible in latency.
+            interval: 0.05,
+            start_ts: 0.0,
+            cold_start_at: None,
+            cold_fraction: 0.0,
+        },
+        data_driven_steps: true,
+        seed: 7,
+        ..OnlineConfig::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let scale = if args.flag("smoke") {
+        Scale {
+            warmup_samples: 2_000,
+            samples_per_delta: 256,
+            n_deltas: 3,
+            bench_iters: 2,
+        }
+    } else {
+        Scale {
+            warmup_samples: 12_000,
+            samples_per_delta: 1_024,
+            n_deltas: 6,
+            bench_iters: 8,
+        }
+    };
+
+    println!("=== reshard latency cliff per grow size (virtual clock) ===");
+    for to_world in [3usize, 4] {
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(job(2), online(&scale), tmp.path())?
+            .with_policy(Box::new(ScheduledPolicy::new(vec![(0, to_world)])))?;
+        s.run()?;
+        let ev = s.events[0];
+        println!(
+            "grow 2 -> {to_world}: reshard {:.4}s charged before window {}, \
+             version {} latency {:.4}s",
+            ev.reshard_secs,
+            ev.before_window,
+            s.delivery.versions[2].version,
+            s.delivery.versions[2].latency()
+        );
+        assert!(ev.reshard_secs > 0.0);
+    }
+
+    println!("\n=== backlogged stream: fixed cluster vs backlog policy ===");
+    let run_fixed = |world: usize| -> anyhow::Result<gmeta::metrics::DeliveryMetrics> {
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(job(world), online(&scale), tmp.path())?;
+        s.run()?;
+        Ok(s.delivery.clone())
+    };
+    let fixed = run_fixed(2)?;
+    let tmp = TempDir::new()?;
+    let mut policy = BacklogPolicy::new(2, 4);
+    policy.cooldown = 0;
+    let mut elastic_session = OnlineSession::new(job(2), online(&scale), tmp.path())?
+        .with_policy(Box::new(policy))?;
+    elastic_session.run()?;
+    println!(
+        "fixed world 2 : mean streamed latency {:.4}s",
+        fixed.mean_streamed_latency()
+    );
+    println!(
+        "backlog policy: mean streamed latency {:.4}s, {} reshard(s) costing {:.4}s",
+        elastic_session.delivery.mean_streamed_latency(),
+        elastic_session.delivery.reshard_events(),
+        elastic_session.delivery.total_reshard_secs()
+    );
+
+    println!("\n=== mid-window failure: redo cost ===");
+    let mut failing = online(&scale);
+    failing.failures.kill_at_window = Some(1);
+    let tmp = TempDir::new()?;
+    let mut s = OnlineSession::new(job(2), failing, tmp.path())?;
+    s.run()?;
+    let v = &s.delivery.versions[2];
+    println!(
+        "window 1 died mid-flight: redo {:.4}s, version {} latency {:.4}s \
+         (clean run: {:.4}s)",
+        v.redo_secs,
+        v.version,
+        v.latency(),
+        fixed.versions[2].latency()
+    );
+    assert!(v.redo_secs > 0.0);
+
+    println!("\n=== slow-registry tail: publish p50 vs p99 ===");
+    for sigma in [0.0f64, 0.8] {
+        let mut cfg = online(&scale);
+        cfg.failures.publish_tail_sigma = sigma;
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(job(2), cfg, tmp.path())?;
+        s.run()?;
+        println!(
+            "sigma {sigma:.1}: publish p50 {:.4}s p99 {:.4}s",
+            s.delivery.publish_p50(),
+            s.delivery.publish_p99()
+        );
+    }
+
+    println!("\n=== wall time of the real reshard round trip ===");
+    // capture -> rebuild at the new world -> restore (rows re-route).
+    let mut j = job(2);
+    let spec = j.spec().clone();
+    let trainer = j.trainer_mut();
+    let eps = gmeta::coordinator::episodes_from_generator(
+        aliccp_like(20_000),
+        &dims(),
+        2,
+        4,
+    );
+    trainer.run_steps(&eps, 4)?;
+    common::bench(
+        "reshard 2 -> 4 (capture+rebuild+restore)",
+        1,
+        scale.bench_iters,
+        || {
+            let ckpt = trainer.capture(4);
+            let mut fresh = spec.at_world(4).unwrap().build_trainer().unwrap();
+            fresh.restore_from(&ckpt).unwrap();
+        },
+    );
+    Ok(())
+}

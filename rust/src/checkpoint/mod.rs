@@ -43,6 +43,22 @@ pub struct Checkpoint {
     pub rows: Vec<(u64, Vec<f32>)>,
 }
 
+impl Checkpoint {
+    /// Serialized payload size in bytes: the dense replica plus every
+    /// embedding row at the on-disk stride (`8`-byte row id + `4`-byte
+    /// f32 per value) — what the save/restore and reshard legs stream
+    /// through the DFS, used by the virtual-clock cost charging.
+    pub fn payload_bytes(&self) -> u64 {
+        let dense = self.dense.len() as u64 * 4;
+        let rows: u64 = self
+            .rows
+            .iter()
+            .map(|(_, vals)| 8 + vals.len() as u64 * 4)
+            .sum();
+        dense + rows
+    }
+}
+
 pub(crate) fn frame(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 8);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -225,6 +241,42 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
 /// Restore a checkpoint into a (possibly different-world) embedding table
 /// + dense replica.  Rows re-route to `row % new_world` — the elastic
 /// resharding path.
+///
+/// **Resharding semantics.**  A checkpoint records *rows*, not shards: it
+/// is world-size-free by construction (rows are captured sorted by id,
+/// whatever layout wrote them).  Restoring into a table of any world size
+/// `M` simply routes each row to its new owner `row % M`, so a capture at
+/// world `W` restored at `W ± k` reproduces the exact same logical state —
+/// the property the elastic rescaling layer ([`crate::stream::elastic`])
+/// and the mid-window failure recovery both lean on.
+///
+/// ```
+/// use gmeta::checkpoint::{capture, restore};
+/// use gmeta::config::ModelDims;
+/// use gmeta::dense::DenseParams;
+/// use gmeta::embedding::{Optimizer, ShardedEmbedding};
+///
+/// let dims = ModelDims { emb_dim: 4, ..Default::default() };
+/// let dense = DenseParams::init(&dims, "maml", 1);
+///
+/// // Touch a few rows on a 4-way table…
+/// let mut table4 = ShardedEmbedding::new(4, 4, 9);
+/// for row in [3u64, 17, 999] {
+///     let owner = table4.owner(row);
+///     table4.apply_grads(owner, &[row], &[0.5; 4], 0.1, Optimizer::Sgd)?;
+/// }
+/// let ckpt = capture(7, "maml", &dims, &dense, &mut table4);
+///
+/// // …and restore into a 7-way cluster: values survive, owners re-route.
+/// let mut dense7 = DenseParams::init(&dims, "maml", 2);
+/// let mut table7 = ShardedEmbedding::new(7, 4, 9);
+/// restore(&ckpt, &mut dense7, &mut table7)?;
+/// for row in [3u64, 17, 999] {
+///     assert_eq!(table7.read(row), table4.read(row));
+///     assert_eq!(table7.owner(row), (row % 7) as usize);
+/// }
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub fn restore(
     ckpt: &Checkpoint,
     dense: &mut DenseParams,
@@ -338,6 +390,18 @@ mod tests {
         assert_eq!(in_mem.world, from_disk.world);
         assert_eq!(in_mem.dense, from_disk.dense);
         assert_eq!(in_mem.rows, disk_rows);
+    }
+
+    #[test]
+    fn payload_bytes_matches_stride() {
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(2);
+        let ckpt = capture(1, "maml", &d, &dense, &mut table);
+        let want = ckpt.dense.len() as u64 * 4
+            + ckpt.rows.len() as u64 * (8 + d.emb_dim as u64 * 4);
+        assert_eq!(ckpt.payload_bytes(), want);
+        assert!(ckpt.payload_bytes() > 0);
     }
 
     #[test]

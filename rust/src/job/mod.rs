@@ -112,7 +112,31 @@ impl std::str::FromStr for Variant {
 ///
 /// Attached through [`TrainJobBuilder::observer`]; the job forwards every
 /// phase of every completed `run` call.  Implementations must be cheap —
-/// they run on the coordinator path.
+/// they run on the coordinator path.  The observer outlives individual
+/// trainers: [`crate::stream::OnlineSession`] keeps it firing across every
+/// delivery window, including after elastic rescales rebuild the trainer,
+/// and [`crate::stream::elastic::PhaseTimePolicy`] consumes the same
+/// per-phase stream to drive reshard decisions.
+///
+/// ```
+/// use gmeta::data::movielens_like;
+/// use gmeta::job::{PhaseLog, TrainJob};
+/// use gmeta::metrics::PHASE_COMPUTE;
+///
+/// let log = PhaseLog::new(); // a shareable Observer
+/// let mut job = TrainJob::builder()
+///     .gmeta(1, 2)
+///     .dims(gmeta::config::ModelDims {
+///         batch: 8, slots: 4, valency: 2, emb_dim: 8, ..Default::default()
+///     })
+///     .dataset(movielens_like())
+///     .observer(Box::new(log.clone()))
+///     .build()?;
+/// job.run(2)?;
+/// assert_eq!(log.runs(), 1);
+/// assert!(log.phases().iter().any(|(p, s)| p == PHASE_COMPUTE && *s > 0.0));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub trait Observer {
     /// A run of `steps` meta-steps is about to start.
     fn on_run_start(&mut self, _steps: usize) {}
@@ -219,6 +243,18 @@ pub trait Trainer {
     fn evaluate_zero_shot(&mut self, _episodes: &[Episode]) -> Result<Option<f64>> {
         Ok(None)
     }
+
+    /// Whether the trainer's window semantics are synchronous: each
+    /// `run_steps` call completes all of its updates before returning, so
+    /// a delivery window's capture reflects every sample the window
+    /// trained on.  [`crate::stream::OnlineSession`] requires this — an
+    /// async PS run has in-flight gradients at capture time, and its
+    /// per-version freshness numbers would be silently wrong.  Defaults
+    /// to `true`; [`PsTrainer`] returns `false` under
+    /// [`PsMode::Async`].
+    fn sync_windows(&self) -> bool {
+        true
+    }
 }
 
 impl<'rt> Trainer for GMetaTrainer<'rt> {
@@ -316,6 +352,95 @@ impl Trainer for PsTrainer {
 
     fn restore_from(&mut self, ckpt: &Checkpoint) -> Result<u64> {
         PsTrainer::restore_from(self, ckpt)
+    }
+
+    fn sync_windows(&self) -> bool {
+        self.mode == PsMode::Sync
+    }
+}
+
+/// A cloneable, observer-free description of an assembled job: everything
+/// needed to rebuild its trainer from scratch — possibly at a different
+/// world size.
+///
+/// This is the rebuild path behind elastic rescaling
+/// ([`crate::stream::elastic`]) and mid-window failure recovery: the
+/// online session captures the trainer's state as a
+/// [`Checkpoint`], builds a fresh trainer from
+/// `spec.at_world(new_world)?.build_trainer()?`, and restores the capture
+/// into it (rows reshard on import).  Rebuilt trainers never carry a PJRT
+/// runtime — rescaling is a virtual-cluster operation; real-numerics jobs
+/// must keep their world size.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// The full experiment description (architecture, cluster, dims, IO
+    /// and training configs).
+    pub cfg: ExperimentConfig,
+    pub variant: Variant,
+    /// Record payload bytes charged to I/O per sample.
+    pub record_bytes: usize,
+    /// Resolved compute-device cost model (builder override applied).
+    pub device: DeviceModel,
+    /// Resolved storage cost model (builder override applied).
+    pub storage: StorageModel,
+    /// PS only: per-request server handling cost override.
+    pub server_request_cost: Option<f64>,
+    /// PS only: synchronization discipline override.
+    pub ps_mode: Option<PsMode>,
+}
+
+impl JobSpec {
+    /// Worker count of the described cluster.
+    pub fn world(&self) -> usize {
+        self.cfg.cluster.world_size()
+    }
+
+    /// The same job on a cluster rescaled to `world` workers.  The node
+    /// shape follows the allocation: when `world` divides evenly into the
+    /// current per-node worker count the node size is kept (the cluster
+    /// grows/shrinks by whole nodes); otherwise the topology falls back
+    /// to `world` single-worker nodes.  Transports, jitter, and (for PS)
+    /// the server fleet are unchanged.
+    pub fn at_world(&self, world: usize) -> Result<JobSpec> {
+        if world == 0 {
+            anyhow::bail!("cannot rescale a job to world size 0");
+        }
+        let mut spec = self.clone();
+        let cluster = &mut spec.cfg.cluster;
+        if world % cluster.workers_per_node == 0 {
+            cluster.nodes = world / cluster.workers_per_node;
+        } else {
+            cluster.nodes = world;
+            cluster.workers_per_node = 1;
+        }
+        Ok(spec)
+    }
+
+    /// Construct a fresh trainer for this spec (state at init; restore a
+    /// [`Checkpoint`] into it to warm-start).  Always virtual-clock-only:
+    /// rebuilt trainers do not carry a PJRT runtime.
+    pub fn build_trainer(&self) -> Result<Box<dyn Trainer + 'static>> {
+        match self.cfg.arch {
+            Architecture::GMeta => {
+                let mut t =
+                    GMetaTrainer::new(self.cfg.clone(), self.variant, self.record_bytes, None)?;
+                t.device = self.device;
+                t.storage = self.storage;
+                Ok(Box::new(t))
+            }
+            Architecture::ParameterServer => {
+                let mut t = PsTrainer::new(self.cfg.clone(), self.variant, self.record_bytes);
+                t.device = self.device;
+                t.storage = self.storage;
+                if let Some(cost) = self.server_request_cost {
+                    t.server_request_cost = cost;
+                }
+                if let Some(mode) = self.ps_mode {
+                    t.mode = mode;
+                }
+                Ok(Box::new(t))
+            }
+        }
     }
 }
 
@@ -574,10 +699,31 @@ impl<'rt> TrainJobBuilder<'rt> {
                 AnyTrainer::Ps(t)
             }
         };
+        let spec = match &trainer {
+            AnyTrainer::GMeta(t) => JobSpec {
+                cfg: t.cfg.clone(),
+                variant: self.variant,
+                record_bytes,
+                device: t.device,
+                storage: t.storage,
+                server_request_cost: None,
+                ps_mode: None,
+            },
+            AnyTrainer::Ps(t) => JobSpec {
+                cfg: t.cfg.clone(),
+                variant: self.variant,
+                record_bytes,
+                device: t.device,
+                storage: t.storage,
+                server_request_cost: Some(t.server_request_cost),
+                ps_mode: Some(t.mode),
+            },
+        };
         Ok(TrainJob {
             trainer,
             dataset,
             observer: self.observer,
+            spec,
         })
     }
 }
@@ -588,6 +734,7 @@ pub struct TrainJob<'rt> {
     trainer: AnyTrainer<'rt>,
     dataset: Option<DatasetSpec>,
     observer: Option<Box<dyn Observer + 'rt>>,
+    spec: JobSpec,
 }
 
 impl<'rt> TrainJob<'rt> {
@@ -604,6 +751,12 @@ impl<'rt> TrainJob<'rt> {
     /// already forced to the model dims), if one was configured.
     pub fn dataset(&self) -> Option<DatasetSpec> {
         self.dataset
+    }
+
+    /// The cloneable rebuild description of this job (the elastic
+    /// rescale / failure-recovery path; see [`JobSpec`]).
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
     }
 
     /// The job's trainer, architecture-erased.
@@ -879,6 +1032,73 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("ParameterServer"), "{err}");
+    }
+
+    #[test]
+    fn job_spec_rebuilds_at_new_world_sizes() {
+        let job = TrainJob::builder()
+            .gmeta(2, 2)
+            .dims(small_dims())
+            .io_jitter(0.9)
+            .build()
+            .unwrap();
+        let spec = job.spec().clone();
+        assert_eq!(spec.world(), 4);
+
+        // Divisible target: grows by whole nodes, keeping the node shape.
+        let grown = spec.at_world(6).unwrap();
+        assert_eq!(grown.world(), 6);
+        assert_eq!(grown.cfg.cluster.workers_per_node, 2);
+        assert_eq!(grown.cfg.cluster.nodes, 3);
+        // Jitter override survives the rescale.
+        assert_eq!(grown.cfg.cluster.io_jitter, 0.9);
+
+        // Non-divisible target: falls back to single-worker nodes.
+        let odd = spec.at_world(5).unwrap();
+        assert_eq!(odd.world(), 5);
+        assert_eq!(odd.cfg.cluster.workers_per_node, 1);
+
+        assert!(spec.at_world(0).is_err());
+
+        // The rebuilt trainer really runs at the new world size.
+        let mut t = grown.build_trainer().unwrap();
+        assert_eq!(t.cfg().cluster.world_size(), 6);
+        let eps = episodes_from_generator(movielens_like(), &small_dims(), 6, 2);
+        let m = t.run_steps(&eps, 2).unwrap();
+        assert_eq!(m.steps, 2);
+    }
+
+    #[test]
+    fn job_spec_preserves_ps_knobs() {
+        let job = TrainJob::builder()
+            .parameter_server(4, 2)
+            .dims(small_dims())
+            .server_request_cost(2e-3)
+            .build()
+            .unwrap();
+        let spec = job.spec().clone();
+        assert_eq!(spec.server_request_cost, Some(2e-3));
+        assert_eq!(spec.ps_mode, Some(PsMode::Sync));
+        let grown = spec.at_world(6).unwrap();
+        // Server fleet is part of the spec, not the rescaled worker count.
+        assert_eq!(grown.cfg.cluster.servers, 2);
+        let t = grown.build_trainer().unwrap();
+        assert_eq!(t.cfg().cluster.world_size(), 6);
+        assert!(t.sync_windows());
+    }
+
+    #[test]
+    fn async_ps_reports_async_windows() {
+        let job = TrainJob::builder()
+            .parameter_server(4, 1)
+            .ps_mode(PsMode::Async)
+            .build()
+            .unwrap();
+        assert!(!job.trainer().sync_windows());
+        let sync = TrainJob::builder().parameter_server(4, 1).build().unwrap();
+        assert!(sync.trainer().sync_windows());
+        let gmeta = TrainJob::builder().gmeta(1, 2).build().unwrap();
+        assert!(gmeta.trainer().sync_windows());
     }
 
     #[test]

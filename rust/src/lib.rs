@@ -24,6 +24,11 @@
 //!   checkpoints layered on [`checkpoint`] (with retention GC), and
 //!   versioned publishing with per-version data-ready→servable latency
 //!   accounting — the online loop a production recommender actually runs.
+//!   The loop is elastic and failure-aware ([`stream::elastic`]): scale
+//!   policies resize the cluster between windows through
+//!   [`job::JobSpec`] + checkpoint resharding, and an injected
+//!   [`stream::elastic::FailurePlan`] models mid-window worker death and
+//!   slow-registry publish tails.
 //! - **L2/L1 (build-time Python)** — the Meta-DLRM forward/backward with
 //!   fused MAML inner+outer steps, built on Pallas kernels, AOT-lowered to
 //!   HLO text artifacts loaded by [`runtime`] via PJRT.
@@ -39,6 +44,11 @@
 //! ([`sim`]) charges compute/communication/IO per calibrated device models.
 //! Statistical results (Figure 3) run real numerics through the PJRT
 //! runtime. See DESIGN.md §5.
+//!
+//! A guided tour of the whole system — the layer map, the two update
+//! loops of meta learning, and the delivery-window lifecycle with its
+//! reshard/redo detours — lives in `docs/ARCHITECTURE.md` at the
+//! repository root.
 
 pub mod checkpoint;
 pub mod collectives;
@@ -61,7 +71,7 @@ pub mod stream;
 pub mod util;
 
 pub use config::{Architecture, ClusterSpec, ExperimentConfig};
-pub use job::{Observer, PhaseLog, TrainJob, TrainJobBuilder, Trainer, Variant};
+pub use job::{JobSpec, Observer, PhaseLog, TrainJob, TrainJobBuilder, Trainer, Variant};
 
 /// Crate-wide result alias (anyhow for rich error contexts).
 pub type Result<T> = anyhow::Result<T>;

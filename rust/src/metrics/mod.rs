@@ -7,25 +7,60 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-/// Named training phases (keys into the time breakdown).
+// Named training phases (keys into the [`RunMetrics::phase_time`]
+// breakdown).  Every phase is the *barrier-aligned critical-path*
+// contribution: the slowest worker's seconds for that leg of each
+// iteration, summed over iterations.
+//
+// The first group is charged by the trainers themselves
+// ([`crate::coordinator::GMetaTrainer`] / [`crate::ps::PsTrainer`]); the
+// continuous-delivery group is charged by [`crate::stream::OnlineSession`]
+// around the per-window training runs.
+
+/// Meta-IO ingestion: read + decode of each worker's task batches
+/// (paper §2.2; the Figure-4 I/O ablation toggles this phase's model).
 pub const PHASE_IO: &str = "io";
+/// Embedding prefetch AlltoAll: id requests + row responses for the fused
+/// support∪query lookup (paper §2.1.1, Algorithm 1 line 5).
 pub const PHASE_EMB_EXCHANGE: &str = "emb_exchange";
+/// Local inner + outer loops on the device (Algorithm 1 lines 6–10).
 pub const PHASE_COMPUTE: &str = "compute";
+/// Sparse outer update: positional embedding gradients routed to their
+/// owner shards via AlltoAll (Algorithm 1 line 11).
 pub const PHASE_GRAD_EXCHANGE: &str = "grad_exchange";
+/// Dense outer update: Ring/hierarchical AllReduce of dense gradients
+/// (Algorithm 1 line 12, §2.1.3 reordered rule).
 pub const PHASE_DENSE_ALLREDUCE: &str = "dense_allreduce";
+/// PS baseline only: workers pulling parameters from the server fleet.
 pub const PHASE_PS_PULL: &str = "ps_pull";
+/// PS baseline only: workers pushing gradients back to the servers.
 pub const PHASE_PS_PUSH: &str = "ps_push";
-/// Continuous-delivery phases (the [`crate::stream`] subsystem).
+
+// Continuous-delivery phases (the [`crate::stream`] subsystem).
+
 /// Offline warm-up preprocessing (not part of streamed delivery).
 pub const PHASE_PREPROCESS: &str = "preprocess";
 /// Per-window ingestion leg: incremental append (delta mode) or the
 /// full corpus re-preprocess (full-republish mode).
 pub const PHASE_DELTA_INGEST: &str = "delta_ingest";
+/// Reloading a published checkpoint into a trainer: the full-republish
+/// warm-boot each window, and the recovery leg after a worker failure.
 pub const PHASE_RESTORE: &str = "restore";
+/// Registry upload + version registration (the servable-swap leg).
 pub const PHASE_PUBLISH: &str = "publish";
 /// Delta-checkpoint retention GC (retiring dead chains from the registry).
 pub const PHASE_GC: &str = "gc";
+/// Zero-shot serving check over a window's cold-start tasks.
 pub const PHASE_COLD_EVAL: &str = "cold_eval";
+/// Elastic rescale between windows: capture → checkpoint out → rebuild the
+/// trainer at the new world size → checkpoint in + device-side row
+/// repartition.  This is the reshard latency cliff
+/// ([`crate::stream::elastic`]).
+pub const PHASE_RESHARD: &str = "reshard";
+/// Training time thrown away when a worker died mid-window — the doomed
+/// attempt's seconds up to the failure, before recovery redoes the window
+/// from the last published version ([`crate::stream::elastic::FailurePlan`]).
+pub const PHASE_REDO: &str = "redo";
 
 /// Aggregated result of one training run.
 #[derive(Debug, Clone, Default)]
@@ -129,6 +164,20 @@ pub struct VersionRecord {
     /// Embedding rows shipped (all touched rows for a full snapshot,
     /// changed rows only for a delta).
     pub rows: usize,
+    /// World size of the cluster that trained this version (changes when
+    /// an elastic rescale fires between windows; 0 when untracked).
+    pub world: usize,
+    /// Virtual seconds of the registry upload + registration leg for this
+    /// version, after any slow-registry tail factor — the per-version
+    /// sample behind [`DeliveryMetrics::publish_p99`].
+    pub publish_secs: f64,
+    /// Elastic reshard seconds charged immediately before this version's
+    /// window (0 when the cluster did not rescale).
+    pub reshard_secs: f64,
+    /// Seconds lost to a mid-window worker failure absorbed by this
+    /// version: the doomed attempt's wasted time plus the
+    /// restore-from-last-published recovery (0 for clean windows).
+    pub redo_secs: f64,
     /// Cold-start tasks first seen in this version's delta window.
     pub cold_tasks: Vec<u64>,
     /// Zero-shot AUC of the *previously serving* model over the window's
@@ -194,36 +243,96 @@ impl DeliveryMetrics {
             .flat_map(|v| v.cold_tasks.iter().copied())
             .collect()
     }
+
+    /// Quantile of per-version publish-leg seconds (`q` in `[0, 1]`) —
+    /// p50 vs p99 is how a slow-registry tail shows up in the delivery
+    /// log.  Returns 0 with no versions.
+    pub fn publish_quantile(&self, q: f64) -> f64 {
+        if self.versions.is_empty() {
+            return 0.0;
+        }
+        let mut secs: Vec<f64> = self.versions.iter().map(|v| v.publish_secs).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((secs.len() as f64 * q) as usize).min(secs.len() - 1);
+        secs[idx]
+    }
+
+    /// Median publish-leg seconds across versions.
+    pub fn publish_p50(&self) -> f64 {
+        self.publish_quantile(0.5)
+    }
+
+    /// 99th-percentile publish-leg seconds across versions.
+    pub fn publish_p99(&self) -> f64 {
+        self.publish_quantile(0.99)
+    }
+
+    /// Versions whose window was preceded by an elastic reshard.
+    pub fn reshard_events(&self) -> usize {
+        self.versions.iter().filter(|v| v.reshard_secs > 0.0).count()
+    }
+
+    /// Total virtual seconds spent resharding across the session.
+    pub fn total_reshard_secs(&self) -> f64 {
+        self.versions.iter().map(|v| v.reshard_secs).sum()
+    }
+
+    /// Total virtual seconds lost to mid-window failures (wasted attempt +
+    /// recovery restore) across the session.
+    pub fn total_redo_secs(&self) -> f64 {
+        self.versions.iter().map(|v| v.redo_secs).sum()
+    }
 }
 
 impl fmt::Display for DeliveryMetrics {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "{:>7} {:>6} {:>12} {:>12} {:>10} {:>10} {:>8} {:>5}",
-            "version", "kind", "ready(s)", "published(s)", "latency(s)", "KiB", "rows", "cold"
+            "{:>7} {:>6} {:>5} {:>12} {:>12} {:>10} {:>10} {:>8} {:>5} {:>10} {:>10} {:>10}",
+            "version",
+            "kind",
+            "world",
+            "ready(s)",
+            "published(s)",
+            "latency(s)",
+            "KiB",
+            "rows",
+            "cold",
+            "publish(s)",
+            "reshard(s)",
+            "redo(s)"
         )?;
         for v in &self.versions {
             writeln!(
                 f,
-                "{:>7} {:>6} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>5}",
+                "{:>7} {:>6} {:>5} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>5} {:>10.3} {:>10.3} {:>10.3}",
                 v.version,
                 v.kind,
+                v.world,
                 v.data_ready,
                 v.published,
                 v.latency(),
                 v.bytes as f64 / 1024.0,
                 v.rows,
-                v.cold_tasks.len()
+                v.cold_tasks.len(),
+                v.publish_secs,
+                v.reshard_secs,
+                v.redo_secs
             )?;
         }
         write!(
             f,
-            "mean latency {:.3}s (streamed {:.3}s), max {:.3}s, {:.2} MiB published",
+            "mean latency {:.3}s (streamed {:.3}s), max {:.3}s, {:.2} MiB published, \
+             publish p50/p99 {:.3}/{:.3}s, {} reshard(s) {:.3}s, redo {:.3}s",
             self.mean_latency(),
             self.mean_streamed_latency(),
             self.max_latency(),
-            self.published_bytes() as f64 / (1 << 20) as f64
+            self.published_bytes() as f64 / (1 << 20) as f64,
+            self.publish_p50(),
+            self.publish_p99(),
+            self.reshard_events(),
+            self.total_reshard_secs(),
+            self.total_redo_secs()
         )
     }
 }
@@ -305,6 +414,10 @@ mod tests {
             published,
             bytes,
             rows: 1,
+            world: 4,
+            publish_secs: published - ready,
+            reshard_secs: 0.0,
+            redo_secs: 0.0,
             cold_tasks: vec![],
             zero_shot_auc: None,
         }
@@ -331,6 +444,31 @@ mod tests {
         assert_eq!(d.mean_streamed_latency(), 0.0);
         assert_eq!(d.max_latency(), 0.0);
         assert_eq!(d.published_bytes(), 0);
+        assert_eq!(d.publish_p50(), 0.0);
+        assert_eq!(d.publish_p99(), 0.0);
+        assert_eq!(d.reshard_events(), 0);
+        assert_eq!(d.total_reshard_secs(), 0.0);
+        assert_eq!(d.total_redo_secs(), 0.0);
+    }
+
+    #[test]
+    fn publish_quantiles_and_elastic_totals() {
+        let mut versions: Vec<VersionRecord> =
+            (0..10).map(|i| rec(i, i as f64, i as f64 + 1.0, 10)).collect();
+        // One slow-registry outlier, one reshard, one redo.
+        versions[7].publish_secs = 50.0;
+        versions[3].reshard_secs = 2.5;
+        versions[5].redo_secs = 4.0;
+        let d = DeliveryMetrics {
+            versions,
+            train: RunMetrics::default(),
+        };
+        assert_eq!(d.publish_p50(), 1.0);
+        assert_eq!(d.publish_p99(), 50.0);
+        assert!(d.publish_p99() > d.publish_p50());
+        assert_eq!(d.reshard_events(), 1);
+        assert_eq!(d.total_reshard_secs(), 2.5);
+        assert_eq!(d.total_redo_secs(), 4.0);
     }
 
     #[test]

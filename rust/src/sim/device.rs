@@ -87,6 +87,16 @@ impl DeviceModel {
     pub fn lookup_time(&self, lookups: f64) -> f64 {
         lookups * self.per_lookup
     }
+
+    /// Device-side cost of repartitioning `bytes` of embedding state when
+    /// the cluster is rescaled: every row streams out of the old owner's
+    /// memory and into the new owner's (2× through the memory system),
+    /// plus one kernel-launch-class overhead for the repartition pass.
+    /// The DFS legs of a reshard (checkpoint out, checkpoint in) are
+    /// charged separately by [`super::StorageModel`].
+    pub fn reshard_time(&self, bytes: f64) -> f64 {
+        self.step_overhead + 2.0 * self.mem_time(bytes)
+    }
 }
 
 #[cfg(test)]
@@ -112,5 +122,14 @@ mod tests {
     fn mem_time_linear() {
         let g = DeviceModel::a100();
         assert!((g.mem_time(2e9) - 2.0 * g.mem_time(1e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reshard_streams_bytes_twice() {
+        let g = DeviceModel::a100();
+        let t = g.reshard_time(1e9);
+        assert!((t - (g.step_overhead + 2.0 * g.mem_time(1e9))).abs() < 1e-15);
+        // More state to repartition costs more.
+        assert!(g.reshard_time(2e9) > t);
     }
 }

@@ -14,4 +14,4 @@ pub mod storage;
 
 pub use clock::{Clock, WorkerClocks};
 pub use device::{DeviceModel, DeviceKind};
-pub use storage::{StorageModel, ReadPattern};
+pub use storage::{ReadPattern, StorageModel, TailModel};

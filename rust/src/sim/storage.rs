@@ -116,6 +116,73 @@ impl StorageModel {
     }
 }
 
+/// Deterministic lognormal service-time tail for shared storage / registry
+/// operations.
+///
+/// Shared registries (the model store the serving fleet pulls from) have
+/// heavy-tailed service times: replication hiccups, namenode contention,
+/// compaction stalls.  The mean cost models above capture the *typical*
+/// leg; a [`TailModel`] multiplies it by a per-event lognormal factor so a
+/// stream of operations exhibits the production-shaped p99 ≫ p50 — the
+/// slow-registry failure mode the online delivery loop must absorb.
+///
+/// Draws are a pure function of `(seed, event)`, so a session replays
+/// identically: event `i` always lands the same factor.
+///
+/// ```
+/// use gmeta::sim::TailModel;
+///
+/// let tail = TailModel { sigma: 0.8, seed: 7 };
+/// // Median factor is ~1; individual events can be many times slower.
+/// let f0 = tail.factor(0);
+/// assert!(f0 > 0.0);
+/// assert_eq!(f0, tail.factor(0)); // deterministic per event
+/// // Analytic quantile ratio: p99/p50 = exp(sigma * z_0.99).
+/// assert!(tail.p99_over_p50() > 5.0);
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct TailModel {
+    /// Lognormal sigma of the multiplicative factor (0 disables the tail).
+    pub sigma: f64,
+    /// Stream seed: fixes the whole per-event factor sequence.
+    pub seed: u64,
+}
+
+impl TailModel {
+    /// A tail calibrated so roughly 1-in-100 operations is ~6× the median
+    /// (sigma 0.8) — the shape of shared-DFS publish legs under load.
+    pub fn registry(seed: u64) -> Self {
+        Self { sigma: 0.8, seed }
+    }
+
+    /// Multiplicative service-time factor for operation number `event`
+    /// (median ~1.0; deterministic in `(seed, event)`).
+    pub fn factor(&self, event: u64) -> f64 {
+        if self.sigma <= 0.0 {
+            return 1.0;
+        }
+        // SplitMix64-seeded Box-Muller, same technique as the worker
+        // straggler jitter (`crate::ps::jitter`), on an independent stream.
+        let mut z = self.seed ^ event.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x7A11;
+        let mut next = || {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            let mut x = z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+            (x ^ (x >> 31)) as f64 / u64::MAX as f64
+        };
+        let (u1, u2) = (next().max(1e-12), next());
+        let n = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        (self.sigma * n).exp()
+    }
+
+    /// Analytic p99/p50 ratio of the factor distribution:
+    /// `exp(sigma * z_0.99)` with `z_0.99 ≈ 2.3263`.
+    pub fn p99_over_p50(&self) -> f64 {
+        (self.sigma * 2.326_347_9).exp()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +228,37 @@ mod tests {
         let s = StorageModel::default();
         assert_eq!(s.delete_time(0), 0.0);
         assert!((s.delete_time(6) - 6.0 * s.seek_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_factor_is_deterministic_and_heavy_tailed() {
+        let tail = TailModel { sigma: 0.8, seed: 42 };
+        let draws: Vec<f64> = (0..512).map(|e| tail.factor(e)).collect();
+        for (e, d) in draws.iter().enumerate() {
+            assert!(*d > 0.0);
+            assert_eq!(*d, tail.factor(e as u64), "event {e} not deterministic");
+        }
+        let mut sorted = draws.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = sorted[sorted.len() / 2];
+        let p99 = sorted[sorted.len() * 99 / 100];
+        // Empirical tail within a loose band of the analytic ratio.
+        assert!(
+            p99 / p50 > 2.5,
+            "tail too light: p50={p50} p99={p99} (analytic {})",
+            tail.p99_over_p50()
+        );
+        // Median of a lognormal(0, sigma) factor is ~1.
+        assert!(p50 > 0.5 && p50 < 2.0, "median factor off: {p50}");
+    }
+
+    #[test]
+    fn zero_sigma_tail_is_inert() {
+        let tail = TailModel { sigma: 0.0, seed: 1 };
+        for e in 0..16 {
+            assert_eq!(tail.factor(e), 1.0);
+        }
+        assert_eq!(tail.p99_over_p50(), 1.0);
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! Elastic rescaling + failure injection for the online delivery loop.
+//!
+//! The paper's continuous-delivery claim (§3.4) was measured on a live
+//! cluster, and live clusters are neither fixed-size nor failure-free:
+//! the GPU allocation changes between delivery windows, workers die
+//! mid-window, and the shared model registry has a heavy service-time
+//! tail.  This module makes all three first-class in the
+//! [`crate::stream::OnlineSession`] loop:
+//!
+//! * **[`ScalePolicy`]** — a between-windows controller that looks at the
+//!   just-finished window ([`WindowObservation`]) and decides the next
+//!   window's world size.  Two production-shaped implementations:
+//!   [`BacklogPolicy`] (queue-depth heuristic: grow when data waits on
+//!   the trainer) and [`PhaseTimePolicy`] (consumes the
+//!   [`crate::job::Observer`] per-phase stream: grow when training
+//!   utilization of the arrival interval crosses a threshold).
+//!   [`ScheduledPolicy`] scripts exact rescale points for tests and
+//!   reproducible experiments.
+//! * **Rescale mechanics** — the session captures trainer state as a
+//!   [`crate::checkpoint::Checkpoint`], rebuilds the trainer at the new
+//!   world size through [`crate::job::JobSpec`], and restores the capture
+//!   (rows reshard on import, `row % new_world`).  The whole detour is
+//!   charged to the virtual clock as [`crate::metrics::PHASE_RESHARD`]
+//!   — the *latency cliff* a reshard costs, visible in the next
+//!   version's delivery latency.
+//! * **[`FailurePlan`]** — injected fault model: a worker dies partway
+//!   through a designated window (the window redoes from the last
+//!   *published* version, charging the wasted attempt as
+//!   [`crate::metrics::PHASE_REDO`]), and a lognormal slow-registry tail
+//!   ([`crate::sim::TailModel`]) stretches individual publish legs so
+//!   per-version publish p99 ≫ p50.
+//!
+//! Recovery and rescale both go through checkpoint restore, so every
+//! path keeps bit-exact state semantics: a session that grows
+//! mid-stream, or dies and redoes a window, publishes byte-identical
+//! model versions to a fixed-size failure-free run over the same sample
+//! stream (pinned by `tests/elastic.rs`).
+//!
+//! ```
+//! use gmeta::stream::elastic::{BacklogPolicy, ScaleDecision, ScalePolicy, WindowObservation};
+//!
+//! // Grow by one worker once data waits more than 60s on the trainer.
+//! let mut policy = BacklogPolicy::new(1, 8);
+//! policy.grow_backlog_secs = Some(60.0);
+//! let busy = WindowObservation {
+//!     window: 0,
+//!     world: 2,
+//!     backlog_secs: 90.0, // the window started 90s after its data landed
+//!     train_secs: 100.0,
+//!     window_secs: 110.0,
+//!     interval: 120.0,
+//!     phases: vec![],
+//! };
+//! assert_eq!(policy.observe(&busy), ScaleDecision::To(3));
+//! ```
+
+use crate::metrics::{
+    PHASE_COMPUTE, PHASE_DENSE_ALLREDUCE, PHASE_EMB_EXCHANGE, PHASE_GRAD_EXCHANGE, PHASE_IO,
+    PHASE_PS_PULL, PHASE_PS_PUSH,
+};
+
+/// What a [`ScalePolicy`] sees after each delivery window.
+#[derive(Debug, Clone)]
+pub struct WindowObservation {
+    /// Stream sequence number of the window (0 = first delta).
+    pub window: usize,
+    /// World size that trained the window.
+    pub world: usize,
+    /// Queueing delay: virtual seconds the window's data sat on the DFS
+    /// before the session could start on it (0 when the pipeline keeps
+    /// up with the arrival cadence).
+    pub backlog_secs: f64,
+    /// Virtual seconds the window spent in the training run.
+    pub train_secs: f64,
+    /// Virtual seconds of the whole window, ingest through publish.
+    pub window_secs: f64,
+    /// Arrival cadence of the delta feed, seconds between drops.
+    pub interval: f64,
+    /// Per-phase `(name, seconds)` pairs of the window's training run —
+    /// the same stream the [`crate::job::Observer`] receives.
+    pub phases: Vec<(String, f64)>,
+}
+
+impl WindowObservation {
+    /// Seconds of the window's training run spent in *trainer* phases
+    /// (I/O, exchanges, compute, PS pull/push) — the busy time an
+    /// observer-driven policy compares against the arrival interval.
+    pub fn busy_secs(&self) -> f64 {
+        const TRAIN_PHASES: [&str; 7] = [
+            PHASE_IO,
+            PHASE_EMB_EXCHANGE,
+            PHASE_COMPUTE,
+            PHASE_GRAD_EXCHANGE,
+            PHASE_DENSE_ALLREDUCE,
+            PHASE_PS_PULL,
+            PHASE_PS_PUSH,
+        ];
+        self.phases
+            .iter()
+            .filter(|(p, _)| TRAIN_PHASES.contains(&p.as_str()))
+            .map(|(_, s)| *s)
+            .sum()
+    }
+}
+
+/// A policy's verdict for the next window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Keep the current world size.
+    Hold,
+    /// Rescale the cluster to this world size before the next window.
+    To(usize),
+}
+
+/// Between-windows elasticity controller.
+///
+/// Attached with [`crate::stream::OnlineSession::with_policy`]; the
+/// session calls [`ScalePolicy::observe`] once per finished window and
+/// rebuilds the trainer (through [`crate::job::JobSpec`] +
+/// [`crate::checkpoint::restore`] resharding) whenever the decision is
+/// [`ScaleDecision::To`] a different world size.
+pub trait ScalePolicy {
+    /// Inspect the finished window, decide the next window's world size.
+    fn observe(&mut self, obs: &WindowObservation) -> ScaleDecision;
+
+    /// Diagnostic name for logs and reports.
+    fn name(&self) -> &'static str {
+        "policy"
+    }
+}
+
+/// Queue-depth heuristic: grow when freshly-arrived data waits on the
+/// trainer, shrink when the pipeline has sustained idle headroom.
+///
+/// The classic production signal — it needs no insight into *why* the
+/// pipeline is slow, only that deltas are queueing.  A cooldown keeps the
+/// cluster from thrashing around the threshold, and shrink requires the
+/// headroom to persist for `shrink_after` consecutive windows.
+#[derive(Debug, Clone)]
+pub struct BacklogPolicy {
+    /// Grow when a window's data waited at least this long.  `None`
+    /// (the default) means one arrival interval's worth of queueing;
+    /// set `Some(f64::INFINITY)` for a shrink-only policy.
+    pub grow_backlog_secs: Option<f64>,
+    /// Shrink when the whole window fits in this fraction of the arrival
+    /// interval (with zero backlog).
+    pub shrink_idle_frac: f64,
+    /// Consecutive idle windows required before shrinking.
+    pub shrink_after: usize,
+    /// Workers added / removed per decision.
+    pub step: usize,
+    /// Windows to hold after a rescale before deciding again (reshards
+    /// are a latency cliff; don't pay one every window).
+    pub cooldown: usize,
+    pub min_world: usize,
+    pub max_world: usize,
+    idle_streak: usize,
+    hold: usize,
+}
+
+impl BacklogPolicy {
+    /// A policy bounded to `[min_world, max_world]` with conservative
+    /// defaults: grow on one interval's worth of backlog, shrink after
+    /// three windows at under half utilization, one-worker steps, one
+    /// window of cooldown.
+    pub fn new(min_world: usize, max_world: usize) -> Self {
+        Self {
+            grow_backlog_secs: None,
+            shrink_idle_frac: 0.5,
+            shrink_after: 3,
+            step: 1,
+            cooldown: 1,
+            min_world: min_world.max(1),
+            max_world: max_world.max(min_world.max(1)),
+            idle_streak: 0,
+            hold: 0,
+        }
+    }
+}
+
+impl ScalePolicy for BacklogPolicy {
+    fn observe(&mut self, obs: &WindowObservation) -> ScaleDecision {
+        if self.hold > 0 {
+            self.hold -= 1;
+            return ScaleDecision::Hold;
+        }
+        // Default threshold: one full arrival interval of queueing.
+        let grow_at = self.grow_backlog_secs.unwrap_or(obs.interval);
+        if obs.backlog_secs >= grow_at && obs.world < self.max_world {
+            self.idle_streak = 0;
+            self.hold = self.cooldown;
+            return ScaleDecision::To((obs.world + self.step).min(self.max_world));
+        }
+        let idle =
+            obs.backlog_secs == 0.0 && obs.window_secs <= self.shrink_idle_frac * obs.interval;
+        if idle {
+            self.idle_streak += 1;
+            if self.idle_streak >= self.shrink_after && obs.world > self.min_world {
+                self.idle_streak = 0;
+                self.hold = self.cooldown;
+                return ScaleDecision::To(
+                    obs.world.saturating_sub(self.step).max(self.min_world),
+                );
+            }
+        } else {
+            self.idle_streak = 0;
+        }
+        ScaleDecision::Hold
+    }
+
+    fn name(&self) -> &'static str {
+        "backlog"
+    }
+}
+
+/// Observer-driven policy: consumes the per-phase times the
+/// [`crate::job::Observer`] sees and compares training *busy time*
+/// ([`WindowObservation::busy_secs`]) against the arrival interval.
+///
+/// Where [`BacklogPolicy`] reacts only after deltas already queue, this
+/// one acts on utilization: a window whose trainer phases consume most of
+/// the interval is about to fall behind even if it hasn't yet — the
+/// ROADMAP's "observer-driven adaptive policies" item.
+#[derive(Debug, Clone)]
+pub struct PhaseTimePolicy {
+    /// Grow when busy/interval exceeds this (e.g. 0.85).
+    pub grow_util: f64,
+    /// Shrink when busy/interval stays under this (e.g. 0.3).
+    pub shrink_util: f64,
+    /// Consecutive low-utilization windows required before shrinking.
+    pub shrink_after: usize,
+    /// Workers added / removed per decision.
+    pub step: usize,
+    /// Windows to hold after a rescale before deciding again.
+    pub cooldown: usize,
+    pub min_world: usize,
+    pub max_world: usize,
+    low_streak: usize,
+    hold: usize,
+}
+
+impl PhaseTimePolicy {
+    pub fn new(min_world: usize, max_world: usize) -> Self {
+        Self {
+            grow_util: 0.85,
+            shrink_util: 0.3,
+            shrink_after: 3,
+            step: 1,
+            cooldown: 1,
+            min_world: min_world.max(1),
+            max_world: max_world.max(min_world.max(1)),
+            low_streak: 0,
+            hold: 0,
+        }
+    }
+}
+
+impl ScalePolicy for PhaseTimePolicy {
+    fn observe(&mut self, obs: &WindowObservation) -> ScaleDecision {
+        if self.hold > 0 {
+            self.hold -= 1;
+            return ScaleDecision::Hold;
+        }
+        if obs.interval <= 0.0 {
+            return ScaleDecision::Hold;
+        }
+        let util = obs.busy_secs() / obs.interval;
+        if util >= self.grow_util && obs.world < self.max_world {
+            self.low_streak = 0;
+            self.hold = self.cooldown;
+            return ScaleDecision::To((obs.world + self.step).min(self.max_world));
+        }
+        if util <= self.shrink_util {
+            self.low_streak += 1;
+            if self.low_streak >= self.shrink_after && obs.world > self.min_world {
+                self.low_streak = 0;
+                self.hold = self.cooldown;
+                return ScaleDecision::To(
+                    obs.world.saturating_sub(self.step).max(self.min_world),
+                );
+            }
+        } else {
+            self.low_streak = 0;
+        }
+        ScaleDecision::Hold
+    }
+
+    fn name(&self) -> &'static str {
+        "phase-time"
+    }
+}
+
+/// Scripted rescales: after window `w` finishes, rescale to the paired
+/// world size.  Deterministic by construction — the policy behind the
+/// bit-exactness tests and reproducible reshard-cliff measurements.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduledPolicy {
+    /// `(after_window, world)` pairs; windows not listed hold.
+    pub schedule: Vec<(usize, usize)>,
+}
+
+impl ScheduledPolicy {
+    pub fn new(schedule: Vec<(usize, usize)>) -> Self {
+        Self { schedule }
+    }
+}
+
+impl ScalePolicy for ScheduledPolicy {
+    fn observe(&mut self, obs: &WindowObservation) -> ScaleDecision {
+        match self.schedule.iter().find(|(w, _)| *w == obs.window) {
+            Some(&(_, world)) => ScaleDecision::To(world),
+            None => ScaleDecision::Hold,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "scheduled"
+    }
+}
+
+/// Injected fault model for one online session.
+///
+/// All fields are plain data so [`crate::stream::OnlineConfig`] stays
+/// `Copy`; the default plan is inert (no failure, no tail).
+#[derive(Debug, Clone, Copy)]
+pub struct FailurePlan {
+    /// Delta window (stream sequence number) during which a worker dies.
+    /// The session charges the doomed attempt's time up to the failure
+    /// point, rebuilds the trainer, restores the last *published* version
+    /// from the registry, and redoes the window — the recovery a
+    /// checkpoint-based production trainer performs.
+    pub kill_at_window: Option<usize>,
+    /// How far through the window's training the failure hits, in
+    /// `(0, 1]` — the wasted fraction of the doomed attempt.
+    pub kill_fraction: f64,
+    /// Lognormal sigma of the slow-registry publish tail (0 disables it);
+    /// see [`crate::sim::TailModel`].
+    pub publish_tail_sigma: f64,
+    /// Seed of the tail's deterministic per-version factor stream.
+    pub tail_seed: u64,
+}
+
+impl Default for FailurePlan {
+    fn default() -> Self {
+        Self {
+            kill_at_window: None,
+            kill_fraction: 0.5,
+            publish_tail_sigma: 0.0,
+            tail_seed: 0xFA11,
+        }
+    }
+}
+
+/// One rescale the session performed, for reports and assertions.
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticEvent {
+    /// Delta window the rescale happened *before*.
+    pub before_window: usize,
+    pub from_world: usize,
+    pub to_world: usize,
+    /// Virtual seconds the reshard detour cost (the latency cliff).
+    pub reshard_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(window: usize, world: usize, backlog: f64, window_secs: f64) -> WindowObservation {
+        WindowObservation {
+            window,
+            world,
+            backlog_secs: backlog,
+            train_secs: window_secs * 0.8,
+            window_secs,
+            interval: 100.0,
+            phases: vec![(PHASE_COMPUTE.to_string(), window_secs * 0.8)],
+        }
+    }
+
+    #[test]
+    fn backlog_policy_grows_on_queueing() {
+        let mut p = BacklogPolicy::new(1, 4);
+        assert_eq!(p.observe(&obs(0, 2, 0.0, 50.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(1, 2, 150.0, 120.0)), ScaleDecision::To(3));
+        // Cooldown: the very next window holds even under backlog.
+        assert_eq!(p.observe(&obs(2, 3, 200.0, 120.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(3, 3, 200.0, 120.0)), ScaleDecision::To(4));
+        // Capped at max_world.
+        assert_eq!(p.observe(&obs(4, 4, 500.0, 120.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(5, 4, 500.0, 120.0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn backlog_policy_shrinks_after_sustained_idle() {
+        let mut p = BacklogPolicy::new(1, 4);
+        p.shrink_after = 2;
+        assert_eq!(p.observe(&obs(0, 3, 0.0, 20.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(1, 3, 0.0, 20.0)), ScaleDecision::To(2));
+        // A busy window resets the idle streak.
+        let mut p = BacklogPolicy::new(1, 4);
+        p.shrink_after = 2;
+        assert_eq!(p.observe(&obs(0, 3, 0.0, 20.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(1, 3, 0.0, 90.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(2, 3, 0.0, 20.0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn infinite_grow_threshold_means_shrink_only() {
+        let mut p = BacklogPolicy::new(1, 4);
+        p.grow_backlog_secs = Some(f64::INFINITY);
+        p.shrink_after = 1;
+        // Unbounded backlog never grows a shrink-only policy…
+        assert_eq!(p.observe(&obs(0, 3, 1e9, 120.0)), ScaleDecision::Hold);
+        // …but idle headroom still shrinks it.
+        assert_eq!(p.observe(&obs(1, 3, 0.0, 10.0)), ScaleDecision::To(2));
+    }
+
+    #[test]
+    fn backlog_policy_respects_min_world() {
+        let mut p = BacklogPolicy::new(2, 4);
+        p.shrink_after = 1;
+        assert_eq!(p.observe(&obs(0, 2, 0.0, 10.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(1, 2, 0.0, 10.0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn phase_time_policy_grows_on_utilization() {
+        let mut p = PhaseTimePolicy::new(1, 8);
+        // busy = 0.8 * window_secs; interval 100 -> util 0.88 at 110s.
+        assert_eq!(p.observe(&obs(0, 2, 0.0, 110.0)), ScaleDecision::To(3));
+        // Cooldown holds, then a quiet stretch shrinks.
+        assert_eq!(p.observe(&obs(1, 3, 0.0, 110.0)), ScaleDecision::Hold);
+        let mut p = PhaseTimePolicy::new(1, 8);
+        p.shrink_after = 2;
+        assert_eq!(p.observe(&obs(0, 3, 0.0, 20.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(1, 3, 0.0, 20.0)), ScaleDecision::To(2));
+    }
+
+    #[test]
+    fn scheduled_policy_fires_exactly_on_schedule() {
+        let mut p = ScheduledPolicy::new(vec![(1, 5), (3, 2)]);
+        assert_eq!(p.observe(&obs(0, 2, 0.0, 10.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(1, 2, 0.0, 10.0)), ScaleDecision::To(5));
+        assert_eq!(p.observe(&obs(2, 5, 0.0, 10.0)), ScaleDecision::Hold);
+        assert_eq!(p.observe(&obs(3, 5, 0.0, 10.0)), ScaleDecision::To(2));
+    }
+
+    #[test]
+    fn busy_secs_sums_only_trainer_phases() {
+        let mut o = obs(0, 2, 0.0, 100.0);
+        o.phases = vec![
+            (PHASE_COMPUTE.to_string(), 10.0),
+            (PHASE_IO.to_string(), 5.0),
+            ("publish".to_string(), 99.0), // session phase: excluded
+        ];
+        assert_eq!(o.busy_secs(), 15.0);
+    }
+
+    #[test]
+    fn default_failure_plan_is_inert() {
+        let f = FailurePlan::default();
+        assert!(f.kill_at_window.is_none());
+        assert_eq!(f.publish_tail_sigma, 0.0);
+    }
+}

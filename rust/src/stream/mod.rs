@@ -26,13 +26,27 @@
 //!   charging every leg to [`crate::sim::Clock`] and recording
 //!   per-version data-ready → model-published latency in
 //!   [`crate::metrics::DeliveryMetrics`].
+//! * [`elastic`] — the cluster is neither fixed-size nor failure-free:
+//!   [`ScalePolicy`] implementations grow/shrink the cluster between
+//!   windows (state resharded through checkpoint restore, the reshard
+//!   charged as a measurable latency cliff), and a [`FailurePlan`]
+//!   injects mid-window worker death (window redone from the last
+//!   published version) and a slow-registry publish tail (p99 ≫ p50).
+//!
+//! See `docs/ARCHITECTURE.md` for the delivery-window lifecycle diagram,
+//! including the reshard and redo detours.
 
 pub mod delta;
 pub mod delta_ckpt;
+pub mod elastic;
 pub mod publisher;
 pub mod session;
 
 pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
 pub use delta_ckpt::{DeltaStore, GcStats, PublishStats, VersionKind, VersionMeta};
+pub use elastic::{
+    BacklogPolicy, ElasticEvent, FailurePlan, PhaseTimePolicy, ScaleDecision, ScalePolicy,
+    ScheduledPolicy, WindowObservation,
+};
 pub use publisher::{PublishMode, PublishModel, Publisher};
 pub use session::{OnlineConfig, OnlineSession};

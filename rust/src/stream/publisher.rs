@@ -18,7 +18,7 @@ use std::path::Path;
 
 use crate::checkpoint::Checkpoint;
 use crate::metrics::VersionRecord;
-use crate::sim::{Clock, StorageModel};
+use crate::sim::{Clock, StorageModel, TailModel};
 use crate::stream::delta_ckpt::{DeltaStore, GcStats, VersionKind};
 use crate::Result;
 
@@ -74,6 +74,14 @@ pub struct Publisher {
     pub last_gc: GcStats,
     /// Virtual seconds the most recent publish spent in the GC pass.
     pub last_gc_secs: f64,
+    /// Slow-registry tail: when set, each version's upload+registration
+    /// seconds are stretched by a deterministic lognormal factor keyed on
+    /// the version number — the production-shaped publish p99 ≫ p50
+    /// ([`crate::stream::elastic::FailurePlan::publish_tail_sigma`]).
+    pub tail: Option<TailModel>,
+    /// Virtual seconds of the most recent publish's upload + registration
+    /// leg (after the tail factor; excludes the GC pass).
+    pub last_publish_secs: f64,
     /// Last published (version, reconstructed state) — the delta base.
     last: Option<(u64, Checkpoint)>,
     next_version: u64,
@@ -95,6 +103,8 @@ impl Publisher {
             storage: StorageModel::default(),
             last_gc: GcStats::default(),
             last_gc_secs: 0.0,
+            tail: None,
+            last_publish_secs: 0.0,
             last: None,
             next_version: 0,
         })
@@ -146,7 +156,12 @@ impl Publisher {
             self.store.publish(version, &ckpt, Some((*parent, prev)))?
         };
         debug_assert_eq!(stats.kind == VersionKind::Full, full);
-        clock.advance(self.publish_secs(stats.bytes));
+        // Mean upload cost, stretched by the slow-registry tail factor
+        // for this version when a tail model is configured.
+        let tail_factor = self.tail.map(|t| t.factor(version)).unwrap_or(1.0);
+        let publish_secs = self.publish_secs(stats.bytes) * tail_factor;
+        self.last_publish_secs = publish_secs;
+        clock.advance(publish_secs);
         // The version is servable the moment the upload registers; the
         // retention pass below is housekeeping that only delays the
         // *next* window.
@@ -171,6 +186,10 @@ impl Publisher {
             published,
             bytes: stats.bytes,
             rows: stats.rows,
+            world: ckpt.world,
+            publish_secs,
+            reshard_secs: 0.0,
+            redo_secs: 0.0,
             cold_tasks: Vec::new(),
             zero_shot_auc: None,
         };
@@ -300,6 +319,61 @@ mod tests {
         let rows: Vec<(u64, f32)> = (0..=6u64).map(|r| (r, r as f32)).collect();
         let rec = p.publish(ckpt(6, &rows), clock.now(), &mut clock).unwrap();
         assert_eq!(rec.kind, "full"); // version 6, compact cadence
+    }
+
+    #[test]
+    fn publish_records_leg_seconds_and_world() {
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::FullRepublish,
+            4,
+            PublishModel::default(),
+        )
+        .unwrap();
+        let mut clock = Clock::new();
+        let rows: Vec<(u64, f32)> = (0..10).map(|r| (r, r as f32)).collect();
+        let rec = p.publish(ckpt(0, &rows), 0.0, &mut clock).unwrap();
+        assert_eq!(rec.world, 2); // the test checkpoint's world
+        assert!((rec.publish_secs - p.publish_secs(rec.bytes)).abs() < 1e-12);
+        assert!((p.last_publish_secs - rec.publish_secs).abs() < 1e-12);
+        assert_eq!(rec.reshard_secs, 0.0);
+        assert_eq!(rec.redo_secs, 0.0);
+    }
+
+    #[test]
+    fn registry_tail_stretches_some_publishes() {
+        let rows: Vec<(u64, f32)> = (0..100).map(|r| (r, r as f32)).collect();
+        let run = |tail: Option<TailModel>| {
+            let tmp = TempDir::new().unwrap();
+            let mut p = Publisher::new(
+                tmp.path(),
+                PublishMode::FullRepublish,
+                4,
+                PublishModel::default(),
+            )
+            .unwrap();
+            p.tail = tail;
+            let mut clock = Clock::new();
+            (0..32u64)
+                .map(|step| {
+                    p.publish(ckpt(step, &rows), clock.now(), &mut clock)
+                        .unwrap()
+                        .publish_secs
+                })
+                .collect::<Vec<f64>>()
+        };
+        let base = run(None);
+        let tailed = run(Some(TailModel { sigma: 0.8, seed: 3 }));
+        assert!(base.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12));
+        // Same bytes per version: every difference is the tail factor.
+        let factors: Vec<f64> = tailed.iter().zip(&base).map(|(t, b)| t / b).collect();
+        let max = factors.iter().cloned().fold(0.0, f64::max);
+        let min = factors.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 2.0, "tail produced no spread: {min}..{max}");
+        // Determinism: the same seed replays the same factors.
+        let replay = run(Some(TailModel { sigma: 0.8, seed: 3 }));
+        assert_eq!(tailed, replay);
     }
 
     #[test]

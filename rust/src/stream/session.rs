@@ -22,6 +22,18 @@
 //! the G-Meta hybrid arm *and* the conventional CPU/PS baseline — the
 //! Table-1 comparison extended to §3.4's operational claim.
 //!
+//! The loop is also **elastic and failure-aware** (the
+//! [`crate::stream::elastic`] layer): a [`ScalePolicy`] attached with
+//! [`OnlineSession::with_policy`] can grow/shrink the cluster between
+//! windows (trainer rebuilt through [`crate::job::JobSpec`], state
+//! resharded via checkpoint restore, the detour charged as
+//! [`PHASE_RESHARD`]), and a [`FailurePlan`] in [`OnlineConfig`] injects
+//! a mid-window worker death (window redone from the last published
+//! version, wasted time charged as [`PHASE_REDO`]) plus a lognormal
+//! slow-registry publish tail.  Async-PS jobs are rejected: an async
+//! capture has in-flight gradients, and its freshness numbers would be
+//! silently wrong.
+//!
 //! The two [`PublishMode`]s differ only in the delivery legs, keeping the
 //! comparison honest: *full-republish* re-runs the whole preprocess over
 //! the accumulated corpus, reloads the previous full snapshot into a
@@ -38,14 +50,17 @@ use std::path::{Path, PathBuf};
 use crate::data::Generator;
 use crate::io::loader::Loader;
 use crate::io::preprocess::{preprocess, DatasetOnDisk};
-use crate::job::{Observer, TrainJob, Trainer};
+use crate::job::{JobSpec, Observer, TrainJob, Trainer};
 use crate::meta::{Episode, Sample, TaskBatch};
 use crate::metrics::{
-    DeliveryMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_GC, PHASE_PREPROCESS,
-    PHASE_PUBLISH, PHASE_RESTORE,
+    DeliveryMetrics, RunMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_GC,
+    PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_RESHARD, PHASE_RESTORE,
 };
-use crate::sim::{Clock, ReadPattern, StorageModel};
+use crate::sim::{Clock, ReadPattern, StorageModel, TailModel};
 use crate::stream::delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig};
+use crate::stream::elastic::{
+    ElasticEvent, FailurePlan, ScaleDecision, ScalePolicy, WindowObservation,
+};
 use crate::stream::publisher::{PublishMode, PublishModel, Publisher};
 use crate::Result;
 
@@ -65,6 +80,15 @@ pub struct OnlineConfig {
     pub retain_fulls: Option<usize>,
     pub publish: PublishModel,
     pub feed: DeltaFeedConfig,
+    /// Injected fault model: mid-window worker death + slow-registry
+    /// publish tail ([`crate::stream::elastic`]).  Inert by default.
+    pub failures: FailurePlan,
+    /// When set, each window trains one pass over its own episodes
+    /// (`ceil(episodes / world)` steps) instead of a fixed
+    /// `steps_per_window` — the data-driven regime where growing the
+    /// cluster genuinely shortens the window.  Off by default (fixed
+    /// step counts keep cross-world bit-exactness comparable).
+    pub data_driven_steps: bool,
     pub seed: u64,
 }
 
@@ -79,6 +103,8 @@ impl Default for OnlineConfig {
             retain_fulls: None,
             publish: PublishModel::default(),
             feed: DeltaFeedConfig::default(),
+            failures: FailurePlan::default(),
+            data_driven_steps: false,
             seed: 0x5EED,
         }
     }
@@ -93,6 +119,18 @@ pub struct OnlineSession<'rt> {
     pub delivery: DeliveryMetrics,
     /// Job observer, kept alive so per-phase hooks fire per window.
     observer: Option<Box<dyn Observer + 'rt>>,
+    /// Rebuild description of the job at the *current* world size — the
+    /// elastic-rescale / failure-recovery trainer factory.
+    spec: JobSpec,
+    /// Elasticity controller consulted between windows (none = fixed).
+    policy: Option<Box<dyn ScalePolicy>>,
+    /// Every rescale performed, in stream order.
+    pub events: Vec<ElasticEvent>,
+    /// What the policy saw after the most recent window.
+    last_obs: Option<WindowObservation>,
+    /// Reshard seconds charged since the last publish (attributed to the
+    /// next version's record).
+    pending_reshard_secs: f64,
     feed: DeltaFeed,
     storage: StorageModel,
     online: OnlineConfig,
@@ -114,6 +152,27 @@ impl<'rt> OnlineSession<'rt> {
     /// the delivery loop between architectures is the job builder's
     /// `architecture(...)` call — nothing here changes.
     pub fn new(job: TrainJob<'rt>, online: OnlineConfig, work_dir: &Path) -> Result<Self> {
+        // Capture semantics gate: an async-PS run has in-flight gradients
+        // whenever a window captures, so the published versions would not
+        // reflect the samples the window "trained on" and every freshness
+        // number downstream would be silently wrong.  Refuse loudly.
+        if !job.trainer().sync_windows() {
+            anyhow::bail!(
+                "OnlineSession requires synchronous window semantics: a delivery \
+                 window captures + publishes right after training, and an async \
+                 parameter-server job (PsMode::Async) still has in-flight gradient \
+                 pushes at capture time — its per-version freshness numbers would \
+                 be silently wrong.  Run the online loop with PsMode::Sync; async \
+                 staleness is modeled by the offline PS harness instead."
+            );
+        }
+        if online.failures.kill_at_window.is_some() && job.trainer().has_runtime() {
+            anyhow::bail!(
+                "failure injection rebuilds the trainer from its JobSpec, which \
+                 never carries a PJRT runtime — run failure experiments on the \
+                 virtual-clock path"
+            );
+        }
         // The job builder already forced the generator's slot structure
         // to the model dims.
         let spec = job.dataset().ok_or_else(|| {
@@ -149,6 +208,15 @@ impl<'rt> OnlineSession<'rt> {
         // trainer's per-step Meta-IO.
         let storage = *job.trainer().storage();
         publisher.storage = storage;
+        // Slow-registry tail: stretch individual publish legs by a
+        // deterministic lognormal factor keyed on the version number.
+        if online.failures.publish_tail_sigma > 0.0 {
+            publisher.tail = Some(TailModel {
+                sigma: online.failures.publish_tail_sigma,
+                seed: online.failures.tail_seed,
+            });
+        }
+        let job_spec = job.spec().clone();
         let (trainer, observer) = job.into_parts();
         Ok(Self {
             trainer,
@@ -157,6 +225,11 @@ impl<'rt> OnlineSession<'rt> {
             publisher,
             delivery: DeliveryMetrics::default(),
             observer,
+            spec: job_spec,
+            policy: None,
+            events: Vec::new(),
+            last_obs: None,
+            pending_reshard_secs: 0.0,
             feed: DeltaFeed::new(spec, online.feed),
             storage,
             online,
@@ -168,16 +241,132 @@ impl<'rt> OnlineSession<'rt> {
         })
     }
 
-    /// Drive the whole session: warm-up, then every delta window.
+    /// Attach an elasticity controller: after every delivery window the
+    /// policy sees a [`WindowObservation`] and may rescale the cluster
+    /// before the next one (trainer rebuilt at the new world size, state
+    /// resharded through checkpoint restore, the detour charged as
+    /// [`PHASE_RESHARD`]).  Refused for real-numerics jobs — rebuilt
+    /// trainers never carry a PJRT runtime.
+    pub fn with_policy(mut self, policy: Box<dyn ScalePolicy>) -> Result<Self> {
+        if self.trainer.has_runtime() {
+            anyhow::bail!(
+                "elastic rescaling rebuilds the trainer from its JobSpec, which \
+                 never carries a PJRT runtime — run elastic experiments on the \
+                 virtual-clock path"
+            );
+        }
+        self.policy = Some(policy);
+        Ok(self)
+    }
+
+    /// World size of the cluster currently training the stream.
+    pub fn world(&self) -> usize {
+        self.trainer.cfg().cluster.world_size()
+    }
+
+    /// Drive the whole session: warm-up, then every delta window, with
+    /// the scale policy (when attached) consulted between windows.
     pub fn run(&mut self) -> Result<&DeliveryMetrics> {
         self.warm_up()?;
         loop {
             let Some(delta) = self.feed.next() else {
                 break;
             };
+            self.consult_policy(delta.seq)?;
             self.window(delta)?;
         }
         Ok(&self.delivery)
+    }
+
+    /// Ask the attached policy (if any) what the last finished window
+    /// implies for the one about to start; rescale when it says so.
+    fn consult_policy(&mut self, next_window: usize) -> Result<()> {
+        let (Some(policy), Some(obs)) = (self.policy.as_mut(), self.last_obs.as_ref()) else {
+            return Ok(());
+        };
+        let decision = policy.observe(obs);
+        if let ScaleDecision::To(world) = decision {
+            if world != self.trainer.cfg().cluster.world_size() {
+                self.rescale_to(world, next_window)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rescale the cluster to `world` workers between windows: capture
+    /// the trainer's state, rebuild it from the [`JobSpec`] at the new
+    /// size, restore the capture (rows reshard on import), and charge the
+    /// whole detour — checkpoint out to the DFS, read back on the new
+    /// allocation, device-side row repartition — as [`PHASE_RESHARD`].
+    /// This is the latency cliff the next version's delivery absorbs.
+    fn rescale_to(&mut self, world: usize, before_window: usize) -> Result<()> {
+        let from_world = self.trainer.cfg().cluster.world_size();
+        let new_spec = self.spec.at_world(world)?;
+        let ckpt = self.trainer.capture(self.step);
+        let bytes = ckpt.payload_bytes() as f64;
+        let t = self.storage.write_time(bytes, true)
+            + self
+                .storage
+                .read_time(1, ckpt.payload_bytes() as usize, 1, ReadPattern::Sequential, true)
+            + self.trainer.device().reshard_time(bytes);
+        let mut fresh = new_spec.build_trainer()?;
+        fresh.restore_from(&ckpt)?;
+        self.trainer = fresh;
+        self.spec = new_spec;
+        self.clock.advance(t);
+        self.delivery.train.add_phase(PHASE_RESHARD, t);
+        self.pending_reshard_secs += t;
+        self.events.push(ElasticEvent {
+            before_window,
+            from_world,
+            to_world: world,
+            reshard_secs: t,
+        });
+        Ok(())
+    }
+
+    /// Mid-window worker death, recovery half: rebuild the trainer and
+    /// restore the last *published* version from the registry — bit-exact
+    /// redo semantics, because the doomed attempt's partial state dies
+    /// with the discarded trainer.  Returns the restore's charged
+    /// seconds.  The doomed attempt itself is never simulated: it starts
+    /// from the same state (the last published version) with the same
+    /// episodes, steps, and seeded jitter as the redo, so its virtual
+    /// duration is *identical* to the redo's by determinism — the caller
+    /// charges `kill_fraction` of the redo run's time as the waste.
+    fn recover_from_published(&mut self) -> Result<f64> {
+        let latest = self
+            .publisher
+            .store
+            .latest()
+            .map(|m| m.version)
+            .ok_or_else(|| anyhow::anyhow!("worker failure before any published version"))?;
+        let ckpt = self.publisher.store.load(latest)?;
+        let t_restore = self.storage.read_time(
+            1,
+            ckpt.payload_bytes() as usize,
+            1,
+            ReadPattern::Sequential,
+            true,
+        );
+        let mut fresh = self.spec.build_trainer()?;
+        fresh.restore_from(&ckpt)?;
+        self.trainer = fresh;
+        self.clock.advance(t_restore);
+        self.delivery.train.add_phase(PHASE_RESTORE, t_restore);
+        Ok(t_restore)
+    }
+
+    /// Meta-steps the upcoming window trains: fixed
+    /// [`OnlineConfig::steps_per_window`], or one pass over the window's
+    /// episodes when [`OnlineConfig::data_driven_steps`] is set.
+    fn window_steps(&self, batches: &[TaskBatch]) -> usize {
+        if !self.online.data_driven_steps {
+            return self.online.steps_per_window;
+        }
+        let world = self.trainer.cfg().cluster.world_size();
+        let episodes = batches.iter().filter(|tb| !tb.samples.is_empty()).count();
+        episodes.div_ceil(world).max(1)
     }
 
     /// Build per-worker episode streams from a window's task batches,
@@ -220,14 +409,15 @@ impl<'rt> OnlineSession<'rt> {
         Ok(m)
     }
 
-    /// Train `steps` on the window's episodes, charging the clock.
-    fn train_window(&mut self, batches: &[TaskBatch], steps: usize) -> Result<()> {
+    /// Train `steps` on the window's episodes, charging the clock;
+    /// returns the run's metrics for the window observation.
+    fn train_window(&mut self, batches: &[TaskBatch], steps: usize) -> Result<RunMetrics> {
         let eps = self.episodes_for_world(batches)?;
         let m = self.run_trainer(&eps, steps)?;
         self.clock.advance(m.virtual_time);
         self.delivery.train.merge(&m);
         self.step += steps as u64;
-        Ok(())
+        Ok(m)
     }
 
     /// Capture + publish the current state; returns the record for the
@@ -237,7 +427,10 @@ impl<'rt> OnlineSession<'rt> {
     fn publish_version(&mut self, data_ready: f64) -> Result<crate::metrics::VersionRecord> {
         let ckpt = self.trainer.capture(self.step);
         let t0 = self.clock.now();
-        let rec = self.publisher.publish(ckpt, data_ready, &mut self.clock)?;
+        let mut rec = self.publisher.publish(ckpt, data_ready, &mut self.clock)?;
+        // The session reports the *cluster* world size (for PS the
+        // checkpoint's own world is the server shard count).
+        rec.world = self.trainer.cfg().cluster.world_size();
         let gc_secs = self.publisher.last_gc_secs;
         self.delivery
             .train
@@ -305,7 +498,11 @@ impl<'rt> OnlineSession<'rt> {
         // The window cannot start before its data lands (if the previous
         // window overran, the clock is already later: queueing delay).
         let data_ready = self.stream_epoch + delta.arrival_ts;
+        // How long the data sat waiting on the trainer — the queue-depth
+        // signal backlog-driven scale policies act on.
+        let backlog_secs = (self.clock.now() - data_ready).max(0.0);
         self.clock.sync_to(data_ready);
+        let window_start = self.clock.now();
         let cold: Vec<u64> = delta
             .tasks()
             .into_iter()
@@ -401,13 +598,48 @@ impl<'rt> OnlineSession<'rt> {
                 .add_phase(PHASE_COLD_EVAL, self.clock.now() - t0);
         }
 
-        // --- Warm-start training on the fresh window. ---
-        self.train_window(&batches, self.online.steps_per_window)?;
+        // --- Warm-start training on the fresh window, with the injected
+        // worker failure (when planned) striking first: restore the last
+        // published version into a fresh trainer, run the window once
+        // (the redo), and charge the doomed attempt's wasted time from
+        // the redo's duration — the two runs are identical by
+        // determinism (see `recover_from_published`), so the failed
+        // attempt is never simulated twice and the job observer sees
+        // exactly one completed run for the window. ---
+        let steps = self.window_steps(&batches);
+        let failed = self.online.failures.kill_at_window == Some(delta.seq);
+        let mut redo_secs = if failed { self.recover_from_published()? } else { 0.0 };
+        let train = self.train_window(&batches, steps)?;
+        if failed {
+            let frac = self.online.failures.kill_fraction.clamp(0.0, 1.0);
+            let wasted = train.virtual_time * frac;
+            self.clock.advance(wasted);
+            self.delivery.train.add_phase(PHASE_REDO, wasted);
+            redo_secs += wasted;
+        }
 
         // --- Capture + publish the version. ---
         let mut rec = self.publish_version(data_ready)?;
+        rec.reshard_secs = std::mem::take(&mut self.pending_reshard_secs);
+        rec.redo_secs = redo_secs;
         rec.cold_tasks = cold;
         rec.zero_shot_auc = zero_shot_auc;
+
+        // What the scale policy gets to see before the next window.
+        self.last_obs = Some(WindowObservation {
+            window: delta.seq,
+            world: rec.world,
+            backlog_secs,
+            train_secs: train.virtual_time,
+            window_secs: self.clock.now() - window_start,
+            interval: self.online.feed.interval,
+            phases: train
+                .phase_time
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        });
+
         self.delivery.versions.push(rec);
         self.seen_tasks.extend(delta.tasks());
         Ok(())
@@ -460,6 +692,7 @@ mod tests {
                 cold_fraction: 0.5,
             },
             seed: 3,
+            ..OnlineConfig::default()
         }
     }
 
@@ -574,6 +807,114 @@ mod tests {
         assert!(phases
             .iter()
             .any(|(p, secs)| p == crate::metrics::PHASE_COMPUTE && *secs > 0.0));
+    }
+
+    #[test]
+    fn async_ps_is_rejected_with_a_clear_error() {
+        let tmp = TempDir::new().unwrap();
+        let job = TrainJob::builder()
+            .parameter_server(2, 1)
+            .ps_mode(crate::ps::PsMode::Async)
+            .dims(crate::config::ModelDims {
+                batch: 8,
+                slots: 4,
+                valency: 2,
+                emb_dim: 8,
+                ..Default::default()
+            })
+            .dataset(movielens_like())
+            .build()
+            .unwrap();
+        let err = OnlineSession::new(job, tiny_online(PublishMode::DeltaRepublish), tmp.path())
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("synchronous"), "{msg}");
+        assert!(msg.contains("PsMode::Sync"), "{msg}");
+    }
+
+    #[test]
+    fn scheduled_rescale_fires_and_charges_the_cliff() {
+        use crate::stream::elastic::ScheduledPolicy;
+        let tmp = TempDir::new().unwrap();
+        let mut s = tiny_session(&tmp, PublishMode::DeltaRepublish);
+        s = s
+            .with_policy(Box::new(ScheduledPolicy::new(vec![(0, 3)])))
+            .unwrap();
+        assert_eq!(s.world(), 2);
+        s.run().unwrap();
+        // The policy saw window 0 and grew before window 1.
+        assert_eq!(s.world(), 3);
+        assert_eq!(s.events.len(), 1);
+        let ev = s.events[0];
+        assert_eq!((ev.from_world, ev.to_world, ev.before_window), (2, 3, 1));
+        assert!(ev.reshard_secs > 0.0);
+        assert!(s.delivery.train.phase(crate::metrics::PHASE_RESHARD) > 0.0);
+        // The cliff lands on the right version record (window 1 = v2).
+        assert_eq!(s.delivery.versions[2].reshard_secs, ev.reshard_secs);
+        assert_eq!(s.delivery.versions[1].world, 2);
+        assert_eq!(s.delivery.versions[2].world, 3);
+        assert_eq!(s.delivery.versions[3].world, 3);
+        // All four versions still published.
+        assert_eq!(s.delivery.versions.len(), 4);
+    }
+
+    #[test]
+    fn worker_failure_redoes_the_window_from_last_published() {
+        let tmp = TempDir::new().unwrap();
+        let mut online = tiny_online(PublishMode::DeltaRepublish);
+        online.failures.kill_at_window = Some(1);
+        let mut s =
+            OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path()).unwrap();
+        s.run().unwrap();
+        assert_eq!(s.delivery.versions.len(), 4);
+        let failed = &s.delivery.versions[2]; // window 1 = version 2
+        assert!(failed.redo_secs > 0.0, "failed window charged no redo");
+        assert!(s.delivery.train.phase(crate::metrics::PHASE_REDO) > 0.0);
+        assert!(s.delivery.train.phase(crate::metrics::PHASE_RESTORE) > 0.0);
+        // Clean windows carry no redo.
+        assert_eq!(s.delivery.versions[1].redo_secs, 0.0);
+        assert_eq!(s.delivery.versions[3].redo_secs, 0.0);
+
+        // The failure cost shows up as extra delivery latency vs the same
+        // stream without the failure.
+        let tmp2 = TempDir::new().unwrap();
+        let mut clean = tiny_session(&tmp2, PublishMode::DeltaRepublish);
+        clean.run().unwrap();
+        assert!(
+            failed.latency() > clean.delivery.versions[2].latency(),
+            "failure did not cost latency: {} !> {}",
+            failed.latency(),
+            clean.delivery.versions[2].latency()
+        );
+    }
+
+    #[test]
+    fn publish_tail_stretches_the_tail_version() {
+        let run = |sigma: f64| {
+            let tmp = TempDir::new().unwrap();
+            let mut online = tiny_online(PublishMode::DeltaRepublish);
+            online.failures.publish_tail_sigma = sigma;
+            let mut s =
+                OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path()).unwrap();
+            s.run().unwrap();
+            s.delivery
+                .versions
+                .iter()
+                .map(|v| v.publish_secs)
+                .collect::<Vec<f64>>()
+        };
+        let base = run(0.0);
+        let tailed = run(1.2);
+        assert_eq!(base.len(), tailed.len());
+        // Same bytes version-for-version: the ratio is the tail factor,
+        // and at sigma 1.2 at least one of 4 versions moves noticeably.
+        let ratios: Vec<f64> = tailed.iter().zip(&base).map(|(t, b)| t / b).collect();
+        assert!(
+            ratios.iter().any(|r| (r - 1.0).abs() > 0.2),
+            "tail factors all ~1: {ratios:?}"
+        );
+        // Determinism.
+        assert_eq!(run(1.2), tailed);
     }
 
     #[test]

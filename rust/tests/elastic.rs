@@ -1,0 +1,223 @@
+//! Elastic rescaling + failure-aware delivery: recovery-path state
+//! semantics pinned end to end.
+//!
+//! The invariant under test: a session that rescales mid-stream (capture
+//! at world W, restore at W±k) or loses a worker mid-window (redo from
+//! the last published version) publishes **bit-identical** model versions
+//! to a fixed-size, failure-free run over the same sample stream.  In
+//! simulation mode the trained state is a deterministic function of the
+//! episodes each window covers, so the step counts below are chosen to
+//! cover every window episode at every tested world size.
+
+use gmeta::config::{Architecture, ModelDims};
+use gmeta::data::movielens_like;
+use gmeta::job::TrainJob;
+use gmeta::stream::{
+    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+};
+use gmeta::util::TempDir;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        batch: 8,
+        slots: 4,
+        valency: 2,
+        emb_dim: 8,
+        hidden1: 16,
+        hidden2: 8,
+        ..Default::default()
+    }
+}
+
+fn job(arch: Architecture, world: usize) -> TrainJob<'static> {
+    let builder = TrainJob::builder().dims(dims()).dataset(movielens_like());
+    match arch {
+        Architecture::GMeta => builder.gmeta(1, world),
+        Architecture::ParameterServer => builder.parameter_server(world, 1),
+    }
+    .build()
+    .unwrap()
+}
+
+fn online() -> OnlineConfig {
+    OnlineConfig {
+        warmup_samples: 800,
+        warmup_steps: 3,
+        // >= ceil(60 samples / smallest world) window episodes: every
+        // worker cycles through its whole per-window stream, so the
+        // touched-row union is world-size-independent (see module doc).
+        steps_per_window: 32,
+        mode: PublishMode::DeltaRepublish,
+        compact_every: 2,
+        feed: DeltaFeedConfig {
+            n_deltas: 3,
+            samples_per_delta: 60,
+            // Far faster than the pipeline: the stream is always
+            // backlogged, so every reshard/redo detour shows up directly
+            // as delivery latency (and trips the backlog policy).
+            interval: 0.05,
+            start_ts: 0.0,
+            cold_start_at: Some(1),
+            cold_fraction: 0.5,
+        },
+        seed: 21,
+        ..OnlineConfig::default()
+    }
+}
+
+fn run_fixed(arch: Architecture, world: usize) -> (TempDir, OnlineSession<'static>) {
+    let tmp = TempDir::new().unwrap();
+    let mut s = OnlineSession::new(job(arch, world), online(), tmp.path()).unwrap();
+    s.run().unwrap();
+    (tmp, s)
+}
+
+fn run_elastic(
+    arch: Architecture,
+    world: usize,
+    schedule: Vec<(usize, usize)>,
+) -> (TempDir, OnlineSession<'static>) {
+    let tmp = TempDir::new().unwrap();
+    let mut s = OnlineSession::new(job(arch, world), online(), tmp.path())
+        .unwrap()
+        .with_policy(Box::new(ScheduledPolicy::new(schedule)))
+        .unwrap();
+    s.run().unwrap();
+    (tmp, s)
+}
+
+/// Every published version of `a` is bit-identical to `b`'s: same kind,
+/// same step counter, same dense bits, same (row, values) pairs.
+fn assert_versions_bit_identical(a: &OnlineSession<'_>, b: &OnlineSession<'_>) {
+    assert_eq!(a.delivery.versions.len(), b.delivery.versions.len());
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    for (va, vb) in a.delivery.versions.iter().zip(&b.delivery.versions) {
+        assert_eq!(va.version, vb.version);
+        assert_eq!(va.kind, vb.kind, "version {} kind differs", va.version);
+        let ca = a.publisher.store.load(va.version).unwrap();
+        let cb = b.publisher.store.load(vb.version).unwrap();
+        assert_eq!(ca.step, cb.step, "version {} step differs", va.version);
+        assert_eq!(
+            bits(&ca.dense),
+            bits(&cb.dense),
+            "version {} dense differs",
+            va.version
+        );
+        assert_eq!(
+            ca.rows.len(),
+            cb.rows.len(),
+            "version {} row count differs",
+            va.version
+        );
+        for ((ra, xa), (rb, xb)) in ca.rows.iter().zip(&cb.rows) {
+            assert_eq!(ra, rb, "version {} row ids diverge", va.version);
+            assert_eq!(
+                bits(xa),
+                bits(xb),
+                "version {} row {ra} differs",
+                va.version
+            );
+        }
+    }
+}
+
+#[test]
+fn grow_mid_stream_publishes_bit_identical_versions() {
+    let (_t1, fixed) = run_fixed(Architecture::GMeta, 2);
+    // Capture at world 2, reshard to world 3 after the first window.
+    let (_t2, elastic) = run_elastic(Architecture::GMeta, 2, vec![(0, 3)]);
+    assert_eq!(elastic.world(), 3);
+    assert_eq!(elastic.events.len(), 1);
+    assert_versions_bit_identical(&elastic, &fixed);
+}
+
+#[test]
+fn shrink_mid_stream_publishes_bit_identical_versions() {
+    let (_t1, fixed) = run_fixed(Architecture::GMeta, 3);
+    // Capture at world 3, reshard down to world 2 after window 1.
+    let (_t2, elastic) = run_elastic(Architecture::GMeta, 3, vec![(1, 2)]);
+    assert_eq!(elastic.world(), 2);
+    assert_versions_bit_identical(&elastic, &fixed);
+}
+
+#[test]
+fn ps_arm_reshards_bit_identically_too() {
+    let (_t1, fixed) = run_fixed(Architecture::ParameterServer, 2);
+    let (_t2, elastic) = run_elastic(Architecture::ParameterServer, 2, vec![(0, 4)]);
+    assert_eq!(elastic.world(), 4);
+    assert_versions_bit_identical(&elastic, &fixed);
+    // The rescale really happened on the PS arm's worker fleet.
+    assert_eq!(elastic.events[0].from_world, 2);
+    assert_eq!(elastic.events[0].to_world, 4);
+}
+
+#[test]
+fn reshard_cliff_lands_on_the_next_versions_latency() {
+    let (_t1, fixed) = run_fixed(Architecture::GMeta, 2);
+    let (_t2, elastic) = run_elastic(Architecture::GMeta, 2, vec![(0, 3)]);
+    let ev = elastic.events[0];
+    assert!(ev.reshard_secs > 0.0);
+    // Window 1 publishes version 2: the record carries the cliff…
+    let v2 = &elastic.delivery.versions[2];
+    assert_eq!(v2.reshard_secs, ev.reshard_secs);
+    assert_eq!(v2.world, 3);
+    // …and, on a backlogged stream, its delivery latency absorbs it.
+    assert!(
+        v2.latency() >= fixed.delivery.versions[2].latency() + ev.reshard_secs * 0.99,
+        "reshard cliff not visible: {} vs {} + {}",
+        v2.latency(),
+        fixed.delivery.versions[2].latency(),
+        ev.reshard_secs
+    );
+    assert!(elastic.delivery.train.phase(gmeta::metrics::PHASE_RESHARD) > 0.0);
+}
+
+#[test]
+fn failure_redo_republishes_bit_identical_versions() {
+    let (_t1, clean) = run_fixed(Architecture::GMeta, 2);
+    let tmp = TempDir::new().unwrap();
+    let mut cfg = online();
+    cfg.failures.kill_at_window = Some(1);
+    let mut failed = OnlineSession::new(job(Architecture::GMeta, 2), cfg, tmp.path()).unwrap();
+    failed.run().unwrap();
+    // Recovery restores the last published version and redoes the window:
+    // the published artifact stream is indistinguishable…
+    assert_versions_bit_identical(&failed, &clean);
+    // …but the failure's cost is visible in the delivery log.
+    let v2 = &failed.delivery.versions[2];
+    assert!(v2.redo_secs > 0.0);
+    assert!(
+        v2.latency() >= clean.delivery.versions[2].latency() + v2.redo_secs * 0.99,
+        "redo cost not visible in latency"
+    );
+}
+
+#[test]
+fn backlog_policy_grows_under_overload() {
+    let tmp = TempDir::new().unwrap();
+    let mut cfg = online();
+    cfg.feed.n_deltas = 4;
+    let mut policy = BacklogPolicy::new(2, 4);
+    policy.cooldown = 0;
+    let mut s = OnlineSession::new(job(Architecture::GMeta, 2), cfg, tmp.path())
+        .unwrap()
+        .with_policy(Box::new(policy))
+        .unwrap();
+    s.run().unwrap();
+    // A 1s cadence against multi-second windows: data queues, the policy
+    // must have grown the cluster at least once.
+    assert!(
+        !s.events.is_empty(),
+        "overloaded stream triggered no grow event"
+    );
+    assert!(s.world() > 2);
+    for ev in &s.events {
+        assert!(ev.to_world > ev.from_world);
+        assert!(ev.reshard_secs > 0.0);
+    }
+    // Versions trained after the first grow record the bigger world.
+    let grown_at = s.events[0].before_window;
+    for v in &s.delivery.versions[grown_at + 1..] {
+        assert!(v.world > 2, "version {} still at world 2", v.version);
+    }
+}
