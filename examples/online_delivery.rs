@@ -33,14 +33,26 @@
 //! version, and a lognormal slow-registry tail stretches some publish
 //! legs (p99 ≫ p50).
 //!
-//! Run: `cargo run --release --example online_delivery [-- --elastic]`
+//! Two delta-minimizing flags (composable with the default comparison):
+//!
+//! * `--dedup` — runs the delta arm under every
+//!   [`gmeta::stream::RowDedup`] policy and prints the bytes the
+//!   bounded fingerprint cache saves over a pipeline with no
+//!   publish-side row state (artifacts stay byte-identical);
+//! * `--partial-reshard` — reshards a rescale by moving only the rows
+//!   whose owner changes, printing the cliff next to the full
+//!   capture-and-restore path.
+//!
+//! Run: `cargo run --release --example online_delivery`
+//!        `[-- --elastic | --dedup | --partial-reshard]`
 
 use gmeta::config::Architecture;
 use gmeta::data::{aliccp_like, movielens_like};
 use gmeta::job::{TrainJob, Variant};
 use gmeta::metrics::DeliveryMetrics;
 use gmeta::stream::{
-    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
+    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, RowDedup,
+    ScheduledPolicy,
 };
 use gmeta::util::args::Args;
 use gmeta::util::TempDir;
@@ -49,7 +61,7 @@ use gmeta::util::TempDir;
 /// online arm — the only line that changes.
 const ARCH: Architecture = Architecture::GMeta;
 
-fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
+fn run_arm_dedup(mode: PublishMode, dedup: RowDedup) -> anyhow::Result<DeliveryMetrics> {
     let tmp = TempDir::new()?;
     let job = TrainJob::builder()
         .architecture(ARCH)
@@ -62,6 +74,7 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
         steps_per_window: 10,
         mode,
         compact_every: 4,
+        dedup,
         retain_fulls: Some(2),
         feed: DeltaFeedConfig {
             n_deltas: 6,
@@ -76,6 +89,109 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
     let mut session = OnlineSession::new(job, online, tmp.path())?;
     session.run()?;
     Ok(session.delivery.clone())
+}
+
+fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
+    run_arm_dedup(mode, RowDedup::Exact)
+}
+
+/// `--dedup`: the same delta stream under all three row-dedup policies —
+/// bytes saved next to the full-vs-delta comparison, artifacts
+/// byte-identical by construction (pinned in tests).
+fn run_dedup_comparison() -> anyhow::Result<()> {
+    println!("\n=== publish-side row dedup (delta arm) ===");
+    let off = run_arm_dedup(PublishMode::DeltaRepublish, RowDedup::Off)?;
+    let fp = run_arm_dedup(
+        PublishMode::DeltaRepublish,
+        RowDedup::Fingerprint { capacity: 1 << 20 },
+    )?;
+    let exact = run_arm_dedup(PublishMode::DeltaRepublish, RowDedup::Exact)?;
+    let mib = |b: u64| b as f64 / (1 << 20) as f64;
+    println!(
+        "  no row state (Off)         : {:>8.2} MiB published",
+        mib(off.published_bytes())
+    );
+    println!(
+        "  fingerprint cache          : {:>8.2} MiB published \
+         ({} rows skipped)",
+        mib(fp.published_bytes()),
+        fp.total_rows_deduped()
+    );
+    println!(
+        "  exact diff (retained state): {:>8.2} MiB published",
+        mib(exact.published_bytes())
+    );
+    let saved = off.published_bytes().saturating_sub(fp.published_bytes());
+    let ratio = off.published_bytes() as f64 / fp.published_bytes() as f64;
+    println!(
+        "  bytes saved by dedup       : {:>8.2} MiB ({ratio:.2}x fewer bytes), \
+         versions byte-identical",
+        mib(saved)
+    );
+    assert_eq!(
+        fp.published_bytes(),
+        exact.published_bytes(),
+        "unevicted fingerprint dedup must match the exact diff"
+    );
+    Ok(())
+}
+
+/// `--partial-reshard`: one scheduled 2→4 rescale charged through the
+/// full capture-and-restore path vs the owner-change-only delta path.
+fn run_partial_reshard_comparison() -> anyhow::Result<()> {
+    println!("\n=== partial (owner-change-only) reshard, grow 2 -> 4 ===");
+    let run = |partial: bool| -> anyhow::Result<gmeta::stream::ElasticEvent> {
+        let tmp = TempDir::new()?;
+        let job = TrainJob::builder()
+            .gmeta(1, 2)
+            .variant(Variant::Maml)
+            .dataset(movielens_like())
+            .build()?;
+        let online = OnlineConfig {
+            warmup_samples: 12_000,
+            warmup_steps: 10,
+            steps_per_window: 10,
+            mode: PublishMode::DeltaRepublish,
+            partial_reshard: partial,
+            feed: DeltaFeedConfig {
+                n_deltas: 3,
+                samples_per_delta: 1024,
+                interval: 0.1,
+                start_ts: 0.0,
+                cold_start_at: None,
+                cold_fraction: 0.0,
+            },
+            ..OnlineConfig::default()
+        };
+        let mut session = OnlineSession::new(job, online, tmp.path())?
+            .with_policy(Box::new(ScheduledPolicy::new(vec![(0, 4)])))?;
+        session.run()?;
+        Ok(session.events[0])
+    };
+    let full = run(false)?;
+    let part = run(true)?;
+    let mib = |b: u64| b as f64 / (1 << 20) as f64;
+    println!(
+        "  full path    : {:.4}s cliff, {:.2} MiB moved (capture out + back via DFS)",
+        full.reshard_secs,
+        mib(full.bytes_moved)
+    );
+    println!(
+        "  partial path : {:.4}s cliff, {:.2} MiB moved owner-to-owner \
+         ({} rows changed owner)",
+        part.reshard_secs,
+        mib(part.bytes_moved),
+        part.moved_rows
+    );
+    println!(
+        "  reshard-cliff delta        : -{:.0}% secs, -{:.0}% bytes, \
+         post-rescale state bit-identical",
+        (1.0 - part.reshard_secs / full.reshard_secs) * 100.0,
+        (1.0 - part.bytes_moved as f64 / full.bytes_moved as f64) * 100.0
+    );
+    assert!(part.reshard_secs < full.reshard_secs);
+    assert!(part.bytes_moved < full.bytes_moved);
+    Ok(())
 }
 
 /// One elastic + failure-aware session: backlogged stream, backlog-driven
@@ -176,7 +292,8 @@ fn run_elastic() -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
-    if Args::from_env()?.flag("elastic") {
+    let args = Args::from_env()?;
+    if args.flag("elastic") {
         return run_elastic();
     }
     println!("=== continuous delivery on a virtual 1x4 GPU cluster ===");
@@ -236,5 +353,12 @@ fn main() -> anyhow::Result<()> {
         "delta-republish must be at least 2x lower latency (got {speedup:.2}x)"
     );
     println!("\nshape check passed: delta-republish >= 2x lower delivery latency.");
+
+    if args.flag("dedup") {
+        run_dedup_comparison()?;
+    }
+    if args.flag("partial-reshard") {
+        run_partial_reshard_comparison()?;
+    }
     Ok(())
 }

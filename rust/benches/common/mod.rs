@@ -4,6 +4,17 @@
 
 use std::time::Instant;
 
+/// Write a bench's machine-readable results next to the working
+/// directory (CI uploads `BENCH_*.json` as artifacts, so the perf
+/// trajectory is tracked across PRs).  Returns the path written.
+#[allow(dead_code)] // each bench binary links common; not all emit JSON
+pub fn write_bench_json(name: &str, doc: &gmeta::util::json::Value) -> std::path::PathBuf {
+    let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, gmeta::util::json::write(doc)).expect("write bench json");
+    println!("\nwrote {}", path.display());
+    path
+}
+
 pub struct BenchStats {
     pub name: String,
     pub iters: usize,

@@ -1,21 +1,57 @@
-//! Bench: continuous-delivery latency — the paper's §3.4 claim that
-//! delta-based delivery shrinks the data-ready→model-published path
-//! (~4× in production).  Runs both pipelines on the same virtual 2×4
-//! cluster and reports per-version latency plus wall-time of the real
-//! delta-ingest and delta-publish legs.
+//! Bench: continuous-delivery latency + publish-side row dedup.
+//!
+//! Part 1 is the paper's §3.4 claim: delta-based delivery shrinks the
+//! data-ready→model-published path (~4× in production).  Runs both
+//! pipelines on the same virtual 2×4 cluster and reports per-version
+//! latency.
+//!
+//! Part 2 is the *bouncy-rows* dedup scenario: every window captures the
+//! whole touched set (the table only grows) but only a small hot subset
+//! actually bit-changes — some rows drifting, some oscillating between
+//! two values.  A pipeline with no publish-side row state must ship
+//! every touched row per delta ([`RowDedup::Off`]); the bounded
+//! fingerprint cache ([`RowDedup::Fingerprint`]) skips the unchanged
+//! ones at O(capacity) memory, and must match the exact-diff bytes when
+//! nothing is evicted — with **byte-identical reconstructed versions**
+//! in all three policies (asserted, including CRC32 checksums over the
+//! reconstructed payloads).
+//!
+//! Results land in `BENCH_delivery.json` (bytes published per policy,
+//! publish p50/p99, dedup hit rate) so the perf trajectory is tracked
+//! across PRs; CI uploads it as an artifact.
 //!
 //! Run: `cargo bench --bench delivery`
+//! CI smoke mode (small sizes, same paths + asserts):
+//! `cargo bench --bench delivery -- --smoke`
 
 mod common;
 
+use gmeta::checkpoint::Checkpoint;
+use gmeta::config::ModelDims;
 use gmeta::data::aliccp_like;
 use gmeta::io::preprocess::preprocess;
 use gmeta::io::Codec;
 use gmeta::job::{TrainJob, Variant};
-use gmeta::stream::{ingest, DeltaFeed, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
+use gmeta::metrics::{DeliveryMetrics, RunMetrics};
+use gmeta::sim::Clock;
+use gmeta::stream::{
+    ingest, DeltaFeed, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, PublishModel,
+    Publisher, RowDedup,
+};
+use gmeta::util::json::{num, obj, s, Value};
 use gmeta::util::TempDir;
 
-fn run_arm(mode: PublishMode) -> anyhow::Result<gmeta::metrics::DeliveryMetrics> {
+struct Scale {
+    warmup_samples: usize,
+    n_deltas: usize,
+    /// Bouncy scenario: total touched rows / hot (changing) rows.
+    touched_rows: usize,
+    hot_rows: usize,
+    windows: usize,
+    bench_iters: usize,
+}
+
+fn run_arm(mode: PublishMode, scale: &Scale) -> anyhow::Result<DeliveryMetrics> {
     let tmp = TempDir::new()?;
     let job = TrainJob::builder()
         .gmeta(2, 4)
@@ -23,13 +59,13 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<gmeta::metrics::DeliveryMetrics>
         .dataset(aliccp_like(40_000))
         .build()?;
     let online = OnlineConfig {
-        warmup_samples: 24_000,
+        warmup_samples: scale.warmup_samples,
         warmup_steps: 12,
         steps_per_window: 6,
         mode,
         compact_every: 4,
         feed: DeltaFeedConfig {
-            n_deltas: 5,
+            n_deltas: scale.n_deltas,
             samples_per_delta: 2048,
             interval: 120.0,
             start_ts: 0.0,
@@ -38,19 +74,144 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<gmeta::metrics::DeliveryMetrics>
         },
         ..OnlineConfig::default()
     };
-    let mut s = OnlineSession::new(job, online, tmp.path())?;
-    s.run()?;
-    Ok(s.delivery.clone())
+    let mut session = OnlineSession::new(job, online, tmp.path())?;
+    session.run()?;
+    Ok(session.delivery.clone())
+}
+
+/// The bouncy-rows state chain: `touched` rows are always present (the
+/// capture exports the whole table); per window only `hot` of them
+/// bit-change — even ids drift, odd ids oscillate A↔B (every hop is a
+/// real change and must ship; the bounce never lets a stale value
+/// through).
+fn bouncy_states(windows: usize, touched: usize, hot: usize, dim: usize) -> Vec<Checkpoint> {
+    let dims = ModelDims {
+        batch: 8,
+        slots: 2,
+        valency: 2,
+        emb_dim: dim,
+        ..Default::default()
+    };
+    (0..windows as u64)
+        .map(|w| {
+            let rows: Vec<(u64, Vec<f32>)> = (0..touched as u64)
+                .map(|r| {
+                    let base = r as f32 * 0.25;
+                    let v = if r < hot as u64 {
+                        if r % 2 == 0 {
+                            base + w as f32 // drift
+                        } else if w % 2 == 0 {
+                            base // bounce home…
+                        } else {
+                            -base - 1.0 // …and away
+                        }
+                    } else {
+                        base // cold: never changes after the first full
+                    };
+                    (r, vec![v; dim])
+                })
+                .collect();
+            Checkpoint {
+                step: w + 1,
+                variant: "maml".into(),
+                dims,
+                world: 4,
+                dense: vec![0.5 + w as f32; 32],
+                rows,
+            }
+        })
+        .collect()
+}
+
+/// CRC32 over a checkpoint's reconstructed rows + dense, bit-exact — the
+/// version checksum the smoke assertion compares across dedup policies.
+fn version_checksum(ckpt: &Checkpoint) -> u32 {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&ckpt.step.to_le_bytes());
+    for v in &ckpt.dense {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for (r, vals) in &ckpt.rows {
+        buf.extend_from_slice(&r.to_le_bytes());
+        for v in vals {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    crc32fast::hash(&buf)
+}
+
+struct BouncyResult {
+    published_bytes: u64,
+    publish_p50: f64,
+    publish_p99: f64,
+    rows_deduped: usize,
+    hit_rate: f64,
+    checksums: Vec<u32>,
+}
+
+fn run_bouncy(states: &[Checkpoint], dedup: RowDedup) -> anyhow::Result<BouncyResult> {
+    let tmp = TempDir::new()?;
+    let mut publisher = Publisher::new(
+        tmp.path(),
+        PublishMode::DeltaRepublish,
+        // One leading full, then deltas only: the dedup policies differ
+        // exactly on delta rows.
+        states.len() + 1,
+        PublishModel::default(),
+    )?
+    .with_row_dedup(dedup);
+    let mut clock = Clock::new();
+    let mut delivery = DeliveryMetrics {
+        versions: Vec::new(),
+        train: RunMetrics::default(),
+    };
+    for st in states {
+        let rec = publisher.publish(st.clone(), clock.now(), &mut clock)?;
+        delivery.versions.push(rec);
+    }
+    let checksums = (0..states.len() as u64)
+        .map(|v| Ok(version_checksum(&publisher.store.load(v)?)))
+        .collect::<anyhow::Result<Vec<u32>>>()?;
+    Ok(BouncyResult {
+        published_bytes: delivery.published_bytes(),
+        publish_p50: delivery.publish_p50(),
+        publish_p99: delivery.publish_p99(),
+        rows_deduped: delivery.total_rows_deduped(),
+        hit_rate: publisher.store.dedup().map(|c| c.hit_rate()).unwrap_or(0.0),
+        checksums,
+    })
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = gmeta::util::args::Args::from_env()?;
+    let smoke = args.flag("smoke");
+    let scale = if smoke {
+        Scale {
+            warmup_samples: 4_000,
+            n_deltas: 3,
+            touched_rows: 2_000,
+            hot_rows: 200,
+            windows: 5,
+            bench_iters: 2,
+        }
+    } else {
+        Scale {
+            warmup_samples: 24_000,
+            n_deltas: 5,
+            touched_rows: 20_000,
+            hot_rows: 1_500,
+            windows: 8,
+            bench_iters: 8,
+        }
+    };
+
     println!("=== continuous-delivery latency (virtual-clock measurement) ===\n");
 
     println!("--- full-republish ---");
-    let full = run_arm(PublishMode::FullRepublish)?;
+    let full = run_arm(PublishMode::FullRepublish, &scale)?;
     println!("{full}\n");
     println!("--- delta-republish ---");
-    let delta = run_arm(PublishMode::DeltaRepublish)?;
+    let delta = run_arm(PublishMode::DeltaRepublish, &scale)?;
     println!("{delta}\n");
 
     let speedup = full.mean_streamed_latency() / delta.mean_streamed_latency();
@@ -64,26 +225,113 @@ fn main() -> anyhow::Result<()> {
         "delta-republish must publish fewer bytes"
     );
 
+    println!("\n=== bouncy-rows dedup scenario ===");
+    println!(
+        "({} touched rows per capture, {} hot, {} windows)",
+        scale.touched_rows, scale.hot_rows, scale.windows
+    );
+    let states = bouncy_states(scale.windows, scale.touched_rows, scale.hot_rows, 16);
+    let off = run_bouncy(&states, RowDedup::Off)?;
+    let fp = run_bouncy(&states, RowDedup::Fingerprint { capacity: 1 << 20 })?;
+    let exact = run_bouncy(&states, RowDedup::Exact)?;
+    let ratio = off.published_bytes as f64 / fp.published_bytes as f64;
+    println!(
+        "published bytes: off {:.2} MiB | fingerprint {:.2} MiB | exact {:.2} MiB",
+        off.published_bytes as f64 / (1 << 20) as f64,
+        fp.published_bytes as f64 / (1 << 20) as f64,
+        exact.published_bytes as f64 / (1 << 20) as f64
+    );
+    println!(
+        "dedup cuts published bytes {ratio:.2}x \
+         ({} rows skipped, cache hit rate {:.3})",
+        fp.rows_deduped, fp.hit_rate
+    );
+    println!(
+        "publish p50/p99: off {:.3}/{:.3}s | fingerprint {:.3}/{:.3}s",
+        off.publish_p50, off.publish_p99, fp.publish_p50, fp.publish_p99
+    );
+    // Dedup never changes published-version checksums: every version
+    // reconstructs byte-identically under all three policies.
+    assert_eq!(fp.checksums, off.checksums, "dedup changed a published version");
+    assert_eq!(fp.checksums, exact.checksums, "dedup diverged from the exact diff");
+    assert!(
+        ratio >= 2.0,
+        "dedup must cut published bytes >= 2x on the bouncy scenario (got {ratio:.2}x)"
+    );
+    assert_eq!(
+        fp.published_bytes, exact.published_bytes,
+        "unevicted fingerprint dedup must match the exact diff byte-for-byte"
+    );
+
+    let doc = obj(vec![
+        (
+            "delivery",
+            obj(vec![
+                ("full_mean_streamed_latency_s", num(full.mean_streamed_latency())),
+                ("delta_mean_streamed_latency_s", num(delta.mean_streamed_latency())),
+                ("latency_speedup", num(speedup)),
+                ("full_published_bytes", num(full.published_bytes() as f64)),
+                ("delta_published_bytes", num(delta.published_bytes() as f64)),
+                ("full_publish_p50_s", num(full.publish_p50())),
+                ("full_publish_p99_s", num(full.publish_p99())),
+                ("delta_publish_p50_s", num(delta.publish_p50())),
+                ("delta_publish_p99_s", num(delta.publish_p99())),
+            ]),
+        ),
+        (
+            "bouncy_dedup",
+            obj(vec![
+                ("windows", num(scale.windows as f64)),
+                ("touched_rows", num(scale.touched_rows as f64)),
+                ("hot_rows", num(scale.hot_rows as f64)),
+                ("off_published_bytes", num(off.published_bytes as f64)),
+                ("fingerprint_published_bytes", num(fp.published_bytes as f64)),
+                ("exact_published_bytes", num(exact.published_bytes as f64)),
+                ("bytes_ratio_off_over_fingerprint", num(ratio)),
+                ("rows_deduped", num(fp.rows_deduped as f64)),
+                ("dedup_hit_rate", num(fp.hit_rate)),
+                ("off_publish_p50_s", num(off.publish_p50)),
+                ("off_publish_p99_s", num(off.publish_p99)),
+                ("fingerprint_publish_p50_s", num(fp.publish_p50)),
+                ("fingerprint_publish_p99_s", num(fp.publish_p99)),
+                ("checksums_identical", Value::Bool(true)),
+            ]),
+        ),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+    ]);
+    common::write_bench_json("delivery", &doc);
+
+    if smoke {
+        println!("\nsmoke mode: skipping wall-time microbenches");
+        return Ok(());
+    }
+
     println!("\n=== wall-time of the real delivery legs ===");
     let spec = aliccp_like(20_000);
-    common::bench("delta ingest (2048 samples, append+readback)", 1, 8, || {
-        let tmp = TempDir::new().unwrap();
-        let base = gmeta::data::Generator::new(spec).take(4_000);
-        let mut ds = preprocess(base, 256, Codec::Binary, tmp.path(), "bench", Some(1)).unwrap();
-        let delta = DeltaFeed::new(
-            spec,
-            DeltaFeedConfig {
-                n_deltas: 1,
-                samples_per_delta: 2048,
-                interval: 1.0,
-                start_ts: 0.0,
-                cold_start_at: None,
-                cold_fraction: 0.0,
-            },
-        )
-        .next()
-        .unwrap();
-        ingest(&mut ds, &delta, &gmeta::sim::StorageModel::default(), Some(2)).unwrap();
-    });
+    common::bench(
+        "delta ingest (2048 samples, append+readback)",
+        1,
+        scale.bench_iters,
+        || {
+            let tmp = TempDir::new().unwrap();
+            let base = gmeta::data::Generator::new(spec).take(4_000);
+            let mut ds =
+                preprocess(base, 256, Codec::Binary, tmp.path(), "bench", Some(1)).unwrap();
+            let delta = DeltaFeed::new(
+                spec,
+                DeltaFeedConfig {
+                    n_deltas: 1,
+                    samples_per_delta: 2048,
+                    interval: 1.0,
+                    start_ts: 0.0,
+                    cold_start_at: None,
+                    cold_fraction: 0.0,
+                },
+            )
+            .next()
+            .unwrap();
+            ingest(&mut ds, &delta, &gmeta::sim::StorageModel::default(), Some(2)).unwrap();
+        },
+    );
     Ok(())
 }

@@ -1,11 +1,18 @@
 //! Bench: elastic rescaling + failure-aware delivery.
 //!
 //! Measures (on the virtual clock) what the elasticity layer costs and
-//! buys: the reshard latency cliff per grow size, delivery latency of a
-//! backlogged stream with and without a backlog-driven scale policy, the
-//! mid-window failure redo cost, and the publish p50/p99 spread under a
+//! buys: the reshard latency cliff per grow size — on both the *full*
+//! capture-and-restore path and the *partial* (owner-change-only) path,
+//! including the W=8→12 pair — delivery latency of a backlogged stream
+//! with and without a backlog-driven scale policy, the mid-window
+//! failure redo cost, and the publish p50/p99 spread under a
 //! slow-registry tail — plus the real wall time of the capture → rebuild
 //! → restore reshard round trip.
+//!
+//! Results land in `BENCH_elastic.json` (reshard secs/bytes per world
+//! pair for both paths, reduction ratios, backlog/failure/tail numbers)
+//! so the perf trajectory is tracked across PRs; CI uploads it as an
+//! artifact.
 //!
 //! Run: `cargo bench --bench elastic`
 //! CI smoke mode (small sizes, same paths): `cargo bench --bench elastic -- --smoke`
@@ -16,9 +23,11 @@ use gmeta::config::ModelDims;
 use gmeta::data::aliccp_like;
 use gmeta::job::{TrainJob, Trainer};
 use gmeta::stream::{
-    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+    BacklogPolicy, DeltaFeedConfig, ElasticEvent, OnlineConfig, OnlineSession, PublishMode,
+    ScheduledPolicy,
 };
 use gmeta::util::args::Args;
+use gmeta::util::json::{num, obj, s, Value};
 use gmeta::util::TempDir;
 
 struct Scale {
@@ -69,9 +78,26 @@ fn online(scale: &Scale) -> OnlineConfig {
     }
 }
 
+/// One scheduled rescale w → w_prime; returns the reshard event.
+fn reshard_event(
+    scale: &Scale,
+    w: usize,
+    w_prime: usize,
+    partial: bool,
+) -> anyhow::Result<ElasticEvent> {
+    let tmp = TempDir::new()?;
+    let mut cfg = online(scale);
+    cfg.partial_reshard = partial;
+    let mut session = OnlineSession::new(job(w), cfg, tmp.path())?
+        .with_policy(Box::new(ScheduledPolicy::new(vec![(0, w_prime)])))?;
+    session.run()?;
+    Ok(session.events[0])
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let scale = if args.flag("smoke") {
+    let smoke = args.flag("smoke");
+    let scale = if smoke {
         Scale {
             warmup_samples: 2_000,
             samples_per_delta: 256,
@@ -103,6 +129,51 @@ fn main() -> anyhow::Result<()> {
             s.delivery.versions[2].latency()
         );
         assert!(ev.reshard_secs > 0.0);
+    }
+
+    println!("\n=== partial (owner-change-only) vs full reshard ===");
+    let mut pair_docs = Vec::new();
+    for &(w, wp) in &[(2usize, 3usize), (4, 6), (8, 12)] {
+        let full = reshard_event(&scale, w, wp, false)?;
+        let part = reshard_event(&scale, w, wp, true)?;
+        assert!(!full.partial && part.partial);
+        let secs_reduction = 1.0 - part.reshard_secs / full.reshard_secs;
+        let bytes_reduction = 1.0 - part.bytes_moved as f64 / full.bytes_moved as f64;
+        println!(
+            "{w:>2} -> {wp:<2}: full {:.4}s / {:.2} MiB | partial {:.4}s / {:.2} MiB \
+             ({} rows changed owner) | -{:.0}% secs, -{:.0}% bytes",
+            full.reshard_secs,
+            full.bytes_moved as f64 / (1 << 20) as f64,
+            part.reshard_secs,
+            part.bytes_moved as f64 / (1 << 20) as f64,
+            part.moved_rows,
+            secs_reduction * 100.0,
+            bytes_reduction * 100.0
+        );
+        if (w, wp) == (8, 12) {
+            assert!(
+                secs_reduction >= 0.5,
+                "partial reshard must halve PHASE_RESHARD secs at 8->12 \
+                 (got -{:.0}%)",
+                secs_reduction * 100.0
+            );
+            assert!(
+                bytes_reduction >= 0.5,
+                "partial reshard must halve bytes moved at 8->12 (got -{:.0}%)",
+                bytes_reduction * 100.0
+            );
+        }
+        pair_docs.push(obj(vec![
+            ("from_world", num(w as f64)),
+            ("to_world", num(wp as f64)),
+            ("full_reshard_secs", num(full.reshard_secs)),
+            ("full_bytes_moved", num(full.bytes_moved as f64)),
+            ("partial_reshard_secs", num(part.reshard_secs)),
+            ("partial_bytes_moved", num(part.bytes_moved as f64)),
+            ("moved_rows", num(part.moved_rows as f64)),
+            ("secs_reduction", num(secs_reduction)),
+            ("bytes_reduction", num(bytes_reduction)),
+        ]));
     }
 
     println!("\n=== backlogged stream: fixed cluster vs backlog policy ===");
@@ -146,8 +217,11 @@ fn main() -> anyhow::Result<()> {
         fixed.versions[2].latency()
     );
     assert!(v.redo_secs > 0.0);
+    let redo_secs = v.redo_secs;
 
     println!("\n=== slow-registry tail: publish p50 vs p99 ===");
+    let mut tail_p50 = 0.0;
+    let mut tail_p99 = 0.0;
     for sigma in [0.0f64, 0.8] {
         let mut cfg = online(&scale);
         cfg.failures.publish_tail_sigma = sigma;
@@ -159,7 +233,44 @@ fn main() -> anyhow::Result<()> {
             s.delivery.publish_p50(),
             s.delivery.publish_p99()
         );
+        if sigma > 0.0 {
+            tail_p50 = s.delivery.publish_p50();
+            tail_p99 = s.delivery.publish_p99();
+        }
     }
+
+    let doc = obj(vec![
+        ("reshard_pairs", Value::Arr(pair_docs)),
+        (
+            "backlog",
+            obj(vec![
+                ("fixed_mean_streamed_latency_s", num(fixed.mean_streamed_latency())),
+                (
+                    "policy_mean_streamed_latency_s",
+                    num(elastic_session.delivery.mean_streamed_latency()),
+                ),
+                (
+                    "policy_reshard_events",
+                    num(elastic_session.delivery.reshard_events() as f64),
+                ),
+                (
+                    "policy_total_reshard_secs",
+                    num(elastic_session.delivery.total_reshard_secs()),
+                ),
+            ]),
+        ),
+        ("failure_redo_secs", num(redo_secs)),
+        (
+            "publish_tail",
+            obj(vec![
+                ("sigma", num(0.8)),
+                ("p50_s", num(tail_p50)),
+                ("p99_s", num(tail_p99)),
+            ]),
+        ),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+    ]);
+    common::write_bench_json("elastic", &doc);
 
     println!("\n=== wall time of the real reshard round trip ===");
     // capture -> rebuild at the new world -> restore (rows re-route).

@@ -57,6 +57,42 @@ impl Checkpoint {
             .sum();
         dense + rows
     }
+
+    /// One pass over the table for a `w → w_prime` rescale: the number
+    /// of rows whose owner changes (`row % w != row % w_prime`) and the
+    /// bytes a partial reshard moves for them (owner-changing rows at
+    /// the on-disk stride plus the dense replica the rescaled
+    /// allocation needs) — versus [`Checkpoint::payload_bytes`] out
+    /// *and* back in for the full capture-and-restore path.  Residues
+    /// agree on `gcd(w, w') / max(w, w')` of the id space, so a
+    /// modulo-sharded table moves `1 − gcd(w, w')/max(w, w')` of its
+    /// rows (e.g. 2/3 at 8→12, and also 2/3 on the shrink 3→2).  The
+    /// delta-reshard accounting behind
+    /// [`crate::stream::OnlineConfig::partial_reshard`].
+    pub fn reshard_delta(&self, w: usize, w_prime: usize) -> (usize, u64) {
+        let (w, wp) = (w.max(1) as u64, w_prime.max(1) as u64);
+        let mut moved_rows = 0usize;
+        let mut bytes = self.dense.len() as u64 * 4;
+        for (r, vals) in &self.rows {
+            if r % w != r % wp {
+                moved_rows += 1;
+                bytes += 8 + vals.len() as u64 * 4;
+            }
+        }
+        (moved_rows, bytes)
+    }
+
+    /// Rows whose owner changes on a `w → w_prime` rescale — see
+    /// [`Checkpoint::reshard_delta`].
+    pub fn reshard_moved_rows(&self, w: usize, w_prime: usize) -> usize {
+        self.reshard_delta(w, w_prime).0
+    }
+
+    /// Bytes a partial (owner-change-only) reshard moves on a
+    /// `w → w_prime` rescale — see [`Checkpoint::reshard_delta`].
+    pub fn reshard_delta_bytes(&self, w: usize, w_prime: usize) -> u64 {
+        self.reshard_delta(w, w_prime).1
+    }
 }
 
 pub(crate) fn frame(payload: &[u8]) -> Vec<u8> {
@@ -402,6 +438,34 @@ mod tests {
             + ckpt.rows.len() as u64 * (8 + d.emb_dim as u64 * 4);
         assert_eq!(ckpt.payload_bytes(), want);
         assert!(ckpt.payload_bytes() > 0);
+    }
+
+    #[test]
+    fn reshard_delta_counts_only_owner_changing_rows() {
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(2);
+        let ckpt = capture(1, "maml", &d, &dense, &mut table);
+        let dense_bytes = ckpt.dense.len() as u64 * 4;
+        let row_bytes = 8 + d.emb_dim as u64 * 4;
+
+        // Same world: no row moves, only the dense replica ships.
+        assert_eq!(ckpt.reshard_moved_rows(4, 4), 0);
+        assert_eq!(ckpt.reshard_delta_bytes(4, 4), dense_bytes);
+
+        // Touched rows are 1, 5, 17, 123, 999.  For 2 -> 4, a row stays
+        // iff r % 2 == r % 4, i.e. r % 4 < 2: rows 1, 5, 17 stay; 123
+        // (r%4=3) and 999 (r%4=3) move.
+        assert_eq!(ckpt.reshard_moved_rows(2, 4), 2);
+        assert_eq!(
+            ckpt.reshard_delta_bytes(2, 4),
+            dense_bytes + 2 * row_bytes
+        );
+
+        // The partial path never exceeds the full payload.
+        for wp in 1..9 {
+            assert!(ckpt.reshard_delta_bytes(2, wp) <= ckpt.payload_bytes());
+        }
     }
 
     #[test]

@@ -12,8 +12,37 @@
 //! Eviction: TTL-based (a row expires `ttl` steps after it was cached) +
 //! capacity cap with random-slot eviction (cheap, adequate under Zipf).
 
-use crate::util::fxhash::FxHashMap;
+use std::hash::Hasher as _;
+
+use crate::util::fxhash::{FxHashMap, FxHasher};
 use crate::util::Rng;
+
+/// 96-bit fingerprint of one embedding row's values over the exact bit
+/// pattern: `-0.0` vs `0.0` and different NaN payloads all count as
+/// changes, matching the delta store's publish semantics.  Two
+/// structurally independent digests are combined — FxHash (the same
+/// hot-path hasher the lookup planner and this cache's map use) over
+/// the value bits in the high 64, CRC-32 over the LE bytes in the low
+/// 32 — so a changed row is missed only if *both* collide at once
+/// (~2⁻⁹⁶ per comparison for non-adversarial values; fingerprinting is
+/// inherently probabilistic, unlike the exact diff).
+///
+/// Shared by the publish-side row dedup
+/// ([`crate::stream::DeltaStore::save_delta`]): the store remembers the
+/// fingerprint of each row as last published and skips rows whose
+/// current bytes still match, instead of retaining the whole previous
+/// checkpoint in memory.
+pub fn row_fingerprint(vals: &[f32]) -> u128 {
+    let mut fx = FxHasher::default();
+    // Fold the length in so a truncated row never aliases its prefix.
+    fx.write_u64(vals.len() as u64);
+    let mut crc = crc32fast::Hasher::new();
+    for v in vals {
+        fx.write_u32(v.to_bits());
+        crc.update(&v.to_bits().to_le_bytes());
+    }
+    ((fx.finish() as u128) << 64) | (crc.finalize() as u128)
+}
 
 /// One worker's row cache.
 #[derive(Debug, Clone)]
@@ -183,6 +212,19 @@ mod tests {
         assert!(hits[0].is_some() && hits[2].is_some());
         assert!(hits[1].is_none() && hits[3].is_none() && hits[4].is_none());
         assert_eq!(missing, vec![6, 7]); // deduplicated, order-preserved
+    }
+
+    #[test]
+    fn row_fingerprint_is_bit_exact() {
+        let a = row_fingerprint(&[1.0, -0.0, 3.5]);
+        assert_eq!(a, row_fingerprint(&[1.0, -0.0, 3.5]));
+        // Bit-level changes move the fingerprint: -0.0 vs 0.0, NaN
+        // payloads, and plain value changes all count.
+        assert_ne!(a, row_fingerprint(&[1.0, 0.0, 3.5]));
+        assert_ne!(a, row_fingerprint(&[1.0, -0.0, 3.5 + 1e-6]));
+        // Length is folded in: a prefix never aliases the full row.
+        assert_ne!(row_fingerprint(&[1.0]), row_fingerprint(&[1.0, 0.0]));
+        assert_ne!(row_fingerprint(&[]), row_fingerprint(&[0.0]));
     }
 
     #[test]

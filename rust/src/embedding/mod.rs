@@ -19,7 +19,7 @@
 pub mod cache;
 pub mod plan;
 
-pub use cache::RowCache;
+pub use cache::{row_fingerprint, RowCache};
 pub use plan::{build_overlap, LookupPlan, WorkerLookup};
 
 use crate::util::fxhash::FxHashMap;

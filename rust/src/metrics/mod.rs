@@ -164,6 +164,10 @@ pub struct VersionRecord {
     /// Embedding rows shipped (all touched rows for a full snapshot,
     /// changed rows only for a delta).
     pub rows: usize,
+    /// Rows the publish-side dedup cache skipped because their bytes
+    /// still matched the last-published fingerprint
+    /// ([`crate::stream::RowDedup::Fingerprint`]; 0 otherwise).
+    pub rows_deduped: usize,
     /// World size of the cluster that trained this version (changes when
     /// an elastic rescale fires between windows; 0 when untracked).
     pub world: usize,
@@ -174,6 +178,12 @@ pub struct VersionRecord {
     /// Elastic reshard seconds charged immediately before this version's
     /// window (0 when the cluster did not rescale).
     pub reshard_secs: f64,
+    /// Bytes of model state the reshard moved: the full path streams the
+    /// whole capture out to the DFS and back (2× payload); the partial
+    /// path moves only the owner-changing rows + dense replica
+    /// ([`crate::checkpoint::Checkpoint::reshard_delta_bytes`]).  0 when
+    /// no rescale preceded this version's window.
+    pub reshard_bytes: u64,
     /// Seconds lost to a mid-window worker failure absorbed by this
     /// version: the doomed attempt's wasted time plus the
     /// restore-from-last-published recovery (0 for clean windows).
@@ -277,6 +287,16 @@ impl DeliveryMetrics {
         self.versions.iter().map(|v| v.reshard_secs).sum()
     }
 
+    /// Total bytes of model state reshards moved across the session.
+    pub fn total_reshard_bytes(&self) -> u64 {
+        self.versions.iter().map(|v| v.reshard_bytes).sum()
+    }
+
+    /// Total rows the publish-side dedup skipped across all versions.
+    pub fn total_rows_deduped(&self) -> usize {
+        self.versions.iter().map(|v| v.rows_deduped).sum()
+    }
+
     /// Total virtual seconds lost to mid-window failures (wasted attempt +
     /// recovery restore) across the session.
     pub fn total_redo_secs(&self) -> f64 {
@@ -288,7 +308,7 @@ impl fmt::Display for DeliveryMetrics {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "{:>7} {:>6} {:>5} {:>12} {:>12} {:>10} {:>10} {:>8} {:>5} {:>10} {:>10} {:>10}",
+            "{:>7} {:>6} {:>5} {:>12} {:>12} {:>10} {:>10} {:>8} {:>8} {:>5} {:>10} {:>10} {:>10}",
             "version",
             "kind",
             "world",
@@ -297,6 +317,7 @@ impl fmt::Display for DeliveryMetrics {
             "latency(s)",
             "KiB",
             "rows",
+            "deduped",
             "cold",
             "publish(s)",
             "reshard(s)",
@@ -305,7 +326,7 @@ impl fmt::Display for DeliveryMetrics {
         for v in &self.versions {
             writeln!(
                 f,
-                "{:>7} {:>6} {:>5} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>5} {:>10.3} {:>10.3} {:>10.3}",
+                "{:>7} {:>6} {:>5} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>8} {:>5} {:>10.3} {:>10.3} {:>10.3}",
                 v.version,
                 v.kind,
                 v.world,
@@ -314,6 +335,7 @@ impl fmt::Display for DeliveryMetrics {
                 v.latency(),
                 v.bytes as f64 / 1024.0,
                 v.rows,
+                v.rows_deduped,
                 v.cold_tasks.len(),
                 v.publish_secs,
                 v.reshard_secs,
@@ -322,16 +344,19 @@ impl fmt::Display for DeliveryMetrics {
         }
         write!(
             f,
-            "mean latency {:.3}s (streamed {:.3}s), max {:.3}s, {:.2} MiB published, \
-             publish p50/p99 {:.3}/{:.3}s, {} reshard(s) {:.3}s, redo {:.3}s",
+            "mean latency {:.3}s (streamed {:.3}s), max {:.3}s, {:.2} MiB published \
+             ({} rows deduped), publish p50/p99 {:.3}/{:.3}s, {} reshard(s) {:.3}s \
+             moving {:.2} MiB, redo {:.3}s",
             self.mean_latency(),
             self.mean_streamed_latency(),
             self.max_latency(),
             self.published_bytes() as f64 / (1 << 20) as f64,
+            self.total_rows_deduped(),
             self.publish_p50(),
             self.publish_p99(),
             self.reshard_events(),
             self.total_reshard_secs(),
+            self.total_reshard_bytes() as f64 / (1 << 20) as f64,
             self.total_redo_secs()
         )
     }
@@ -414,9 +439,11 @@ mod tests {
             published,
             bytes,
             rows: 1,
+            rows_deduped: 0,
             world: 4,
             publish_secs: published - ready,
             reshard_secs: 0.0,
+            reshard_bytes: 0,
             redo_secs: 0.0,
             cold_tasks: vec![],
             zero_shot_auc: None,
@@ -448,17 +475,22 @@ mod tests {
         assert_eq!(d.publish_p99(), 0.0);
         assert_eq!(d.reshard_events(), 0);
         assert_eq!(d.total_reshard_secs(), 0.0);
+        assert_eq!(d.total_reshard_bytes(), 0);
         assert_eq!(d.total_redo_secs(), 0.0);
+        assert_eq!(d.total_rows_deduped(), 0);
     }
 
     #[test]
     fn publish_quantiles_and_elastic_totals() {
         let mut versions: Vec<VersionRecord> =
             (0..10).map(|i| rec(i, i as f64, i as f64 + 1.0, 10)).collect();
-        // One slow-registry outlier, one reshard, one redo.
+        // One slow-registry outlier, one reshard, one redo, some dedup.
         versions[7].publish_secs = 50.0;
         versions[3].reshard_secs = 2.5;
+        versions[3].reshard_bytes = 1000;
         versions[5].redo_secs = 4.0;
+        versions[2].rows_deduped = 7;
+        versions[6].rows_deduped = 5;
         let d = DeliveryMetrics {
             versions,
             train: RunMetrics::default(),
@@ -468,7 +500,9 @@ mod tests {
         assert!(d.publish_p99() > d.publish_p50());
         assert_eq!(d.reshard_events(), 1);
         assert_eq!(d.total_reshard_secs(), 2.5);
+        assert_eq!(d.total_reshard_bytes(), 1000);
         assert_eq!(d.total_redo_secs(), 4.0);
+        assert_eq!(d.total_rows_deduped(), 12);
     }
 
     #[test]

@@ -94,6 +94,12 @@ impl DeviceModel {
     /// plus one kernel-launch-class overhead for the repartition pass.
     /// The DFS legs of a reshard (checkpoint out, checkpoint in) are
     /// charged separately by [`super::StorageModel`].
+    ///
+    /// Pass the whole capture's payload for a full reshard, or only the
+    /// owner-changing rows
+    /// ([`crate::checkpoint::Checkpoint::reshard_delta_bytes`]) for the
+    /// partial path — rows that keep their owner never leave their
+    /// shard's memory.
     pub fn reshard_time(&self, bytes: f64) -> f64 {
         self.step_overhead + 2.0 * self.mem_time(bytes)
     }

@@ -114,6 +114,24 @@ impl StorageModel {
     pub fn delete_time(&self, files: usize) -> f64 {
         files as f64 * self.seek_time
     }
+
+    /// Seconds for `streams` workers to read `disk_bytes` total in
+    /// parallel, one contiguous extent each: the critical path is one
+    /// positioning seek plus the largest per-stream share through the
+    /// per-worker stream bandwidth (`seq_bw` is a *per-stream* rate on
+    /// the shared DFS — the same convention the Meta-IO loader charges
+    /// per worker), plus that share's binary decode.
+    ///
+    /// This is the partial-reshard registry leg: the rescaled
+    /// allocation's workers pull the dense replica from the latest
+    /// published version, all streams in flight at once — unlike the
+    /// full path's single checkpoint stream (owner-changing embedding
+    /// rows move owner-to-owner through device memory instead, see
+    /// [`super::DeviceModel::reshard_time`]).
+    pub fn parallel_read_time(&self, disk_bytes: f64, streams: usize) -> f64 {
+        let share = disk_bytes / streams.max(1) as f64;
+        self.seek_time + share / self.seq_bw + share * self.binary_decode
+    }
 }
 
 /// Deterministic lognormal service-time tail for shared storage / registry
@@ -228,6 +246,21 @@ mod tests {
         let s = StorageModel::default();
         assert_eq!(s.delete_time(0), 0.0);
         assert!((s.delete_time(6) - 6.0 * s.seek_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_read_splits_the_stream() {
+        let s = StorageModel::default();
+        let one = s.parallel_read_time(8e8, 1);
+        let eight = s.parallel_read_time(8e8, 8);
+        // Eight parallel streams read an eighth each: everything past
+        // the shared positioning seek shrinks 8x.
+        assert!(((one - s.seek_time) - 8.0 * (eight - s.seek_time)).abs() < 1e-9);
+        // One stream matches the sequential single-extent read model.
+        let seq = s.read_time(1, 8e8 as usize, 1, ReadPattern::Sequential, true);
+        assert!((one - seq).abs() < 1e-9);
+        // Degenerate stream counts are clamped.
+        assert_eq!(s.parallel_read_time(1e6, 0), s.parallel_read_time(1e6, 1));
     }
 
     #[test]

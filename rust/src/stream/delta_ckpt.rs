@@ -21,14 +21,29 @@
 //! equal the full snapshot *bit-for-bit* (property-tested).  Periodic
 //! [`DeltaStore::compact`] rewrites a version in place as a full snapshot,
 //! bounding reconstruction chains without breaking later deltas.
+//!
+//! Two ways to publish a delta:
+//!
+//! * [`DeltaStore::publish`] with an explicit `(parent, state)` — the
+//!   *exact* diff; the caller retains the parent's whole reconstructed
+//!   state (O(table) memory).
+//! * [`DeltaStore::save_delta`] — publish-side row dedup: a bounded
+//!   [`RowFingerprints`] cache remembers each row's last-published
+//!   96-bit fingerprint ([`crate::embedding::row_fingerprint`], FxHash
+//!   ⊕ CRC-32 over the value bits) and skips rows that still match;
+//!   rows the capacity bound evicted conservatively ship.  O(1) memory
+//!   in the table size; reconstruction stays bit-exact up to the
+//!   fingerprint's ~2⁻⁹⁶ collision bound.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::fs;
 use std::path::{Path, PathBuf};
 
 use crate::checkpoint::{
     bytes_to_f32s, dims_from_json, dims_to_json, f32s_to_bytes, frame, unframe, Checkpoint,
 };
+use crate::embedding::row_fingerprint;
+use crate::util::fxhash::FxHashMap;
 use crate::util::json::{self, num, obj, s, Value};
 use crate::Result;
 
@@ -49,11 +64,14 @@ impl VersionKind {
         }
     }
 
-    fn parse(text: &str) -> Result<Self> {
+    /// Parse a manifest/header token, naming the file it came from: a
+    /// corrupt chain must be diagnosable from the message alone, not
+    /// just the bad token.
+    fn parse(text: &str, origin: &Path) -> Result<Self> {
         match text {
             "full" => Ok(VersionKind::Full),
             "delta" => Ok(VersionKind::Delta),
-            other => anyhow::bail!("unknown version kind {other:?}"),
+            other => anyhow::bail!("{}: unknown version kind {other:?}", origin.display()),
         }
     }
 }
@@ -76,6 +94,10 @@ pub struct PublishStats {
     pub bytes: u64,
     /// Embedding rows shipped.
     pub rows: usize,
+    /// Rows [`DeltaStore::save_delta`]'s fingerprint cache skipped
+    /// because they still matched their last-published bytes (0 for
+    /// fulls, exact diffs, and dedup-off deltas).
+    pub rows_deduped: usize,
 }
 
 /// What one [`DeltaStore::gc`] retention pass removed.
@@ -90,11 +112,105 @@ pub struct GcStats {
     pub files_deleted: usize,
 }
 
+/// Bounded cache of last-published row fingerprints — the publish-side
+/// row dedup behind [`DeltaStore::save_delta`].
+///
+/// One entry per row: the [`row_fingerprint`] of the row's values as
+/// last *written* to the store.  A row whose current bytes still match
+/// its cached fingerprint is unchanged in the latest version's
+/// reconstruction, so a delta can skip it; a row evicted from the cache
+/// (capacity bound, FIFO) conservatively ships — shipping an unchanged
+/// row in an overlay is a no-op.  Skipping is fingerprint-based, so it
+/// is probabilistic where the exact diff is not: a changed row is
+/// wrongly skipped only if its old and new values collide in *both* of
+/// the fingerprint's independent digests at once (~2⁻⁹⁶ per
+/// comparison, see [`row_fingerprint`]).  Memory is O(capacity)
+/// (a row id + 96-bit fingerprint per entry) instead of the O(table) a
+/// retained previous checkpoint costs
+/// ([`crate::stream::RowDedup::Exact`]).
+#[derive(Debug, Default)]
+pub struct RowFingerprints {
+    capacity: usize,
+    map: FxHashMap<u64, u128>,
+    /// Insertion order for deterministic FIFO eviction.
+    fifo: VecDeque<u64>,
+    /// Rows a delta skipped because their fingerprint matched.
+    pub hits: u64,
+    /// Rows a delta shipped (absent, evicted, or bit-changed).
+    pub misses: u64,
+}
+
+impl RowFingerprints {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            ..Self::default()
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fraction of delta rows skipped so far (0 before any delta).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Does `vals` still match the row's last-published fingerprint?
+    fn matches(&mut self, row: u64, vals: &[f32]) -> bool {
+        // Only hash when the row is actually tracked: on a cold or
+        // undersized cache most rows miss, and hashing their values
+        // just to discard the result would dominate the pass.
+        let hit = self
+            .map
+            .get(&row)
+            .is_some_and(|fp| *fp == row_fingerprint(vals));
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        hit
+    }
+
+    /// Record `vals` as the row's last-published value, evicting the
+    /// oldest-inserted row when full (deterministic FIFO).
+    fn note(&mut self, row: u64, vals: &[f32]) {
+        if !self.map.contains_key(&row) {
+            if self.map.len() >= self.capacity {
+                if let Some(victim) = self.fifo.pop_front() {
+                    self.map.remove(&victim);
+                }
+            }
+            self.fifo.push_back(row);
+        }
+        self.map.insert(row, row_fingerprint(vals));
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.fifo.clear();
+    }
+}
+
 /// The versioned checkpoint store backing continuous delivery.
 #[derive(Debug)]
 pub struct DeltaStore {
     root: PathBuf,
     versions: Vec<VersionMeta>,
+    /// Publish-side row dedup state (`None` = dedup off: [`DeltaStore::save_delta`]
+    /// ships every row it is handed).
+    fingerprints: Option<RowFingerprints>,
 }
 
 /// Bit-exact row-value equality (f32 `==` would treat -0.0 == 0.0 and
@@ -118,25 +234,46 @@ impl DeltaStore {
         let store = Self {
             root: root.to_path_buf(),
             versions: Vec::new(),
+            fingerprints: None,
         };
         store.save_manifest()?;
         Ok(store)
     }
 
-    /// Open an existing store.
+    /// Open an existing store.  The dedup fingerprint cache starts cold
+    /// (if enabled later, the first delta conservatively ships every row
+    /// it is handed).
     pub fn open(root: &Path) -> Result<Self> {
-        let doc = json::parse(&fs::read_to_string(root.join("versions.json"))?)?;
+        let manifest = root.join("versions.json");
+        let text = fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("cannot read manifest {}: {e}", manifest.display()))?;
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("corrupt manifest {}: {e}", manifest.display()))?;
         let versions = doc
             .field("versions")?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("versions.json: versions is not an array"))?
+            .ok_or_else(|| {
+                anyhow::anyhow!("{}: versions is not an array", manifest.display())
+            })?
             .iter()
-            .map(Self::meta_from_json)
+            .map(|v| Self::meta_from_json(v, &manifest))
             .collect::<Result<Vec<_>>>()?;
         Ok(Self {
             root: root.to_path_buf(),
             versions,
+            fingerprints: None,
         })
+    }
+
+    /// Enable publish-side row dedup for [`DeltaStore::save_delta`]: a
+    /// bounded [`RowFingerprints`] cache of up to `capacity` rows.
+    pub fn enable_dedup(&mut self, capacity: usize) {
+        self.fingerprints = Some(RowFingerprints::new(capacity));
+    }
+
+    /// The dedup cache, when enabled (hit counters for reports).
+    pub fn dedup(&self) -> Option<&RowFingerprints> {
+        self.fingerprints.as_ref()
     }
 
     pub fn versions(&self) -> &[VersionMeta] {
@@ -166,25 +303,25 @@ impl DeltaStore {
         ])
     }
 
-    fn meta_from_json(v: &Value) -> Result<VersionMeta> {
+    fn meta_from_json(v: &Value, origin: &Path) -> Result<VersionMeta> {
         let need_u64 = |k: &str| -> Result<u64> {
-            v.field(k)?
-                .as_u64()
-                .ok_or_else(|| anyhow::anyhow!("version header field {k:?} bad"))
+            v.field(k)?.as_u64().ok_or_else(|| {
+                anyhow::anyhow!("{}: version header field {k:?} bad", origin.display())
+            })
         };
         let parent = match v.field("parent")? {
             Value::Null => None,
-            p => Some(
-                p.as_u64()
-                    .ok_or_else(|| anyhow::anyhow!("version header field \"parent\" bad"))?,
-            ),
+            p => Some(p.as_u64().ok_or_else(|| {
+                anyhow::anyhow!("{}: version header field \"parent\" bad", origin.display())
+            })?),
         };
         Ok(VersionMeta {
             version: need_u64("version")?,
             kind: VersionKind::parse(
-                v.field("kind")?
-                    .as_str()
-                    .ok_or_else(|| anyhow::anyhow!("version header field \"kind\" bad"))?,
+                v.field("kind")?.as_str().ok_or_else(|| {
+                    anyhow::anyhow!("{}: version header field \"kind\" bad", origin.display())
+                })?,
+                origin,
             )?,
             parent,
             step: need_u64("step")?,
@@ -221,16 +358,7 @@ impl DeltaStore {
             .collect()
     }
 
-    /// Publish `cur` as `version`.  With `prev = None` the version is a
-    /// full snapshot; with `prev = Some((parent, state))` it is a delta
-    /// holding only the rows that changed since `state` (which must be
-    /// the reconstructed state of `parent`, an existing version).
-    pub fn publish(
-        &mut self,
-        version: u64,
-        cur: &Checkpoint,
-        prev: Option<(u64, &Checkpoint)>,
-    ) -> Result<PublishStats> {
+    fn check_monotonic(&self, version: u64) -> Result<()> {
         if let Some(latest) = self.latest() {
             if version <= latest.version {
                 anyhow::bail!(
@@ -239,6 +367,36 @@ impl DeltaStore {
                 );
             }
         }
+        Ok(())
+    }
+
+    /// Refresh the dedup cache with the rows a version just wrote: the
+    /// cache invariant is that every entry holds the fingerprint of the
+    /// row's value in the *latest* version's reconstruction, which a
+    /// just-written row always updates.
+    fn note_written_rows(&mut self, rows: &[(u64, Vec<f32>)]) {
+        if let Some(cache) = self.fingerprints.as_mut() {
+            for (row, vals) in rows {
+                cache.note(*row, vals);
+            }
+        }
+    }
+
+    /// Publish `cur` as `version`.  With `prev = None` the version is a
+    /// full snapshot; with `prev = Some((parent, state))` it is a delta
+    /// holding only the rows that changed since `state` (which must be
+    /// the reconstructed state of `parent`, an existing version) — the
+    /// *exact* diff, requiring the caller to retain the parent's whole
+    /// state.  [`DeltaStore::save_delta`] is the bounded-memory
+    /// alternative.
+    pub fn publish(
+        &mut self,
+        version: u64,
+        cur: &Checkpoint,
+        prev: Option<(u64, &Checkpoint)>,
+    ) -> Result<PublishStats> {
+        self.check_monotonic(version)?;
+        let latest = self.latest().map(|m| m.version);
         let (kind, parent, rows) = match prev {
             None => (VersionKind::Full, None, cur.rows.clone()),
             Some((parent, state)) => {
@@ -250,6 +408,19 @@ impl DeltaStore {
                 )
             }
         };
+        // The fingerprint cache tracks values along the *latest* chain.
+        // Two publishes invalidate what it knows: an explicit delta
+        // against an older parent forks the chain, and a full snapshot
+        // becomes a fresh reconstruction base that may not carry every
+        // previously-cached row.  Reset in both cases (conservative —
+        // later deltas simply ship more) and let `note_written_rows`
+        // re-learn exactly what this version wrote.
+        let invalidates = kind == VersionKind::Full || parent != latest;
+        if invalidates {
+            if let Some(cache) = self.fingerprints.as_mut() {
+                cache.clear();
+            }
+        }
         let meta = VersionMeta {
             version,
             kind,
@@ -259,10 +430,77 @@ impl DeltaStore {
         let bytes = self.write_version(&meta, cur, &rows)?;
         self.versions.push(meta);
         self.save_manifest()?;
+        self.note_written_rows(&rows);
         Ok(PublishStats {
             kind,
             bytes,
             rows: rows.len(),
+            rows_deduped: 0,
+        })
+    }
+
+    /// Publish `cur` as a delta over the latest version using the
+    /// publish-side row-dedup cache instead of an exact diff: rows whose
+    /// bytes still match their last-published fingerprint are skipped;
+    /// rows absent from the cache (never seen, or evicted by the
+    /// capacity bound) conservatively ship.  With dedup disabled
+    /// ([`DeltaStore::enable_dedup`] never called) every row of `cur`
+    /// ships — what a pipeline with no publish-side row state must do.
+    ///
+    /// `parent` must be the latest version: the cache only vouches for a
+    /// row's value in the latest reconstruction (use
+    /// [`DeltaStore::publish`] with an explicit parent state for
+    /// anything else).  Shipping errs conservative — an extra unchanged
+    /// row in an overlay is a no-op — and skipping rides the 96-bit
+    /// fingerprint ([`RowFingerprints`]), so reconstruction is bit-exact
+    /// up to a ~2⁻⁹⁶-per-row-comparison collision bound (pinned by the
+    /// reconstruction property tests).
+    pub fn save_delta(
+        &mut self,
+        version: u64,
+        cur: &Checkpoint,
+        parent: u64,
+    ) -> Result<PublishStats> {
+        self.check_monotonic(version)?;
+        self.meta_of(parent)?; // must exist
+        match self.latest() {
+            Some(latest) if latest.version == parent => {}
+            latest => anyhow::bail!(
+                "save_delta parent {parent} is not the latest version {:?} — the dedup \
+                 cache only vouches for rows of the latest chain",
+                latest.map(|m| m.version)
+            ),
+        }
+        let (rows, rows_deduped) = match self.fingerprints.as_mut() {
+            Some(cache) => {
+                let mut rows = Vec::new();
+                let mut skipped = 0usize;
+                for (row, vals) in &cur.rows {
+                    if cache.matches(*row, vals) {
+                        skipped += 1;
+                    } else {
+                        rows.push((*row, vals.clone()));
+                    }
+                }
+                (rows, skipped)
+            }
+            None => (cur.rows.clone(), 0),
+        };
+        let meta = VersionMeta {
+            version,
+            kind: VersionKind::Delta,
+            parent: Some(parent),
+            step: cur.step,
+        };
+        let bytes = self.write_version(&meta, cur, &rows)?;
+        self.versions.push(meta);
+        self.save_manifest()?;
+        self.note_written_rows(&rows);
+        Ok(PublishStats {
+            kind: VersionKind::Delta,
+            bytes,
+            rows: rows.len(),
+            rows_deduped,
         })
     }
 
@@ -310,27 +548,46 @@ impl DeltaStore {
     /// overlay rows for a delta).
     fn read_version(&self, version: u64) -> Result<Checkpoint> {
         let dir = self.dir(version);
-        let header = json::parse(&fs::read_to_string(dir.join("publish.json"))?)?;
+        let header_path = dir.join("publish.json");
+        let text = fs::read_to_string(&header_path).map_err(|e| {
+            anyhow::anyhow!("cannot read version header {}: {e}", header_path.display())
+        })?;
+        let header = json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("corrupt version header {}: {e}", header_path.display())
+        })?;
+        let bad = |what: &str| {
+            anyhow::anyhow!("{}: bad {what}", header_path.display())
+        };
         let dims = dims_from_json(header.field("dims")?)?;
         let variant = header
             .field("variant")?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("publish.json: bad variant"))?
+            .ok_or_else(|| bad("variant"))?
             .to_string();
         let world = header
             .field("world")?
             .as_usize()
-            .ok_or_else(|| anyhow::anyhow!("publish.json: bad world"))?;
-        let step = header
-            .field("step")?
-            .as_u64()
-            .ok_or_else(|| anyhow::anyhow!("publish.json: bad step"))?;
+            .ok_or_else(|| bad("world"))?;
+        let step = header.field("step")?.as_u64().ok_or_else(|| bad("step"))?;
 
-        let dense = bytes_to_f32s(&unframe(&fs::read(dir.join("dense.bin"))?, "dense.bin")?)?;
-        let payload = unframe(&fs::read(dir.join("rows.bin"))?, "rows.bin")?;
+        let dense_path = dir.join("dense.bin");
+        let dense = bytes_to_f32s(&unframe(
+            &fs::read(&dense_path)
+                .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", dense_path.display()))?,
+            &dense_path.display().to_string(),
+        )?)?;
+        let rows_path = dir.join("rows.bin");
+        let payload = unframe(
+            &fs::read(&rows_path)
+                .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", rows_path.display()))?,
+            &rows_path.display().to_string(),
+        )?;
         let stride = 8 + dims.emb_dim * 4;
         if payload.len() % stride != 0 {
-            anyhow::bail!("v{version}: rows.bin not a multiple of the row stride");
+            anyhow::bail!(
+                "{}: not a multiple of the row stride",
+                rows_path.display()
+            );
         }
         let mut rows = Vec::with_capacity(payload.len() / stride);
         for rec in payload.chunks_exact(stride) {
@@ -688,6 +945,162 @@ mod tests {
         let stats = store.gc(0).unwrap();
         assert!(stats.removed.is_empty());
         assert_state_eq(&store.load(1).unwrap(), &v1);
+    }
+
+    #[test]
+    fn save_delta_with_dedup_skips_unchanged_rows_bit_exactly() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.enable_dedup(1024);
+        // 50 touched rows; only row 3 changes between windows, row 7
+        // bounces A -> B -> A (every hop is a real bit-change and must
+        // ship; returning to a *previously published* value only dedups
+        // once the value it bounced back to was the last published one).
+        let rows0: Vec<(u64, f32)> = (0..50).map(|r| (r, r as f32)).collect();
+        let mut rows1 = rows0.clone();
+        rows1[3].1 = 99.0;
+        rows1[7].1 = -7.0;
+        let mut rows2 = rows1.clone();
+        rows2[7].1 = 7.0; // back to its v0 value
+        let states = [
+            ckpt(1, 0.1, &rows0),
+            ckpt(2, 0.2, &rows1),
+            ckpt(3, 0.3, &rows2),
+        ];
+        store.publish(0, &states[0], None).unwrap();
+        let s1 = store.save_delta(1, &states[1], 0).unwrap();
+        assert_eq!(s1.rows, 2, "{s1:?}"); // rows 3 and 7 changed
+        assert_eq!(s1.rows_deduped, 48);
+        let s2 = store.save_delta(2, &states[2], 1).unwrap();
+        assert_eq!(s2.rows, 1, "{s2:?}"); // row 7 changed again
+        assert_eq!(s2.rows_deduped, 49);
+        // Everything still reconstructs bit-for-bit.
+        for (v, want) in states.iter().enumerate() {
+            assert_state_eq(&store.load(v as u64).unwrap(), want);
+        }
+        let cache = store.dedup().unwrap();
+        assert!(cache.hit_rate() > 0.9, "hit rate {}", cache.hit_rate());
+    }
+
+    #[test]
+    fn fully_deduped_delta_is_empty_but_still_reconstructs() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.enable_dedup(256);
+        let rows: Vec<(u64, f32)> = (0..25).map(|r| (r, r as f32)).collect();
+        let v0 = ckpt(1, 0.1, &rows);
+        // Same rows, new dense/step: the delta carries zero rows.
+        let v1 = ckpt(2, 0.9, &rows);
+        store.publish(0, &v0, None).unwrap();
+        let s1 = store.save_delta(1, &v1, 0).unwrap();
+        assert_eq!(s1.rows, 0);
+        assert_eq!(s1.rows_deduped, 25);
+        // Dense replica and step still advance; rows overlay from v0.
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+    }
+
+    #[test]
+    fn save_delta_without_dedup_ships_every_row() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let rows: Vec<(u64, f32)> = (0..20).map(|r| (r, r as f32)).collect();
+        let v0 = ckpt(1, 0.1, &rows);
+        let v1 = ckpt(2, 0.2, &rows); // nothing changed…
+        store.publish(0, &v0, None).unwrap();
+        let s1 = store.save_delta(1, &v1, 0).unwrap();
+        // …but with no publish-side row state every touched row ships.
+        assert_eq!(s1.rows, 20);
+        assert_eq!(s1.rows_deduped, 0);
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+    }
+
+    #[test]
+    fn dedup_eviction_conservatively_ships() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        // Cache far smaller than the touched set: most rows fall out and
+        // must ship in every delta even though they never changed.
+        store.enable_dedup(4);
+        let rows: Vec<(u64, f32)> = (0..30).map(|r| (r, r as f32)).collect();
+        let v0 = ckpt(1, 0.1, &rows);
+        let v1 = ckpt(2, 0.2, &rows);
+        store.publish(0, &v0, None).unwrap();
+        let s1 = store.save_delta(1, &v1, 0).unwrap();
+        assert!(s1.rows >= 26, "evicted rows must ship: {s1:?}");
+        assert!(s1.rows + s1.rows_deduped == 30);
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+    }
+
+    #[test]
+    fn save_delta_requires_the_latest_parent() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.enable_dedup(64);
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        let v1 = ckpt(2, 0.2, &[(1, 2.0)]);
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        // Parent 0 is no longer the latest: the cache cannot vouch.
+        let err = store.save_delta(2, &v1, 0).unwrap_err();
+        assert!(err.to_string().contains("latest"), "{err}");
+        // Nonexistent parent still rejected first.
+        assert!(store.save_delta(2, &v1, 99).is_err());
+    }
+
+    #[test]
+    fn explicit_old_parent_publish_resets_the_dedup_cache() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.enable_dedup(64);
+        let v0 = ckpt(1, 0.1, &[(1, 1.0), (2, 2.0)]);
+        let v1 = ckpt(2, 0.2, &[(1, 5.0), (2, 2.0)]);
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        // Fork: an exact delta against v0 (not the latest) — the cache
+        // can no longer vouch for rows of the abandoned chain, so it
+        // resets, then re-learns the rows this very publish ships
+        // (row 1, changed vs v0).
+        let v2 = ckpt(3, 0.3, &[(1, 5.0), (2, 2.0)]);
+        store.publish(2, &v2, Some((0, &v0))).unwrap();
+        // The next save_delta dedups only the re-learned row; row 2
+        // (unchanged since v0, but forgotten) conservatively ships.
+        let v3 = ckpt(4, 0.4, &[(1, 5.0), (2, 2.0)]);
+        let s3 = store.save_delta(3, &v3, 2).unwrap();
+        assert_eq!(s3.rows_deduped, 1); // row 1
+        assert_eq!(s3.rows, 1); // row 2
+        assert_state_eq(&store.load(3).unwrap(), &v3);
+    }
+
+    #[test]
+    fn manifest_and_header_errors_name_the_offending_file() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        store.publish(0, &ckpt(1, 0.1, &[(1, 1.0)]), None).unwrap();
+        // Corrupt the manifest's kind token: the error must say which
+        // file went bad, not just echo the token.
+        let manifest = tmp.path().join("versions.json");
+        let text = fs::read_to_string(&manifest).unwrap().replace("full", "fill");
+        fs::write(&manifest, text).unwrap();
+        let err = DeltaStore::open(tmp.path()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("versions.json"), "{msg}");
+        assert!(msg.contains("fill"), "{msg}");
+        // Unparseable manifest also names the file.
+        fs::write(&manifest, "{not json").unwrap();
+        let msg = DeltaStore::open(tmp.path()).unwrap_err().to_string();
+        assert!(msg.contains("versions.json"), "{msg}");
+        // A torn rows.bin names the version file on load.
+        let tmp2 = TempDir::new().unwrap();
+        let mut store2 = DeltaStore::create(tmp2.path()).unwrap();
+        store2.publish(0, &ckpt(1, 0.1, &[(1, 1.0)]), None).unwrap();
+        let rows_path = tmp2.path().join("v000000").join("rows.bin");
+        let mut data = fs::read(&rows_path).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0xFF;
+        fs::write(&rows_path, data).unwrap();
+        let msg = store2.load(0).unwrap_err().to_string();
+        assert!(msg.contains("rows.bin"), "{msg}");
+        assert!(msg.contains("v000000"), "{msg}");
     }
 
     #[test]

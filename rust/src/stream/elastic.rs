@@ -22,7 +22,15 @@
 //!   (rows reshard on import, `row % new_world`).  The whole detour is
 //!   charged to the virtual clock as [`crate::metrics::PHASE_RESHARD`]
 //!   — the *latency cliff* a reshard costs, visible in the next
-//!   version's delivery latency.
+//!   version's delivery latency.  The cost model has two paths: the
+//!   *full* path streams the entire capture out to the DFS and back; the
+//!   *partial* path ([`crate::stream::OnlineConfig::partial_reshard`])
+//!   exploits that a between-windows rescale directly follows a publish
+//!   — surviving workers hold exactly the durable state — so nothing is
+//!   written and only the rows whose owner actually changes
+//!   ([`crate::checkpoint::Checkpoint::reshard_delta_bytes`]) move,
+//!   owner-to-owner through device memory, with just the dense replica
+//!   fetched from the registry by the new allocation.
 //! * **[`FailurePlan`]** — injected fault model: a worker dies partway
 //!   through a designated window (the window redoes from the last
 //!   *published* version, charging the wasted attempt as
@@ -360,6 +368,17 @@ pub struct ElasticEvent {
     pub to_world: usize,
     /// Virtual seconds the reshard detour cost (the latency cliff).
     pub reshard_secs: f64,
+    /// Bytes of model state the detour moved: the full path streams the
+    /// whole capture out to the DFS and back (2× payload); the partial
+    /// path moves only the owner-changing rows (owner-to-owner through
+    /// device memory) plus the dense replica
+    /// ([`crate::stream::OnlineConfig::partial_reshard`]).
+    pub bytes_moved: u64,
+    /// Embedding rows that actually changed owner (`row % W` vs
+    /// `row % W'`); under the full path every row streams anyway.
+    pub moved_rows: usize,
+    /// Whether the partial (owner-change-only) path charged this event.
+    pub partial: bool,
 }
 
 #[cfg(test)]

@@ -18,8 +18,12 @@
 //!   parent, with periodic compaction; any version reconstructs from
 //!   base + deltas bit-for-bit.  Retention ([`DeltaStore::gc`]) keeps
 //!   the newest N fulls + live chains and deletes retired chain files.
-//! * [`publisher`] — the registry-upload cost model and the full-vs-delta
-//!   publish policy ([`PublishMode`]), plus the retention GC charge.
+//!   Publish-side row dedup ([`DeltaStore::save_delta`] +
+//!   [`RowFingerprints`]) skips rows whose bytes still match their
+//!   last-published fingerprint at O(capacity) memory.
+//! * [`publisher`] — the registry-upload cost model, the full-vs-delta
+//!   publish policy ([`PublishMode`]) and the delta row-dedup policy
+//!   ([`RowDedup`]), plus the retention GC charge.
 //! * [`session`] — the [`OnlineSession`] driver over any
 //!   [`crate::job::Trainer`] (G-Meta hybrid or the CPU/PS baseline):
 //!   warm-up, then per window resume → train on the delta → publish,
@@ -43,10 +47,12 @@ pub mod publisher;
 pub mod session;
 
 pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
-pub use delta_ckpt::{DeltaStore, GcStats, PublishStats, VersionKind, VersionMeta};
+pub use delta_ckpt::{
+    DeltaStore, GcStats, PublishStats, RowFingerprints, VersionKind, VersionMeta,
+};
 pub use elastic::{
     BacklogPolicy, ElasticEvent, FailurePlan, PhaseTimePolicy, ScaleDecision, ScalePolicy,
     ScheduledPolicy, WindowObservation,
 };
-pub use publisher::{PublishMode, PublishModel, Publisher};
+pub use publisher::{PublishMode, PublishModel, Publisher, RowDedup};
 pub use session::{OnlineConfig, OnlineSession};

@@ -13,6 +13,13 @@
 //! The [`Publisher`] owns the [`DeltaStore`], decides full-vs-delta per
 //! version, really writes the version (bytes on disk, CRC-framed), and
 //! charges the virtual clock from the actually-published byte count.
+//!
+//! Which rows a delta carries is the [`RowDedup`] policy: an exact diff
+//! against the retained previous state (minimal bytes, O(table)
+//! publisher memory), the store's bounded fingerprint cache (near-exact
+//! bytes, O(capacity) memory), or no publish-side row state at all
+//! (every touched row ships — the ablation baseline the delivery bench
+//! measures dedup against).
 
 use std::path::Path;
 
@@ -30,6 +37,33 @@ pub enum PublishMode {
     /// G-Meta continuous delivery: rows touched since the last version
     /// plus the dense replica; periodic full snapshots (compaction).
     DeltaRepublish,
+}
+
+/// How a delta decides which rows cross the wire — the publish-side
+/// row-dedup policy (only meaningful under
+/// [`PublishMode::DeltaRepublish`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RowDedup {
+    /// Exact diff against the previous published state, which the
+    /// publisher retains in memory — minimal bytes, O(table) memory.
+    /// The historical default.
+    #[default]
+    Exact,
+    /// Bounded fingerprint cache in the [`DeltaStore`]
+    /// ([`crate::stream::delta_ckpt::RowFingerprints`]): rows whose
+    /// bytes still match their last-published fingerprint are skipped;
+    /// rows the capacity bound evicted conservatively ship.  Near-exact
+    /// bytes at O(capacity) memory — the publisher retains no previous
+    /// state at all.
+    Fingerprint {
+        /// Rows tracked; evicted rows ship even when unchanged.
+        capacity: usize,
+    },
+    /// No publish-side row state: every touched row ships in every
+    /// delta — what a pipeline that knows *which* rows its windows touch
+    /// but not their previously published bytes must do.  The dedup
+    /// ablation baseline.
+    Off,
 }
 
 /// Cost model of the registry upload path.
@@ -82,8 +116,14 @@ pub struct Publisher {
     /// Virtual seconds of the most recent publish's upload + registration
     /// leg (after the tail factor; excludes the GC pass).
     pub last_publish_secs: f64,
-    /// Last published (version, reconstructed state) — the delta base.
-    last: Option<(u64, Checkpoint)>,
+    /// Row-dedup policy for delta versions (set at construction via
+    /// [`Publisher::with_row_dedup`]; [`RowDedup::Exact`] by default).
+    dedup: RowDedup,
+    /// Number of the last published version — the delta parent.
+    last_version: Option<u64>,
+    /// Last published state, retained only under [`RowDedup::Exact`]
+    /// (the other policies exist precisely to avoid this O(table) copy).
+    last_state: Option<Checkpoint>,
     next_version: u64,
 }
 
@@ -105,7 +145,9 @@ impl Publisher {
             last_gc_secs: 0.0,
             tail: None,
             last_publish_secs: 0.0,
-            last: None,
+            dedup: RowDedup::Exact,
+            last_version: None,
+            last_state: None,
             next_version: 0,
         })
     }
@@ -117,14 +159,36 @@ impl Publisher {
         self
     }
 
+    /// Choose the delta row-dedup policy (default [`RowDedup::Exact`]).
+    /// Under [`RowDedup::Fingerprint`] the store's bounded cache is
+    /// enabled and the publisher stops retaining the previous state.
+    pub fn with_row_dedup(mut self, dedup: RowDedup) -> Self {
+        self.dedup = dedup;
+        if let RowDedup::Fingerprint { capacity } = dedup {
+            self.store.enable_dedup(capacity);
+        }
+        self
+    }
+
+    /// The active row-dedup policy.
+    pub fn row_dedup(&self) -> RowDedup {
+        self.dedup
+    }
+
     /// Version number the next publish will use.
     pub fn next_version(&self) -> u64 {
         self.next_version
     }
 
     /// The last published state (what the serving fleet currently runs).
+    /// Retained — and therefore `Some` after the first publish — only
+    /// under [`RowDedup::Exact`]; the bounded-memory policies return
+    /// `None` by design (avoiding this O(table) copy is their point).
+    /// Callers that need the state under those policies should
+    /// reconstruct it from the store:
+    /// `publisher.store.load(latest.version)` ([`DeltaStore::load`]).
     pub fn last_published(&self) -> Option<&Checkpoint> {
-        self.last.as_ref().map(|(_, c)| c)
+        self.last_state.as_ref()
     }
 
     /// Seconds to upload `bytes` and register one version.
@@ -146,14 +210,22 @@ impl Publisher {
         let full = match self.mode {
             PublishMode::FullRepublish => true,
             PublishMode::DeltaRepublish => {
-                self.last.is_none() || version % self.compact_every as u64 == 0
+                self.last_version.is_none() || version % self.compact_every as u64 == 0
             }
         };
         let stats = if full {
             self.store.publish(version, &ckpt, None)?
         } else {
-            let (parent, prev) = self.last.as_ref().expect("delta publish without a base");
-            self.store.publish(version, &ckpt, Some((*parent, prev)))?
+            let parent = self.last_version.expect("delta publish without a base");
+            match (self.dedup, self.last_state.as_ref()) {
+                (RowDedup::Exact, Some(prev)) => {
+                    self.store.publish(version, &ckpt, Some((parent, prev)))?
+                }
+                (RowDedup::Exact, None) => {
+                    anyhow::bail!("RowDedup::Exact publisher lost its retained state")
+                }
+                _ => self.store.save_delta(version, &ckpt, parent)?,
+            }
         };
         debug_assert_eq!(stats.kind == VersionKind::Full, full);
         // Mean upload cost, stretched by the slow-registry tail factor
@@ -186,14 +258,21 @@ impl Publisher {
             published,
             bytes: stats.bytes,
             rows: stats.rows,
+            rows_deduped: stats.rows_deduped,
             world: ckpt.world,
             publish_secs,
             reshard_secs: 0.0,
+            reshard_bytes: 0,
             redo_secs: 0.0,
             cold_tasks: Vec::new(),
             zero_shot_auc: None,
         };
-        self.last = Some((version, ckpt));
+        self.last_version = Some(version);
+        // Only the exact-diff policy pays the O(table) retained copy.
+        self.last_state = match self.dedup {
+            RowDedup::Exact => Some(ckpt),
+            _ => None,
+        };
         self.next_version = version + 1;
         Ok(record)
     }
@@ -374,6 +453,95 @@ mod tests {
         // Determinism: the same seed replays the same factors.
         let replay = run(Some(TailModel { sigma: 0.8, seed: 3 }));
         assert_eq!(tailed, replay);
+    }
+
+    #[test]
+    fn fingerprint_dedup_matches_exact_bytes_without_retained_state() {
+        // A stream where most touched rows never change: the fingerprint
+        // policy must publish the same bytes as the exact diff (cache
+        // large enough for the touched set), reconstruct bit-identically,
+        // and retain no previous state; the Off policy must ship far
+        // more.
+        let states: Vec<Checkpoint> = (0..5u64)
+            .map(|step| {
+                let rows: Vec<(u64, f32)> = (0..300)
+                    .map(|r| {
+                        // Rows 0..10 drift every window; the rest are static.
+                        let v = if r < 10 { r as f32 + step as f32 } else { r as f32 };
+                        (r, v)
+                    })
+                    .collect();
+                ckpt(step, &rows)
+            })
+            .collect();
+        let run = |dedup: RowDedup| {
+            let tmp = TempDir::new().unwrap();
+            let mut p = Publisher::new(
+                tmp.path(),
+                PublishMode::DeltaRepublish,
+                100,
+                PublishModel::default(),
+            )
+            .unwrap()
+            .with_row_dedup(dedup);
+            let mut clock = Clock::new();
+            let mut bytes = 0u64;
+            for st in &states {
+                bytes += p.publish(st.clone(), clock.now(), &mut clock).unwrap().bytes;
+            }
+            let loaded: Vec<Checkpoint> =
+                (0..states.len() as u64).map(|v| p.store.load(v).unwrap()).collect();
+            (bytes, loaded, p.last_published().is_some())
+        };
+        let (exact_bytes, exact_loaded, exact_retains) = run(RowDedup::Exact);
+        let (fp_bytes, fp_loaded, fp_retains) =
+            run(RowDedup::Fingerprint { capacity: 4096 });
+        let (off_bytes, off_loaded, _) = run(RowDedup::Off);
+        assert!(exact_retains, "exact policy retains the previous state");
+        assert!(!fp_retains, "fingerprint policy must not retain state");
+        assert_eq!(fp_bytes, exact_bytes, "unevicted fingerprint == exact");
+        assert!(
+            off_bytes > 2 * fp_bytes,
+            "no-dedup must ship much more: off={off_bytes} fp={fp_bytes}"
+        );
+        // All three policies publish bit-identical reconstructions.
+        for ((e, f), o) in exact_loaded.iter().zip(&fp_loaded).zip(&off_loaded) {
+            let bits = |c: &Checkpoint| {
+                c.rows
+                    .iter()
+                    .map(|(r, v)| (*r, v.iter().map(|x| x.to_bits()).collect::<Vec<_>>()))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(bits(e), bits(f));
+            assert_eq!(bits(e), bits(o));
+            assert_eq!(
+                e.dense.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                f.dense.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn dedup_counters_land_in_the_version_record() {
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::DeltaRepublish,
+            100,
+            PublishModel::default(),
+        )
+        .unwrap()
+        .with_row_dedup(RowDedup::Fingerprint { capacity: 1024 });
+        let mut clock = Clock::new();
+        let rows: Vec<(u64, f32)> = (0..40).map(|r| (r, r as f32)).collect();
+        p.publish(ckpt(0, &rows), 0.0, &mut clock).unwrap();
+        let mut rows1 = rows.clone();
+        rows1[5].1 = -5.0;
+        let rec = p.publish(ckpt(1, &rows1), clock.now(), &mut clock).unwrap();
+        assert_eq!(rec.kind, "delta");
+        assert_eq!(rec.rows, 1);
+        assert_eq!(rec.rows_deduped, 39);
+        assert_eq!(rec.reshard_bytes, 0);
     }
 
     #[test]

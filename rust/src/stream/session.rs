@@ -42,6 +42,14 @@
 //! and uploads changed rows only.  Training itself is identical.  With
 //! [`OnlineConfig::retain_fulls`] set, the delta store additionally GCs
 //! retired chains after each publish (charged as registry metadata ops).
+//!
+//! Two delivery cold paths have delta-minimizing variants (both
+//! publishing bit-identical artifacts): [`OnlineConfig::dedup`] picks
+//! the delta row-dedup policy (exact diff against retained state, the
+//! bounded fingerprint cache, or none), and
+//! [`OnlineConfig::partial_reshard`] makes an elastic rescale move only
+//! the rows whose owner changes instead of streaming the whole capture
+//! through the DFS.
 
 use std::collections::BTreeSet;
 use std::fs;
@@ -61,7 +69,7 @@ use crate::stream::delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConf
 use crate::stream::elastic::{
     ElasticEvent, FailurePlan, ScaleDecision, ScalePolicy, WindowObservation,
 };
-use crate::stream::publisher::{PublishMode, PublishModel, Publisher};
+use crate::stream::publisher::{PublishMode, PublishModel, Publisher, RowDedup};
 use crate::Result;
 
 /// Configuration of one online continuous-delivery session.
@@ -75,6 +83,11 @@ pub struct OnlineConfig {
     pub mode: PublishMode,
     /// Delta mode: every Nth version ships as a full snapshot.
     pub compact_every: usize,
+    /// Delta row-dedup policy: the exact diff against a retained
+    /// previous state (default), the store's bounded fingerprint cache
+    /// ([`RowDedup::Fingerprint`] — near-exact bytes, O(capacity)
+    /// memory), or no publish-side row state at all ([`RowDedup::Off`]).
+    pub dedup: RowDedup,
     /// Retention: keep the newest N full snapshots (+ live chains) in
     /// the registry, GC the rest after each publish.  `None` keeps all.
     pub retain_fulls: Option<usize>,
@@ -89,6 +102,19 @@ pub struct OnlineConfig {
     /// cluster genuinely shortens the window.  Off by default (fixed
     /// step counts keep cross-world bit-exactness comparable).
     pub data_driven_steps: bool,
+    /// Partial (owner-change-only) resharding: an elastic rescale
+    /// directly follows a publish, so the workers surviving the rescale
+    /// hold exactly the durable latest version — nothing is written to
+    /// the DFS and unmoved rows never travel.  Only the rows whose
+    /// owner changes (`row % W != row % W'`, see
+    /// [`crate::checkpoint::Checkpoint::reshard_delta_bytes`]) stream
+    /// owner-to-owner through device memory, and the new allocation's
+    /// workers pull the small dense replica from the registry in
+    /// parallel.  Off by default: the full path streams the whole
+    /// capture out to the DFS and back (PR 3's cliff).  Post-rescale
+    /// state is bit-identical either way — only the charged cost and
+    /// bytes differ.
+    pub partial_reshard: bool,
     pub seed: u64,
 }
 
@@ -100,11 +126,13 @@ impl Default for OnlineConfig {
             steps_per_window: 10,
             mode: PublishMode::DeltaRepublish,
             compact_every: 4,
+            dedup: RowDedup::Exact,
             retain_fulls: None,
             publish: PublishModel::default(),
             feed: DeltaFeedConfig::default(),
             failures: FailurePlan::default(),
             data_driven_steps: false,
+            partial_reshard: false,
             seed: 0x5EED,
         }
     }
@@ -131,6 +159,8 @@ pub struct OnlineSession<'rt> {
     /// Reshard seconds charged since the last publish (attributed to the
     /// next version's record).
     pending_reshard_secs: f64,
+    /// Bytes the same reshard(s) streamed through the DFS.
+    pending_reshard_bytes: u64,
     feed: DeltaFeed,
     storage: StorageModel,
     online: OnlineConfig,
@@ -199,7 +229,8 @@ impl<'rt> OnlineSession<'rt> {
             online.mode,
             online.compact_every,
             online.publish,
-        )?;
+        )?
+        .with_row_dedup(online.dedup);
         if let Some(keep_fulls) = online.retain_fulls {
             publisher = publisher.with_retention(keep_fulls);
         }
@@ -230,6 +261,7 @@ impl<'rt> OnlineSession<'rt> {
             events: Vec::new(),
             last_obs: None,
             pending_reshard_secs: 0.0,
+            pending_reshard_bytes: 0,
             feed: DeltaFeed::new(spec, online.feed),
             storage,
             online,
@@ -296,19 +328,74 @@ impl<'rt> OnlineSession<'rt> {
     /// Rescale the cluster to `world` workers between windows: capture
     /// the trainer's state, rebuild it from the [`JobSpec`] at the new
     /// size, restore the capture (rows reshard on import), and charge the
-    /// whole detour — checkpoint out to the DFS, read back on the new
-    /// allocation, device-side row repartition — as [`PHASE_RESHARD`].
-    /// This is the latency cliff the next version's delivery absorbs.
+    /// whole detour as [`PHASE_RESHARD`] — the latency cliff the next
+    /// version's delivery absorbs.
+    ///
+    /// Two cost paths (the restored *state* is bit-identical in both):
+    ///
+    /// * **Full** (default): the capture streams out to the DFS as a
+    ///   checkpoint, is read back whole on the new allocation, and every
+    ///   row repartitions device-side — PR 3's model.
+    /// * **Partial** ([`OnlineConfig::partial_reshard`]): the workers
+    ///   surviving the rescale already hold their shards in memory, so
+    ///   nothing is written to the DFS and unmoved rows never travel at
+    ///   all — only the rows whose owner changes repartition, streaming
+    ///   directly from their old owner's device memory into the new
+    ///   owner's ([`crate::sim::DeviceModel::reshard_time`]'s
+    ///   documented semantics), while the new allocation's workers pull
+    ///   just the small dense replica from the registry in parallel.
+    ///   Gated on the latest published version matching the capture (a
+    ///   conservative guard — the session's loop always publishes right
+    ///   before consulting the policy); falls back to the full charge
+    ///   otherwise.
     fn rescale_to(&mut self, world: usize, before_window: usize) -> Result<()> {
         let from_world = self.trainer.cfg().cluster.world_size();
         let new_spec = self.spec.at_world(world)?;
         let ckpt = self.trainer.capture(self.step);
-        let bytes = ckpt.payload_bytes() as f64;
-        let t = self.storage.write_time(bytes, true)
-            + self
-                .storage
-                .read_time(1, ckpt.payload_bytes() as usize, 1, ReadPattern::Sequential, true)
-            + self.trainer.device().reshard_time(bytes);
+        // Which rows change *owner* depends on the architecture's shard
+        // space: G-Meta shards the table across the workers being
+        // rescaled (`row % world`), but the PS baseline shards it across
+        // the server fleet, which `at_world` does not touch — a worker
+        // rescale moves no embedding rows there, only the dense replica
+        // for the new workers.
+        let (own_from, own_to) = match self.trainer.cfg().arch {
+            crate::config::Architecture::GMeta => (from_world, world),
+            crate::config::Architecture::ParameterServer => {
+                let servers = self.trainer.cfg().cluster.servers;
+                (servers, servers)
+            }
+        };
+        let (moved_rows, moved_bytes) = ckpt.reshard_delta(own_from, own_to);
+        let published_matches = self
+            .publisher
+            .store
+            .latest()
+            .is_some_and(|m| m.step == self.step);
+        let (t, bytes_moved, partial) = if self.online.partial_reshard && published_matches {
+            // Owner-changing rows (plus the dense replica reaching the
+            // new workers) stream owner-to-owner through device memory;
+            // the only DFS touch is the new workers' parallel fetch of
+            // the dense replica from the registry — never the row
+            // chain, which surviving owners already hold bit-exactly
+            // (`published_matches`).
+            let dense_bytes = ckpt.dense.len() as f64 * 4.0;
+            let t = self.storage.parallel_read_time(dense_bytes, world)
+                + self.trainer.device().reshard_time(moved_bytes as f64);
+            (t, moved_bytes, true)
+        } else {
+            let bytes = ckpt.payload_bytes() as f64;
+            let t = self.storage.write_time(bytes, true)
+                + self.storage.read_time(
+                    1,
+                    ckpt.payload_bytes() as usize,
+                    1,
+                    ReadPattern::Sequential,
+                    true,
+                )
+                + self.trainer.device().reshard_time(bytes);
+            // Bytes through the DFS: the whole payload out, then back in.
+            (t, 2 * ckpt.payload_bytes(), false)
+        };
         let mut fresh = new_spec.build_trainer()?;
         fresh.restore_from(&ckpt)?;
         self.trainer = fresh;
@@ -316,11 +403,15 @@ impl<'rt> OnlineSession<'rt> {
         self.clock.advance(t);
         self.delivery.train.add_phase(PHASE_RESHARD, t);
         self.pending_reshard_secs += t;
+        self.pending_reshard_bytes += bytes_moved;
         self.events.push(ElasticEvent {
             before_window,
             from_world,
             to_world: world,
             reshard_secs: t,
+            bytes_moved,
+            moved_rows,
+            partial,
         });
         Ok(())
     }
@@ -621,6 +712,7 @@ impl<'rt> OnlineSession<'rt> {
         // --- Capture + publish the version. ---
         let mut rec = self.publish_version(data_ready)?;
         rec.reshard_secs = std::mem::take(&mut self.pending_reshard_secs);
+        rec.reshard_bytes = std::mem::take(&mut self.pending_reshard_bytes);
         rec.redo_secs = redo_secs;
         rec.cold_tasks = cold;
         rec.zero_shot_auc = zero_shot_auc;
@@ -915,6 +1007,99 @@ mod tests {
         );
         // Determinism.
         assert_eq!(run(1.2), tailed);
+    }
+
+    #[test]
+    fn fingerprint_dedup_session_matches_exact_bytes_and_state() {
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let run = |dedup: RowDedup| {
+            let tmp = TempDir::new().unwrap();
+            let mut online = tiny_online(PublishMode::DeltaRepublish);
+            online.dedup = dedup;
+            let mut s =
+                OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path()).unwrap();
+            s.run().unwrap();
+            let loaded: Vec<_> = s
+                .delivery
+                .versions
+                .iter()
+                .map(|v| s.publisher.store.load(v.version).unwrap())
+                .collect();
+            let bytes: Vec<u64> = s.delivery.versions.iter().map(|v| v.bytes).collect();
+            let deduped = s.delivery.total_rows_deduped();
+            (tmp, bytes, loaded, deduped)
+        };
+        let (_t1, exact_bytes, exact_loaded, exact_deduped) = run(RowDedup::Exact);
+        let (_t2, fp_bytes, fp_loaded, fp_deduped) =
+            run(RowDedup::Fingerprint { capacity: 1 << 20 });
+        let (_t3, off_bytes, off_loaded, _) = run(RowDedup::Off);
+        // Unevicted fingerprint dedup publishes exactly the exact-diff
+        // bytes; the no-state baseline ships more.
+        assert_eq!(exact_bytes, fp_bytes);
+        assert_eq!(exact_deduped, 0, "exact diff reports no cache hits");
+        assert!(fp_deduped > 0, "dedup cache never hit");
+        assert!(
+            off_bytes.iter().sum::<u64>() > fp_bytes.iter().sum::<u64>(),
+            "no-dedup deltas must ship more: {off_bytes:?} vs {fp_bytes:?}"
+        );
+        // All three publish bit-identical model versions.
+        for ((e, f), o) in exact_loaded.iter().zip(&fp_loaded).zip(&off_loaded) {
+            assert_eq!(bits(&e.dense), bits(&f.dense));
+            assert_eq!(bits(&e.dense), bits(&o.dense));
+            assert_eq!(e.rows.len(), f.rows.len());
+            assert_eq!(e.rows.len(), o.rows.len());
+            for ((ra, va), (rb, vb)) in e.rows.iter().zip(&f.rows) {
+                assert_eq!(ra, rb);
+                assert_eq!(bits(va), bits(vb));
+            }
+            for ((ra, va), (rb, vb)) in e.rows.iter().zip(&o.rows) {
+                assert_eq!(ra, rb);
+                assert_eq!(bits(va), bits(vb));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_reshard_charges_the_smaller_cliff() {
+        use crate::stream::elastic::ScheduledPolicy;
+        let run = |partial: bool| {
+            let tmp = TempDir::new().unwrap();
+            let mut online = tiny_online(PublishMode::DeltaRepublish);
+            online.partial_reshard = partial;
+            let mut s =
+                OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path())
+                    .unwrap()
+                    .with_policy(Box::new(ScheduledPolicy::new(vec![(0, 3)])))
+                    .unwrap();
+            s.run().unwrap();
+            (tmp, s)
+        };
+        let (_t1, full) = run(false);
+        let (_t2, part) = run(true);
+        let (fe, pe) = (full.events[0], part.events[0]);
+        assert!(!fe.partial);
+        assert!(pe.partial);
+        // Only owner-changing rows move (device-to-device) and only the
+        // dense replica touches the DFS: both seconds and bytes shrink.
+        assert!(pe.reshard_secs < fe.reshard_secs, "{pe:?} vs {fe:?}");
+        assert!(pe.bytes_moved < fe.bytes_moved, "{pe:?} vs {fe:?}");
+        assert!(pe.moved_rows > 0);
+        // The cliff lands on the same version record in both runs.
+        assert_eq!(part.delivery.versions[2].reshard_secs, pe.reshard_secs);
+        assert_eq!(part.delivery.versions[2].reshard_bytes, pe.bytes_moved);
+        assert_eq!(full.delivery.versions[2].reshard_bytes, fe.bytes_moved);
+        // Post-rescale published state is bit-identical to the full path.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for v in 0..4u64 {
+            let a = full.publisher.store.load(v).unwrap();
+            let b = part.publisher.store.load(v).unwrap();
+            assert_eq!(bits(&a.dense), bits(&b.dense), "version {v}");
+            assert_eq!(a.rows.len(), b.rows.len(), "version {v}");
+            for ((ra, va), (rb, vb)) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(ra, rb);
+                assert_eq!(bits(va), bits(vb), "version {v} row {ra}");
+            }
+        }
     }
 
     #[test]

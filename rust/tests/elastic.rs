@@ -193,6 +193,92 @@ fn failure_redo_republishes_bit_identical_versions() {
 }
 
 #[test]
+fn partial_reshard_is_bit_identical_to_the_full_path_at_several_world_pairs() {
+    // The partial (owner-change-only) reshard is a *cost* optimization:
+    // only rows with `row % W != row % W'` move, owner-to-owner through
+    // device memory, with just the dense replica fetched from the
+    // registry.  The restored state — and every version published
+    // afterwards — must stay bit-identical to the full
+    // capture-and-restore path, at grows, shrinks, and a non-divisible
+    // pair.
+    for &(w, w_prime) in &[(2usize, 3usize), (3, 2), (2, 4), (4, 3)] {
+        let run = |partial: bool| {
+            let tmp = TempDir::new().unwrap();
+            let mut cfg = online();
+            cfg.partial_reshard = partial;
+            let mut s = OnlineSession::new(job(Architecture::GMeta, w), cfg, tmp.path())
+                .unwrap()
+                .with_policy(Box::new(ScheduledPolicy::new(vec![(0, w_prime)])))
+                .unwrap();
+            s.run().unwrap();
+            (tmp, s)
+        };
+        let (_t1, full) = run(false);
+        let (_t2, part) = run(true);
+        assert_eq!(part.world(), w_prime, "{w}->{w_prime}");
+        assert_versions_bit_identical(&part, &full);
+
+        // The cost shrinks on both axes: no DFS round trip and only the
+        // owner-changing rows stream, so seconds and bytes moved both
+        // drop (bytes by at least the skipped write leg's half).
+        let (fe, pe) = (full.events[0], part.events[0]);
+        assert!(!fe.partial && pe.partial, "{w}->{w_prime}");
+        assert!(
+            pe.reshard_secs < fe.reshard_secs,
+            "{w}->{w_prime}: partial {} !< full {}",
+            pe.reshard_secs,
+            fe.reshard_secs
+        );
+        assert!(
+            pe.bytes_moved * 2 <= fe.bytes_moved,
+            "{w}->{w_prime}: partial moved {} vs full {}",
+            pe.bytes_moved,
+            fe.bytes_moved
+        );
+        assert!(pe.moved_rows > 0, "{w}->{w_prime}: no rows changed owner");
+        // The delivery log records the bytes against the right version.
+        assert_eq!(part.delivery.versions[2].reshard_bytes, pe.bytes_moved);
+        assert_eq!(part.delivery.total_reshard_bytes(), pe.bytes_moved);
+    }
+}
+
+#[test]
+fn ps_partial_reshard_moves_no_rows() {
+    // The PS baseline shards the embedding across the *server* fleet,
+    // which a worker rescale never touches: the partial path must report
+    // zero owner-changing rows and move only the dense replica — while
+    // the published versions stay bit-identical to the full-path run.
+    let run = |partial: bool| {
+        let tmp = TempDir::new().unwrap();
+        let mut cfg = online();
+        cfg.partial_reshard = partial;
+        let mut s = OnlineSession::new(job(Architecture::ParameterServer, 2), cfg, tmp.path())
+            .unwrap()
+            .with_policy(Box::new(ScheduledPolicy::new(vec![(0, 4)])))
+            .unwrap();
+        s.run().unwrap();
+        (tmp, s)
+    };
+    let (_t1, full) = run(false);
+    let (_t2, part) = run(true);
+    assert_versions_bit_identical(&part, &full);
+    let pe = part.events[0];
+    assert!(pe.partial);
+    assert_eq!(pe.moved_rows, 0, "server-sharded rows never change owner");
+    // Only the dense replica moves (fetched from the registry) — far
+    // below the full path's whole-capture round trip.
+    let fe = full.events[0];
+    assert!(pe.bytes_moved > 0, "dense replica still ships");
+    assert!(
+        pe.bytes_moved * 2 < fe.bytes_moved,
+        "PS partial moved {} vs full {}",
+        pe.bytes_moved,
+        fe.bytes_moved
+    );
+    assert!(pe.reshard_secs < fe.reshard_secs);
+}
+
+#[test]
 fn backlog_policy_grows_under_overload() {
     let tmp = TempDir::new().unwrap();
     let mut cfg = online();

@@ -475,6 +475,77 @@ fn prop_compaction_preserves_every_version() {
 }
 
 #[test]
+fn prop_dedup_save_delta_compact_gc_interleavings_reconstruct_bitexact() {
+    // Random interleavings of save_delta-with-dedup publishes, full
+    // snapshots, in-place compactions, retention GC passes, and loads:
+    // every version still in the manifest must reconstruct bit-for-bit.
+    // Small cache capacities force evictions (conservative shipping);
+    // large ones exercise the skip path.
+    cases(12, |seed, rng| {
+        let dim = rng.gen_range(1, 5) as usize;
+        let n_versions = rng.gen_range(3, 9) as usize;
+        let dense_len = rng.gen_range(1, 20) as usize;
+        let states = random_state_chain(rng, dim, dense_len, n_versions);
+
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        // Sometimes tiny (evicts constantly), sometimes roomy.
+        let capacity = if rng.gen_bool(0.5) {
+            rng.gen_range(1, 8) as usize
+        } else {
+            1 << 12
+        };
+        store.enable_dedup(capacity);
+
+        store.publish(0, &states[0], None).unwrap();
+        for (v, cur) in states.iter().enumerate().skip(1) {
+            if rng.gen_bool(0.3) {
+                store.publish(v as u64, cur, None).unwrap();
+            } else {
+                let stats = store.save_delta(v as u64, cur, (v - 1) as u64).unwrap();
+                // Everything in `cur` is either shipped or deduped.
+                assert_eq!(
+                    stats.rows + stats.rows_deduped,
+                    cur.rows.len(),
+                    "seed={seed} v={v}"
+                );
+            }
+            // Occasionally compact a random still-live version…
+            if rng.gen_bool(0.25) {
+                let live: Vec<u64> = store.versions().iter().map(|m| m.version).collect();
+                let target = live[rng.gen_range(0, live.len() as u64) as usize];
+                store.compact(target).unwrap();
+            }
+            // …run a retention pass…
+            if rng.gen_bool(0.25) {
+                store.gc(rng.gen_range(1, 4) as usize).unwrap();
+            }
+            // …or read back a random surviving version mid-stream.
+            if rng.gen_bool(0.3) {
+                let live: Vec<u64> = store.versions().iter().map(|m| m.version).collect();
+                let pick = live[rng.gen_range(0, live.len() as u64) as usize];
+                let got = store.load(pick).unwrap();
+                assert_bitexact(&got, &states[pick as usize], seed, pick as usize);
+            }
+        }
+        // Every version the manifest still holds reconstructs bit-exact.
+        let live: Vec<u64> = store.versions().iter().map(|m| m.version).collect();
+        assert!(!live.is_empty(), "seed={seed}");
+        for v in live {
+            let got = store.load(v).unwrap();
+            assert_bitexact(&got, &states[v as usize], seed, v as usize);
+        }
+        // The store survives reopen (cold cache) and still reconstructs
+        // the latest version.
+        let latest = store.latest().unwrap().version;
+        drop(store);
+        let store = DeltaStore::open(tmp.path()).unwrap();
+        let got = store.load(latest).unwrap();
+        assert_bitexact(&got, &states[latest as usize], seed, latest as usize);
+    });
+}
+
+#[test]
 fn prop_delta_ships_exactly_the_changed_rows() {
     cases(15, |seed, rng| {
         let dim = rng.gen_range(1, 5) as usize;
