@@ -1,0 +1,157 @@
+//! Bench trajectory diff: compare two `BENCH_*.json` artifacts and print
+//! per-metric deltas — the review-time view of what a change did to the
+//! delivery/elastic benchmarks, instead of discovering a regression
+//! post-merge from CI artifact spelunking.
+//!
+//! Walks both documents, pairs every numeric leaf by its dotted path
+//! (`reshard_pairs.2.bytes_reduction`, `bouncy_dedup.dedup_hit_rate`, …),
+//! and prints baseline → current with the relative change.  Metrics
+//! matched by `--headline` (comma-separated substrings) are *gated*:
+//! they are higher-is-better ratios by convention (speedups, reductions,
+//! savings, hit rates — the shapes the benches emit exactly for this
+//! purpose), and the run fails when any of them drops more than
+//! `--fail-over` percent below the baseline.
+//!
+//! CI wiring: the committed floor baselines live in
+//! `rust/benches/baselines/`; after the smoke benches run, CI executes
+//!
+//! ```text
+//! cargo run --release --example bench_diff -- \
+//!     --baseline rust/benches/baselines/BENCH_elastic.json \
+//!     --current  BENCH_elastic.json \
+//!     --headline secs_reduction,bytes_reduction,jump_rows_saving,jump_bytes_saving \
+//!     --fail-over 20
+//! ```
+//!
+//! To refresh a baseline after an intentional perf change, copy the CI
+//! artifact (or a local bench run's output) over the committed file.
+
+use gmeta::util::args::Args;
+use gmeta::util::json::{self, Value};
+
+/// Collect every numeric leaf as (dotted path, value), in document order.
+fn numeric_leaves(doc: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
+    match doc {
+        Value::Num(n) => out.push((prefix.to_string(), *n)),
+        Value::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let path = if prefix.is_empty() {
+                    i.to_string()
+                } else {
+                    format!("{prefix}.{i}")
+                };
+                numeric_leaves(item, &path, out);
+            }
+        }
+        Value::Obj(map) => {
+            for (k, v) in map {
+                let path = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                numeric_leaves(v, &path, out);
+            }
+        }
+        Value::Null | Value::Bool(_) | Value::Str(_) => {}
+    }
+}
+
+fn load(path: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt {path}: {e}"))?;
+    let mut out = Vec::new();
+    numeric_leaves(&doc, "", &mut out);
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("usage: bench_diff --baseline a.json --current b.json \
+                                        [--headline substr,substr] [--fail-over pct]"))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("--current <BENCH_*.json> is required"))?;
+    let headline = args.list_or("headline", &[]);
+    let fail_over_pct = args.f64_or("fail-over", 20.0)?;
+
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+    let base_map: std::collections::BTreeMap<&str, f64> =
+        baseline.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let cur_map: std::collections::BTreeMap<&str, f64> =
+        current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+
+    println!("bench diff: {baseline_path} -> {current_path}");
+    println!("{:-<100}", "");
+    println!(
+        "{:<58} {:>12} {:>12} {:>9}  gate",
+        "metric", "baseline", "current", "delta"
+    );
+
+    let is_headline = |path: &str| headline.iter().any(|h| !h.is_empty() && path.contains(h));
+    let mut regressions: Vec<String> = Vec::new();
+    let mut gated = 0usize;
+    // Current-document order keeps related metrics adjacent in the print.
+    for (path, cur) in &current {
+        let Some(&base) = base_map.get(path.as_str()) else {
+            println!("{path:<58} {:>12} {cur:>12.4} {:>9}  (new)", "-", "-");
+            continue;
+        };
+        let delta_pct = if base != 0.0 {
+            (cur - base) / base.abs() * 100.0
+        } else if *cur == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+        let gate = if is_headline(path) {
+            gated += 1;
+            // Headline metrics are higher-is-better ratios by the bench
+            // emission convention; a drop past the threshold fails.
+            if *cur < base * (1.0 - fail_over_pct / 100.0) {
+                regressions.push(format!(
+                    "{path}: {base:.4} -> {cur:.4} ({delta_pct:+.1}%)"
+                ));
+                "REGRESSED"
+            } else {
+                "ok"
+            }
+        } else {
+            ""
+        };
+        println!("{path:<58} {base:>12.4} {cur:>12.4} {delta_pct:>+8.1}%  {gate}");
+    }
+    for (path, base) in &baseline {
+        if !cur_map.contains_key(path.as_str()) {
+            println!("{path:<58} {base:>12.4} {:>12} {:>9}  (removed)", "-", "-");
+            if is_headline(path) {
+                regressions.push(format!("{path}: headline metric removed"));
+            }
+        }
+    }
+    println!("{:-<100}", "");
+
+    if !headline.is_empty() && gated == 0 && regressions.is_empty() {
+        anyhow::bail!(
+            "no metric matched the headline patterns {headline:?} — \
+             gate would be vacuous; fix the pattern or the bench output"
+        );
+    }
+    if !regressions.is_empty() {
+        anyhow::bail!(
+            "{} headline metric(s) regressed more than {fail_over_pct}%:\n  {}",
+            regressions.len(),
+            regressions.join("\n  ")
+        );
+    }
+    println!(
+        "{} metrics compared, {} gated (threshold {fail_over_pct}%): no regression",
+        current.len(),
+        gated
+    );
+    Ok(())
+}

@@ -51,8 +51,8 @@ use gmeta::data::{aliccp_like, movielens_like};
 use gmeta::job::{TrainJob, Variant};
 use gmeta::metrics::DeliveryMetrics;
 use gmeta::stream::{
-    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, RowDedup,
-    ScheduledPolicy,
+    BacklogPolicy, CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
+    RowDedup, ScheduledPolicy,
 };
 use gmeta::util::args::Args;
 use gmeta::util::TempDir;
@@ -73,7 +73,7 @@ fn run_arm_dedup(mode: PublishMode, dedup: RowDedup) -> anyhow::Result<DeliveryM
         warmup_steps: 20,
         steps_per_window: 10,
         mode,
-        compact_every: 4,
+        compact: CompactPolicy::EveryN(4),
         dedup,
         retain_fulls: Some(2),
         feed: DeltaFeedConfig {
@@ -218,7 +218,7 @@ fn run_elastic_arm(arch: Architecture) -> anyhow::Result<()> {
         warmup_steps: 10,
         steps_per_window: 10,
         mode: PublishMode::DeltaRepublish,
-        compact_every: 3,
+        compact: CompactPolicy::EveryN(3),
         retain_fulls: Some(2),
         // Drops land every 100ms against multi-hundred-ms windows: the
         // stream backlogs immediately, which is what elasticity is for.

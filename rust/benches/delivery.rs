@@ -35,8 +35,8 @@ use gmeta::job::{TrainJob, Variant};
 use gmeta::metrics::{DeliveryMetrics, RunMetrics};
 use gmeta::sim::Clock;
 use gmeta::stream::{
-    ingest, DeltaFeed, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, PublishModel,
-    Publisher, RowDedup,
+    ingest, CompactPolicy, DeltaFeed, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
+    PublishModel, Publisher, RowDedup,
 };
 use gmeta::util::json::{num, obj, s, Value};
 use gmeta::util::TempDir;
@@ -63,7 +63,7 @@ fn run_arm(mode: PublishMode, scale: &Scale) -> anyhow::Result<DeliveryMetrics> 
         warmup_steps: 12,
         steps_per_window: 6,
         mode,
-        compact_every: 4,
+        compact: CompactPolicy::EveryN(4),
         feed: DeltaFeedConfig {
             n_deltas: scale.n_deltas,
             samples_per_delta: 2048,
@@ -116,6 +116,7 @@ fn bouncy_states(windows: usize, touched: usize, hot: usize, dim: usize) -> Vec<
                 variant: "maml".into(),
                 dims,
                 world: 4,
+                owner_map: gmeta::embedding::OwnerMap::Modulo,
                 dense: vec![0.5 + w as f32; 32],
                 rows,
             }
@@ -147,16 +148,29 @@ struct BouncyResult {
     rows_deduped: usize,
     hit_rate: f64,
     checksums: Vec<u32>,
+    kinds: Vec<String>,
 }
 
 fn run_bouncy(states: &[Checkpoint], dedup: RowDedup) -> anyhow::Result<BouncyResult> {
+    run_bouncy_with(
+        states,
+        dedup,
+        // One leading full, then deltas only: the dedup policies differ
+        // exactly on delta rows.
+        CompactPolicy::EveryN(states.len() + 1),
+    )
+}
+
+fn run_bouncy_with(
+    states: &[Checkpoint],
+    dedup: RowDedup,
+    compact: CompactPolicy,
+) -> anyhow::Result<BouncyResult> {
     let tmp = TempDir::new()?;
     let mut publisher = Publisher::new(
         tmp.path(),
         PublishMode::DeltaRepublish,
-        // One leading full, then deltas only: the dedup policies differ
-        // exactly on delta rows.
-        states.len() + 1,
+        compact,
         PublishModel::default(),
     )?
     .with_row_dedup(dedup);
@@ -179,6 +193,7 @@ fn run_bouncy(states: &[Checkpoint], dedup: RowDedup) -> anyhow::Result<BouncyRe
         rows_deduped: delivery.total_rows_deduped(),
         hit_rate: publisher.store.dedup().map(|c| c.hit_rate()).unwrap_or(0.0),
         checksums,
+        kinds: delivery.versions.iter().map(|v| v.kind.clone()).collect(),
     })
 }
 
@@ -263,6 +278,46 @@ fn main() -> anyhow::Result<()> {
         "unevicted fingerprint dedup must match the exact diff byte-for-byte"
     );
 
+    println!("\n=== compaction cadence: fixed count vs byte-triggered ===");
+    // With the fingerprint cache, delta bytes track the *hot* set
+    // (~{hot}/{touched} of a full here), so a fixed count cadence ships
+    // full snapshots the chain never asked for.  CompactPolicy::BytesRatio
+    // compacts only once the live chain's delta bytes outgrow r × the
+    // last full — cadence follows the dedup-shrunk stream, with
+    // bit-identical reconstructions either way.
+    let cadence_dedup = RowDedup::Fingerprint { capacity: 1 << 20 };
+    let every_n = run_bouncy_with(&states, cadence_dedup, CompactPolicy::EveryN(2))?;
+    let by_bytes = run_bouncy_with(&states, cadence_dedup, CompactPolicy::BytesRatio(0.5))?;
+    let fulls = |r: &BouncyResult| r.kinds.iter().filter(|k| *k == "full").count();
+    println!(
+        "  EveryN(2)      : {:.2} MiB published, {} full snapshots",
+        every_n.published_bytes as f64 / (1 << 20) as f64,
+        fulls(&every_n)
+    );
+    println!(
+        "  BytesRatio(0.5): {:.2} MiB published, {} full snapshots \
+         (chain compacts only when it outgrows half a full)",
+        by_bytes.published_bytes as f64 / (1 << 20) as f64,
+        fulls(&by_bytes)
+    );
+    assert_eq!(
+        every_n.checksums, by_bytes.checksums,
+        "compaction cadence changed a published version"
+    );
+    assert!(
+        fulls(&by_bytes) < fulls(&every_n),
+        "byte-triggered cadence must ship fewer fulls on the dedup-shrunk \
+         stream ({} vs {})",
+        fulls(&by_bytes),
+        fulls(&every_n)
+    );
+    assert!(
+        by_bytes.published_bytes < every_n.published_bytes,
+        "byte-triggered cadence must publish fewer bytes ({} vs {})",
+        by_bytes.published_bytes,
+        every_n.published_bytes
+    );
+
     let doc = obj(vec![
         (
             "delivery",
@@ -295,6 +350,20 @@ fn main() -> anyhow::Result<()> {
                 ("fingerprint_publish_p50_s", num(fp.publish_p50)),
                 ("fingerprint_publish_p99_s", num(fp.publish_p99)),
                 ("checksums_identical", Value::Bool(true)),
+            ]),
+        ),
+        (
+            "compaction",
+            obj(vec![
+                ("every_n_published_bytes", num(every_n.published_bytes as f64)),
+                ("bytes_ratio_published_bytes", num(by_bytes.published_bytes as f64)),
+                ("every_n_fulls", num(fulls(&every_n) as f64)),
+                ("bytes_ratio_fulls", num(fulls(&by_bytes) as f64)),
+                // Headline for the regression gate: higher is better.
+                (
+                    "bytes_ratio_saving",
+                    num(every_n.published_bytes as f64 / by_bytes.published_bytes as f64),
+                ),
             ]),
         ),
         ("mode", s(if smoke { "smoke" } else { "full" })),

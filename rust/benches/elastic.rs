@@ -3,16 +3,26 @@
 //! Measures (on the virtual clock) what the elasticity layer costs and
 //! buys: the reshard latency cliff per grow size — on both the *full*
 //! capture-and-restore path and the *partial* (owner-change-only) path,
-//! including the W=8→12 pair — delivery latency of a backlogged stream
-//! with and without a backlog-driven scale policy, the mid-window
-//! failure redo cost, and the publish p50/p99 spread under a
+//! under both row-ownership strategies (`OwnerMap::Modulo` and
+//! `OwnerMap::JumpHash`), including the W=8→12 pair — delivery latency
+//! of a backlogged stream with and without a backlog-driven scale
+//! policy, the mid-window failure redo cost (with and without a
+//! detection-latency gap), and the publish p50/p99 spread under a
 //! slow-registry tail — plus the real wall time of the capture → rebuild
 //! → restore reshard round trip.
 //!
+//! The owner-map comparison is the headline: at 8→12, modulo sharding
+//! moves `1 − gcd(8,12)/12 = 2/3` of all rows while jump consistent
+//! hashing moves the minimum `1 − 8/12 = 1/3` — the bench asserts the
+//! jump-hash partial reshard moves ≤ 55% of the rows *and* bytes the
+//! modulo partial reshard moves (theoretical: 50%), with the
+//! post-rescale published state bit-identical to the full-reshard path.
+//!
 //! Results land in `BENCH_elastic.json` (reshard secs/bytes per world
-//! pair for both paths, reduction ratios, backlog/failure/tail numbers)
+//! pair *per owner map*, reduction ratios, backlog/failure/tail numbers)
 //! so the perf trajectory is tracked across PRs; CI uploads it as an
-//! artifact.
+//! artifact and diffs it against the committed baseline
+//! (`benches/baselines/`, see `examples/bench_diff.rs`).
 //!
 //! Run: `cargo bench --bench elastic`
 //! CI smoke mode (small sizes, same paths): `cargo bench --bench elastic -- --smoke`
@@ -21,9 +31,10 @@ mod common;
 
 use gmeta::config::ModelDims;
 use gmeta::data::aliccp_like;
+use gmeta::embedding::OwnerMap;
 use gmeta::job::{TrainJob, Trainer};
 use gmeta::stream::{
-    BacklogPolicy, DeltaFeedConfig, ElasticEvent, OnlineConfig, OnlineSession, PublishMode,
+    BacklogPolicy, CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
     ScheduledPolicy,
 };
 use gmeta::util::args::Args;
@@ -32,6 +43,10 @@ use gmeta::util::TempDir;
 
 struct Scale {
     warmup_samples: usize,
+    /// High enough that warm-up cycles through many distinct episodes:
+    /// the touched-row set must dwarf the dense replica for the
+    /// owner-map byte ratios to be row-dominated.
+    warmup_steps: usize,
     samples_per_delta: usize,
     n_deltas: usize,
     bench_iters: usize,
@@ -43,15 +58,20 @@ fn dims() -> ModelDims {
         slots: 8,
         valency: 2,
         emb_dim: 16,
+        // Small dense tower: reshard bytes are embedding-row-dominated,
+        // as at production scale (the table is ~all of the model).
+        hidden1: 16,
+        hidden2: 8,
         ..Default::default()
     }
 }
 
-fn job(world: usize) -> TrainJob<'static> {
+fn job(world: usize, map: OwnerMap) -> TrainJob<'static> {
     TrainJob::builder()
         .gmeta(1, world)
         .dims(dims())
         .dataset(aliccp_like(20_000))
+        .owner_map(map)
         .build()
         .unwrap()
 }
@@ -59,10 +79,10 @@ fn job(world: usize) -> TrainJob<'static> {
 fn online(scale: &Scale) -> OnlineConfig {
     OnlineConfig {
         warmup_samples: scale.warmup_samples,
-        warmup_steps: 6,
+        warmup_steps: scale.warmup_steps,
         steps_per_window: 8,
         mode: PublishMode::DeltaRepublish,
-        compact_every: 3,
+        compact: CompactPolicy::EveryN(3),
         feed: DeltaFeedConfig {
             n_deltas: scale.n_deltas,
             samples_per_delta: scale.samples_per_delta,
@@ -78,20 +98,38 @@ fn online(scale: &Scale) -> OnlineConfig {
     }
 }
 
-/// One scheduled rescale w → w_prime; returns the reshard event.
-fn reshard_event(
+/// One scheduled rescale w → w_prime; returns the finished session (and
+/// its tempdir, keeping the published store alive for inspection).
+fn reshard_session(
     scale: &Scale,
     w: usize,
     w_prime: usize,
     partial: bool,
-) -> anyhow::Result<ElasticEvent> {
+    map: OwnerMap,
+) -> anyhow::Result<(TempDir, OnlineSession<'static>)> {
     let tmp = TempDir::new()?;
     let mut cfg = online(scale);
     cfg.partial_reshard = partial;
-    let mut session = OnlineSession::new(job(w), cfg, tmp.path())?
+    let mut session = OnlineSession::new(job(w, map), cfg, tmp.path())?
         .with_policy(Box::new(ScheduledPolicy::new(vec![(0, w_prime)])))?;
     session.run()?;
-    Ok(session.events[0])
+    Ok((tmp, session))
+}
+
+/// Every published version of `a` bit-identical to `b`'s (dense + rows).
+fn assert_published_bit_identical(a: &OnlineSession<'_>, b: &OnlineSession<'_>, what: &str) {
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(a.delivery.versions.len(), b.delivery.versions.len(), "{what}");
+    for v in a.delivery.versions.iter().map(|r| r.version) {
+        let ca = a.publisher.store.load(v).unwrap();
+        let cb = b.publisher.store.load(v).unwrap();
+        assert_eq!(bits(&ca.dense), bits(&cb.dense), "{what}: version {v} dense");
+        assert_eq!(ca.rows.len(), cb.rows.len(), "{what}: version {v} rows");
+        for ((ra, va), (rb, vb)) in ca.rows.iter().zip(&cb.rows) {
+            assert_eq!(ra, rb, "{what}: version {v}");
+            assert_eq!(bits(va), bits(vb), "{what}: version {v} row {ra}");
+        }
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -100,6 +138,7 @@ fn main() -> anyhow::Result<()> {
     let scale = if smoke {
         Scale {
             warmup_samples: 2_000,
+            warmup_steps: 60,
             samples_per_delta: 256,
             n_deltas: 3,
             bench_iters: 2,
@@ -107,6 +146,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         Scale {
             warmup_samples: 12_000,
+            warmup_steps: 60,
             samples_per_delta: 1_024,
             n_deltas: 6,
             bench_iters: 8,
@@ -116,7 +156,7 @@ fn main() -> anyhow::Result<()> {
     println!("=== reshard latency cliff per grow size (virtual clock) ===");
     for to_world in [3usize, 4] {
         let tmp = TempDir::new()?;
-        let mut s = OnlineSession::new(job(2), online(&scale), tmp.path())?
+        let mut s = OnlineSession::new(job(2, OwnerMap::Modulo), online(&scale), tmp.path())?
             .with_policy(Box::new(ScheduledPolicy::new(vec![(0, to_world)])))?;
         s.run()?;
         let ev = s.events[0];
@@ -131,55 +171,95 @@ fn main() -> anyhow::Result<()> {
         assert!(ev.reshard_secs > 0.0);
     }
 
-    println!("\n=== partial (owner-change-only) vs full reshard ===");
+    println!("\n=== partial (owner-change-only) vs full reshard, per owner map ===");
     let mut pair_docs = Vec::new();
+    let mut jump_vs_modulo_8_12 = (0.0f64, 0.0f64); // (rows ratio, bytes ratio)
     for &(w, wp) in &[(2usize, 3usize), (4, 6), (8, 12)] {
-        let full = reshard_event(&scale, w, wp, false)?;
-        let part = reshard_event(&scale, w, wp, true)?;
-        assert!(!full.partial && part.partial);
-        let secs_reduction = 1.0 - part.reshard_secs / full.reshard_secs;
-        let bytes_reduction = 1.0 - part.bytes_moved as f64 / full.bytes_moved as f64;
-        println!(
-            "{w:>2} -> {wp:<2}: full {:.4}s / {:.2} MiB | partial {:.4}s / {:.2} MiB \
-             ({} rows changed owner) | -{:.0}% secs, -{:.0}% bytes",
-            full.reshard_secs,
-            full.bytes_moved as f64 / (1 << 20) as f64,
-            part.reshard_secs,
-            part.bytes_moved as f64 / (1 << 20) as f64,
-            part.moved_rows,
-            secs_reduction * 100.0,
-            bytes_reduction * 100.0
-        );
-        if (w, wp) == (8, 12) {
-            assert!(
-                secs_reduction >= 0.5,
-                "partial reshard must halve PHASE_RESHARD secs at 8->12 \
-                 (got -{:.0}%)",
-                secs_reduction * 100.0
-            );
-            assert!(
-                bytes_reduction >= 0.5,
-                "partial reshard must halve bytes moved at 8->12 (got -{:.0}%)",
+        // Per map: the full-vs-partial reduction.  Across maps: how much
+        // smaller the jump-hash moved set is than modulo's.
+        let mut per_map_partial = Vec::new();
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            let (_tf, full) = reshard_session(&scale, w, wp, false, map)?;
+            let (_tp, part) = reshard_session(&scale, w, wp, true, map)?;
+            let (fe, pe) = (full.events[0], part.events[0]);
+            assert!(!fe.partial && pe.partial);
+            // The cost knob never changes the published artifacts.
+            assert_published_bit_identical(&part, &full, &format!("{map} {w}->{wp}"));
+            let secs_reduction = 1.0 - pe.reshard_secs / fe.reshard_secs;
+            let bytes_reduction = 1.0 - pe.bytes_moved as f64 / fe.bytes_moved as f64;
+            println!(
+                "{map:>6} {w:>2} -> {wp:<2}: full {:.4}s / {:.2} MiB | partial {:.4}s / \
+                 {:.2} MiB ({} rows changed owner, expect ~{:.0}%) | -{:.0}% secs, \
+                 -{:.0}% bytes",
+                fe.reshard_secs,
+                fe.bytes_moved as f64 / (1 << 20) as f64,
+                pe.reshard_secs,
+                pe.bytes_moved as f64 / (1 << 20) as f64,
+                pe.moved_rows,
+                map.moved_fraction(w, wp) * 100.0,
+                secs_reduction * 100.0,
                 bytes_reduction * 100.0
             );
+            if (w, wp) == (8, 12) && map == OwnerMap::Modulo {
+                assert!(
+                    secs_reduction >= 0.5,
+                    "partial reshard must halve PHASE_RESHARD secs at 8->12 \
+                     (got -{:.0}%)",
+                    secs_reduction * 100.0
+                );
+                assert!(
+                    bytes_reduction >= 0.5,
+                    "partial reshard must halve bytes moved at 8->12 (got -{:.0}%)",
+                    bytes_reduction * 100.0
+                );
+            }
+            pair_docs.push(obj(vec![
+                ("from_world", num(w as f64)),
+                ("to_world", num(wp as f64)),
+                ("owner_map", s(map.as_str())),
+                ("full_reshard_secs", num(fe.reshard_secs)),
+                ("full_bytes_moved", num(fe.bytes_moved as f64)),
+                ("partial_reshard_secs", num(pe.reshard_secs)),
+                ("partial_bytes_moved", num(pe.bytes_moved as f64)),
+                ("moved_rows", num(pe.moved_rows as f64)),
+                ("expected_moved_fraction", num(map.moved_fraction(w, wp))),
+                ("secs_reduction", num(secs_reduction)),
+                ("bytes_reduction", num(bytes_reduction)),
+            ]));
+            per_map_partial.push(pe);
         }
-        pair_docs.push(obj(vec![
-            ("from_world", num(w as f64)),
-            ("to_world", num(wp as f64)),
-            ("full_reshard_secs", num(full.reshard_secs)),
-            ("full_bytes_moved", num(full.bytes_moved as f64)),
-            ("partial_reshard_secs", num(part.reshard_secs)),
-            ("partial_bytes_moved", num(part.bytes_moved as f64)),
-            ("moved_rows", num(part.moved_rows as f64)),
-            ("secs_reduction", num(secs_reduction)),
-            ("bytes_reduction", num(bytes_reduction)),
-        ]));
+        let (me, je) = (per_map_partial[0], per_map_partial[1]);
+        let rows_ratio = je.moved_rows as f64 / me.moved_rows as f64;
+        let bytes_ratio = je.bytes_moved as f64 / me.bytes_moved as f64;
+        println!(
+            "       {w:>2} -> {wp:<2}: jump-hash partial moves {:.0}% of modulo's rows, \
+             {:.0}% of its bytes",
+            rows_ratio * 100.0,
+            bytes_ratio * 100.0
+        );
+        if (w, wp) == (8, 12) {
+            // Theoretical: (1 − 8/12) / (1 − gcd(8,12)/12) = (1/3)/(2/3) = 50%.
+            assert!(
+                rows_ratio <= 0.55,
+                "jump-hash partial reshard at 8->12 must move <= 55% of the rows \
+                 modulo moves (got {:.0}%)",
+                rows_ratio * 100.0
+            );
+            assert!(
+                bytes_ratio <= 0.55,
+                "jump-hash partial reshard at 8->12 must move <= 55% of the bytes \
+                 modulo moves (got {:.0}%)",
+                bytes_ratio * 100.0
+            );
+            jump_vs_modulo_8_12 = (rows_ratio, bytes_ratio);
+        }
     }
 
     println!("\n=== backlogged stream: fixed cluster vs backlog policy ===");
     let run_fixed = |world: usize| -> anyhow::Result<gmeta::metrics::DeliveryMetrics> {
         let tmp = TempDir::new()?;
-        let mut s = OnlineSession::new(job(world), online(&scale), tmp.path())?;
+        let mut s =
+            OnlineSession::new(job(world, OwnerMap::Modulo), online(&scale), tmp.path())?;
         s.run()?;
         Ok(s.delivery.clone())
     };
@@ -187,8 +267,9 @@ fn main() -> anyhow::Result<()> {
     let tmp = TempDir::new()?;
     let mut policy = BacklogPolicy::new(2, 4);
     policy.cooldown = 0;
-    let mut elastic_session = OnlineSession::new(job(2), online(&scale), tmp.path())?
-        .with_policy(Box::new(policy))?;
+    let mut elastic_session =
+        OnlineSession::new(job(2, OwnerMap::Modulo), online(&scale), tmp.path())?
+            .with_policy(Box::new(policy))?;
     elastic_session.run()?;
     println!(
         "fixed world 2 : mean streamed latency {:.4}s",
@@ -201,23 +282,43 @@ fn main() -> anyhow::Result<()> {
         elastic_session.delivery.total_reshard_secs()
     );
 
-    println!("\n=== mid-window failure: redo cost ===");
-    let mut failing = online(&scale);
-    failing.failures.kill_at_window = Some(1);
-    let tmp = TempDir::new()?;
-    let mut s = OnlineSession::new(job(2), failing, tmp.path())?;
-    s.run()?;
-    let v = &s.delivery.versions[2];
+    println!("\n=== mid-window failure: redo cost, with and without detection latency ===");
+    let run_failing = |detection: f64| -> anyhow::Result<gmeta::metrics::DeliveryMetrics> {
+        let mut failing = online(&scale);
+        failing.failures.kill_at_window = Some(1);
+        failing.failures.detection_secs = detection;
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(job(2, OwnerMap::Modulo), failing, tmp.path())?;
+        s.run()?;
+        Ok(s.delivery.clone())
+    };
+    let oracle = run_failing(0.0)?;
+    let detection_secs = 12.0;
+    let detected = run_failing(detection_secs)?;
+    let (vo, vd) = (&oracle.versions[2], &detected.versions[2]);
     println!(
-        "window 1 died mid-flight: redo {:.4}s, version {} latency {:.4}s \
-         (clean run: {:.4}s)",
-        v.redo_secs,
-        v.version,
-        v.latency(),
+        "window 1 died mid-flight (oracle detector): redo {:.4}s, version {} \
+         latency {:.4}s (clean run: {:.4}s)",
+        vo.redo_secs,
+        vo.version,
+        vo.latency(),
         fixed.versions[2].latency()
     );
-    assert!(v.redo_secs > 0.0);
-    let redo_secs = v.redo_secs;
+    println!(
+        "with a {detection_secs:.0}s detection gap: detect {:.4}s + redo {:.4}s, \
+         latency {:.4}s",
+        vd.detect_secs,
+        vd.redo_secs,
+        vd.latency()
+    );
+    assert!(vo.redo_secs > 0.0);
+    assert_eq!(vo.detect_secs, 0.0);
+    assert_eq!(vd.detect_secs, detection_secs);
+    assert!(
+        vd.latency() >= vo.latency() + detection_secs * 0.99,
+        "detection gap not visible in delivery latency"
+    );
+    let redo_secs = vo.redo_secs;
 
     println!("\n=== slow-registry tail: publish p50 vs p99 ===");
     let mut tail_p50 = 0.0;
@@ -226,7 +327,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = online(&scale);
         cfg.failures.publish_tail_sigma = sigma;
         let tmp = TempDir::new()?;
-        let mut s = OnlineSession::new(job(2), cfg, tmp.path())?;
+        let mut s = OnlineSession::new(job(2, OwnerMap::Modulo), cfg, tmp.path())?;
         s.run()?;
         println!(
             "sigma {sigma:.1}: publish p50 {:.4}s p99 {:.4}s",
@@ -241,6 +342,17 @@ fn main() -> anyhow::Result<()> {
 
     let doc = obj(vec![
         ("reshard_pairs", Value::Arr(pair_docs)),
+        (
+            "owner_map_8_12",
+            obj(vec![
+                // Ratios < 1 are the jump-hash win; ~0.5 is theoretical.
+                ("jump_over_modulo_rows_ratio", num(jump_vs_modulo_8_12.0)),
+                ("jump_over_modulo_bytes_ratio", num(jump_vs_modulo_8_12.1)),
+                // Headline for the regression gate: higher is better.
+                ("jump_rows_saving", num(1.0 - jump_vs_modulo_8_12.0)),
+                ("jump_bytes_saving", num(1.0 - jump_vs_modulo_8_12.1)),
+            ]),
+        ),
         (
             "backlog",
             obj(vec![
@@ -261,6 +373,15 @@ fn main() -> anyhow::Result<()> {
         ),
         ("failure_redo_secs", num(redo_secs)),
         (
+            "failure_detection",
+            obj(vec![
+                ("detection_secs", num(detection_secs)),
+                ("detected_total_detect_secs", num(detected.total_detect_secs())),
+                ("oracle_v2_latency_s", num(vo.latency())),
+                ("detected_v2_latency_s", num(vd.latency())),
+            ]),
+        ),
+        (
             "publish_tail",
             obj(vec![
                 ("sigma", num(0.8)),
@@ -274,7 +395,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== wall time of the real reshard round trip ===");
     // capture -> rebuild at the new world -> restore (rows re-route).
-    let mut j = job(2);
+    let mut j = job(2, OwnerMap::JumpHash);
     let spec = j.spec().clone();
     let trainer = j.trainer_mut();
     let eps = gmeta::coordinator::episodes_from_generator(
@@ -285,7 +406,7 @@ fn main() -> anyhow::Result<()> {
     );
     trainer.run_steps(&eps, 4)?;
     common::bench(
-        "reshard 2 -> 4 (capture+rebuild+restore)",
+        "reshard 2 -> 4 (capture+rebuild+restore, jump hash)",
         1,
         scale.bench_iters,
         || {

@@ -16,7 +16,7 @@ use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::aliccp_like;
 use gmeta::job::TrainJob;
 use gmeta::embedding::plan::LookupPlan;
-use gmeta::embedding::ShardedEmbedding;
+use gmeta::embedding::{OwnerMap, ShardedEmbedding};
 use gmeta::harness::paper_scale_dims;
 use gmeta::io::codec::{decode_n, encode_all, Codec};
 use gmeta::net::Topology;
@@ -34,11 +34,11 @@ fn main() {
     );
 
     common::bench("lookup_plan build (dedup+route)", 3, 30, || {
-        let p = LookupPlan::build(&ids, world);
+        let p = LookupPlan::build(&ids, world, OwnerMap::Modulo);
         std::hint::black_box(p.lookup.unique.len());
     });
 
-    let plan = LookupPlan::build(&ids, world);
+    let plan = LookupPlan::build(&ids, world, OwnerMap::Modulo);
     let mut table = ShardedEmbedding::new(world, dims.emb_dim, 1);
     let resp: Vec<Vec<f32>> = (0..world)
         .map(|s| table.serve(s, &plan.rows_for_shard(s)).unwrap())

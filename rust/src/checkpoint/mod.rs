@@ -10,7 +10,8 @@
 //!
 //! Layout:
 //! ```text
-//! <dir>/meta.json                   header: step, dims, variant, world
+//! <dir>/meta.json                   header: step, dims, variant, world,
+//!                                   owner_map
 //! <dir>/dense.bin                   [u32 len][u32 crc][f32 values...]
 //! <dir>/shard_<rank>.bin            per row: [u64 row][f32 value x D]
 //!                                   (whole file framed with len+crc)
@@ -18,16 +19,22 @@
 //!
 //! Restore supports **resharding**: a checkpoint written at world size N
 //! can be loaded into a cluster of world size M — rows are re-routed to
-//! their new owner (`row % M`).  This is the elastic-scaling path an
+//! their new owner under the target table's
+//! [`crate::embedding::OwnerMap`].  This is the elastic-scaling path an
 //! industrial trainer needs when the GPU allocation changes between
-//! delivery windows.
+//! delivery windows.  The header records which owner map wrote the
+//! state (`owner_map`, absent in pre-abstraction checkpoints ⇒
+//! `modulo`), so reshard-delta accounting knows which placement the
+//! writing cluster used; cross-map restores are *translated*, not
+//! rejected — a checkpoint stores rows, never shard assignments, so
+//! every row simply lands on its owner under the new map.
 
 use std::fs;
 use std::path::Path;
 
 use crate::config::ModelDims;
 use crate::dense::DenseParams;
-use crate::embedding::ShardedEmbedding;
+use crate::embedding::{OwnerMap, ShardedEmbedding};
 use crate::util::json::{self, num, obj, s, Value};
 use crate::Result;
 
@@ -38,6 +45,12 @@ pub struct Checkpoint {
     pub variant: String,
     pub dims: ModelDims,
     pub world: usize,
+    /// Row-ownership strategy of the table that wrote this state —
+    /// drives the reshard-delta accounting
+    /// ([`Checkpoint::reshard_delta`]).  Persisted in the header;
+    /// headers without the field (pre-abstraction checkpoints) parse as
+    /// [`OwnerMap::Modulo`].
+    pub owner_map: OwnerMap,
     pub dense: Vec<f32>,
     /// (row, values) pairs across all shards.
     pub rows: Vec<(u64, Vec<f32>)>,
@@ -59,22 +72,24 @@ impl Checkpoint {
     }
 
     /// One pass over the table for a `w → w_prime` rescale: the number
-    /// of rows whose owner changes (`row % w != row % w_prime`) and the
-    /// bytes a partial reshard moves for them (owner-changing rows at
-    /// the on-disk stride plus the dense replica the rescaled
-    /// allocation needs) — versus [`Checkpoint::payload_bytes`] out
-    /// *and* back in for the full capture-and-restore path.  Residues
-    /// agree on `gcd(w, w') / max(w, w')` of the id space, so a
-    /// modulo-sharded table moves `1 − gcd(w, w')/max(w, w')` of its
-    /// rows (e.g. 2/3 at 8→12, and also 2/3 on the shrink 3→2).  The
-    /// delta-reshard accounting behind
+    /// of rows whose owner changes under this checkpoint's
+    /// [`OwnerMap`] and the bytes a partial reshard moves for them
+    /// (owner-changing rows at the on-disk stride plus the dense
+    /// replica the rescaled allocation needs) — versus
+    /// [`Checkpoint::payload_bytes`] out *and* back in for the full
+    /// capture-and-restore path.  Under [`OwnerMap::Modulo`] the
+    /// residues agree on `gcd(w, w') / max(w, w')` of the id space, so
+    /// `1 − gcd(w, w')/max(w, w')` of all rows move (2/3 at 8→12, and
+    /// also 2/3 on the shrink 3→2); under [`OwnerMap::JumpHash`] only
+    /// the consistent-hashing minimum `1 − min(w, w')/max(w, w')` moves
+    /// (1/3 at 8→12).  The delta-reshard accounting behind
     /// [`crate::stream::OnlineConfig::partial_reshard`].
     pub fn reshard_delta(&self, w: usize, w_prime: usize) -> (usize, u64) {
-        let (w, wp) = (w.max(1) as u64, w_prime.max(1) as u64);
+        let (w, wp) = (w.max(1), w_prime.max(1));
         let mut moved_rows = 0usize;
         let mut bytes = self.dense.len() as u64 * 4;
         for (r, vals) in &self.rows {
-            if r % w != r % wp {
+            if self.owner_map.owner(*r, w) != self.owner_map.owner(*r, wp) {
                 moved_rows += 1;
                 bytes += 8 + vals.len() as u64 * 4;
             }
@@ -192,6 +207,7 @@ pub fn capture(
         variant: variant.to_string(),
         dims: *dims,
         world,
+        owner_map: embedding.owner_map(),
         dense: dense.flatten(),
         rows,
     }
@@ -214,6 +230,7 @@ pub fn save(
         ("step", num(step as f64)),
         ("variant", s(variant)),
         ("world", num(world as f64)),
+        ("owner_map", s(embedding.owner_map().as_str())),
         ("dims", dims_to_json(dims)),
     ]);
     fs::write(dir.join("meta.json"), json::write(&header))?;
@@ -247,6 +264,7 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
         .ok_or_else(|| anyhow::anyhow!("bad variant"))?
         .to_string();
     let step = header.field("step")?.as_u64().unwrap_or(0);
+    let owner_map = owner_map_from_header(&header)?;
 
     let dense = bytes_to_f32s(&unframe(&fs::read(dir.join("dense.bin"))?, "dense.bin")?)?;
 
@@ -269,47 +287,70 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
         variant,
         dims,
         world,
+        owner_map,
         dense,
         rows,
     })
 }
 
+/// Read the optional `owner_map` header field (shared by the full
+/// checkpoint header and the delta-store version headers): absent —
+/// every checkpoint written before the abstraction existed — means
+/// [`OwnerMap::Modulo`]; present-but-garbled is an error, not a silent
+/// fallback.
+pub(crate) fn owner_map_from_header(header: &Value) -> Result<OwnerMap> {
+    match header.get("owner_map") {
+        None => Ok(OwnerMap::Modulo),
+        Some(v) => OwnerMap::parse(
+            v.as_str()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint header field \"owner_map\" bad"))?,
+        ),
+    }
+}
+
 /// Restore a checkpoint into a (possibly different-world) embedding table
-/// + dense replica.  Rows re-route to `row % new_world` — the elastic
-/// resharding path.
+/// + dense replica.  Rows re-route to the target table's owner under
+/// *its* [`OwnerMap`] — the elastic resharding path.
 ///
 /// **Resharding semantics.**  A checkpoint records *rows*, not shards: it
-/// is world-size-free by construction (rows are captured sorted by id,
-/// whatever layout wrote them).  Restoring into a table of any world size
-/// `M` simply routes each row to its new owner `row % M`, so a capture at
-/// world `W` restored at `W ± k` reproduces the exact same logical state —
-/// the property the elastic rescaling layer ([`crate::stream::elastic`])
-/// and the mid-window failure recovery both lean on.
+/// is world-size-free *and owner-map-free* by construction (rows are
+/// captured sorted by id, whatever layout wrote them).  Restoring into a
+/// table of any world size `M` simply routes each row to
+/// `table.owner(row)` — whatever [`OwnerMap`] that table runs — so a
+/// capture at world `W` restored at `W ± k`, or restored under a
+/// different owner map, reproduces the exact same logical state.  This
+/// is the property the elastic rescaling layer
+/// ([`crate::stream::elastic`]) and the mid-window failure recovery both
+/// lean on; the header's recorded `owner_map` exists for the reshard
+/// *accounting* ([`Checkpoint::reshard_delta`]), not as a restore gate.
 ///
 /// ```
 /// use gmeta::checkpoint::{capture, restore};
 /// use gmeta::config::ModelDims;
 /// use gmeta::dense::DenseParams;
-/// use gmeta::embedding::{Optimizer, ShardedEmbedding};
+/// use gmeta::embedding::{Optimizer, OwnerMap, ShardedEmbedding};
 ///
 /// let dims = ModelDims { emb_dim: 4, ..Default::default() };
 /// let dense = DenseParams::init(&dims, "maml", 1);
 ///
-/// // Touch a few rows on a 4-way table…
+/// // Touch a few rows on a 4-way modulo-sharded table…
 /// let mut table4 = ShardedEmbedding::new(4, 4, 9);
 /// for row in [3u64, 17, 999] {
 ///     let owner = table4.owner(row);
 ///     table4.apply_grads(owner, &[row], &[0.5; 4], 0.1, Optimizer::Sgd)?;
 /// }
 /// let ckpt = capture(7, "maml", &dims, &dense, &mut table4);
+/// assert_eq!(ckpt.owner_map, OwnerMap::Modulo);
 ///
-/// // …and restore into a 7-way cluster: values survive, owners re-route.
+/// // …and restore into a 7-way cluster: values survive, owners re-route
+/// // through the *target* table's map (here jump-consistent hashing —
+/// // a cross-map restore is translated row-by-row, never rejected).
 /// let mut dense7 = DenseParams::init(&dims, "maml", 2);
-/// let mut table7 = ShardedEmbedding::new(7, 4, 9);
+/// let mut table7 = ShardedEmbedding::new(7, 4, 9).with_owner_map(OwnerMap::JumpHash);
 /// restore(&ckpt, &mut dense7, &mut table7)?;
 /// for row in [3u64, 17, 999] {
 ///     assert_eq!(table7.read(row), table4.read(row));
-///     assert_eq!(table7.owner(row), (row % 7) as usize);
+///     assert_eq!(table7.owner(row), OwnerMap::JumpHash.owner(row, 7));
 /// }
 /// # Ok::<(), anyhow::Error>(())
 /// ```
@@ -465,6 +506,87 @@ mod tests {
         // The partial path never exceeds the full payload.
         for wp in 1..9 {
             assert!(ckpt.reshard_delta_bytes(2, wp) <= ckpt.payload_bytes());
+        }
+    }
+
+    #[test]
+    fn reshard_delta_follows_the_checkpoint_owner_map() {
+        use crate::embedding::OwnerMap;
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = ShardedEmbedding::new(8, 4, 9).with_owner_map(OwnerMap::JumpHash);
+        for row in 0..512u64 {
+            let owner = table.owner(row);
+            table
+                .apply_grads(owner, &[row], &[0.5; 4], 0.1, crate::embedding::Optimizer::Sgd)
+                .unwrap();
+        }
+        let ckpt = capture(1, "maml", &d, &dense, &mut table);
+        assert_eq!(ckpt.owner_map, OwnerMap::JumpHash);
+        // Moved rows are exactly the ones whose jump-hash owner changes…
+        let want = (0..512u64)
+            .filter(|&r| OwnerMap::JumpHash.owner(r, 8) != OwnerMap::JumpHash.owner(r, 12))
+            .count();
+        assert_eq!(ckpt.reshard_moved_rows(8, 12), want);
+        // …and sit near the 1 − 8/12 = 1/3 consistent-hashing minimum,
+        // well under modulo's 2/3.
+        let frac = want as f64 / 512.0;
+        assert!((frac - 1.0 / 3.0).abs() < 0.08, "moved fraction {frac}");
+        // Same world still moves nothing.
+        assert_eq!(ckpt.reshard_moved_rows(8, 8), 0);
+    }
+
+    #[test]
+    fn owner_map_survives_the_header_roundtrip() {
+        use crate::embedding::OwnerMap;
+        let tmp = TempDir::new().unwrap();
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = ShardedEmbedding::new(3, 4, 9).with_owner_map(OwnerMap::JumpHash);
+        for row in [1u64, 5, 17] {
+            let owner = table.owner(row);
+            table
+                .apply_grads(owner, &[row], &[0.5; 4], 0.1, crate::embedding::Optimizer::Sgd)
+                .unwrap();
+        }
+        save(tmp.path(), 4, "maml", &d, &dense, &mut table).unwrap();
+        let ckpt = load(tmp.path()).unwrap();
+        assert_eq!(ckpt.owner_map, OwnerMap::JumpHash);
+
+        // Pre-abstraction headers carry no owner_map field: strip it and
+        // the checkpoint must parse as the historical modulo placement.
+        let header_path = tmp.path().join("meta.json");
+        let mut header = json::parse(&fs::read_to_string(&header_path).unwrap()).unwrap();
+        if let json::Value::Obj(m) = &mut header {
+            m.remove("owner_map");
+        }
+        fs::write(&header_path, json::write(&header)).unwrap();
+        let legacy = load(tmp.path()).unwrap();
+        assert_eq!(legacy.owner_map, OwnerMap::Modulo);
+
+        // A garbled token is an error, not a silent fallback.
+        if let json::Value::Obj(m) = &mut header {
+            m.insert("owner_map".to_string(), json::s("ring"));
+        }
+        fs::write(&header_path, json::write(&header)).unwrap();
+        assert!(load(tmp.path()).is_err());
+    }
+
+    #[test]
+    fn cross_map_restore_translates_rows() {
+        use crate::embedding::OwnerMap;
+        let d = dims();
+        let dense = DenseParams::init(&d, "maml", 3);
+        let mut table = touched_table(4); // modulo
+        let want: Vec<(u64, Vec<f32>)> =
+            [1u64, 5, 17, 123, 999].iter().map(|&r| (r, table.read(r))).collect();
+        let ckpt = capture(1, "maml", &d, &dense, &mut table);
+        let mut dense2 = DenseParams::init(&d, "maml", 0);
+        let mut jump = ShardedEmbedding::new(4, 4, 9).with_owner_map(OwnerMap::JumpHash);
+        restore(&ckpt, &mut dense2, &mut jump).unwrap();
+        for (row, vals) in want {
+            assert_eq!(jump.read(row), vals, "row {row} lost in translation");
+            assert_eq!(jump.owner(row), OwnerMap::JumpHash.owner(row, 4));
         }
     }
 

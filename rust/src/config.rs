@@ -3,6 +3,7 @@
 //! Everything the CLI or an example can set lives here; EXPERIMENTS.md
 //! records the exact configs used per reported row.
 
+use crate::embedding::OwnerMap;
 use crate::net::LinkClass;
 
 /// Which distributed architecture executes the training run.
@@ -233,6 +234,13 @@ pub struct TrainConfig {
     /// dense gradients instead of the flat ring.  An extension beyond the
     /// paper; ablated in `benches/outer_rule.rs`.
     pub hierarchical_allreduce: bool,
+    /// Row-ownership strategy of the sharded embedding table (G-Meta:
+    /// sharded across workers; PS: across the server fleet).  Part of the
+    /// training config so [`crate::job::JobSpec`] rebuilds — elastic
+    /// rescales, failure recovery — preserve the placement.  Default
+    /// [`OwnerMap::Modulo`] (bit-compatible with pre-abstraction runs);
+    /// [`OwnerMap::JumpHash`] minimizes rows moved per rescale.
+    pub owner_map: OwnerMap,
     pub steps: usize,
     pub seed: u64,
 }
@@ -246,6 +254,7 @@ impl Default for TrainConfig {
             fused_prefetch: true,
             reordered_outer_update: true,
             hierarchical_allreduce: false,
+            owner_map: OwnerMap::default(),
             steps: 100,
             seed: 17,
         }

@@ -98,7 +98,8 @@ impl<'rt> GMetaTrainer<'rt> {
         }
         Ok(Self {
             topo: Topology::new(cfg.cluster),
-            embedding: ShardedEmbedding::new(world, cfg.dims.emb_dim, cfg.train.seed),
+            embedding: ShardedEmbedding::new(world, cfg.dims.emb_dim, cfg.train.seed)
+                .with_owner_map(cfg.train.owner_map),
             replicas: (0..world)
                 .map(|_| DenseParams::init(&cfg.dims, variant.as_str(), cfg.train.seed))
                 .collect(),
@@ -169,6 +170,9 @@ impl<'rt> GMetaTrainer<'rt> {
         }
         let dims = self.cfg.dims;
         let (b, f, v, d) = (dims.batch, dims.slots, dims.valency, dims.emb_dim);
+        // Plans route through the table's own owner map: placement and
+        // request routing share one helper and cannot diverge.
+        let omap = self.embedding.owner_map();
         let mut clocks = WorkerClocks::new(world);
         let mut m = RunMetrics::default();
         let mut prev_compute = vec![0.0f64; world];
@@ -218,7 +222,7 @@ impl<'rt> GMetaTrainer<'rt> {
                     .map(|(s, q)| {
                         let mut all = s.clone();
                         all.extend_from_slice(q);
-                        LookupPlan::build(&all, world)
+                        LookupPlan::build(&all, world, omap)
                     })
                     .collect();
                 let (uniq, report) = self.exchange_rows(&plans)?;
@@ -254,11 +258,11 @@ impl<'rt> GMetaTrainer<'rt> {
                 // rows fetched twice — exactly what §2.1.1 aggregates away).
                 let sup_plans: Vec<LookupPlan> = id_pairs
                     .iter()
-                    .map(|(s, _)| LookupPlan::build(s, world))
+                    .map(|(s, _)| LookupPlan::build(s, world, omap))
                     .collect();
                 let qry_plans: Vec<LookupPlan> = id_pairs
                     .iter()
-                    .map(|(_, q)| LookupPlan::build(q, world))
+                    .map(|(_, q)| LookupPlan::build(q, world, omap))
                     .collect();
                 let (uniq_s, rep_s) = self.exchange_rows(&sup_plans)?;
                 let (uniq_q, rep_q) = self.exchange_rows(&qry_plans)?;

@@ -3,10 +3,12 @@
 //!
 //! Paper §2.1: "G-Meta evenly partitions the enormous embedding parameters
 //! and distributes them to all workers" (Algorithm 1 line 1: "bucketized
-//! in shards by rows and evenly distributed").  We shard by
-//! `row % world_size` — round-robin bucketization, the standard choice for
-//! hashed categorical ids because it load-balances skewed id spaces (hot
-//! ids land on different shards regardless of their numeric range).
+//! in shards by rows and evenly distributed").  *Which* shard owns a row
+//! is a pluggable [`OwnerMap`]: `row % world_size` round-robin
+//! bucketization (the default — the standard choice for hashed
+//! categorical ids because it load-balances skewed id spaces), or jump
+//! consistent hashing, which keeps per-worker placement stable across
+//! elastic rescales (see [`owner`] for the moved-row math).
 //!
 //! Rows are materialized lazily: recommender id spaces are enormous (the
 //! in-house dataset has billions of samples over ~2^20..2^33 ids) and
@@ -17,9 +19,11 @@
 //! Figure-3 parity experiment meaningful.
 
 pub mod cache;
+pub mod owner;
 pub mod plan;
 
 pub use cache::{row_fingerprint, RowCache};
+pub use owner::OwnerMap;
 pub use plan::{build_overlap, LookupPlan, WorkerLookup};
 
 use crate::util::fxhash::FxHashMap;
@@ -136,14 +140,36 @@ pub enum Optimizer {
 pub struct ShardedEmbedding {
     shards: Vec<Shard>,
     dim: usize,
+    owner_map: OwnerMap,
 }
 
 impl ShardedEmbedding {
+    /// A `world`-way table under the default [`OwnerMap::Modulo`]
+    /// placement (bit-compatible with every pre-abstraction layout).
     pub fn new(world: usize, dim: usize, seed: u64) -> Self {
         Self {
             shards: (0..world).map(|_| Shard::new(dim, seed)).collect(),
             dim,
+            owner_map: OwnerMap::Modulo,
         }
+    }
+
+    /// Switch the placement strategy.  Must be called before any row is
+    /// materialized — re-mapping a populated table would strand rows on
+    /// non-owner shards.
+    pub fn with_owner_map(mut self, map: OwnerMap) -> Self {
+        debug_assert_eq!(
+            self.touched(),
+            0,
+            "owner map changed on a populated table"
+        );
+        self.owner_map = map;
+        self
+    }
+
+    /// The placement strategy routing rows to shards.
+    pub fn owner_map(&self) -> OwnerMap {
+        self.owner_map
     }
 
     pub fn world(&self) -> usize {
@@ -154,9 +180,12 @@ impl ShardedEmbedding {
         self.dim
     }
 
-    /// Shard (worker rank) owning `row`.
+    /// Shard (worker rank) owning `row` — every owner computation in the
+    /// table routes through the shared [`OwnerMap::owner`] helper, the
+    /// same one lookup planning uses, so placement and routing cannot
+    /// diverge.
     pub fn owner(&self, row: u64) -> usize {
-        (row % self.shards.len() as u64) as usize
+        self.owner_map.owner(row, self.shards.len())
     }
 
     pub fn shard_mut(&mut self, rank: usize) -> &mut Shard {
@@ -263,9 +292,41 @@ mod tests {
     #[test]
     fn ownership_is_round_robin() {
         let t = ShardedEmbedding::new(4, 8, 0);
+        assert_eq!(t.owner_map(), OwnerMap::Modulo);
         assert_eq!(t.owner(0), 0);
         assert_eq!(t.owner(5), 1);
         assert_eq!(t.owner(7), 3);
+    }
+
+    #[test]
+    fn jump_map_table_serves_and_updates_through_its_owners() {
+        let mut t = ShardedEmbedding::new(4, 4, 0).with_owner_map(OwnerMap::JumpHash);
+        assert_eq!(t.owner_map(), OwnerMap::JumpHash);
+        for row in [0u64, 5, 17, 123456789] {
+            let owner = t.owner(row);
+            assert_eq!(owner, OwnerMap::JumpHash.owner(row, 4));
+            // The owner serves it; every other shard refuses it.
+            assert!(t.serve(owner, &[row]).is_ok());
+            for s in 0..4 {
+                if s != owner {
+                    assert!(t.serve(s, &[row]).is_err());
+                }
+            }
+            t.apply_grads(owner, &[row], &[1.0; 4], 0.1, Optimizer::Sgd)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn values_are_owner_map_independent() {
+        // Initialization is a function of (seed, row) alone: the same row
+        // reads identically whatever map places it — the property that
+        // makes owner maps interchangeable at fixed state.
+        let mut a = ShardedEmbedding::new(8, 8, 99);
+        let mut b = ShardedEmbedding::new(8, 8, 99).with_owner_map(OwnerMap::JumpHash);
+        for row in [0u64, 17, 123456789] {
+            assert_eq!(a.read(row), b.read(row));
+        }
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Row-ownership strategies: which worker shard owns an embedding row.
+//!
+//! The paper hash-bucketizes rows across workers (§2.1.2); the obvious
+//! bucketization is `row % world`, and that is what this crate shipped
+//! with.  Modulo placement is perfectly balanced but *reshard-hostile*:
+//! on a `W → W'` rescale the residues agree only on
+//! `gcd(W, W') / max(W, W')` of the id space, so
+//! `1 − gcd(W, W')/max(W, W')` of all rows change owner (2/3 at 8→12 —
+//! and also 2/3 on the shrink 3→2).  Consistent-hash-style placement
+//! moves the *theoretical minimum* instead: `1 − W/W'` on a grow
+//! (1/3 at 8→12), and `1 − W'/W` on a shrink, because a row only moves
+//! when the shard count change actually forces it to.
+//!
+//! [`OwnerMap`] makes the strategy pluggable.  Every owner computation in
+//! the crate — [`super::ShardedEmbedding::owner`], lookup-plan routing
+//! ([`super::plan::LookupPlan::build`]), checkpoint reshard accounting
+//! ([`crate::checkpoint::Checkpoint::reshard_delta`]) — routes through
+//! [`OwnerMap::owner`], so shard placement and request routing can never
+//! diverge.
+//!
+//! Two maps:
+//!
+//! * [`OwnerMap::Modulo`] — `row % world`.  The default, bit-compatible
+//!   with every checkpoint and store written before the abstraction
+//!   existed (headers without an `owner_map` field parse as `Modulo`).
+//! * [`OwnerMap::JumpHash`] — Lamport & Veach's *jump consistent hash*
+//!   ("A Fast, Minimal Memory, Consistent Hash Algorithm", 2014): O(ln n)
+//!   time, zero memory, uniform balance, and **monotone** — when the
+//!   bucket count grows from `W` to `W'`, a key either keeps its bucket
+//!   or jumps to one of the *new* buckets `W..W'`; keys never shuffle
+//!   between surviving buckets.  That property is exactly what shrinks
+//!   the partial-reshard delta ([`crate::stream::OnlineConfig::partial_reshard`]).
+//!
+//! Which to pick: `Modulo` when the cluster never rescales (marginally
+//! cheaper owner computation, historical byte-compatibility); `JumpHash`
+//! whenever the elastic layer may resize the cluster — it halves the
+//! 8→12 reshard delta and the gap widens as `gcd(W, W')` shrinks.
+
+use crate::Result;
+
+/// Pluggable row → owner-shard placement strategy.
+///
+/// ```
+/// use gmeta::embedding::OwnerMap;
+///
+/// // Modulo is the historical default…
+/// assert_eq!(OwnerMap::Modulo.owner(10, 4), 2);
+/// // …JumpHash moves the minimum on a grow: owners at W=8 either
+/// // survive at W'=12 or land on a brand-new shard (>= 8).
+/// for row in 0..1000u64 {
+///     let w8 = OwnerMap::JumpHash.owner(row, 8);
+///     let w12 = OwnerMap::JumpHash.owner(row, 12);
+///     assert!(w12 == w8 || w12 >= 8);
+/// }
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OwnerMap {
+    /// `row % world` — round-robin bucketization (paper §2.1.2), the
+    /// historical default.  Perfect balance, reshard-hostile: a `W → W'`
+    /// rescale moves `1 − gcd(W, W')/max(W, W')` of all rows.
+    #[default]
+    Modulo,
+    /// Jump consistent hash (Lamport & Veach 2014) — uniform balance and
+    /// minimal movement: a `W → W'` grow moves only `1 − W/W'` of rows,
+    /// and no row ever moves between two surviving shards.
+    JumpHash,
+}
+
+impl OwnerMap {
+    /// The shard (worker rank) owning `row` in a `world`-way layout —
+    /// **the** owner computation: shard placement, lookup routing, and
+    /// reshard accounting all call this one helper.
+    #[inline]
+    pub fn owner(self, row: u64, world: usize) -> usize {
+        debug_assert!(world > 0, "owner map over an empty world");
+        match self {
+            OwnerMap::Modulo => (row % world.max(1) as u64) as usize,
+            OwnerMap::JumpHash => jump_hash(row, world.max(1) as u32) as usize,
+        }
+    }
+
+    /// Fraction of a uniformly-distributed id space whose owner changes
+    /// on a `w → w_prime` rescale (the analytic expectation the bench
+    /// results are compared against).
+    pub fn moved_fraction(self, w: usize, w_prime: usize) -> f64 {
+        let (w, wp) = (w.max(1) as f64, w_prime.max(1) as f64);
+        match self {
+            OwnerMap::Modulo => {
+                let g = gcd(w as u64, wp as u64) as f64;
+                1.0 - g / w.max(wp)
+            }
+            OwnerMap::JumpHash => 1.0 - w.min(wp) / w.max(wp),
+        }
+    }
+
+    /// Header/manifest token (`"modulo"` | `"jump"`), persisted in
+    /// checkpoint and delta-store version headers so a restore knows
+    /// which placement wrote the state.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OwnerMap::Modulo => "modulo",
+            OwnerMap::JumpHash => "jump",
+        }
+    }
+
+    /// Inverse of [`OwnerMap::as_str`].
+    pub fn parse(text: &str) -> Result<Self> {
+        match text {
+            "modulo" => Ok(OwnerMap::Modulo),
+            "jump" => Ok(OwnerMap::JumpHash),
+            other => anyhow::bail!(
+                "unknown owner map {other:?} (expected one of modulo|jump)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for OwnerMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+/// Lamport & Veach's jump consistent hash: maps `key` to a bucket in
+/// `0..buckets` such that growing `buckets` relocates each key with
+/// probability exactly `new/total` — the minimum any consistent scheme
+/// can achieve — and only ever *into the new buckets*.
+///
+/// The loop runs the key through an LCG and jumps forward to the next
+/// bucket index at which the key would have been relocated; the last
+/// jump landing below `buckets` is the answer.  O(ln buckets) expected
+/// iterations, no memory, no precomputed ring.
+fn jump_hash(key: u64, buckets: u32) -> u32 {
+    debug_assert!(buckets > 0);
+    let mut key = key;
+    let mut b: i64 = -1;
+    let mut j: i64 = 0;
+    while j < buckets as i64 {
+        b = j;
+        key = key.wrapping_mul(2862933555777941757).wrapping_add(1);
+        // Top 31 bits of the LCG state, as a double in [1, 2^31].
+        j = (((b + 1) as f64) * ((1u64 << 31) as f64 / ((key >> 33) + 1) as f64)) as i64;
+    }
+    b as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modulo_matches_remainder() {
+        for world in 1..9usize {
+            for row in 0..64u64 {
+                assert_eq!(
+                    OwnerMap::Modulo.owner(row, world),
+                    (row % world as u64) as usize
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jump_hash_single_bucket_is_zero() {
+        for row in [0u64, 1, 7, u64::MAX] {
+            assert_eq!(OwnerMap::JumpHash.owner(row, 1), 0);
+        }
+    }
+
+    #[test]
+    fn jump_hash_stays_in_range_and_is_stable() {
+        for world in 1..17usize {
+            for row in 0..200u64 {
+                let o = OwnerMap::JumpHash.owner(row, world);
+                assert!(o < world, "row {row} world {world} -> {o}");
+                assert_eq!(o, OwnerMap::JumpHash.owner(row, world), "unstable");
+            }
+        }
+    }
+
+    #[test]
+    fn jump_hash_grow_only_moves_into_new_buckets() {
+        // The defining consistency property: on a grow, a row either
+        // keeps its owner or lands on a brand-new shard — never on a
+        // different *surviving* shard.
+        for &(w, wp) in &[(2usize, 3usize), (4, 6), (8, 12), (3, 11)] {
+            for row in 0..4000u64 {
+                let old = OwnerMap::JumpHash.owner(row, w);
+                let new = OwnerMap::JumpHash.owner(row, wp);
+                assert!(
+                    new == old || new >= w,
+                    "row {row}: {w}->{wp} moved {old} -> {new} (a surviving shard)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jump_hash_balances_buckets() {
+        let world = 8usize;
+        let n = 80_000u64;
+        let mut counts = vec![0usize; world];
+        for row in 0..n {
+            counts[OwnerMap::JumpHash.owner(row, world)] += 1;
+        }
+        let expect = n as usize / world;
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.1,
+                "shard {s} holds {c} of {n} (expect ~{expect})"
+            );
+        }
+    }
+
+    #[test]
+    fn moved_fraction_formulas() {
+        // Modulo at 8->12: 1 - gcd/max = 1 - 4/12 = 2/3.
+        assert!((OwnerMap::Modulo.moved_fraction(8, 12) - 2.0 / 3.0).abs() < 1e-12);
+        // JumpHash at 8->12: 1 - 8/12 = 1/3.
+        assert!((OwnerMap::JumpHash.moved_fraction(8, 12) - 1.0 / 3.0).abs() < 1e-12);
+        // Same world: nothing moves under either map.
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            assert_eq!(map.moved_fraction(4, 4), 0.0);
+        }
+        // Shrink is symmetric for jump hash.
+        assert!(
+            (OwnerMap::JumpHash.moved_fraction(12, 8)
+                - OwnerMap::JumpHash.moved_fraction(8, 12))
+            .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            assert_eq!(OwnerMap::parse(map.as_str()).unwrap(), map);
+            assert_eq!(format!("{map}"), map.as_str());
+        }
+        assert!(OwnerMap::parse("ring").is_err());
+    }
+
+    #[test]
+    fn empirical_moved_fraction_tracks_the_formula() {
+        let n = 30_000u64;
+        for &(w, wp) in &[(8usize, 12usize), (4, 6), (12, 8)] {
+            for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+                let moved = (0..n)
+                    .filter(|&r| map.owner(r, w) != map.owner(r, wp))
+                    .count() as f64
+                    / n as f64;
+                let want = map.moved_fraction(w, wp);
+                assert!(
+                    (moved - want).abs() < 0.02,
+                    "{map} {w}->{wp}: moved {moved:.3} vs formula {want:.3}"
+                );
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! rows so the outer loop can read inner-adapted values (Algorithm 1
 //! line 9) instead of a second fetch.
 
+use crate::embedding::OwnerMap;
 use crate::util::fxhash::FxHashMap;
 use crate::Result;
 
@@ -104,12 +105,16 @@ pub struct LookupPlan {
 
 impl LookupPlan {
     /// Plan a lookup of `ids` against a `world`-way row-sharded table
-    /// (owner = row % world — must match [`super::ShardedEmbedding`]).
-    pub fn build(ids: &[u64], world: usize) -> Self {
+    /// under the table's [`OwnerMap`].  Routing goes through the same
+    /// [`OwnerMap::owner`] helper [`super::ShardedEmbedding::owner`]
+    /// uses — the single source of truth for placement — so a plan built
+    /// with the table's map can never route a row to a non-owner shard
+    /// (the shard's `serve` additionally rejects mis-routed rows).
+    pub fn build(ids: &[u64], world: usize, map: OwnerMap) -> Self {
         let lookup = WorkerLookup::build(ids);
         let mut per_shard = vec![Vec::new(); world];
         for (i, &row) in lookup.unique.iter().enumerate() {
-            per_shard[(row % world as u64) as usize].push((i as u32, row));
+            per_shard[map.owner(row, world)].push((i as u32, row));
         }
         Self { lookup, per_shard }
     }
@@ -212,14 +217,34 @@ mod tests {
 
     #[test]
     fn plan_routes_to_owner_shards() {
-        let p = LookupPlan::build(&[0, 1, 2, 3, 4, 2], 2);
+        let p = LookupPlan::build(&[0, 1, 2, 3, 4, 2], 2, OwnerMap::Modulo);
         assert_eq!(p.rows_for_shard(0), vec![0, 2, 4]);
         assert_eq!(p.rows_for_shard(1), vec![1, 3]);
     }
 
     #[test]
+    fn plan_routing_agrees_with_table_ownership_under_every_map() {
+        // The non-divergence guarantee behind sharing OwnerMap::owner:
+        // a plan built with the table's map routes every row to the
+        // shard whose `serve` accepts it — under both maps.
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            let mut table =
+                crate::embedding::ShardedEmbedding::new(5, 2, 7).with_owner_map(map);
+            let ids: Vec<u64> = (0..64).map(|i| i * 97 + 13).collect();
+            let p = LookupPlan::build(&ids, 5, map);
+            for s in 0..5 {
+                let rows = p.rows_for_shard(s);
+                for &r in &rows {
+                    assert_eq!(table.owner(r), s, "{map}: row {r} misrouted");
+                }
+                assert!(table.serve(s, &rows).is_ok(), "{map}: shard {s} refused");
+            }
+        }
+    }
+
+    #[test]
     fn scatter_responses_places_rows() {
-        let p = LookupPlan::build(&[0, 1, 2], 2); // shard0: {0,2}, shard1: {1}
+        let p = LookupPlan::build(&[0, 1, 2], 2, OwnerMap::Modulo); // shard0: {0,2}, shard1: {1}
         let resp = vec![vec![1.0, 1.5, 3.0, 3.5], vec![2.0, 2.5]];
         let uniq = p.scatter_responses(&resp, 2).unwrap();
         assert_eq!(uniq, vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5]);
@@ -229,7 +254,7 @@ mod tests {
 
     #[test]
     fn split_grads_inverse_of_scatter() {
-        let p = LookupPlan::build(&[10, 11, 12, 13], 3);
+        let p = LookupPlan::build(&[10, 11, 12, 13], 3, OwnerMap::Modulo);
         let dim = 2;
         let uniq_grads: Vec<f32> = (0..4 * dim).map(|x| x as f32).collect();
         let per_shard = p.split_grads(&uniq_grads, dim).unwrap();

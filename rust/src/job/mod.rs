@@ -46,6 +46,7 @@ use crate::checkpoint::Checkpoint;
 use crate::config::{Architecture, ClusterSpec, ExperimentConfig, IoConfig, ModelDims, TrainConfig};
 use crate::coordinator::{episodes_from_generator, GMetaTrainer};
 use crate::data::DatasetSpec;
+use crate::embedding::OwnerMap;
 use crate::meta::Episode;
 use crate::metrics::RunMetrics;
 use crate::ps::{PsMode, PsTrainer};
@@ -473,6 +474,7 @@ pub struct TrainJobBuilder<'rt> {
     storage: Option<StorageModel>,
     io_jitter: Option<f64>,
     compute_jitter: Option<f64>,
+    owner_map: Option<OwnerMap>,
     server_request_cost: Option<f64>,
     ps_mode: Option<PsMode>,
     runtime: Option<&'rt Runtime>,
@@ -494,6 +496,7 @@ impl<'rt> Default for TrainJobBuilder<'rt> {
             storage: None,
             io_jitter: None,
             compute_jitter: None,
+            owner_map: None,
             server_request_cost: None,
             ps_mode: None,
             runtime: None,
@@ -601,6 +604,18 @@ impl<'rt> TrainJobBuilder<'rt> {
         self
     }
 
+    /// Row-ownership strategy of the sharded embedding table (overrides
+    /// [`crate::config::TrainConfig::owner_map`]; default
+    /// [`OwnerMap::Modulo`]).  Part of the job's [`JobSpec`], so elastic
+    /// rebuilds and failure recovery preserve the placement.  Pick
+    /// [`OwnerMap::JumpHash`] for jobs the elastic layer may rescale —
+    /// it moves the consistent-hashing minimum `1 − W/W'` of rows per
+    /// grow instead of modulo's `1 − gcd(W, W')/max(W, W')`.
+    pub fn owner_map(mut self, map: OwnerMap) -> Self {
+        self.owner_map = Some(map);
+        self
+    }
+
     /// PS only: per-request server handling cost (the incast term).
     pub fn server_request_cost(mut self, secs: f64) -> Self {
         self.server_request_cost = Some(secs);
@@ -640,6 +655,10 @@ impl<'rt> TrainJobBuilder<'rt> {
         if let Some(sigma) = self.compute_jitter {
             cluster.compute_jitter = sigma;
         }
+        let mut train = self.train.unwrap_or_default();
+        if let Some(map) = self.owner_map {
+            train.owner_map = map;
+        }
         let dims = self.dims.unwrap_or_default();
         // Force the dataset's slot structure to the model dims (the
         // gathered blocks must be exactly [batch, slots, valency, dim]).
@@ -657,7 +676,7 @@ impl<'rt> TrainJobBuilder<'rt> {
             cluster,
             dims,
             io: self.io.unwrap_or_default(),
-            train: self.train.unwrap_or_default(),
+            train,
         };
         let trainer = match arch {
             Architecture::GMeta => {
@@ -1066,6 +1085,46 @@ mod tests {
         let eps = episodes_from_generator(movielens_like(), &small_dims(), 6, 2);
         let m = t.run_steps(&eps, 2).unwrap();
         assert_eq!(m.steps, 2);
+    }
+
+    #[test]
+    fn owner_map_threads_to_both_trainers_and_survives_rescale() {
+        // G-Meta: the worker-sharded table runs the requested map…
+        let mut job = TrainJob::builder()
+            .gmeta(1, 4)
+            .dims(small_dims())
+            .owner_map(OwnerMap::JumpHash)
+            .build()
+            .unwrap();
+        assert_eq!(job.cfg().train.owner_map, OwnerMap::JumpHash);
+        assert_eq!(
+            job.gmeta_mut().unwrap().embedding.owner_map(),
+            OwnerMap::JumpHash
+        );
+        // …and the rebuild path (elastic rescale / failure recovery)
+        // preserves it: the JobSpec carries the map through at_world.
+        let spec = job.spec().clone();
+        let grown = spec.at_world(6).unwrap();
+        assert_eq!(grown.cfg.train.owner_map, OwnerMap::JumpHash);
+        let mut t = grown.build_trainer().unwrap();
+        let ckpt = t.capture(0);
+        assert_eq!(ckpt.owner_map, OwnerMap::JumpHash);
+
+        // PS: the server-sharded table honors the map too.
+        let mut ps = TrainJob::builder()
+            .parameter_server(4, 2)
+            .dims(small_dims())
+            .owner_map(OwnerMap::JumpHash)
+            .build()
+            .unwrap();
+        assert_eq!(
+            ps.ps_mut().unwrap().embedding.owner_map(),
+            OwnerMap::JumpHash
+        );
+
+        // Default stays modulo — the pre-abstraction behavior.
+        let default = TrainJob::builder().gmeta(1, 2).build().unwrap();
+        assert_eq!(default.cfg().train.owner_map, OwnerMap::Modulo);
     }
 
     #[test]

@@ -71,6 +71,7 @@ pub mod stream;
 pub mod util;
 
 pub use config::{Architecture, ClusterSpec, ExperimentConfig};
+pub use embedding::OwnerMap;
 pub use job::{JobSpec, Observer, PhaseLog, TrainJob, TrainJobBuilder, Trainer, Variant};
 
 /// Crate-wide result alias (anyhow for rich error contexts).

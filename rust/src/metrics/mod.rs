@@ -61,6 +61,11 @@ pub const PHASE_RESHARD: &str = "reshard";
 /// attempt's seconds up to the failure, before recovery redoes the window
 /// from the last published version ([`crate::stream::elastic::FailurePlan`]).
 pub const PHASE_REDO: &str = "redo";
+/// Failure-detection latency: the heartbeat-timeout + re-scheduling gap
+/// between a worker dying and recovery starting
+/// ([`crate::stream::elastic::FailurePlan::detection_secs`]; 0 with an
+/// oracle detector).
+pub const PHASE_DETECT: &str = "detect";
 
 /// Aggregated result of one training run.
 #[derive(Debug, Clone, Default)]
@@ -184,9 +189,16 @@ pub struct VersionRecord {
     /// ([`crate::checkpoint::Checkpoint::reshard_delta_bytes`]).  0 when
     /// no rescale preceded this version's window.
     pub reshard_bytes: u64,
+    /// Failure-detection seconds this version's window absorbed before
+    /// recovery began — the heartbeat/re-scheduling gap
+    /// ([`crate::stream::elastic::FailurePlan::detection_secs`]; 0 for
+    /// clean windows and oracle detectors).
+    pub detect_secs: f64,
     /// Seconds lost to a mid-window worker failure absorbed by this
     /// version: the doomed attempt's wasted time plus the
-    /// restore-from-last-published recovery (0 for clean windows).
+    /// restore-from-last-published recovery (0 for clean windows;
+    /// detection is charged separately as
+    /// [`VersionRecord::detect_secs`]).
     pub redo_secs: f64,
     /// Cold-start tasks first seen in this version's delta window.
     pub cold_tasks: Vec<u64>,
@@ -302,13 +314,19 @@ impl DeliveryMetrics {
     pub fn total_redo_secs(&self) -> f64 {
         self.versions.iter().map(|v| v.redo_secs).sum()
     }
+
+    /// Total failure-detection seconds (the gap before recovery even
+    /// starts) across the session.
+    pub fn total_detect_secs(&self) -> f64 {
+        self.versions.iter().map(|v| v.detect_secs).sum()
+    }
 }
 
 impl fmt::Display for DeliveryMetrics {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "{:>7} {:>6} {:>5} {:>12} {:>12} {:>10} {:>10} {:>8} {:>8} {:>5} {:>10} {:>10} {:>10}",
+            "{:>7} {:>6} {:>5} {:>12} {:>12} {:>10} {:>10} {:>8} {:>8} {:>5} {:>10} {:>10} {:>10} {:>10}",
             "version",
             "kind",
             "world",
@@ -321,12 +339,13 @@ impl fmt::Display for DeliveryMetrics {
             "cold",
             "publish(s)",
             "reshard(s)",
+            "detect(s)",
             "redo(s)"
         )?;
         for v in &self.versions {
             writeln!(
                 f,
-                "{:>7} {:>6} {:>5} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>8} {:>5} {:>10.3} {:>10.3} {:>10.3}",
+                "{:>7} {:>6} {:>5} {:>12.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>8} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
                 v.version,
                 v.kind,
                 v.world,
@@ -339,6 +358,7 @@ impl fmt::Display for DeliveryMetrics {
                 v.cold_tasks.len(),
                 v.publish_secs,
                 v.reshard_secs,
+                v.detect_secs,
                 v.redo_secs
             )?;
         }
@@ -346,7 +366,7 @@ impl fmt::Display for DeliveryMetrics {
             f,
             "mean latency {:.3}s (streamed {:.3}s), max {:.3}s, {:.2} MiB published \
              ({} rows deduped), publish p50/p99 {:.3}/{:.3}s, {} reshard(s) {:.3}s \
-             moving {:.2} MiB, redo {:.3}s",
+             moving {:.2} MiB, detect {:.3}s, redo {:.3}s",
             self.mean_latency(),
             self.mean_streamed_latency(),
             self.max_latency(),
@@ -357,6 +377,7 @@ impl fmt::Display for DeliveryMetrics {
             self.reshard_events(),
             self.total_reshard_secs(),
             self.total_reshard_bytes() as f64 / (1 << 20) as f64,
+            self.total_detect_secs(),
             self.total_redo_secs()
         )
     }
@@ -444,6 +465,7 @@ mod tests {
             publish_secs: published - ready,
             reshard_secs: 0.0,
             reshard_bytes: 0,
+            detect_secs: 0.0,
             redo_secs: 0.0,
             cold_tasks: vec![],
             zero_shot_auc: None,
@@ -477,6 +499,7 @@ mod tests {
         assert_eq!(d.total_reshard_secs(), 0.0);
         assert_eq!(d.total_reshard_bytes(), 0);
         assert_eq!(d.total_redo_secs(), 0.0);
+        assert_eq!(d.total_detect_secs(), 0.0);
         assert_eq!(d.total_rows_deduped(), 0);
     }
 
@@ -489,6 +512,7 @@ mod tests {
         versions[3].reshard_secs = 2.5;
         versions[3].reshard_bytes = 1000;
         versions[5].redo_secs = 4.0;
+        versions[5].detect_secs = 1.5;
         versions[2].rows_deduped = 7;
         versions[6].rows_deduped = 5;
         let d = DeliveryMetrics {
@@ -502,6 +526,7 @@ mod tests {
         assert_eq!(d.total_reshard_secs(), 2.5);
         assert_eq!(d.total_reshard_bytes(), 1000);
         assert_eq!(d.total_redo_secs(), 4.0);
+        assert_eq!(d.total_detect_secs(), 1.5);
         assert_eq!(d.total_rows_deduped(), 12);
     }
 

@@ -100,7 +100,8 @@ impl PsTrainer {
     pub fn new(cfg: ExperimentConfig, variant: Variant, record_bytes: usize) -> Self {
         let servers = cfg.cluster.servers.max(1);
         Self {
-            embedding: ShardedEmbedding::new(servers, cfg.dims.emb_dim, cfg.train.seed),
+            embedding: ShardedEmbedding::new(servers, cfg.dims.emb_dim, cfg.train.seed)
+                .with_owner_map(cfg.train.owner_map),
             dense: DenseParams::init(&cfg.dims, variant.as_str(), cfg.train.seed),
             storage: StorageModel::default(),
             device: DeviceModel::cpu_worker(),
@@ -128,8 +129,9 @@ impl PsTrainer {
         let (alpha, beta) = self.server_link().alpha_beta();
         let mut per_server = vec![0.0f64; servers];
         for (w, &b) in per_worker_bytes.iter().enumerate() {
-            // Rows are spread uniformly over servers (row % S); each
-            // worker talks to every server.
+            // Rows are spread uniformly over servers (the table's
+            // OwnerMap over the S-way server fleet); each worker talks
+            // to every server.
             for s in per_server.iter_mut() {
                 *s += b / servers as f64;
             }
@@ -191,6 +193,8 @@ impl PsTrainer {
         }
         let servers = self.cfg.cluster.servers.max(1);
         let dims = self.cfg.dims;
+        // Pull/push plans route through the server table's own owner map.
+        let omap = self.embedding.owner_map();
         let mut clocks = WorkerClocks::new(w);
         let mut m = RunMetrics::default();
         let dense_bytes = (self.dense.len() * 4) as f64;
@@ -222,8 +226,8 @@ impl PsTrainer {
             let mut plans: Vec<(LookupPlan, LookupPlan)> = Vec::with_capacity(w);
             for (rank, eps) in episodes.iter().enumerate() {
                 let ep = &eps[it % eps.len()];
-                let plan_sup = LookupPlan::build(&ep.support_ids(), servers);
-                let plan_qry = LookupPlan::build(&ep.query_ids(), servers);
+                let plan_sup = LookupPlan::build(&ep.support_ids(), servers, omap);
+                let plan_qry = LookupPlan::build(&ep.query_ids(), servers, omap);
                 let rows = plan_sup.lookup.unique.len() + plan_qry.lookup.unique.len();
                 // id request up + row vectors down + full dense replica down
                 let b = rows as f64 * (8.0 + (dims.emb_dim * 4) as f64) + dense_bytes;
@@ -313,6 +317,7 @@ impl PsTrainer {
         }
         let servers = self.cfg.cluster.servers.max(1);
         let dims = self.cfg.dims;
+        let omap = self.embedding.owner_map();
         let (alpha, beta) = self.server_link().alpha_beta();
         let mut m = RunMetrics::default();
 
@@ -341,8 +346,8 @@ impl PsTrainer {
                 // Pull: this worker's bytes through its share of servers,
                 // plus per-request handling (no cross-worker barrier, but
                 // the handling cost is a real queue on the server).
-                let plan_sup = LookupPlan::build(&ep.support_ids(), servers);
-                let plan_qry = LookupPlan::build(&ep.query_ids(), servers);
+                let plan_sup = LookupPlan::build(&ep.support_ids(), servers, omap);
+                let plan_qry = LookupPlan::build(&ep.query_ids(), servers, omap);
                 let rows = plan_sup.lookup.unique.len() + plan_qry.lookup.unique.len();
                 let bytes = rows as f64 * (8.0 + (dims.emb_dim * 4) as f64) + dense_bytes;
                 let t_pull =

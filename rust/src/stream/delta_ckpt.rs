@@ -9,7 +9,7 @@
 //! ```text
 //! <root>/versions.json        manifest: ordered version headers
 //! <root>/v<NNNNNN>/publish.json   {version, kind, parent, step, variant,
-//!                                  world, dims}
+//!                                  world, owner_map, dims}
 //! <root>/v<NNNNNN>/dense.bin      [u32 len][u32 crc][f32 values...]
 //! <root>/v<NNNNNN>/rows.bin       [u32 len][u32 crc][(u64 row)(f32 x D)...]
 //! ```
@@ -40,7 +40,8 @@ use std::fs;
 use std::path::{Path, PathBuf};
 
 use crate::checkpoint::{
-    bytes_to_f32s, dims_from_json, dims_to_json, f32s_to_bytes, frame, unframe, Checkpoint,
+    bytes_to_f32s, dims_from_json, dims_to_json, f32s_to_bytes, frame, owner_map_from_header,
+    unframe, Checkpoint,
 };
 use crate::embedding::row_fingerprint;
 use crate::util::fxhash::FxHashMap;
@@ -525,6 +526,7 @@ impl DeltaStore {
             ("step", num(cur.step as f64)),
             ("variant", s(&cur.variant)),
             ("world", num(cur.world as f64)),
+            ("owner_map", s(cur.owner_map.as_str())),
             ("dims", dims_to_json(&cur.dims)),
         ]);
         let header_bytes = json::write(&header).into_bytes();
@@ -569,6 +571,8 @@ impl DeltaStore {
             .as_usize()
             .ok_or_else(|| bad("world"))?;
         let step = header.field("step")?.as_u64().ok_or_else(|| bad("step"))?;
+        // Absent in stores written before owner maps existed ⇒ modulo.
+        let owner_map = owner_map_from_header(&header)?;
 
         let dense_path = dir.join("dense.bin");
         let dense = bytes_to_f32s(&unframe(
@@ -599,6 +603,7 @@ impl DeltaStore {
             variant,
             dims,
             world,
+            owner_map,
             dense,
             rows,
         })
@@ -631,6 +636,7 @@ impl DeltaStore {
             let overlay = self.read_version(meta.version)?;
             state.step = overlay.step;
             state.world = overlay.world;
+            state.owner_map = overlay.owner_map;
             state.dense = overlay.dense;
             for (row, vals) in overlay.rows {
                 rows.insert(row, vals);
@@ -756,6 +762,7 @@ mod tests {
             variant: "maml".into(),
             dims: dims(),
             world: 4,
+            owner_map: crate::embedding::OwnerMap::Modulo,
             dense: vec![dense_seed; 6],
             rows: rows.iter().map(|&(r, v)| (r, vec![v; 4])).collect(),
         }
@@ -855,6 +862,32 @@ mod tests {
         let store = DeltaStore::open(tmp.path()).unwrap();
         assert_eq!(store.versions().len(), 2);
         assert_state_eq(&store.load(1).unwrap(), &v1);
+    }
+
+    #[test]
+    fn owner_map_roundtrips_and_legacy_headers_default_to_modulo() {
+        use crate::embedding::OwnerMap;
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let mut v0 = ckpt(1, 0.1, &[(1, 1.0), (2, 2.0)]);
+        v0.owner_map = OwnerMap::JumpHash;
+        let mut v1 = ckpt(2, 0.2, &[(1, 1.5), (2, 2.0)]);
+        v1.owner_map = OwnerMap::JumpHash;
+        store.publish(0, &v0, None).unwrap();
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        // The map rides the header through full + delta reconstruction.
+        assert_eq!(store.load(0).unwrap().owner_map, OwnerMap::JumpHash);
+        assert_eq!(store.load(1).unwrap().owner_map, OwnerMap::JumpHash);
+        // A pre-abstraction version header (no owner_map field) parses
+        // as the historical modulo placement.
+        let header_path = tmp.path().join("v000000").join("publish.json");
+        let mut header =
+            crate::util::json::parse(&fs::read_to_string(&header_path).unwrap()).unwrap();
+        if let crate::util::json::Value::Obj(m) = &mut header {
+            m.remove("owner_map");
+        }
+        fs::write(&header_path, crate::util::json::write(&header)).unwrap();
+        assert_eq!(store.load(0).unwrap().owner_map, OwnerMap::Modulo);
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //! * **Rescale mechanics** — the session captures trainer state as a
 //!   [`crate::checkpoint::Checkpoint`], rebuilds the trainer at the new
 //!   world size through [`crate::job::JobSpec`], and restores the capture
-//!   (rows reshard on import, `row % new_world`).  The whole detour is
+//!   (rows reshard on import under the job's
+//!   [`crate::embedding::OwnerMap`], which the rebuild preserves).  The
+//!   whole detour is
 //!   charged to the virtual clock as [`crate::metrics::PHASE_RESHARD`]
 //!   — the *latency cliff* a reshard costs, visible in the next
 //!   version's delivery latency.  The cost model has two paths: the
@@ -341,6 +343,14 @@ pub struct FailurePlan {
     /// How far through the window's training the failure hits, in
     /// `(0, 1]` — the wasted fraction of the doomed attempt.
     pub kill_fraction: f64,
+    /// Failure-detection latency: virtual seconds between the worker
+    /// dying and recovery *starting* — the heartbeat timeout plus the
+    /// scheduler's re-allocation gap a real cluster pays before any
+    /// restore byte moves.  Charged as
+    /// [`crate::metrics::PHASE_DETECT`] and surfaced per version as
+    /// [`crate::metrics::VersionRecord::detect_secs`].  0 (the default)
+    /// models an oracle detector — the pre-knob behavior.
+    pub detection_secs: f64,
     /// Lognormal sigma of the slow-registry publish tail (0 disables it);
     /// see [`crate::sim::TailModel`].
     pub publish_tail_sigma: f64,
@@ -353,6 +363,7 @@ impl Default for FailurePlan {
         Self {
             kill_at_window: None,
             kill_fraction: 0.5,
+            detection_secs: 0.0,
             publish_tail_sigma: 0.0,
             tail_seed: 0xFA11,
         }
@@ -374,8 +385,11 @@ pub struct ElasticEvent {
     /// device memory) plus the dense replica
     /// ([`crate::stream::OnlineConfig::partial_reshard`]).
     pub bytes_moved: u64,
-    /// Embedding rows that actually changed owner (`row % W` vs
-    /// `row % W'`); under the full path every row streams anyway.
+    /// Embedding rows that actually changed owner under the job's
+    /// [`crate::embedding::OwnerMap`] — `1 − gcd(W, W')/max(W, W')` of
+    /// the table for modulo, the `1 − min/max` consistent-hashing
+    /// minimum for jump hash; under the full path every row streams
+    /// anyway.
     pub moved_rows: usize,
     /// Whether the partial (owner-change-only) path charged this event.
     pub partial: bool,
@@ -481,5 +495,6 @@ mod tests {
         let f = FailurePlan::default();
         assert!(f.kill_at_window.is_none());
         assert_eq!(f.publish_tail_sigma, 0.0);
+        assert_eq!(f.detection_secs, 0.0);
     }
 }

@@ -54,5 +54,5 @@ pub use elastic::{
     BacklogPolicy, ElasticEvent, FailurePlan, PhaseTimePolicy, ScaleDecision, ScalePolicy,
     ScheduledPolicy, WindowObservation,
 };
-pub use publisher::{PublishMode, PublishModel, Publisher, RowDedup};
+pub use publisher::{CompactPolicy, PublishMode, PublishModel, Publisher, RowDedup};
 pub use session::{OnlineConfig, OnlineSession};

@@ -66,6 +66,49 @@ pub enum RowDedup {
     Off,
 }
 
+/// When a delta-mode publish ships a full snapshot instead of a delta —
+/// the compaction cadence bounding reconstruction chains (only
+/// meaningful under [`PublishMode::DeltaRepublish`]; the first version
+/// is always full).
+///
+/// With publish-side row dedup ([`RowDedup::Fingerprint`]) delta sizes
+/// track the *hot set*, not the window's touched set, so a fixed count
+/// cadence compacts far too often for quiet streams and too rarely for
+/// churny ones.  [`CompactPolicy::BytesRatio`] tracks the actual chain:
+/// it ships a full once the accumulated live-chain delta bytes exceed
+/// `r ×` the last full's bytes — publish amortization, the same rule
+/// LSM stores use to trigger compaction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompactPolicy {
+    /// Every `n`-th version (by version number) ships full — the
+    /// historical fixed cadence, byte-compatible with pre-policy runs.
+    EveryN(usize),
+    /// Ship a full once the delta bytes accumulated since the last full
+    /// exceed `r ×` that full's bytes.  `r = 0.5` caps reconstruction
+    /// work at ~1.5× a full read; smaller `r` compacts more eagerly.
+    BytesRatio(f64),
+}
+
+impl Default for CompactPolicy {
+    fn default() -> Self {
+        CompactPolicy::EveryN(4)
+    }
+}
+
+impl CompactPolicy {
+    /// Does the version about to be published ship full?  `version` is
+    /// the number being published; `delta_bytes` / `last_full_bytes`
+    /// describe the live chain accumulated so far.
+    fn ship_full(self, version: u64, delta_bytes: u64, last_full_bytes: u64) -> bool {
+        match self {
+            CompactPolicy::EveryN(n) => version % n.max(1) as u64 == 0,
+            CompactPolicy::BytesRatio(r) => {
+                delta_bytes as f64 >= r.max(0.0) * last_full_bytes as f64
+            }
+        }
+    }
+}
+
 /// Cost model of the registry upload path.
 #[derive(Debug, Clone, Copy)]
 pub struct PublishModel {
@@ -93,8 +136,9 @@ impl Default for PublishModel {
 pub struct Publisher {
     pub store: DeltaStore,
     pub mode: PublishMode,
-    /// Delta mode: every `compact_every`-th version ships full.
-    pub compact_every: usize,
+    /// Delta mode: when a version ships as a full snapshot instead of a
+    /// delta ([`CompactPolicy`]).
+    pub compact: CompactPolicy,
     pub model: PublishModel,
     /// Retention: keep the newest N full snapshots plus live delta
     /// chains; retired chain files are deleted from the registry after
@@ -125,19 +169,24 @@ pub struct Publisher {
     /// (the other policies exist precisely to avoid this O(table) copy).
     last_state: Option<Checkpoint>,
     next_version: u64,
+    /// Bytes of delta versions written since the last full — what
+    /// [`CompactPolicy::BytesRatio`] compares against the full's bytes.
+    delta_bytes_since_full: u64,
+    /// Bytes of the most recent full snapshot (0 before the first).
+    last_full_bytes: u64,
 }
 
 impl Publisher {
     pub fn new(
         root: &Path,
         mode: PublishMode,
-        compact_every: usize,
+        compact: CompactPolicy,
         model: PublishModel,
     ) -> Result<Self> {
         Ok(Self {
             store: DeltaStore::create(root)?,
             mode,
-            compact_every: compact_every.max(1),
+            compact,
             model,
             retain_fulls: None,
             storage: StorageModel::default(),
@@ -149,6 +198,8 @@ impl Publisher {
             last_version: None,
             last_state: None,
             next_version: 0,
+            delta_bytes_since_full: 0,
+            last_full_bytes: 0,
         })
     }
 
@@ -210,7 +261,12 @@ impl Publisher {
         let full = match self.mode {
             PublishMode::FullRepublish => true,
             PublishMode::DeltaRepublish => {
-                self.last_version.is_none() || version % self.compact_every as u64 == 0
+                self.last_version.is_none()
+                    || self.compact.ship_full(
+                        version,
+                        self.delta_bytes_since_full,
+                        self.last_full_bytes,
+                    )
             }
         };
         let stats = if full {
@@ -228,6 +284,13 @@ impl Publisher {
             }
         };
         debug_assert_eq!(stats.kind == VersionKind::Full, full);
+        // Track the live chain for the byte-triggered cadence.
+        if full {
+            self.last_full_bytes = stats.bytes;
+            self.delta_bytes_since_full = 0;
+        } else {
+            self.delta_bytes_since_full += stats.bytes;
+        }
         // Mean upload cost, stretched by the slow-registry tail factor
         // for this version when a tail model is configured.
         let tail_factor = self.tail.map(|t| t.factor(version)).unwrap_or(1.0);
@@ -263,6 +326,7 @@ impl Publisher {
             publish_secs,
             reshard_secs: 0.0,
             reshard_bytes: 0,
+            detect_secs: 0.0,
             redo_secs: 0.0,
             cold_tasks: Vec::new(),
             zero_shot_auc: None,
@@ -299,6 +363,7 @@ mod tests {
                 emb_rows: 100,
             },
             world: 2,
+            owner_map: crate::embedding::OwnerMap::Modulo,
             dense: vec![step as f32; 5],
             rows: rows.iter().map(|&(r, v)| (r, vec![v; 4])).collect(),
         }
@@ -310,7 +375,7 @@ mod tests {
         let mut p = Publisher::new(
             tmp.path(),
             PublishMode::FullRepublish,
-            4,
+            CompactPolicy::EveryN(4),
             PublishModel::default(),
         )
         .unwrap();
@@ -330,7 +395,7 @@ mod tests {
         let mut p = Publisher::new(
             tmp.path(),
             PublishMode::DeltaRepublish,
-            3,
+            CompactPolicy::EveryN(3),
             PublishModel::default(),
         )
         .unwrap();
@@ -352,7 +417,13 @@ mod tests {
 
         let run = |mode: PublishMode| {
             let tmp = TempDir::new().unwrap();
-            let mut p = Publisher::new(tmp.path(), mode, 100, PublishModel::default()).unwrap();
+            let mut p = Publisher::new(
+                tmp.path(),
+                mode,
+                CompactPolicy::EveryN(100),
+                PublishModel::default(),
+            )
+            .unwrap();
             let mut clock = Clock::new();
             p.publish(ckpt(0, &rows), 0.0, &mut clock).unwrap();
             let t0 = clock.now();
@@ -368,12 +439,111 @@ mod tests {
     }
 
     #[test]
+    fn bytes_ratio_policy_compacts_when_the_chain_outgrows_the_full() {
+        // 200 static rows, one changing row per window: deltas are tiny
+        // next to the full, so a generous ratio never compacts while a
+        // tight one does — and the reconstructed states are identical
+        // either way (compaction cadence is a cost knob, not a semantic
+        // one).
+        let states: Vec<Checkpoint> = (0..8u64)
+            .map(|step| {
+                let rows: Vec<(u64, f32)> = (0..200)
+                    .map(|r| (r, if r == 7 { step as f32 } else { r as f32 }))
+                    .collect();
+                ckpt(step, &rows)
+            })
+            .collect();
+        let run = |policy: CompactPolicy| {
+            let tmp = TempDir::new().unwrap();
+            let mut p = Publisher::new(
+                tmp.path(),
+                PublishMode::DeltaRepublish,
+                policy,
+                PublishModel::default(),
+            )
+            .unwrap();
+            let mut clock = Clock::new();
+            let kinds: Vec<String> = states
+                .iter()
+                .map(|st| p.publish(st.clone(), clock.now(), &mut clock).unwrap().kind)
+                .collect();
+            let loaded: Vec<Checkpoint> =
+                (0..states.len() as u64).map(|v| p.store.load(v).unwrap()).collect();
+            (kinds, loaded)
+        };
+        // Ratio 10x the full: the chain never gets there — one leading
+        // full, deltas forever.
+        let (lazy_kinds, lazy_loaded) = run(CompactPolicy::BytesRatio(10.0));
+        assert_eq!(lazy_kinds[0], "full");
+        assert!(lazy_kinds[1..].iter().all(|k| k == "delta"), "{lazy_kinds:?}");
+        // A tight ratio re-compacts mid-stream…
+        let (tight_kinds, tight_loaded) = run(CompactPolicy::BytesRatio(0.05));
+        assert!(
+            tight_kinds[1..].iter().any(|k| k == "full"),
+            "tight ratio never compacted: {tight_kinds:?}"
+        );
+        // …and r = 0 degenerates to full-every-version.
+        let (eager_kinds, _) = run(CompactPolicy::BytesRatio(0.0));
+        assert!(eager_kinds.iter().all(|k| k == "full"), "{eager_kinds:?}");
+        // Cadence never changes reconstructed state.
+        for ((a, b), want) in lazy_loaded.iter().zip(&tight_loaded).zip(&states) {
+            assert_eq!(a.step, want.step);
+            assert_eq!(a.rows.len(), want.rows.len());
+            assert_eq!(b.rows.len(), want.rows.len());
+            for (((ra, va), (rb, vb)), (rw, vw)) in
+                a.rows.iter().zip(&b.rows).zip(&want.rows)
+            {
+                assert_eq!(ra, rw);
+                assert_eq!(rb, rw);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(va), bits(vw));
+                assert_eq!(bits(vb), bits(vw));
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_ratio_accumulator_resets_on_each_full() {
+        // After a triggered compaction the accumulated chain bytes reset:
+        // the very next version is a delta again (the policy is not
+        // sticky).
+        let tmp = TempDir::new().unwrap();
+        let mut p = Publisher::new(
+            tmp.path(),
+            PublishMode::DeltaRepublish,
+            // Threshold ≈ one delta's bytes: compact roughly every other
+            // version, never twice in a row on this fixed-size stream.
+            CompactPolicy::BytesRatio(0.05),
+            PublishModel::default(),
+        )
+        .unwrap();
+        let mut clock = Clock::new();
+        let mut kinds = Vec::new();
+        for step in 0..6u64 {
+            let rows: Vec<(u64, f32)> = (0..200)
+                .map(|r| (r, if r == 7 { step as f32 } else { r as f32 }))
+                .collect();
+            kinds.push(
+                p.publish(ckpt(step, &rows), clock.now(), &mut clock).unwrap().kind,
+            );
+        }
+        assert_eq!(kinds[0], "full");
+        for w in kinds.windows(2) {
+            assert!(
+                !(w[0] == "full" && w[1] == "full"),
+                "accumulator did not reset: {kinds:?}"
+            );
+        }
+        assert!(kinds.iter().filter(|k| *k == "full").count() >= 2, "{kinds:?}");
+    }
+
+    #[test]
     fn retention_bounds_the_store_and_charges_the_clock() {
         let tmp = TempDir::new().unwrap();
         let mut p = Publisher::new(
             tmp.path(),
             PublishMode::DeltaRepublish,
-            2,
+            CompactPolicy::EveryN(2),
             PublishModel::default(),
         )
         .unwrap()
@@ -406,7 +576,7 @@ mod tests {
         let mut p = Publisher::new(
             tmp.path(),
             PublishMode::FullRepublish,
-            4,
+            CompactPolicy::EveryN(4),
             PublishModel::default(),
         )
         .unwrap();
@@ -428,7 +598,7 @@ mod tests {
             let mut p = Publisher::new(
                 tmp.path(),
                 PublishMode::FullRepublish,
-                4,
+                CompactPolicy::EveryN(4),
                 PublishModel::default(),
             )
             .unwrap();
@@ -479,7 +649,7 @@ mod tests {
             let mut p = Publisher::new(
                 tmp.path(),
                 PublishMode::DeltaRepublish,
-                100,
+                CompactPolicy::EveryN(100),
                 PublishModel::default(),
             )
             .unwrap()
@@ -527,7 +697,7 @@ mod tests {
         let mut p = Publisher::new(
             tmp.path(),
             PublishMode::DeltaRepublish,
-            100,
+            CompactPolicy::EveryN(100),
             PublishModel::default(),
         )
         .unwrap()
@@ -550,7 +720,7 @@ mod tests {
         let mut p = Publisher::new(
             tmp.path(),
             PublishMode::DeltaRepublish,
-            4,
+            CompactPolicy::EveryN(4),
             PublishModel::default(),
         )
         .unwrap();

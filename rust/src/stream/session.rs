@@ -61,7 +61,7 @@ use crate::io::preprocess::{preprocess, DatasetOnDisk};
 use crate::job::{JobSpec, Observer, TrainJob, Trainer};
 use crate::meta::{Episode, Sample, TaskBatch};
 use crate::metrics::{
-    DeliveryMetrics, RunMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_GC,
+    DeliveryMetrics, RunMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_DETECT, PHASE_GC,
     PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_RESHARD, PHASE_RESTORE,
 };
 use crate::sim::{Clock, ReadPattern, StorageModel, TailModel};
@@ -69,7 +69,7 @@ use crate::stream::delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConf
 use crate::stream::elastic::{
     ElasticEvent, FailurePlan, ScaleDecision, ScalePolicy, WindowObservation,
 };
-use crate::stream::publisher::{PublishMode, PublishModel, Publisher, RowDedup};
+use crate::stream::publisher::{CompactPolicy, PublishMode, PublishModel, Publisher, RowDedup};
 use crate::Result;
 
 /// Configuration of one online continuous-delivery session.
@@ -81,8 +81,12 @@ pub struct OnlineConfig {
     /// Meta-steps per delivery window, over the window's fresh episodes.
     pub steps_per_window: usize,
     pub mode: PublishMode,
-    /// Delta mode: every Nth version ships as a full snapshot.
-    pub compact_every: usize,
+    /// Delta mode: the compaction cadence — a fixed count
+    /// ([`CompactPolicy::EveryN`]) or byte-triggered
+    /// ([`CompactPolicy::BytesRatio`]: ship a full once the live chain's
+    /// accumulated delta bytes exceed `r ×` the last full's bytes, so
+    /// the cadence tracks the dedup-shrunk hot set instead of a count).
+    pub compact: CompactPolicy,
     /// Delta row-dedup policy: the exact diff against a retained
     /// previous state (default), the store's bounded fingerprint cache
     /// ([`RowDedup::Fingerprint`] — near-exact bytes, O(capacity)
@@ -106,7 +110,10 @@ pub struct OnlineConfig {
     /// directly follows a publish, so the workers surviving the rescale
     /// hold exactly the durable latest version — nothing is written to
     /// the DFS and unmoved rows never travel.  Only the rows whose
-    /// owner changes (`row % W != row % W'`, see
+    /// owner changes under the job's [`crate::embedding::OwnerMap`]
+    /// (`owner(row, W) != owner(row, W')` — a `1 − gcd(W,W')/max(W,W')`
+    /// fraction for modulo, the `1 − min/max` consistent-hashing
+    /// minimum for jump hash; see
     /// [`crate::checkpoint::Checkpoint::reshard_delta_bytes`]) stream
     /// owner-to-owner through device memory, and the new allocation's
     /// workers pull the small dense replica from the registry in
@@ -125,7 +132,7 @@ impl Default for OnlineConfig {
             warmup_steps: 20,
             steps_per_window: 10,
             mode: PublishMode::DeltaRepublish,
-            compact_every: 4,
+            compact: CompactPolicy::EveryN(4),
             dedup: RowDedup::Exact,
             retain_fulls: None,
             publish: PublishModel::default(),
@@ -227,7 +234,7 @@ impl<'rt> OnlineSession<'rt> {
         let mut publisher = Publisher::new(
             &work_dir.join("versions"),
             online.mode,
-            online.compact_every,
+            online.compact,
             online.publish,
         )?
         .with_row_dedup(online.dedup);
@@ -354,7 +361,9 @@ impl<'rt> OnlineSession<'rt> {
         let ckpt = self.trainer.capture(self.step);
         // Which rows change *owner* depends on the architecture's shard
         // space: G-Meta shards the table across the workers being
-        // rescaled (`row % world`), but the PS baseline shards it across
+        // rescaled (under the capture's own OwnerMap — modulo or jump
+        // hash; the rebuilt JobSpec preserves the map, so accounting and
+        // the new layout agree), but the PS baseline shards it across
         // the server fleet, which `at_world` does not touch — a worker
         // rescale moves no embedding rows there, only the dense replica
         // for the new workers.
@@ -699,6 +708,20 @@ impl<'rt> OnlineSession<'rt> {
         // exactly one completed run for the window. ---
         let steps = self.window_steps(&batches);
         let failed = self.online.failures.kill_at_window == Some(delta.seq);
+        // Real clusters do not notice a dead worker instantly: the
+        // heartbeat timeout + re-scheduling gap is charged before any
+        // recovery work starts ([`FailurePlan::detection_secs`]), as its
+        // own phase so the delivery log can attribute it.
+        let detect_secs = if failed {
+            let t = self.online.failures.detection_secs.max(0.0);
+            if t > 0.0 {
+                self.clock.advance(t);
+                self.delivery.train.add_phase(PHASE_DETECT, t);
+            }
+            t
+        } else {
+            0.0
+        };
         let mut redo_secs = if failed { self.recover_from_published()? } else { 0.0 };
         let train = self.train_window(&batches, steps)?;
         if failed {
@@ -713,6 +736,7 @@ impl<'rt> OnlineSession<'rt> {
         let mut rec = self.publish_version(data_ready)?;
         rec.reshard_secs = std::mem::take(&mut self.pending_reshard_secs);
         rec.reshard_bytes = std::mem::take(&mut self.pending_reshard_bytes);
+        rec.detect_secs = detect_secs;
         rec.redo_secs = redo_secs;
         rec.cold_tasks = cold;
         rec.zero_shot_auc = zero_shot_auc;
@@ -772,7 +796,7 @@ mod tests {
             warmup_steps: 3,
             steps_per_window: 2,
             mode,
-            compact_every: 2,
+            compact: CompactPolicy::EveryN(2),
             retain_fulls: None,
             publish: PublishModel::default(),
             feed: DeltaFeedConfig {
@@ -818,8 +842,32 @@ mod tests {
         let mut s = tiny_session(&tmp, PublishMode::DeltaRepublish);
         s.run().unwrap();
         let kinds: Vec<&str> = s.delivery.versions.iter().map(|v| v.kind.as_str()).collect();
-        // compact_every = 2: even versions full, odd versions delta.
+        // EveryN(2): even versions full, odd versions delta.
         assert_eq!(kinds, vec!["full", "delta", "full", "delta"]);
+    }
+
+    #[test]
+    fn bytes_ratio_cadence_drives_the_session_kinds() {
+        // A huge ratio never re-compacts: one leading full, deltas after.
+        let run = |compact: CompactPolicy| {
+            let tmp = TempDir::new().unwrap();
+            let mut online = tiny_online(PublishMode::DeltaRepublish);
+            online.compact = compact;
+            let mut s =
+                OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path()).unwrap();
+            s.run().unwrap();
+            s.delivery
+                .versions
+                .iter()
+                .map(|v| v.kind.clone())
+                .collect::<Vec<_>>()
+        };
+        let lazy = run(CompactPolicy::BytesRatio(100.0));
+        assert_eq!(lazy[0], "full");
+        assert!(lazy[1..].iter().all(|k| k == "delta"), "{lazy:?}");
+        // Ratio 0 compacts every version — the degenerate eager end.
+        let eager = run(CompactPolicy::BytesRatio(0.0));
+        assert!(eager.iter().all(|k| k == "full"), "{eager:?}");
     }
 
     #[test]
@@ -978,6 +1026,54 @@ mod tests {
             failed.latency(),
             clean.delivery.versions[2].latency()
         );
+    }
+
+    #[test]
+    fn detection_latency_is_charged_before_recovery() {
+        let run = |detection: f64| {
+            let tmp = TempDir::new().unwrap();
+            let mut online = tiny_online(PublishMode::DeltaRepublish);
+            online.failures.kill_at_window = Some(1);
+            online.failures.detection_secs = detection;
+            let mut s =
+                OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path()).unwrap();
+            s.run().unwrap();
+            (tmp, s)
+        };
+        let (_t1, instant) = run(0.0);
+        let (_t2, slow) = run(30.0);
+        // The failed window's version carries the detection column…
+        let v_instant = &instant.delivery.versions[2];
+        let v_slow = &slow.delivery.versions[2];
+        assert_eq!(v_instant.detect_secs, 0.0);
+        assert_eq!(v_slow.detect_secs, 30.0);
+        assert_eq!(slow.delivery.total_detect_secs(), 30.0);
+        assert_eq!(instant.delivery.train.phase(PHASE_DETECT), 0.0);
+        assert_eq!(slow.delivery.train.phase(PHASE_DETECT), 30.0);
+        // …and the gap shows up 1:1 in its delivery latency (the stream
+        // is backlogged, so every detour is visible end to end).
+        assert!(
+            v_slow.latency() >= v_instant.latency() + 30.0 * 0.99,
+            "detection gap not visible: {} vs {}",
+            v_slow.latency(),
+            v_instant.latency()
+        );
+        // Clean windows never pay detection.
+        assert_eq!(slow.delivery.versions[1].detect_secs, 0.0);
+        assert_eq!(slow.delivery.versions[3].detect_secs, 0.0);
+        // The published artifacts are identical — detection is latency,
+        // not state.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for v in 0..4u64 {
+            let a = instant.publisher.store.load(v).unwrap();
+            let b = slow.publisher.store.load(v).unwrap();
+            assert_eq!(bits(&a.dense), bits(&b.dense), "version {v}");
+            assert_eq!(a.rows.len(), b.rows.len(), "version {v}");
+            for ((ra, va), (rb, vb)) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(ra, rb, "version {v}");
+                assert_eq!(bits(va), bits(vb), "version {v} row {ra}");
+            }
+        }
     }
 
     #[test]

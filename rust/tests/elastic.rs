@@ -11,9 +11,11 @@
 
 use gmeta::config::{Architecture, ModelDims};
 use gmeta::data::movielens_like;
+use gmeta::embedding::OwnerMap;
 use gmeta::job::TrainJob;
 use gmeta::stream::{
-    BacklogPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+    BacklogPolicy, CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
+    ScheduledPolicy,
 };
 use gmeta::util::TempDir;
 
@@ -30,7 +32,14 @@ fn dims() -> ModelDims {
 }
 
 fn job(arch: Architecture, world: usize) -> TrainJob<'static> {
-    let builder = TrainJob::builder().dims(dims()).dataset(movielens_like());
+    job_with_map(arch, world, OwnerMap::Modulo)
+}
+
+fn job_with_map(arch: Architecture, world: usize, map: OwnerMap) -> TrainJob<'static> {
+    let builder = TrainJob::builder()
+        .dims(dims())
+        .dataset(movielens_like())
+        .owner_map(map);
     match arch {
         Architecture::GMeta => builder.gmeta(1, world),
         Architecture::ParameterServer => builder.parameter_server(world, 1),
@@ -48,7 +57,7 @@ fn online() -> OnlineConfig {
         // touched-row union is world-size-independent (see module doc).
         steps_per_window: 32,
         mode: PublishMode::DeltaRepublish,
-        compact_every: 2,
+        compact: CompactPolicy::EveryN(2),
         feed: DeltaFeedConfig {
             n_deltas: 3,
             samples_per_delta: 60,
@@ -195,9 +204,9 @@ fn failure_redo_republishes_bit_identical_versions() {
 #[test]
 fn partial_reshard_is_bit_identical_to_the_full_path_at_several_world_pairs() {
     // The partial (owner-change-only) reshard is a *cost* optimization:
-    // only rows with `row % W != row % W'` move, owner-to-owner through
-    // device memory, with just the dense replica fetched from the
-    // registry.  The restored state — and every version published
+    // only rows whose owner changes under the job's OwnerMap (here the
+    // default modulo placement) move, owner-to-owner through device
+    // memory, with just the dense replica fetched from the registry.  The restored state — and every version published
     // afterwards — must stay bit-identical to the full
     // capture-and-restore path, at grows, shrinks, and a non-divisible
     // pair.
@@ -239,6 +248,86 @@ fn partial_reshard_is_bit_identical_to_the_full_path_at_several_world_pairs() {
         // The delivery log records the bytes against the right version.
         assert_eq!(part.delivery.versions[2].reshard_bytes, pe.bytes_moved);
         assert_eq!(part.delivery.total_reshard_bytes(), pe.bytes_moved);
+    }
+}
+
+#[test]
+fn both_owner_maps_publish_byte_identical_versions_at_fixed_world() {
+    // At a fixed world size the owner map is pure placement: which shard
+    // *holds* a row never leaks into the trained values (init is a
+    // function of (seed, row) alone; updates land on whatever shard owns
+    // the row).  The same sample stream must therefore publish
+    // byte-identical model versions under modulo and jump-hash sharding
+    // — on both architectures.
+    for arch in [Architecture::GMeta, Architecture::ParameterServer] {
+        let run = |map: OwnerMap| {
+            let tmp = TempDir::new().unwrap();
+            let mut s =
+                OnlineSession::new(job_with_map(arch, 2, map), online(), tmp.path()).unwrap();
+            s.run().unwrap();
+            (tmp, s)
+        };
+        let (_t1, modulo) = run(OwnerMap::Modulo);
+        let (_t2, jump) = run(OwnerMap::JumpHash);
+        assert_versions_bit_identical(&jump, &modulo);
+        // The headers record who wrote what.
+        assert_eq!(
+            modulo.publisher.store.load(0).unwrap().owner_map,
+            OwnerMap::Modulo,
+            "{arch:?}"
+        );
+        assert_eq!(
+            jump.publisher.store.load(0).unwrap().owner_map,
+            OwnerMap::JumpHash,
+            "{arch:?}"
+        );
+    }
+}
+
+#[test]
+fn jump_hash_partial_reshard_is_bit_exact_at_several_world_pairs() {
+    // The acceptance bar for the owner-map abstraction: under JumpHash,
+    // the partial (owner-change-only) reshard must stay bit-identical to
+    // the full capture-and-restore path across a grow, a shrink, and a
+    // non-divisible grow — while moving strictly fewer rows than modulo
+    // sharding moves on the same pair (the consistent-hashing payoff;
+    // every pair here has gcd(w, w') < min(w, w'), so the gap is strict
+    // in expectation).
+    for &(w, w_prime) in &[(2usize, 3usize), (3, 2), (3, 4)] {
+        let run = |map: OwnerMap, partial: bool| {
+            let tmp = TempDir::new().unwrap();
+            let mut cfg = online();
+            cfg.partial_reshard = partial;
+            let mut s =
+                OnlineSession::new(job_with_map(Architecture::GMeta, w, map), cfg, tmp.path())
+                    .unwrap()
+                    .with_policy(Box::new(ScheduledPolicy::new(vec![(0, w_prime)])))
+                    .unwrap();
+            s.run().unwrap();
+            (tmp, s)
+        };
+        let (_t1, full) = run(OwnerMap::JumpHash, false);
+        let (_t2, part) = run(OwnerMap::JumpHash, true);
+        assert_eq!(part.world(), w_prime, "{w}->{w_prime}");
+        assert_versions_bit_identical(&part, &full);
+        let (fe, pe) = (full.events[0], part.events[0]);
+        assert!(!fe.partial && pe.partial, "{w}->{w_prime}");
+        assert!(pe.moved_rows > 0, "{w}->{w_prime}: no rows changed owner");
+        assert!(
+            pe.reshard_secs < fe.reshard_secs && pe.bytes_moved < fe.bytes_moved,
+            "{w}->{w_prime}: partial not cheaper under JumpHash: {pe:?} vs {fe:?}"
+        );
+        // Fewer rows move than under modulo on the same rescale.  At
+        // these pairs gcd(w, w') < min(w, w'), so modulo's
+        // 1 − gcd/max strictly exceeds jump's 1 − min/max.
+        let (_t3, mod_part) = run(OwnerMap::Modulo, true);
+        let me = mod_part.events[0];
+        assert!(
+            pe.moved_rows < me.moved_rows,
+            "{w}->{w_prime}: jump moved {} !< modulo {}",
+            pe.moved_rows,
+            me.moved_rows
+        );
     }
 }
 

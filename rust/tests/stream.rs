@@ -5,7 +5,7 @@
 use gmeta::config::ModelDims;
 use gmeta::data::movielens_like;
 use gmeta::job::{TrainJob, Trainer};
-use gmeta::stream::{DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
+use gmeta::stream::{CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode};
 use gmeta::util::TempDir;
 
 fn small_job() -> TrainJob<'static> {
@@ -31,7 +31,7 @@ fn online(mode: PublishMode) -> OnlineConfig {
         warmup_steps: 4,
         steps_per_window: 3,
         mode,
-        compact_every: 2,
+        compact: CompactPolicy::EveryN(2),
         feed: DeltaFeedConfig {
             n_deltas: 4,
             samples_per_delta: 300,
