@@ -25,6 +25,12 @@
 //!
 //! To refresh a baseline after an intentional perf change, copy the CI
 //! artifact (or a local bench run's output) over the committed file.
+//!
+//! Keys present in only one document — a bench gained or lost a metric
+//! between the compared revisions — are schema drift, not measured
+//! regressions: they are printed as `(new)` / `(removed)`, and when
+//! headline-matched they count toward the gate with a warning instead
+//! of failing the run.  Only a metric measured on *both* sides can fail.
 
 use gmeta::util::args::Args;
 use gmeta::util::json::{self, Value};
@@ -94,10 +100,15 @@ fn main() -> anyhow::Result<()> {
 
     let is_headline = |path: &str| headline.iter().any(|h| !h.is_empty() && path.contains(h));
     let mut regressions: Vec<String> = Vec::new();
+    let mut warnings: Vec<String> = Vec::new();
     let mut gated = 0usize;
     // Current-document order keeps related metrics adjacent in the print.
     for (path, cur) in &current {
         let Some(&base) = base_map.get(path.as_str()) else {
+            if is_headline(path) {
+                gated += 1;
+                warnings.push(format!("{path}: headline metric has no baseline yet"));
+            }
             println!("{path:<58} {:>12} {cur:>12.4} {:>9}  (new)", "-", "-");
             continue;
         };
@@ -129,11 +140,15 @@ fn main() -> anyhow::Result<()> {
         if !cur_map.contains_key(path.as_str()) {
             println!("{path:<58} {base:>12.4} {:>12} {:>9}  (removed)", "-", "-");
             if is_headline(path) {
-                regressions.push(format!("{path}: headline metric removed"));
+                gated += 1;
+                warnings.push(format!("{path}: headline metric only in baseline"));
             }
         }
     }
     println!("{:-<100}", "");
+    for w in &warnings {
+        println!("warning: {w} (one-sided keys never fail the gate)");
+    }
 
     if !headline.is_empty() && gated == 0 && regressions.is_empty() {
         anyhow::bail!(

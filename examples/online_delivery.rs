@@ -43,25 +43,61 @@
 //!   whose owner changes, printing the cliff next to the full
 //!   capture-and-restore path.
 //!
+//! Observability: pass `--trace <path>` to dump a Chrome trace-event JSON
+//! of the instrumented arm (the G-Meta / delta arm) — one track per
+//! worker plus a session track, loadable in Perfetto or
+//! `chrome://tracing` — and `--metrics-out <path>` for a JSON metrics
+//! snapshot (counters, gauges, histograms) next to the delivery record.
+//!
 //! Run: `cargo run --release --example online_delivery`
 //!        `[-- --elastic | --dedup | --partial-reshard]`
+//!        `[--trace out.json] [--metrics-out metrics.json]`
 
 use gmeta::config::Architecture;
 use gmeta::data::{aliccp_like, movielens_like};
 use gmeta::job::{TrainJob, Variant};
 use gmeta::metrics::DeliveryMetrics;
+use gmeta::obs::{MetricsSnapshot, Tracer};
 use gmeta::stream::{
     BacklogPolicy, CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode,
     RowDedup, ScheduledPolicy,
 };
 use gmeta::util::args::Args;
+use gmeta::util::json;
 use gmeta::util::TempDir;
+use std::fs;
+
+/// Write the tracer's exports wherever the CLI asked for them.
+fn write_outputs(
+    tracer: &Tracer,
+    delivery: &DeliveryMetrics,
+    trace_path: Option<&str>,
+    metrics_path: Option<&str>,
+) -> anyhow::Result<()> {
+    if let Some(p) = trace_path {
+        fs::write(p, tracer.to_chrome_trace())?;
+        println!("trace written to {p} (open in Perfetto or chrome://tracing)");
+    }
+    if let Some(p) = metrics_path {
+        let doc = json::obj(vec![
+            ("metrics", MetricsSnapshot::from_tracer(tracer).to_json()),
+            ("delivery", delivery.to_json()),
+        ]);
+        fs::write(p, json::write(&doc))?;
+        println!("metrics snapshot written to {p}");
+    }
+    Ok(())
+}
 
 /// Swap to `Architecture::ParameterServer` to run the PS baseline's
 /// online arm — the only line that changes.
 const ARCH: Architecture = Architecture::GMeta;
 
-fn run_arm_dedup(mode: PublishMode, dedup: RowDedup) -> anyhow::Result<DeliveryMetrics> {
+fn run_arm_dedup(
+    mode: PublishMode,
+    dedup: RowDedup,
+    tracer: Option<Tracer>,
+) -> anyhow::Result<DeliveryMetrics> {
     let tmp = TempDir::new()?;
     let job = TrainJob::builder()
         .architecture(ARCH)
@@ -87,12 +123,15 @@ fn run_arm_dedup(mode: PublishMode, dedup: RowDedup) -> anyhow::Result<DeliveryM
         ..OnlineConfig::default()
     };
     let mut session = OnlineSession::new(job, online, tmp.path())?;
+    if let Some(t) = tracer {
+        session = session.with_tracer(t);
+    }
     session.run()?;
     Ok(session.delivery.clone())
 }
 
-fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
-    run_arm_dedup(mode, RowDedup::Exact)
+fn run_arm(mode: PublishMode, tracer: Option<Tracer>) -> anyhow::Result<DeliveryMetrics> {
+    run_arm_dedup(mode, RowDedup::Exact, tracer)
 }
 
 /// `--dedup`: the same delta stream under all three row-dedup policies —
@@ -100,12 +139,13 @@ fn run_arm(mode: PublishMode) -> anyhow::Result<DeliveryMetrics> {
 /// byte-identical by construction (pinned in tests).
 fn run_dedup_comparison() -> anyhow::Result<()> {
     println!("\n=== publish-side row dedup (delta arm) ===");
-    let off = run_arm_dedup(PublishMode::DeltaRepublish, RowDedup::Off)?;
+    let off = run_arm_dedup(PublishMode::DeltaRepublish, RowDedup::Off, None)?;
     let fp = run_arm_dedup(
         PublishMode::DeltaRepublish,
         RowDedup::Fingerprint { capacity: 1 << 20 },
+        None,
     )?;
-    let exact = run_arm_dedup(PublishMode::DeltaRepublish, RowDedup::Exact)?;
+    let exact = run_arm_dedup(PublishMode::DeltaRepublish, RowDedup::Exact, None)?;
     let mib = |b: u64| b as f64 / (1 << 20) as f64;
     println!(
         "  no row state (Off)         : {:>8.2} MiB published",
@@ -196,7 +236,10 @@ fn run_partial_reshard_comparison() -> anyhow::Result<()> {
 
 /// One elastic + failure-aware session: backlogged stream, backlog-driven
 /// growth, a worker death at window 4, and a slow-registry tail.
-fn run_elastic_arm(arch: Architecture) -> anyhow::Result<()> {
+fn run_elastic_arm(
+    arch: Architecture,
+    tracer: Option<Tracer>,
+) -> anyhow::Result<DeliveryMetrics> {
     let (label, start_world, max_world) = match arch {
         Architecture::GMeta => ("G-Meta (GPU hybrid)", 2, 4),
         Architecture::ParameterServer => ("parameter server (CPU baseline)", 2, 4),
@@ -245,6 +288,9 @@ fn run_elastic_arm(arch: Architecture) -> anyhow::Result<()> {
     policy.cooldown = 0;
     let mut session =
         OnlineSession::new(job, online, tmp.path())?.with_policy(Box::new(policy))?;
+    if let Some(t) = tracer {
+        session = session.with_tracer(t);
+    }
     session.run()?;
 
     println!("{}", session.delivery);
@@ -279,32 +325,44 @@ fn run_elastic_arm(arch: Architecture) -> anyhow::Result<()> {
     );
     assert!(failed.redo_secs > 0.0, "failed window charged no redo cost");
     println!();
-    Ok(())
+    Ok(session.delivery.clone())
 }
 
-fn run_elastic() -> anyhow::Result<()> {
+fn run_elastic(trace_path: Option<&str>, metrics_path: Option<&str>) -> anyhow::Result<()> {
     println!("=== elastic + failure-aware continuous delivery ===");
     println!("(backlog-driven growth, mid-window worker death, slow-registry tail)\n");
-    run_elastic_arm(Architecture::GMeta)?;
-    run_elastic_arm(Architecture::ParameterServer)?;
+    // Trace the G-Meta arm: the reshard cliff, the detect gap after the
+    // window-4 kill, and the lognormal slow-publish tail all land on the
+    // session track; per-worker tracks expose the stragglers underneath.
+    let tracer = (trace_path.is_some() || metrics_path.is_some()).then(Tracer::new);
+    let delivery = run_elastic_arm(Architecture::GMeta, tracer.clone())?;
+    run_elastic_arm(Architecture::ParameterServer, None)?;
     println!("shape check passed: both architectures grew under backlog and recovered a failed window.");
+    if let Some(t) = &tracer {
+        write_outputs(t, &delivery, trace_path, metrics_path)?;
+    }
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics-out");
     if args.flag("elastic") {
-        return run_elastic();
+        return run_elastic(trace_path, metrics_path);
     }
     println!("=== continuous delivery on a virtual 1x4 GPU cluster ===");
     println!("(6 delivery windows, one carrying a cold-start task population)\n");
 
     println!("--- full-republish (conventional pipeline) ---");
-    let full = run_arm(PublishMode::FullRepublish)?;
+    let full = run_arm(PublishMode::FullRepublish, None)?;
     println!("{full}\n");
 
+    // The delta arm is the instrumented one: with `--trace`, its
+    // per-worker phase spans and delivery legs land in the export.
+    let tracer = (trace_path.is_some() || metrics_path.is_some()).then(Tracer::new);
     println!("--- delta-republish (G-Meta continuous delivery) ---");
-    let delta = run_arm(PublishMode::DeltaRepublish)?;
+    let delta = run_arm(PublishMode::DeltaRepublish, tracer.clone())?;
     println!("{delta}\n");
 
     // Compare over the streamed versions (v0 is the shared warm-up).
@@ -353,6 +411,9 @@ fn main() -> anyhow::Result<()> {
         "delta-republish must be at least 2x lower latency (got {speedup:.2}x)"
     );
     println!("\nshape check passed: delta-republish >= 2x lower delivery latency.");
+    if let Some(t) = &tracer {
+        write_outputs(t, &delta, trace_path, metrics_path)?;
+    }
 
     if args.flag("dedup") {
         run_dedup_comparison()?;

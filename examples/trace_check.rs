@@ -1,0 +1,88 @@
+//! Chrome-trace artifact validator for CI: checks that every
+//! `TRACE_*.json` the smoke benches and examples emit is well-formed
+//! before it is uploaded.
+//!
+//! A file passes when it is valid JSON with a `traceEvents` array and
+//! every event carries the fields the trace-event format requires for
+//! Perfetto / `chrome://tracing` to load it at all: a `ph` phase code,
+//! a numeric non-negative `ts` timestamp, and a `pid`.  Complete
+//! (`ph:"X"`) events must also carry a numeric non-negative `dur`, and
+//! a trace with no complete events at all is rejected — it means the
+//! run recorded nothing worth uploading.
+//!
+//! ```text
+//! cargo run --release --example trace_check -- TRACE_delivery.json TRACE_elastic.json
+//! ```
+//!
+//! Exits non-zero with a per-file message on the first malformed file,
+//! so the CI step fails loudly instead of shipping a trace the UI
+//! would silently reject.
+
+use gmeta::util::json::{self, Value};
+
+fn check_file(path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: invalid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{path}: no traceEvents array"))?;
+    if events.is_empty() {
+        anyhow::bail!("{path}: traceEvents is empty — the run recorded nothing");
+    }
+    let mut spans = 0usize;
+    let mut instants = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{path}: event {i} has no ph"))?;
+        let ts = ev
+            .get("ts")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("{path}: event {i} has no numeric ts"))?;
+        if ev.get("pid").and_then(Value::as_u64).is_none() {
+            anyhow::bail!("{path}: event {i} has no pid");
+        }
+        if !ts.is_finite() || ts < 0.0 {
+            anyhow::bail!("{path}: event {i} has bad ts {ts}");
+        }
+        match ph {
+            "X" => {
+                spans += 1;
+                let dur = ev
+                    .get("dur")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("{path}: span event {i} has no dur"))?;
+                if !dur.is_finite() || dur < 0.0 {
+                    anyhow::bail!("{path}: span event {i} has bad dur {dur}");
+                }
+            }
+            "i" => instants += 1,
+            _ => {}
+        }
+    }
+    if spans == 0 {
+        anyhow::bail!("{path}: no complete (ph:\"X\") span events");
+    }
+    println!(
+        "{path}: ok ({} events, {spans} spans, {instants} instants)",
+        events.len()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // A plain positional file list (the shared `Args` parser is
+    // subcommand-shaped and allows only one positional).
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.is_empty() {
+        anyhow::bail!("usage: trace_check <TRACE_*.json>...");
+    }
+    for p in &paths {
+        check_file(p)?;
+    }
+    println!("{} trace file(s) well-formed", paths.len());
+    Ok(())
+}

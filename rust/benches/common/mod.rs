@@ -15,6 +15,22 @@ pub fn write_bench_json(name: &str, doc: &gmeta::util::json::Value) -> std::path
     path
 }
 
+/// Write a traced session's Chrome trace-event export next to the bench
+/// JSON (CI uploads `TRACE_*.json` as artifacts and validates the event
+/// shape with `examples/trace_check.rs`).  Returns the path written.
+#[allow(dead_code)] // each bench binary links common; not all emit traces
+pub fn write_trace_json(name: &str, tracer: &gmeta::obs::Tracer) -> std::path::PathBuf {
+    let path = std::path::PathBuf::from(format!("TRACE_{name}.json"));
+    std::fs::write(&path, tracer.to_chrome_trace()).expect("write trace json");
+    println!(
+        "wrote {} ({} spans, {} instants)",
+        path.display(),
+        tracer.spans().len(),
+        tracer.instants().len()
+    );
+    path
+}
+
 pub struct BenchStats {
     pub name: String,
     pub iters: usize,

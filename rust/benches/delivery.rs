@@ -51,7 +51,11 @@ struct Scale {
     bench_iters: usize,
 }
 
-fn run_arm(mode: PublishMode, scale: &Scale) -> anyhow::Result<DeliveryMetrics> {
+fn run_arm(
+    mode: PublishMode,
+    scale: &Scale,
+    tracer: Option<gmeta::obs::Tracer>,
+) -> anyhow::Result<DeliveryMetrics> {
     let tmp = TempDir::new()?;
     let job = TrainJob::builder()
         .gmeta(2, 4)
@@ -75,6 +79,9 @@ fn run_arm(mode: PublishMode, scale: &Scale) -> anyhow::Result<DeliveryMetrics> 
         ..OnlineConfig::default()
     };
     let mut session = OnlineSession::new(job, online, tmp.path())?;
+    if let Some(t) = tracer {
+        session = session.with_tracer(t);
+    }
     session.run()?;
     Ok(session.delivery.clone())
 }
@@ -223,11 +230,15 @@ fn main() -> anyhow::Result<()> {
     println!("=== continuous-delivery latency (virtual-clock measurement) ===\n");
 
     println!("--- full-republish ---");
-    let full = run_arm(PublishMode::FullRepublish, &scale)?;
+    let full = run_arm(PublishMode::FullRepublish, &scale, None)?;
     println!("{full}\n");
     println!("--- delta-republish ---");
-    let delta = run_arm(PublishMode::DeltaRepublish, &scale)?;
+    // Trace the delta arm: per-worker phase spans + delivery legs land
+    // in TRACE_delivery.json (CI validates and uploads it).
+    let tracer = gmeta::obs::Tracer::new();
+    let delta = run_arm(PublishMode::DeltaRepublish, &scale, Some(tracer.clone()))?;
     println!("{delta}\n");
+    common::write_trace_json("delivery", &tracer);
 
     let speedup = full.mean_streamed_latency() / delta.mean_streamed_latency();
     println!("delivery-latency speedup: {speedup:.2}x (paper reports ~4x in production)");

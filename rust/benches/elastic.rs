@@ -267,10 +267,16 @@ fn main() -> anyhow::Result<()> {
     let tmp = TempDir::new()?;
     let mut policy = BacklogPolicy::new(2, 4);
     policy.cooldown = 0;
+    // Trace the policy-driven session: the reshard cliff and the
+    // per-worker phase spans land in TRACE_elastic.json (CI validates
+    // and uploads it).
+    let tracer = gmeta::obs::Tracer::new();
     let mut elastic_session =
         OnlineSession::new(job(2, OwnerMap::Modulo), online(&scale), tmp.path())?
-            .with_policy(Box::new(policy))?;
+            .with_policy(Box::new(policy))?
+            .with_tracer(tracer.clone());
     elastic_session.run()?;
+    common::write_trace_json("elastic", &tracer);
     println!(
         "fixed world 2 : mean streamed latency {:.4}s",
         fixed.mean_streamed_latency()

@@ -36,6 +36,7 @@ use crate::metrics::{
     PHASE_IO,
 };
 use crate::net::Topology;
+use crate::obs::{Tracer, Track};
 use crate::ps::jitter;
 use crate::runtime::{MetatrainInputs, Runtime};
 use crate::sim::{DeviceModel, ReadPattern, StorageModel, WorkerClocks};
@@ -76,6 +77,10 @@ pub struct GMetaTrainer<'rt> {
     pub losses: Vec<(f32, f32)>,
     /// Metrics accumulated across every [`Self::run`] call.
     pub metrics: RunMetrics,
+    /// Optional span recorder: when set, every per-worker phase of every
+    /// iteration lands as a virtual-clock span ([`crate::obs`]).  Purely
+    /// observational — virtual time is identical with it on or off.
+    pub tracer: Option<Tracer>,
 }
 
 impl<'rt> GMetaTrainer<'rt> {
@@ -110,6 +115,7 @@ impl<'rt> GMetaTrainer<'rt> {
             runtime,
             losses: Vec::new(),
             metrics: RunMetrics::default(),
+            tracer: None,
             cfg,
         })
     }
@@ -176,6 +182,13 @@ impl<'rt> GMetaTrainer<'rt> {
         let mut clocks = WorkerClocks::new(world);
         let mut m = RunMetrics::default();
         let mut prev_compute = vec![0.0f64; world];
+        // Span recording: trainer-local clocks start at 0; the tracer's
+        // base offsets spans to the driver's (session) clock.  Durations
+        // are the exact charged values, so the per-phase fold reproduces
+        // phase_time bit-exactly.
+        let tracer = self.tracer.clone();
+        let base = tracer.as_ref().map(|t| t.base()).unwrap_or(0.0);
+        let run = tracer.as_ref().map(|t| t.begin_run()).unwrap_or(0);
 
         for it in 0..steps {
             let eps: Vec<&Episode> = (0..world)
@@ -207,6 +220,15 @@ impl<'rt> GMetaTrainer<'rt> {
                 } else {
                     raw
                 };
+                if let Some(tr) = &tracer {
+                    tr.span(
+                        PHASE_IO,
+                        Track::Worker(rank),
+                        base + clocks.now(rank),
+                        t,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
                 clocks.charge(rank, t);
                 io_max = io_max.max(t);
             }
@@ -226,10 +248,24 @@ impl<'rt> GMetaTrainer<'rt> {
                     })
                     .collect();
                 let (uniq, report) = self.exchange_rows(&plans)?;
+                // Barrier phase: every worker syncs to the slowest, then
+                // the collective charges all of them identically.
+                let t_sync = clocks.max_now();
                 clocks.barrier(report.time);
                 m.inter_bytes += report.inter_bytes;
                 m.intra_bytes += report.intra_bytes;
                 m.add_phase(PHASE_EMB_EXCHANGE, report.time);
+                if let Some(tr) = &tracer {
+                    for rank in 0..world {
+                        tr.span(
+                            PHASE_EMB_EXCHANGE,
+                            Track::Worker(rank),
+                            base + t_sync,
+                            report.time,
+                            &[("run", run as f64), ("iter", it as f64)],
+                        );
+                    }
+                }
                 let need_values = self.runtime.is_some();
                 for (w, plan) in plans.into_iter().enumerate() {
                     let (sup_ids, qry_ids) = &id_pairs[w];
@@ -266,10 +302,24 @@ impl<'rt> GMetaTrainer<'rt> {
                     .collect();
                 let (uniq_s, rep_s) = self.exchange_rows(&sup_plans)?;
                 let (uniq_q, rep_q) = self.exchange_rows(&qry_plans)?;
+                let t_sync = clocks.max_now();
                 clocks.barrier(rep_s.time + rep_q.time);
                 m.inter_bytes += rep_s.inter_bytes + rep_q.inter_bytes;
                 m.intra_bytes += rep_s.intra_bytes + rep_q.intra_bytes;
                 m.add_phase(PHASE_EMB_EXCHANGE, rep_s.time + rep_q.time);
+                if let Some(tr) = &tracer {
+                    // One span for the two-round exchange, so the fold's
+                    // per-phase sum matches add_phase exactly.
+                    for rank in 0..world {
+                        tr.span(
+                            PHASE_EMB_EXCHANGE,
+                            Track::Worker(rank),
+                            base + t_sync,
+                            rep_s.time + rep_q.time,
+                            &[("run", run as f64), ("iter", it as f64)],
+                        );
+                    }
+                }
                 let need_values = self.runtime.is_some();
                 for (w, (sp, qp)) in sup_plans.into_iter().zip(qry_plans).enumerate() {
                     let (sup_ids, qry_ids) = &id_pairs[w];
@@ -308,6 +358,15 @@ impl<'rt> GMetaTrainer<'rt> {
                     + self.device.mem_time(gathered)
                     + self.device.lookup_time(lookups))
                     * jitter(self.cfg.train.seed ^ 0xBEEF, rank, it, self.cfg.cluster.compute_jitter);
+                if let Some(tr) = &tracer {
+                    tr.span(
+                        PHASE_COMPUTE,
+                        Track::Worker(rank),
+                        base + clocks.now(rank),
+                        t,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
                 clocks.charge(rank, t);
                 prev_compute[rank] = t;
                 comp_max = comp_max.max(t);
@@ -365,10 +424,22 @@ impl<'rt> GMetaTrainer<'rt> {
                 |(rows, grads)| rows.len() * 8 + grads.len() * 4,
                 &self.topo,
             )?;
+            let t_sync = clocks.max_now();
             clocks.barrier(rep.time);
             m.inter_bytes += rep.inter_bytes;
             m.intra_bytes += rep.intra_bytes;
             m.add_phase(PHASE_GRAD_EXCHANGE, rep.time);
+            if let Some(tr) = &tracer {
+                for rank in 0..world {
+                    tr.span(
+                        PHASE_GRAD_EXCHANGE,
+                        Track::Worker(rank),
+                        base + t_sync,
+                        rep.time,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
+            }
             for (s, incoming) in grad_recv.iter().enumerate() {
                 for (rows, grads) in incoming {
                     self.embedding.apply_grads(
@@ -412,8 +483,20 @@ impl<'rt> GMetaTrainer<'rt> {
                 m.intra_bytes += rep_g.intra_bytes + rep_b.intra_bytes;
                 rep_g.time + central + rep_b.time
             };
+            let t_sync = clocks.max_now();
             clocks.barrier(t_dense);
             m.add_phase(PHASE_DENSE_ALLREDUCE, t_dense);
+            if let Some(tr) = &tracer {
+                for rank in 0..world {
+                    tr.span(
+                        PHASE_DENSE_ALLREDUCE,
+                        Track::Worker(rank),
+                        base + t_sync,
+                        t_dense,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
+            }
             // Meta update θ ← θ − β·mean_i(g_i): the AllReduce buffer holds
             // the sum; dividing by N keeps β scale-free in world size (the
             // paper's Σ convention differs by the constant factor N, which

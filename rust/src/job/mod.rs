@@ -49,6 +49,7 @@ use crate::data::DatasetSpec;
 use crate::embedding::OwnerMap;
 use crate::meta::Episode;
 use crate::metrics::RunMetrics;
+use crate::obs::{Tracer, TracingObserver};
 use crate::ps::{PsMode, PsTrainer};
 use crate::runtime::Runtime;
 use crate::sim::{DeviceModel, StorageModel};
@@ -145,6 +146,15 @@ pub trait Observer {
     fn on_phase(&mut self, _phase: &str, _secs: f64) {}
     /// The completed run's full metrics.
     fn on_run_end(&mut self, _metrics: &RunMetrics) {}
+    /// One timed virtual-clock interval from the delivery loop (ingest,
+    /// publish, reshard, …).  `dur_vsecs` is the exact seconds the
+    /// emitter charged to its clock; [`crate::obs::TracingObserver`]
+    /// records these on the session track.
+    fn on_span(&mut self, _name: &str, _start_vsecs: f64, _dur_vsecs: f64, _attrs: &[(&str, f64)]) {
+    }
+    /// A point event on the virtual clock (a version publish, an
+    /// injected failure).
+    fn on_instant(&mut self, _name: &str, _ts_vsecs: f64, _attrs: &[(&str, f64)]) {}
 }
 
 #[derive(Debug, Default)]
@@ -256,6 +266,17 @@ pub trait Trainer {
     fn sync_windows(&self) -> bool {
         true
     }
+
+    /// Attach (or detach) a span tracer: the trainer emits per-worker
+    /// per-iteration phase spans into it ([`crate::obs`]).  The default
+    /// is a no-op for trainers without span support.  The online session
+    /// re-attaches the shared tracer after every elastic rebuild.
+    fn set_tracer(&mut self, _tracer: Option<Tracer>) {}
+
+    /// The attached span tracer, if any (clones share state).
+    fn tracer(&self) -> Option<Tracer> {
+        None
+    }
 }
 
 impl<'rt> Trainer for GMetaTrainer<'rt> {
@@ -316,6 +337,14 @@ impl<'rt> Trainer for GMetaTrainer<'rt> {
         }
         GMetaTrainer::evaluate_zero_shot(self, episodes)
     }
+
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    fn tracer(&self) -> Option<Tracer> {
+        self.tracer.clone()
+    }
 }
 
 impl Trainer for PsTrainer {
@@ -357,6 +386,14 @@ impl Trainer for PsTrainer {
 
     fn sync_windows(&self) -> bool {
         self.mode == PsMode::Sync
+    }
+
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    fn tracer(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 }
 
@@ -479,6 +516,7 @@ pub struct TrainJobBuilder<'rt> {
     ps_mode: Option<PsMode>,
     runtime: Option<&'rt Runtime>,
     observer: Option<Box<dyn Observer + 'rt>>,
+    tracer: Option<Tracer>,
 }
 
 impl<'rt> Default for TrainJobBuilder<'rt> {
@@ -501,6 +539,7 @@ impl<'rt> Default for TrainJobBuilder<'rt> {
             ps_mode: None,
             runtime: None,
             observer: None,
+            tracer: None,
         }
     }
 }
@@ -641,6 +680,17 @@ impl<'rt> TrainJobBuilder<'rt> {
         self
     }
 
+    /// Attach a virtual-clock span tracer ([`crate::obs::Tracer`]): the
+    /// trainer emits per-worker per-iteration phase spans into it, and —
+    /// when no explicit observer is set — a
+    /// [`crate::obs::TracingObserver`] is installed so delivery-loop
+    /// spans land in the same trace.  Jobs without a tracer record
+    /// nothing and charge identical virtual time.
+    pub fn tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
     /// Assemble the job: resolve defaults, construct the architecture's
     /// trainer, and apply every override.
     pub fn build(self) -> Result<TrainJob<'rt>> {
@@ -693,6 +743,7 @@ impl<'rt> TrainJobBuilder<'rt> {
                 if let Some(storage) = self.storage {
                     t.storage = storage;
                 }
+                t.tracer = self.tracer.clone();
                 AnyTrainer::GMeta(t)
             }
             Architecture::ParameterServer => {
@@ -715,6 +766,7 @@ impl<'rt> TrainJobBuilder<'rt> {
                 if let Some(mode) = self.ps_mode {
                     t.mode = mode;
                 }
+                t.tracer = self.tracer.clone();
                 AnyTrainer::Ps(t)
             }
         };
@@ -738,10 +790,20 @@ impl<'rt> TrainJobBuilder<'rt> {
                 ps_mode: Some(t.mode),
             },
         };
+        // A tracer with no explicit observer gets a TracingObserver, so
+        // the delivery loop's session-track spans land in the same trace.
+        let observer = match (self.observer, &self.tracer) {
+            (Some(obs), _) => Some(obs),
+            (None, Some(t)) => {
+                Some(Box::new(TracingObserver::new(t.clone())) as Box<dyn Observer + 'rt>)
+            }
+            (None, None) => None,
+        };
         Ok(TrainJob {
             trainer,
             dataset,
-            observer: self.observer,
+            observer,
+            tracer: self.tracer,
             spec,
         })
     }
@@ -753,6 +815,7 @@ pub struct TrainJob<'rt> {
     trainer: AnyTrainer<'rt>,
     dataset: Option<DatasetSpec>,
     observer: Option<Box<dyn Observer + 'rt>>,
+    tracer: Option<Tracer>,
     spec: JobSpec,
 }
 
@@ -776,6 +839,12 @@ impl<'rt> TrainJob<'rt> {
     /// rescale / failure-recovery path; see [`JobSpec`]).
     pub fn spec(&self) -> &JobSpec {
         &self.spec
+    }
+
+    /// The span tracer attached through [`TrainJobBuilder::tracer`], if
+    /// any (clones share state).
+    pub fn tracer(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 
     /// The job's trainer, architecture-erased.
@@ -859,6 +928,12 @@ impl<'rt> TrainJob<'rt> {
                 obs.on_phase(phase, *secs);
             }
             obs.on_run_end(&m);
+        }
+        // Standalone (non-session) jobs: slide the trace base past the
+        // completed run so back-to-back runs don't overlap on the worker
+        // tracks.  Sessions pin the base to their own clock instead.
+        if let Some(t) = &self.tracer {
+            t.advance_base(m.virtual_time);
         }
         Ok(m)
     }

@@ -28,7 +28,11 @@
 //!   policies resize the cluster between windows through
 //!   [`job::JobSpec`] + checkpoint resharding, and an injected
 //!   [`stream::elastic::FailurePlan`] models mid-window worker death and
-//!   slow-registry publish tails.
+//!   slow-registry publish tails.  Cross-cutting **observability**
+//!   ([`obs`]): an [`obs::Tracer`] records virtual-clock spans from the
+//!   trainers (per-worker, so stragglers are visible) and the delivery
+//!   loop, exports Chrome-trace/JSONL/metrics-snapshot views, and folds
+//!   back to `RunMetrics.phase_time` bit-exactly.
 //! - **L2/L1 (build-time Python)** — the Meta-DLRM forward/backward with
 //!   fused MAML inner+outer steps, built on Pallas kernels, AOT-lowered to
 //!   HLO text artifacts loaded by [`runtime`] via PJRT.
@@ -64,6 +68,7 @@ pub mod job;
 pub mod meta;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod ps;
 pub mod runtime;
 pub mod sim;
@@ -73,6 +78,7 @@ pub mod util;
 pub use config::{Architecture, ClusterSpec, ExperimentConfig};
 pub use embedding::OwnerMap;
 pub use job::{JobSpec, Observer, PhaseLog, TrainJob, TrainJobBuilder, Trainer, Variant};
+pub use obs::{Tracer, TracingObserver};
 
 /// Crate-wide result alias (anyhow for rich error contexts).
 pub type Result<T> = anyhow::Result<T>;

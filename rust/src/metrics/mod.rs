@@ -7,6 +7,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::util::json::{num, obj, Value};
+
 // Named training phases (keys into the [`RunMetrics::phase_time`]
 // breakdown).  Every phase is the *barrier-aligned critical-path*
 // contribution: the slowest worker's seconds for that leg of each
@@ -66,6 +68,24 @@ pub const PHASE_REDO: &str = "redo";
 /// ([`crate::stream::elastic::FailurePlan::detection_secs`]; 0 with an
 /// oracle detector).
 pub const PHASE_DETECT: &str = "detect";
+
+/// Nearest-rank quantile of an already-sorted (ascending) sample slice:
+/// the smallest value whose rank covers fraction `q` of the samples,
+/// i.e. index `ceil(q·n) - 1` (clamped).  No interpolation — p50 of 10
+/// samples is the 5th value, not the 6th.  Returns 0 on an empty slice.
+///
+/// Shared by [`DeliveryMetrics::publish_quantile`] and the
+/// [`crate::obs::Histogram`] snapshot quantiles.
+pub fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let idx = ((q * n as f64).ceil() as usize)
+        .saturating_sub(1)
+        .min(n - 1);
+    sorted[idx]
+}
 
 /// Aggregated result of one training run.
 #[derive(Debug, Clone, Default)]
@@ -127,6 +147,32 @@ impl RunMetrics {
         if other.tail_loss_qry.is_some() {
             self.tail_loss_qry = other.tail_loss_qry;
         }
+    }
+
+    /// Machine-readable view (compact [`crate::util::json`] value) —
+    /// what `--metrics-out` dumps alongside the Display table.
+    pub fn to_json(&self) -> Value {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Value::Null);
+        obj(vec![
+            ("samples", num(self.samples as f64)),
+            ("steps", num(self.steps as f64)),
+            ("virtual_time", num(self.virtual_time)),
+            ("throughput", num(self.throughput())),
+            (
+                "phase_time",
+                Value::Obj(
+                    self.phase_time
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("inter_bytes", num(self.inter_bytes)),
+            ("intra_bytes", num(self.intra_bytes)),
+            ("real_compute_secs", num(self.real_compute_secs)),
+            ("tail_loss_sup", opt(self.tail_loss_sup)),
+            ("tail_loss_qry", opt(self.tail_loss_qry)),
+        ])
     }
 }
 
@@ -215,6 +261,34 @@ impl VersionRecord {
     pub fn latency(&self) -> f64 {
         self.published - self.data_ready
     }
+
+    /// Machine-readable view of one delivery-log row.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", num(self.version as f64)),
+            ("kind", Value::Str(self.kind.clone())),
+            ("data_ready", num(self.data_ready)),
+            ("published", num(self.published)),
+            ("latency", num(self.latency())),
+            ("bytes", num(self.bytes as f64)),
+            ("rows", num(self.rows as f64)),
+            ("rows_deduped", num(self.rows_deduped as f64)),
+            ("world", num(self.world as f64)),
+            ("publish_secs", num(self.publish_secs)),
+            ("reshard_secs", num(self.reshard_secs)),
+            ("reshard_bytes", num(self.reshard_bytes as f64)),
+            ("detect_secs", num(self.detect_secs)),
+            ("redo_secs", num(self.redo_secs)),
+            (
+                "cold_tasks",
+                Value::Arr(self.cold_tasks.iter().map(|t| num(*t as f64)).collect()),
+            ),
+            (
+                "zero_shot_auc",
+                self.zero_shot_auc.map(num).unwrap_or(Value::Null),
+            ),
+        ])
+    }
 }
 
 /// Aggregated result of one online continuous-delivery session.
@@ -275,8 +349,7 @@ impl DeliveryMetrics {
         }
         let mut secs: Vec<f64> = self.versions.iter().map(|v| v.publish_secs).collect();
         secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((secs.len() as f64 * q) as usize).min(secs.len() - 1);
-        secs[idx]
+        nearest_rank(&secs, q)
     }
 
     /// Median publish-leg seconds across versions.
@@ -319,6 +392,38 @@ impl DeliveryMetrics {
     /// starts) across the session.
     pub fn total_detect_secs(&self) -> f64 {
         self.versions.iter().map(|v| v.detect_secs).sum()
+    }
+
+    /// Machine-readable view: the full per-version delivery log plus the
+    /// session-level summary statistics and phase totals.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "versions",
+                Value::Arr(self.versions.iter().map(VersionRecord::to_json).collect()),
+            ),
+            ("train", self.train.to_json()),
+            (
+                "summary",
+                obj(vec![
+                    ("mean_latency", num(self.mean_latency())),
+                    ("mean_streamed_latency", num(self.mean_streamed_latency())),
+                    ("max_latency", num(self.max_latency())),
+                    ("published_bytes", num(self.published_bytes() as f64)),
+                    ("publish_p50", num(self.publish_p50())),
+                    ("publish_p99", num(self.publish_p99())),
+                    ("reshard_events", num(self.reshard_events() as f64)),
+                    ("total_reshard_secs", num(self.total_reshard_secs())),
+                    (
+                        "total_reshard_bytes",
+                        num(self.total_reshard_bytes() as f64),
+                    ),
+                    ("total_rows_deduped", num(self.total_rows_deduped() as f64)),
+                    ("total_detect_secs", num(self.total_detect_secs())),
+                    ("total_redo_secs", num(self.total_redo_secs())),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -528,6 +633,90 @@ mod tests {
         assert_eq!(d.total_redo_secs(), 4.0);
         assert_eq!(d.total_detect_secs(), 1.5);
         assert_eq!(d.total_rows_deduped(), 12);
+    }
+
+    #[test]
+    fn nearest_rank_even_and_odd_counts() {
+        // Even count: p50 of 10 is the 5th value (rank ceil(5)=5), not
+        // the 6th — the bias the old `(len * q) as usize` index had.
+        let even: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&even, 0.5), 5.0);
+        assert_eq!(nearest_rank(&even, 0.1), 1.0);
+        assert_eq!(nearest_rank(&even, 0.91), 10.0);
+        assert_eq!(nearest_rank(&even, 0.99), 10.0);
+        assert_eq!(nearest_rank(&even, 1.0), 10.0);
+        // Odd count: p50 of 5 is the middle (3rd) value.
+        let odd: Vec<f64> = (1..=5).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&odd, 0.5), 3.0);
+        assert_eq!(nearest_rank(&odd, 0.2), 1.0);
+        assert_eq!(nearest_rank(&odd, 0.21), 2.0);
+        // Degenerate inputs.
+        assert_eq!(nearest_rank(&[], 0.5), 0.0);
+        assert_eq!(nearest_rank(&[7.0], 0.5), 7.0);
+        assert_eq!(nearest_rank(&even, 0.0), 1.0);
+    }
+
+    #[test]
+    fn publish_quantile_uses_nearest_rank() {
+        // 10 versions with publish_secs 1..=10: the median must be 5
+        // (the old truncating index picked 6).
+        let versions: Vec<VersionRecord> = (0..10)
+            .map(|i| {
+                let mut v = rec(i, 0.0, 1.0, 10);
+                v.publish_secs = (i + 1) as f64;
+                v
+            })
+            .collect();
+        let d = DeliveryMetrics {
+            versions,
+            train: RunMetrics::default(),
+        };
+        assert_eq!(d.publish_p50(), 5.0);
+        assert_eq!(d.publish_p99(), 10.0);
+    }
+
+    #[test]
+    fn metrics_json_round_trips() {
+        let mut m = RunMetrics {
+            samples: 100,
+            steps: 4,
+            virtual_time: 2.0,
+            inter_bytes: 12.5,
+            tail_loss_sup: Some(0.25),
+            ..Default::default()
+        };
+        m.add_phase(PHASE_IO, 0.5);
+        let mut v7 = rec(7, 10.0, 12.0, 512);
+        v7.cold_tasks = vec![3, 9];
+        v7.zero_shot_auc = Some(0.75);
+        let d = DeliveryMetrics {
+            versions: vec![rec(0, 0.0, 1.0, 100), v7],
+            train: m,
+        };
+        let text = crate::util::json::write(&d.to_json());
+        let back = crate::util::json::parse(&text).unwrap();
+        let versions = back.get("versions").unwrap().as_arr().unwrap();
+        assert_eq!(versions.len(), 2);
+        assert_eq!(versions[1].get("version").unwrap().as_u64(), Some(7));
+        assert_eq!(versions[1].get("latency").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            versions[1].get("cold_tasks").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert_eq!(
+            versions[1].get("zero_shot_auc").unwrap().as_f64(),
+            Some(0.75)
+        );
+        assert_eq!(versions[0].get("zero_shot_auc"), Some(&Value::Null));
+        let train = back.get("train").unwrap();
+        assert_eq!(train.get("samples").unwrap().as_u64(), Some(100));
+        assert_eq!(train.get("throughput").unwrap().as_f64(), Some(50.0));
+        assert_eq!(
+            train.get("phase_time").unwrap().get(PHASE_IO).unwrap().as_f64(),
+            Some(0.5)
+        );
+        let summary = back.get("summary").unwrap();
+        assert_eq!(summary.get("published_bytes").unwrap().as_u64(), Some(612));
     }
 
     #[test]

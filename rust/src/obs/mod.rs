@@ -1,0 +1,778 @@
+//! Observability: virtual-clock span tracing, per-worker straggler
+//! attribution, and exportable traces/metrics.
+//!
+//! Every layer that charges virtual time can emit **spans** — `(name,
+//! track, start_vsecs, dur_vsecs, attrs)` — into a shared [`Tracer`]:
+//!
+//! * both trainers ([`crate::coordinator::GMetaTrainer`] /
+//!   [`crate::ps::PsTrainer`]) record **each worker's** per-iteration
+//!   phase seconds on that worker's track — not just the barrier max —
+//!   so stragglers are visible as the long bar in an iteration, and the
+//!   wait the barrier charges them shows up as the gap before the next
+//!   phase;
+//! * [`crate::stream::OnlineSession`] records the window lifecycle
+//!   (`preprocess` / `delta_ingest` / `restore` / `publish` / `gc` /
+//!   `cold_eval`) plus the elastic reshard / detect / redo detours on a
+//!   session track, and marks version publishes and injected failures
+//!   as instant events.
+//!
+//! Span names reuse the `crate::metrics::PHASE_*` constants, which makes
+//! the trace the metrics' *ground truth* rather than a second
+//! bookkeeping path: [`Tracer::fold_phase_time`] reproduces
+//! [`crate::metrics::RunMetrics::phase_time`] **bit-exactly** by
+//! replaying the same float operations in the same order (max over
+//! workers per iteration, summed over iterations in order, then over
+//! runs in order).  The fold invariant is pinned by `tests/obs.rs`.
+//!
+//! Exports: Chrome trace-event JSON ([`Tracer::to_chrome_trace`],
+//! loadable at <https://ui.perfetto.dev>), a JSONL event log
+//! ([`Tracer::to_jsonl`]), and a [`MetricsSnapshot`] with counters,
+//! gauges, and fixed-bucket histograms (publish latency, delivery
+//! latency, per-phase per-worker seconds).
+//!
+//! Wiring: [`TracingObserver`] implements [`crate::job::Observer`] and
+//! forwards the session-side span hooks into the tracer;
+//! [`crate::job::TrainJobBuilder::tracer`] threads the same tracer into
+//! the trainer, which emits worker-track spans directly.  Everything is
+//! `Option`-gated — a job without a tracer records nothing, and the
+//! virtual clock advances identically either way.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::job::Observer;
+use crate::metrics::nearest_rank;
+use crate::util::json::{self, num, obj, Value};
+
+/// Which timeline a span lives on: the session's delivery legs, or one
+/// worker's per-iteration phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// The delivery-loop track (ingest/publish/reshard/… legs).
+    Session,
+    /// One worker rank's track (per-iteration phase seconds).
+    Worker(usize),
+}
+
+impl Track {
+    /// Stable Chrome-trace thread id: session = 0, worker r = r + 1.
+    pub fn tid(self) -> usize {
+        match self {
+            Track::Session => 0,
+            Track::Worker(r) => r + 1,
+        }
+    }
+
+    /// Human-readable track label (the Perfetto thread name).
+    pub fn label(self) -> String {
+        match self {
+            Track::Session => "session".to_string(),
+            Track::Worker(r) => format!("worker {r}"),
+        }
+    }
+}
+
+/// One timed interval on the virtual clock.
+///
+/// The duration is stored explicitly (not derived from an end stamp):
+/// `(start + dur) - start` is not `dur` in floats, and the fold
+/// invariant needs the exact charged duration bits.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Phase name — one of the `crate::metrics::PHASE_*` constants.
+    pub name: String,
+    pub track: Track,
+    /// Virtual-clock start, seconds.
+    pub start_vsecs: f64,
+    /// Charged virtual duration, seconds (the exact value the emitter
+    /// charged to its clock / `add_phase`).
+    pub dur_vsecs: f64,
+    /// Numeric annotations (`run`, `iter`, `bytes`, …), in insert order.
+    pub attrs: Vec<(String, f64)>,
+}
+
+impl Span {
+    /// Virtual-clock end, seconds (display only — derived).
+    pub fn end_vsecs(&self) -> f64 {
+        self.start_vsecs + self.dur_vsecs
+    }
+
+    /// Look up a numeric annotation by key.
+    pub fn attr(&self, key: &str) -> Option<f64> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+/// A point event on the virtual clock (a version publish, a failure).
+#[derive(Debug, Clone)]
+pub struct TraceInstant {
+    pub name: String,
+    pub ts_vsecs: f64,
+    pub attrs: Vec<(String, f64)>,
+}
+
+impl TraceInstant {
+    /// Look up a numeric annotation by key.
+    pub fn attr(&self, key: &str) -> Option<f64> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+#[derive(Debug, Default)]
+struct TracerInner {
+    spans: Vec<Span>,
+    instants: Vec<TraceInstant>,
+    /// Session-clock offset applied to trainer-local span times: trainers
+    /// run their [`crate::sim::WorkerClocks`] from 0 each run, while the
+    /// session clock keeps flowing.  The driver sets this to its clock
+    /// before each run ([`Tracer::set_base`]).
+    base: f64,
+    /// Completed-or-started trainer runs (monotone run ids).
+    runs: u64,
+}
+
+/// A shareable recorder of virtual-clock spans and instants.  Clones
+/// share state (like [`crate::job::PhaseLog`]), so the driver keeps a
+/// handle while the trainer and observer own their copies.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    inner: Rc<RefCell<TracerInner>>,
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current session-clock offset for trainer-local span times.
+    pub fn base(&self) -> f64 {
+        self.inner.borrow().base
+    }
+
+    /// Pin the offset to an absolute session-clock time (what
+    /// [`crate::stream::OnlineSession`] does before each window's run).
+    pub fn set_base(&self, base: f64) {
+        self.inner.borrow_mut().base = base;
+    }
+
+    /// Slide the offset forward by a completed run's virtual time (what
+    /// [`crate::job::TrainJob::run_episodes`] does, so back-to-back runs
+    /// don't overlap on the worker tracks).
+    pub fn advance_base(&self, dt: f64) {
+        self.inner.borrow_mut().base += dt;
+    }
+
+    /// Allocate the next run id (trainers call this once per `run`; the
+    /// id lands on every worker span as the `run` attr, which is what
+    /// keeps the per-phase fold grouped exactly like
+    /// [`crate::metrics::RunMetrics::merge`] accumulation).
+    pub fn begin_run(&self) -> u64 {
+        let mut inner = self.inner.borrow_mut();
+        let id = inner.runs;
+        inner.runs += 1;
+        id
+    }
+
+    /// Trainer runs started so far.
+    pub fn runs(&self) -> u64 {
+        self.inner.borrow().runs
+    }
+
+    /// Record one span.
+    pub fn span(
+        &self,
+        name: &str,
+        track: Track,
+        start_vsecs: f64,
+        dur_vsecs: f64,
+        attrs: &[(&str, f64)],
+    ) {
+        self.inner.borrow_mut().spans.push(Span {
+            name: name.to_string(),
+            track,
+            start_vsecs,
+            dur_vsecs,
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Record one instant event.
+    pub fn instant(&self, name: &str, ts_vsecs: f64, attrs: &[(&str, f64)]) {
+        self.inner.borrow_mut().instants.push(TraceInstant {
+            name: name.to_string(),
+            ts_vsecs,
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Every span recorded so far, in record order.
+    pub fn spans(&self) -> Vec<Span> {
+        self.inner.borrow().spans.clone()
+    }
+
+    /// Every instant recorded so far, in record order.
+    pub fn instants(&self) -> Vec<TraceInstant> {
+        self.inner.borrow().instants.clone()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        let inner = self.inner.borrow();
+        inner.spans.is_empty() && inner.instants.is_empty()
+    }
+
+    /// Fold the trace back into per-phase totals, reproducing
+    /// [`crate::metrics::RunMetrics::phase_time`] **bit-exactly**.
+    ///
+    /// Worker-track spans replay the trainers' own accumulation: within
+    /// one `(run, iteration)`, a phase's critical path is the max over
+    /// worker durations (folded from 0.0, exact for non-negative
+    /// values); per run, iterations sum in order (the trainers'
+    /// `add_phase` `+=` order); across runs, subtotals sum in run order
+    /// (the drivers' `merge` order).  Session-track spans sum per name
+    /// in record order — exactly the session's `add_phase` call order.
+    /// Trainer and session phase names are disjoint, so the two
+    /// accumulations never interleave on one key.
+    pub fn fold_phase_time(&self) -> BTreeMap<String, f64> {
+        let inner = self.inner.borrow();
+        // run -> phase -> iter -> max-over-workers duration.
+        let mut runs: BTreeMap<u64, BTreeMap<String, BTreeMap<u64, f64>>> = BTreeMap::new();
+        let mut session: Vec<(&str, f64)> = Vec::new();
+        for sp in &inner.spans {
+            match sp.track {
+                Track::Worker(_) => {
+                    let run = sp.attr("run").unwrap_or(0.0) as u64;
+                    let iter = sp.attr("iter").unwrap_or(0.0) as u64;
+                    let slot = runs
+                        .entry(run)
+                        .or_default()
+                        .entry(sp.name.clone())
+                        .or_default()
+                        .entry(iter)
+                        .or_insert(0.0);
+                    *slot = slot.max(sp.dur_vsecs);
+                }
+                Track::Session => session.push((sp.name.as_str(), sp.dur_vsecs)),
+            }
+        }
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for phases in runs.into_values() {
+            for (phase, iters) in phases {
+                let mut subtotal = 0.0f64;
+                for v in iters.into_values() {
+                    subtotal += v;
+                }
+                *out.entry(phase).or_insert(0.0) += subtotal;
+            }
+        }
+        for (name, dur) in session {
+            *out.entry(name.to_string()).or_insert(0.0) += dur;
+        }
+        out
+    }
+
+    /// Export as Chrome trace-event JSON (the `traceEvents` format),
+    /// loadable at <https://ui.perfetto.dev> or `chrome://tracing`.
+    ///
+    /// Layout: one process (`pid` 1) with one thread per track —
+    /// `tid` 0 is the session track, `tid` r+1 is worker r — named via
+    /// `thread_name` metadata events.  Spans become `ph:"X"` complete
+    /// events, instants become process-scoped `ph:"i"` events;
+    /// timestamps are virtual seconds scaled to microseconds.
+    pub fn to_chrome_trace(&self) -> String {
+        let inner = self.inner.borrow();
+        let mut tracks: Vec<Track> = inner.spans.iter().map(|s| s.track).collect();
+        tracks.push(Track::Session);
+        tracks.sort();
+        tracks.dedup();
+
+        let mut events: Vec<Value> = Vec::new();
+        events.push(obj(vec![
+            ("name", json::s("process_name")),
+            ("ph", json::s("M")),
+            ("ts", num(0.0)),
+            ("pid", num(1.0)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", json::s("gmeta virtual cluster"))])),
+        ]));
+        for track in &tracks {
+            events.push(obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("ts", num(0.0)),
+                ("pid", num(1.0)),
+                ("tid", num(track.tid() as f64)),
+                ("args", obj(vec![("name", json::s(&track.label()))])),
+            ]));
+        }
+        for sp in &inner.spans {
+            let args = Value::Obj(
+                sp.attrs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), num(*v)))
+                    .collect(),
+            );
+            events.push(obj(vec![
+                ("name", json::s(&sp.name)),
+                ("cat", json::s("vclock")),
+                ("ph", json::s("X")),
+                ("ts", num(sp.start_vsecs * 1e6)),
+                ("dur", num(sp.dur_vsecs * 1e6)),
+                ("pid", num(1.0)),
+                ("tid", num(sp.track.tid() as f64)),
+                ("args", args),
+            ]));
+        }
+        for inst in &inner.instants {
+            let args = Value::Obj(
+                inst.attrs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), num(*v)))
+                    .collect(),
+            );
+            events.push(obj(vec![
+                ("name", json::s(&inst.name)),
+                ("cat", json::s("vclock")),
+                ("ph", json::s("i")),
+                ("s", json::s("p")),
+                ("ts", num(inst.ts_vsecs * 1e6)),
+                ("pid", num(1.0)),
+                ("tid", num(0.0)),
+                ("args", args),
+            ]));
+        }
+        json::write(&obj(vec![
+            ("traceEvents", Value::Arr(events)),
+            ("displayTimeUnit", json::s("ms")),
+        ]))
+    }
+
+    /// Export as a JSONL event log: one JSON object per line, spans in
+    /// record order followed by instants in record order.
+    pub fn to_jsonl(&self) -> String {
+        let inner = self.inner.borrow();
+        let mut out = String::new();
+        for sp in &inner.spans {
+            let attrs = Value::Obj(
+                sp.attrs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), num(*v)))
+                    .collect(),
+            );
+            out.push_str(&json::write(&obj(vec![
+                ("type", json::s("span")),
+                ("name", json::s(&sp.name)),
+                ("track", json::s(&sp.track.label())),
+                ("start_vsecs", num(sp.start_vsecs)),
+                ("dur_vsecs", num(sp.dur_vsecs)),
+                ("attrs", attrs),
+            ])));
+            out.push('\n');
+        }
+        for inst in &inner.instants {
+            let attrs = Value::Obj(
+                inst.attrs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), num(*v)))
+                    .collect(),
+            );
+            out.push_str(&json::write(&obj(vec![
+                ("type", json::s("instant")),
+                ("name", json::s(&inst.name)),
+                ("ts_vsecs", num(inst.ts_vsecs)),
+                ("attrs", attrs),
+            ])));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Aggregate the trace into a [`MetricsSnapshot`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot::from_tracer(self)
+    }
+}
+
+/// An [`Observer`] that forwards the session-side span hooks into a
+/// [`Tracer`] (session track).  The per-run `on_phase` totals are
+/// intentionally *not* recorded — the worker-track spans the trainer
+/// emits already carry them at per-worker granularity, and recording
+/// both would double-count in the fold.
+///
+/// [`crate::job::TrainJobBuilder::tracer`] installs one automatically
+/// when no explicit observer is set:
+///
+/// ```
+/// use gmeta::data::movielens_like;
+/// use gmeta::job::TrainJob;
+/// use gmeta::obs::Tracer;
+///
+/// let tracer = Tracer::new();
+/// let mut job = TrainJob::builder()
+///     .gmeta(1, 2)
+///     .dims(gmeta::config::ModelDims {
+///         batch: 8, slots: 4, valency: 2, emb_dim: 8, ..Default::default()
+///     })
+///     .dataset(movielens_like())
+///     .tracer(tracer.clone())
+///     .build()?;
+/// let m = job.run(2)?;
+/// // The trace's per-phase fold reproduces phase_time bit-exactly…
+/// assert_eq!(tracer.fold_phase_time(), m.phase_time);
+/// // …and exports as a Perfetto-loadable Chrome trace.
+/// assert!(tracer.to_chrome_trace().contains("traceEvents"));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct TracingObserver {
+    tracer: Tracer,
+}
+
+impl TracingObserver {
+    pub fn new(tracer: Tracer) -> Self {
+        Self { tracer }
+    }
+
+    /// The shared tracer this observer writes into.
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
+    }
+}
+
+impl Observer for TracingObserver {
+    fn on_span(&mut self, name: &str, start_vsecs: f64, dur_vsecs: f64, attrs: &[(&str, f64)]) {
+        self.tracer
+            .span(name, Track::Session, start_vsecs, dur_vsecs, attrs);
+    }
+
+    fn on_instant(&mut self, name: &str, ts_vsecs: f64, attrs: &[(&str, f64)]) {
+        self.tracer.instant(name, ts_vsecs, attrs);
+    }
+}
+
+/// A fixed-bucket histogram with retained samples for exact quantiles.
+///
+/// Buckets are upper-bound edges plus one overflow bucket; quantiles
+/// use the shared nearest-rank rule
+/// ([`crate::metrics::nearest_rank`]) over the retained samples rather
+/// than bucket interpolation.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    /// Bucket upper bounds, ascending; values above the last bound land
+    /// in the overflow bucket.
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts (`bounds.len() + 1` entries; last = overflow).
+    pub counts: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    /// Log-spaced bounds from `lo` to `hi` over `buckets` edges.
+    pub fn log_spaced(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && buckets >= 2);
+        let ratio = (hi / lo).powf(1.0 / (buckets - 1) as f64);
+        let mut bounds = Vec::with_capacity(buckets);
+        let mut b = lo;
+        for _ in 0..buckets {
+            bounds.push(b);
+            b *= ratio;
+        }
+        let counts = vec![0; buckets + 1];
+        Self {
+            bounds,
+            counts,
+            samples: Vec::new(),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i] += 1;
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Nearest-rank quantile over the retained samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        nearest_rank(&s, q)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "bounds",
+                Value::Arr(self.bounds.iter().map(|b| num(*b)).collect()),
+            ),
+            (
+                "counts",
+                Value::Arr(self.counts.iter().map(|c| num(*c as f64)).collect()),
+            ),
+            ("count", num(self.count() as f64)),
+            ("sum", num(self.sum())),
+            ("max", num(self.max())),
+            ("p50", num(self.quantile(0.5))),
+            ("p90", num(self.quantile(0.9))),
+            ("p99", num(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// Counters, gauges, and fixed-bucket histograms aggregated from a
+/// [`Tracer`] — the machine-readable summary `--metrics-out` dumps.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsSnapshot {
+    /// Aggregate a trace: span/instant/run counters, the trace horizon,
+    /// a publish-leg histogram, a delivery-latency histogram (from the
+    /// `version` instants' `latency` attr), and one per-phase histogram
+    /// of per-worker seconds.
+    pub fn from_tracer(tracer: &Tracer) -> Self {
+        let spans = tracer.spans();
+        let instants = tracer.instants();
+        let mut counters = BTreeMap::new();
+        counters.insert("spans_total".to_string(), spans.len() as u64);
+        counters.insert("instants_total".to_string(), instants.len() as u64);
+        counters.insert("runs_total".to_string(), tracer.runs());
+        counters.insert(
+            "versions_published".to_string(),
+            instants.iter().filter(|i| i.name == "version").count() as u64,
+        );
+        counters.insert(
+            "failures".to_string(),
+            instants.iter().filter(|i| i.name == "failure").count() as u64,
+        );
+
+        let mut end = 0.0f64;
+        let mut workers = 0usize;
+        for sp in &spans {
+            end = end.max(sp.end_vsecs());
+            if let Track::Worker(r) = sp.track {
+                workers = workers.max(r + 1);
+            }
+        }
+        for inst in &instants {
+            end = end.max(inst.ts_vsecs);
+        }
+        let mut gauges = BTreeMap::new();
+        gauges.insert("trace_end_vsecs".to_string(), end);
+        gauges.insert("worker_tracks".to_string(), workers as f64);
+
+        let mut histograms: BTreeMap<String, Histogram> = BTreeMap::new();
+        let mut publish = Histogram::log_spaced(1e-4, 1e4, 17);
+        let mut latency = Histogram::log_spaced(1e-3, 1e5, 17);
+        for sp in &spans {
+            match sp.track {
+                Track::Session => {
+                    if sp.name == crate::metrics::PHASE_PUBLISH {
+                        publish.record(sp.dur_vsecs);
+                    }
+                }
+                Track::Worker(_) => {
+                    histograms
+                        .entry(format!("phase_secs/{}", sp.name))
+                        .or_insert_with(|| Histogram::log_spaced(1e-6, 1e3, 19))
+                        .record(sp.dur_vsecs);
+                }
+            }
+        }
+        for inst in &instants {
+            if inst.name == "version" {
+                if let Some(l) = inst.attr("latency") {
+                    latency.record(l);
+                }
+            }
+        }
+        histograms.insert("publish_secs".to_string(), publish);
+        histograms.insert("delivery_latency_secs".to_string(), latency);
+
+        Self {
+            counters,
+            gauges,
+            histograms,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "counters",
+                Value::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Value::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Value::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{RunMetrics, PHASE_COMPUTE, PHASE_IO, PHASE_PUBLISH};
+
+    /// Replay two "runs" of two iterations over two workers plus a
+    /// session publish leg, and check the fold matches hand-maintained
+    /// RunMetrics accumulation bit-for-bit.
+    #[test]
+    fn fold_replays_max_then_sum() {
+        let tracer = Tracer::new();
+        let mut want = RunMetrics::default();
+        let durs = [[0.3, 0.7], [0.5, 0.2]]; // [iter][rank]
+        for run in 0..2u64 {
+            let run_id = tracer.begin_run();
+            assert_eq!(run_id, run);
+            let mut m = RunMetrics::default();
+            for (it, ranks) in durs.iter().enumerate() {
+                let mut io_max = 0.0f64;
+                for (rank, &d) in ranks.iter().enumerate() {
+                    tracer.span(
+                        PHASE_IO,
+                        Track::Worker(rank),
+                        it as f64,
+                        d,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                    io_max = io_max.max(d);
+                }
+                m.add_phase(PHASE_IO, io_max);
+            }
+            want.merge(&m);
+        }
+        tracer.span(PHASE_PUBLISH, Track::Session, 5.0, 0.125, &[]);
+        want.add_phase(PHASE_PUBLISH, 0.125);
+        let folded = tracer.fold_phase_time();
+        assert_eq!(folded, want.phase_time);
+        assert_eq!(folded[PHASE_IO].to_bits(), (0.7f64 + 0.5 + 0.7 + 0.5).to_bits());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_has_required_fields() {
+        let tracer = Tracer::new();
+        tracer.span(PHASE_COMPUTE, Track::Worker(0), 0.0, 1.0, &[("iter", 0.0)]);
+        tracer.span(PHASE_PUBLISH, Track::Session, 1.0, 0.5, &[]);
+        tracer.instant("version", 1.5, &[("version", 0.0)]);
+        let text = tracer.to_chrome_trace();
+        let doc = crate::util::json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // process_name + 2 thread_names + 2 spans + 1 instant.
+        assert_eq!(events.len(), 6);
+        for ev in events {
+            assert!(ev.get("ph").is_some(), "missing ph: {ev:?}");
+            assert!(ev.get("ts").is_some(), "missing ts: {ev:?}");
+            assert!(ev.get("pid").is_some(), "missing pid: {ev:?}");
+        }
+        // The compute span scales seconds to microseconds.
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .unwrap();
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn jsonl_has_one_valid_object_per_line() {
+        let tracer = Tracer::new();
+        tracer.span(PHASE_IO, Track::Worker(1), 0.0, 0.25, &[("run", 0.0)]);
+        tracer.instant("failure", 3.0, &[("window", 1.0)]);
+        let text = tracer.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let span = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(span.get("type").unwrap().as_str(), Some("span"));
+        assert_eq!(span.get("track").unwrap().as_str(), Some("worker 1"));
+        let inst = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(inst.get("type").unwrap().as_str(), Some("instant"));
+        assert_eq!(inst.get("ts_vsecs").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::log_spaced(1e-3, 1e3, 13);
+        assert_eq!(h.bounds.len(), 13);
+        assert_eq!(h.counts.len(), 14);
+        for v in [0.5, 1.0, 2.0, 1e9] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        // 1e9 exceeds the last bound: overflow bucket.
+        assert_eq!(*h.counts.last().unwrap(), 1);
+        assert_eq!(h.quantile(0.5), 1.0);
+        assert_eq!(h.quantile(1.0), 1e9);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn snapshot_counts_versions_and_failures() {
+        let tracer = Tracer::new();
+        tracer.begin_run();
+        tracer.span(PHASE_COMPUTE, Track::Worker(2), 0.0, 1.0, &[]);
+        tracer.span(PHASE_PUBLISH, Track::Session, 1.0, 0.5, &[]);
+        tracer.instant("version", 1.5, &[("latency", 2.5)]);
+        tracer.instant("version", 3.0, &[("latency", 1.5)]);
+        tracer.instant("failure", 2.0, &[]);
+        let snap = tracer.snapshot();
+        assert_eq!(snap.counters["versions_published"], 2);
+        assert_eq!(snap.counters["failures"], 1);
+        assert_eq!(snap.counters["runs_total"], 1);
+        assert_eq!(snap.gauges["worker_tracks"], 3.0);
+        assert_eq!(snap.gauges["trace_end_vsecs"], 3.0);
+        assert_eq!(snap.histograms["publish_secs"].count(), 1);
+        assert_eq!(snap.histograms["delivery_latency_secs"].count(), 2);
+        assert_eq!(snap.histograms["phase_secs/compute"].count(), 1);
+        // Round-trips through the JSON writer.
+        let text = crate::util::json::write(&snap.to_json());
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn base_management_offsets_runs() {
+        let tracer = Tracer::new();
+        assert_eq!(tracer.base(), 0.0);
+        tracer.set_base(10.0);
+        assert_eq!(tracer.base(), 10.0);
+        tracer.advance_base(2.5);
+        assert_eq!(tracer.base(), 12.5);
+        assert!(tracer.is_empty());
+    }
+}

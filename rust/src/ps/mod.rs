@@ -30,6 +30,7 @@ use crate::metrics::{
     RunMetrics, PHASE_COMPUTE, PHASE_IO, PHASE_PS_PULL, PHASE_PS_PUSH,
 };
 use crate::net::LinkClass;
+use crate::obs::{Tracer, Track};
 use crate::sim::{DeviceModel, ReadPattern, StorageModel, WorkerClocks};
 use crate::Result;
 
@@ -94,6 +95,10 @@ pub struct PsTrainer {
     pub mean_staleness: f64,
     /// Metrics accumulated across every [`Self::run`] call.
     pub metrics: RunMetrics,
+    /// Optional span recorder ([`crate::obs`]); sync mode only — the
+    /// async arm has no barrier-aligned phases to record.  Purely
+    /// observational: virtual time is identical with it on or off.
+    pub tracer: Option<Tracer>,
 }
 
 impl PsTrainer {
@@ -111,6 +116,7 @@ impl PsTrainer {
             mode: PsMode::Sync,
             mean_staleness: 0.0,
             metrics: RunMetrics::default(),
+            tracer: None,
             cfg,
         }
     }
@@ -198,6 +204,11 @@ impl PsTrainer {
         let mut clocks = WorkerClocks::new(w);
         let mut m = RunMetrics::default();
         let dense_bytes = (self.dense.len() * 4) as f64;
+        // Span recording (see coordinator::run): durations are the exact
+        // charged values, offset by the tracer's session-clock base.
+        let tracer = self.tracer.clone();
+        let base = tracer.as_ref().map(|t| t.base()).unwrap_or(0.0);
+        let run = tracer.as_ref().map(|t| t.begin_run()).unwrap_or(0);
 
         for it in 0..steps {
             // --- Phase 1: Meta-IO (same optimized pipeline as G-Meta). ---
@@ -216,6 +227,15 @@ impl PsTrainer {
                     },
                     self.cfg.io.binary_format,
                 ) * jitter(self.cfg.train.seed, rank, it, self.cfg.cluster.io_jitter);
+                if let Some(tr) = &tracer {
+                    tr.span(
+                        PHASE_IO,
+                        Track::Worker(rank),
+                        base + clocks.now(rank),
+                        t,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
                 clocks.charge(rank, t);
                 io_max = io_max.max(t);
             }
@@ -236,9 +256,21 @@ impl PsTrainer {
                 plans.push((plan_sup, plan_qry));
             }
             let t_pull = self.incast_time(&pull_bytes);
+            let t_sync = clocks.max_now();
             let sync = clocks.barrier(t_pull); // pulls start after slowest IO
             let _ = sync;
             m.add_phase(PHASE_PS_PULL, t_pull);
+            if let Some(tr) = &tracer {
+                for rank in 0..w {
+                    tr.span(
+                        PHASE_PS_PULL,
+                        Track::Worker(rank),
+                        base + t_sync,
+                        t_pull,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
+            }
 
             // Actually serve the rows so the table materializes/updates
             // like the real system would.
@@ -260,6 +292,15 @@ impl PsTrainer {
                     + self.device.mem_time(gathered)
                     + self.device.lookup_time(lookups))
                     * jitter(self.cfg.train.seed ^ 0xC0FFEE, rank, it, self.cfg.cluster.compute_jitter);
+                if let Some(tr) = &tracer {
+                    tr.span(
+                        PHASE_COMPUTE,
+                        Track::Worker(rank),
+                        base + clocks.now(rank),
+                        t,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
                 clocks.charge(rank, t);
                 comp_max = comp_max.max(t);
             }
@@ -274,8 +315,20 @@ impl PsTrainer {
                 })
                 .collect();
             let t_push = self.incast_time(&push_bytes);
+            let t_sync = clocks.max_now();
             clocks.barrier(t_push);
             m.add_phase(PHASE_PS_PUSH, t_push);
+            if let Some(tr) = &tracer {
+                for rank in 0..w {
+                    tr.span(
+                        PHASE_PS_PUSH,
+                        Track::Worker(rank),
+                        base + t_sync,
+                        t_push,
+                        &[("run", run as f64), ("iter", it as f64)],
+                    );
+                }
+            }
             m.inter_bytes += pull_bytes.iter().sum::<f64>() + push_bytes.iter().sum::<f64>();
 
             // Server-side update: apply zero-valued grads through the real

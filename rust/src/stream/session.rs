@@ -64,6 +64,7 @@ use crate::metrics::{
     DeliveryMetrics, RunMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_DETECT, PHASE_GC,
     PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_RESHARD, PHASE_RESTORE,
 };
+use crate::obs::{Tracer, TracingObserver};
 use crate::sim::{Clock, ReadPattern, StorageModel, TailModel};
 use crate::stream::delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig};
 use crate::stream::elastic::{
@@ -170,6 +171,11 @@ pub struct OnlineSession<'rt> {
     pending_reshard_bytes: u64,
     feed: DeltaFeed,
     storage: StorageModel,
+    /// Shared span tracer (when the job carries one): the session pins
+    /// its base to the delivery clock before each run and re-attaches it
+    /// to trainers rebuilt by rescale / failure recovery.  Session-leg
+    /// spans reach it through the observer's span hooks.
+    tracer: Option<Tracer>,
     online: OnlineConfig,
     work_dir: PathBuf,
     /// Tasks the model has trained on so far (cold-start detection).
@@ -255,6 +261,7 @@ impl<'rt> OnlineSession<'rt> {
             });
         }
         let job_spec = job.spec().clone();
+        let tracer = job.tracer();
         let (trainer, observer) = job.into_parts();
         Ok(Self {
             trainer,
@@ -271,6 +278,7 @@ impl<'rt> OnlineSession<'rt> {
             pending_reshard_bytes: 0,
             feed: DeltaFeed::new(spec, online.feed),
             storage,
+            tracer,
             online,
             work_dir: work_dir.to_path_buf(),
             seen_tasks: BTreeSet::new(),
@@ -296,6 +304,44 @@ impl<'rt> OnlineSession<'rt> {
         }
         self.policy = Some(policy);
         Ok(self)
+    }
+
+    /// Attach a span tracer after construction (the builder-side
+    /// [`crate::job::TrainJobBuilder::tracer`] is the usual route; this
+    /// covers sessions built from jobs that didn't carry one).  Installs
+    /// a [`TracingObserver`] when no observer is set, so session-leg
+    /// spans land in the same trace as the trainer's.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.trainer.set_tracer(Some(tracer.clone()));
+        if self.observer.is_none() {
+            self.observer = Some(Box::new(TracingObserver::new(tracer.clone())));
+        }
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// The attached span tracer, if any (clones share state).
+    pub fn tracer(&self) -> Option<Tracer> {
+        self.tracer.clone()
+    }
+
+    /// Forward one delivery-leg span to the observer's span hook.  Must
+    /// be called right next to the matching `add_phase` with the *same*
+    /// duration expression: the trace fold sums session spans per name
+    /// in record order, which is what makes it reproduce `phase_time`
+    /// bit-exactly.
+    fn emit_span(&mut self, name: &str, start_vsecs: f64, dur_vsecs: f64, attrs: &[(&str, f64)]) {
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_span(name, start_vsecs, dur_vsecs, attrs);
+        }
+    }
+
+    /// Forward one point event (version publish, failure, reshard) to
+    /// the observer's instant hook.
+    fn emit_instant(&mut self, name: &str, ts_vsecs: f64, attrs: &[(&str, f64)]) {
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_instant(name, ts_vsecs, attrs);
+        }
     }
 
     /// World size of the cluster currently training the stream.
@@ -407,10 +453,33 @@ impl<'rt> OnlineSession<'rt> {
         };
         let mut fresh = new_spec.build_trainer()?;
         fresh.restore_from(&ckpt)?;
+        // Rebuilt trainers keep recording into the same shared trace.
+        fresh.set_tracer(self.tracer.clone());
         self.trainer = fresh;
         self.spec = new_spec;
+        let t0 = self.clock.now();
         self.clock.advance(t);
         self.delivery.train.add_phase(PHASE_RESHARD, t);
+        self.emit_span(
+            PHASE_RESHARD,
+            t0,
+            t,
+            &[
+                ("from_world", from_world as f64),
+                ("to_world", world as f64),
+                ("bytes", bytes_moved as f64),
+                ("partial", if partial { 1.0 } else { 0.0 }),
+            ],
+        );
+        self.emit_instant(
+            "reshard",
+            t0,
+            &[
+                ("from_world", from_world as f64),
+                ("to_world", world as f64),
+                ("bytes", bytes_moved as f64),
+            ],
+        );
         self.pending_reshard_secs += t;
         self.pending_reshard_bytes += bytes_moved;
         self.events.push(ElasticEvent {
@@ -451,9 +520,12 @@ impl<'rt> OnlineSession<'rt> {
         );
         let mut fresh = self.spec.build_trainer()?;
         fresh.restore_from(&ckpt)?;
+        fresh.set_tracer(self.tracer.clone());
         self.trainer = fresh;
+        let t0 = self.clock.now();
         self.clock.advance(t_restore);
         self.delivery.train.add_phase(PHASE_RESTORE, t_restore);
+        self.emit_span(PHASE_RESTORE, t0, t_restore, &[("version", latest as f64)]);
         Ok(t_restore)
     }
 
@@ -499,6 +571,11 @@ impl<'rt> OnlineSession<'rt> {
         if let Some(obs) = self.observer.as_mut() {
             obs.on_run_start(steps);
         }
+        // Trainer-local clocks start at 0 each run; pin the trace base to
+        // the delivery clock so worker spans land at session time.
+        if let Some(t) = &self.tracer {
+            t.set_base(self.clock.now());
+        }
         let m = self.trainer.run_steps(episodes, steps)?;
         if let Some(obs) = self.observer.as_mut() {
             for (phase, secs) in &m.phase_time {
@@ -532,12 +609,35 @@ impl<'rt> OnlineSession<'rt> {
         // checkpoint's own world is the server shard count).
         rec.world = self.trainer.cfg().cluster.world_size();
         let gc_secs = self.publisher.last_gc_secs;
-        self.delivery
-            .train
-            .add_phase(PHASE_PUBLISH, self.clock.now() - t0 - gc_secs);
+        // One duration expression, used for both add_phase and the span —
+        // the fold invariant needs the identical bits.
+        let pub_secs = self.clock.now() - t0 - gc_secs;
+        self.delivery.train.add_phase(PHASE_PUBLISH, pub_secs);
+        self.emit_span(
+            PHASE_PUBLISH,
+            t0,
+            pub_secs,
+            &[
+                ("version", rec.version as f64),
+                ("bytes", rec.bytes as f64),
+                ("rows", rec.rows as f64),
+            ],
+        );
         if gc_secs > 0.0 {
             self.delivery.train.add_phase(PHASE_GC, gc_secs);
+            self.emit_span(PHASE_GC, t0 + pub_secs, gc_secs, &[("version", rec.version as f64)]);
         }
+        let ts = self.clock.now();
+        self.emit_instant(
+            "version",
+            ts,
+            &[
+                ("version", rec.version as f64),
+                ("latency", rec.latency()),
+                ("publish_secs", rec.publish_secs),
+                ("bytes", rec.bytes as f64),
+            ],
+        );
         Ok(rec)
     }
 
@@ -546,8 +646,10 @@ impl<'rt> OnlineSession<'rt> {
         // corpus is generated in place, so no read leg is charged).
         let bytes = fs::metadata(&self.ds.data_path)?.len() as f64;
         let t = self.storage.write_time(bytes, self.ds.codec_binary);
+        let t0 = self.clock.now();
         self.clock.advance(t);
         self.delivery.train.add_phase(PHASE_PREPROCESS, t);
+        self.emit_span(PHASE_PREPROCESS, t0, t, &[("bytes", bytes)]);
 
         // Each worker loads its slice of the preprocessed set — the real
         // Meta-IO read path, task purity enforced by GroupBatchOp.
@@ -618,10 +720,17 @@ impl<'rt> OnlineSession<'rt> {
                     &self.storage,
                     Some(self.online.seed ^ delta.seq as u64),
                 )?;
+                let t0 = self.clock.now();
                 self.clock.advance(ing.virtual_secs);
                 self.delivery
                     .train
                     .add_phase(PHASE_DELTA_INGEST, ing.virtual_secs);
+                self.emit_span(
+                    PHASE_DELTA_INGEST,
+                    t0,
+                    ing.virtual_secs,
+                    &[("window", delta.seq as f64)],
+                );
                 ing.batches
             }
             PublishMode::FullRepublish => {
@@ -646,8 +755,10 @@ impl<'rt> OnlineSession<'rt> {
                     true,
                 ) + self.storage.write_time(out_bytes, ds.codec_binary);
                 self.ds = ds;
+                let t0 = self.clock.now();
                 self.clock.advance(t);
                 self.delivery.train.add_phase(PHASE_DELTA_INGEST, t);
+                self.emit_span(PHASE_DELTA_INGEST, t0, t, &[("window", delta.seq as f64)]);
 
                 // …and boot a fresh training job from the last published
                 // snapshot (charged as a checkpoint read + restore).
@@ -663,8 +774,10 @@ impl<'rt> OnlineSession<'rt> {
                     );
                     let ckpt = self.publisher.store.load(latest)?;
                     self.trainer.restore_from(&ckpt)?;
+                    let t0 = self.clock.now();
                     self.clock.advance(t);
                     self.delivery.train.add_phase(PHASE_RESTORE, t);
+                    self.emit_span(PHASE_RESTORE, t0, t, &[("version", latest as f64)]);
                 }
                 task_batches(&delta.samples, self.ds.batch_size)?
             }
@@ -693,9 +806,14 @@ impl<'rt> OnlineSession<'rt> {
                 + self.trainer.device().mem_time(gathered)
                 + self.trainer.device().lookup_time(lookups);
             self.clock.advance(t);
-            self.delivery
-                .train
-                .add_phase(PHASE_COLD_EVAL, self.clock.now() - t0);
+            let dur = self.clock.now() - t0;
+            self.delivery.train.add_phase(PHASE_COLD_EVAL, dur);
+            self.emit_span(
+                PHASE_COLD_EVAL,
+                t0,
+                dur,
+                &[("window", delta.seq as f64), ("cold_tasks", cold.len() as f64)],
+            );
         }
 
         // --- Warm-start training on the fresh window, with the injected
@@ -713,10 +831,20 @@ impl<'rt> OnlineSession<'rt> {
         // recovery work starts ([`FailurePlan::detection_secs`]), as its
         // own phase so the delivery log can attribute it.
         let detect_secs = if failed {
+            let ts = self.clock.now();
+            self.emit_instant(
+                "failure",
+                ts,
+                &[
+                    ("window", delta.seq as f64),
+                    ("kill_fraction", self.online.failures.kill_fraction),
+                ],
+            );
             let t = self.online.failures.detection_secs.max(0.0);
             if t > 0.0 {
                 self.clock.advance(t);
                 self.delivery.train.add_phase(PHASE_DETECT, t);
+                self.emit_span(PHASE_DETECT, ts, t, &[("window", delta.seq as f64)]);
             }
             t
         } else {
@@ -727,8 +855,10 @@ impl<'rt> OnlineSession<'rt> {
         if failed {
             let frac = self.online.failures.kill_fraction.clamp(0.0, 1.0);
             let wasted = train.virtual_time * frac;
+            let t0 = self.clock.now();
             self.clock.advance(wasted);
             self.delivery.train.add_phase(PHASE_REDO, wasted);
+            self.emit_span(PHASE_REDO, t0, wasted, &[("window", delta.seq as f64)]);
             redo_secs += wasted;
         }
 

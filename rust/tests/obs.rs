@@ -1,0 +1,376 @@
+//! Trace-integrity properties for the observability layer (DESIGN: the
+//! trace is a *view* of the virtual clock, never an input to it).
+//!
+//! * Every span is well-formed: finite, `dur >= 0`, `end >= start`.
+//! * Worker tracks are monotone: a worker's spans never move backward
+//!   in virtual time, across iterations, runs, windows, rescales, and
+//!   failure redos.
+//! * The per-phase fold of a session's trace reproduces
+//!   `RunMetrics::phase_time` **bit-exactly** — per (run, iter, phase)
+//!   max over workers, summed in charge order — for both
+//!   architectures, with elastic rescaling and failure injection on.
+//! * Tracing is observation-only: a traced session publishes the same
+//!   versions at the same virtual timestamps as an untraced one.
+//! * The exports stay machine-readable for real sessions (every Chrome
+//!   event carries `ph`/`ts`/`pid`; JSONL is one object per line).
+
+use gmeta::config::{Architecture, ClusterSpec, ModelDims};
+use gmeta::data::movielens_like;
+use gmeta::job::TrainJob;
+use gmeta::obs::{Tracer, Track};
+use gmeta::stream::{
+    CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+};
+use gmeta::util::json::Value;
+use gmeta::util::{Rng, TempDir};
+
+/// Run `body(seed, rng)` for `n` seeded cases; assertion messages carry
+/// the seed so a failing case is replayable.
+fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(0x0B5E ^ seed);
+        body(seed, &mut rng);
+    }
+}
+
+fn tiny_job(arch: Architecture) -> TrainJob<'static> {
+    let dims = ModelDims {
+        batch: 8,
+        slots: 4,
+        valency: 2,
+        emb_dim: 8,
+        ..Default::default()
+    };
+    TrainJob::builder()
+        .architecture(arch)
+        .cluster(match arch {
+            Architecture::GMeta => ClusterSpec::gpu(1, 2),
+            Architecture::ParameterServer => ClusterSpec::cpu_ps(2, 1),
+        })
+        .dims(dims)
+        .dataset(movielens_like())
+        .build()
+        .unwrap()
+}
+
+/// A randomized tiny session config: publish mode, cold-start, cadence
+/// and seed all vary so the trace shapes differ per case.
+fn tiny_online(rng: &mut Rng) -> OnlineConfig {
+    let mode = if rng.gen_bool(0.5) {
+        PublishMode::DeltaRepublish
+    } else {
+        PublishMode::FullRepublish
+    };
+    OnlineConfig {
+        warmup_samples: 600,
+        warmup_steps: 2 + rng.gen_range(0, 2) as usize,
+        steps_per_window: 2,
+        mode,
+        compact: CompactPolicy::EveryN(2),
+        feed: DeltaFeedConfig {
+            n_deltas: 3,
+            samples_per_delta: 120,
+            interval: 300.0,
+            start_ts: 0.0,
+            cold_start_at: if rng.gen_bool(0.5) { Some(1) } else { None },
+            cold_fraction: 0.5,
+        },
+        seed: 1 + rng.gen_range(0, 1000),
+        ..OnlineConfig::default()
+    }
+}
+
+/// Build + run one traced session; returns the finished session and its
+/// tracer.  `elastic` schedules a 2→3 grow before window 1 (G-Meta
+/// only); `fail` kills a worker mid-window-1 with a detection gap.
+fn run_traced(
+    arch: Architecture,
+    online: OnlineConfig,
+    elastic: bool,
+    fail: bool,
+) -> (TempDir, OnlineSession<'static>, Tracer) {
+    let mut online = online;
+    if fail {
+        online.failures.kill_at_window = Some(1);
+        online.failures.detection_secs = 15.0;
+    }
+    let tracer = Tracer::new();
+    let tmp = TempDir::new().unwrap();
+    let mut s = OnlineSession::new(tiny_job(arch), online, tmp.path()).unwrap();
+    if elastic {
+        s = s
+            .with_policy(Box::new(ScheduledPolicy::new(vec![(0, 3)])))
+            .unwrap();
+    }
+    let mut s = s.with_tracer(tracer.clone());
+    s.run().unwrap();
+    (tmp, s, tracer)
+}
+
+#[test]
+fn prop_spans_are_well_formed_and_worker_tracks_monotone() {
+    cases(6, |seed, rng| {
+        let arch = if seed % 2 == 0 {
+            Architecture::GMeta
+        } else {
+            Architecture::ParameterServer
+        };
+        let online = tiny_online(rng);
+        let elastic = matches!(arch, Architecture::GMeta) && rng.gen_bool(0.5);
+        let fail = rng.gen_bool(0.5);
+        let (_tmp, _s, tracer) = run_traced(arch, online, elastic, fail);
+        let spans = tracer.spans();
+        assert!(!spans.is_empty(), "seed={seed}: traced session recorded no spans");
+
+        // Well-formedness, and monotone start times per worker track (a
+        // worker's virtual clock never runs backward — not across
+        // barriers, window boundaries, rescales, or failure redos).
+        let mut last_start: Vec<f64> = Vec::new();
+        for sp in &spans {
+            assert!(
+                sp.start_vsecs.is_finite() && sp.dur_vsecs.is_finite(),
+                "seed={seed}: non-finite span {sp:?}"
+            );
+            assert!(sp.start_vsecs >= 0.0, "seed={seed}: negative start {sp:?}");
+            assert!(sp.dur_vsecs >= 0.0, "seed={seed}: negative duration {sp:?}");
+            assert!(
+                sp.end_vsecs() >= sp.start_vsecs,
+                "seed={seed}: end before start {sp:?}"
+            );
+            let tid = sp.track.tid();
+            if last_start.len() <= tid {
+                last_start.resize(tid + 1, f64::NEG_INFINITY);
+            }
+            if matches!(sp.track, Track::Worker(_)) {
+                assert!(
+                    sp.start_vsecs >= last_start[tid],
+                    "seed={seed}: worker track {tid} moved backward: {} < {} at {sp:?}",
+                    sp.start_vsecs,
+                    last_start[tid]
+                );
+            }
+            last_start[tid] = sp.start_vsecs;
+        }
+
+        // Worker spans carry run/iter attribution; run ids are monotone
+        // non-decreasing in record order (chronological charge order —
+        // what makes the fold's BTreeMap replay exact).
+        let mut last_run = 0.0f64;
+        for sp in &spans {
+            if matches!(sp.track, Track::Worker(_)) {
+                let run = sp.attr("run").expect("worker span missing run attr");
+                assert!(sp.attr("iter").is_some(), "seed={seed}: missing iter {sp:?}");
+                assert!(run >= last_run, "seed={seed}: run ids regressed at {sp:?}");
+                last_run = run;
+            }
+        }
+
+        // Instants are well-formed too (version publishes, failures).
+        for i in &tracer.instants() {
+            assert!(i.ts_vsecs.is_finite() && i.ts_vsecs >= 0.0, "seed={seed}: {i:?}");
+        }
+        assert!(
+            tracer.instants().iter().any(|i| i.name == "version"),
+            "seed={seed}: no version publish instants recorded"
+        );
+        if fail {
+            assert!(
+                tracer.instants().iter().any(|i| i.name == "failure"),
+                "seed={seed}: failure injected but no failure instant"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fold_reproduces_phase_time_bit_exactly() {
+    cases(8, |seed, rng| {
+        let arch = if seed % 2 == 0 {
+            Architecture::GMeta
+        } else {
+            Architecture::ParameterServer
+        };
+        let online = tiny_online(rng);
+        let elastic = matches!(arch, Architecture::GMeta) && rng.gen_bool(0.5);
+        let fail = rng.gen_bool(0.5);
+        let (_tmp, s, tracer) = run_traced(arch, online, elastic, fail);
+
+        let folded = tracer.fold_phase_time();
+        // Every charged phase is reproduced from spans alone, bit-exactly.
+        for (phase, want) in &s.delivery.train.phase_time {
+            let got = folded.get(phase).copied().unwrap_or(0.0);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "seed={seed} arch={arch:?} elastic={elastic} fail={fail} \
+                 phase {phase}: fold {got} != charged {want}"
+            );
+        }
+        // And the fold invents nothing: no phase outside the ledger.
+        for (phase, got) in &folded {
+            let want = s.delivery.train.phase(phase);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "seed={seed}: fold-only phase {phase} = {got}, ledger has {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_tracing_does_not_perturb_the_session() {
+    // OnlineConfig is Copy: run the identical config traced and
+    // untraced, with the full event surface exercised (elastic grow +
+    // worker failure), and require identical delivery behavior.
+    cases(4, |seed, rng| {
+        let mut online = tiny_online(rng);
+        online.failures.kill_at_window = Some(1);
+        online.failures.detection_secs = 10.0;
+        let run = |traced: bool| {
+            let tmp = TempDir::new().unwrap();
+            let mut s = OnlineSession::new(tiny_job(Architecture::GMeta), online, tmp.path())
+                .unwrap()
+                .with_policy(Box::new(ScheduledPolicy::new(vec![(0, 3)])))
+                .unwrap();
+            if traced {
+                s = s.with_tracer(Tracer::new());
+            }
+            s.run().unwrap();
+            (tmp, s)
+        };
+        let (_t1, plain) = run(false);
+        let (_t2, traced) = run(true);
+        assert!(traced.tracer().is_some() && plain.tracer().is_none());
+
+        let (a, b) = (&plain.delivery, &traced.delivery);
+        assert_eq!(
+            a.train.virtual_time.to_bits(),
+            b.train.virtual_time.to_bits(),
+            "seed={seed}: tracing moved the virtual clock"
+        );
+        assert_eq!(a.train.steps, b.train.steps, "seed={seed}");
+        assert_eq!(a.train.phase_time.len(), b.train.phase_time.len());
+        for (phase, secs) in &a.train.phase_time {
+            assert_eq!(
+                secs.to_bits(),
+                b.train.phase(phase).to_bits(),
+                "seed={seed}: phase {phase} differs under tracing"
+            );
+        }
+        assert_eq!(a.versions.len(), b.versions.len(), "seed={seed}");
+        for (va, vb) in a.versions.iter().zip(&b.versions) {
+            assert_eq!(va.version, vb.version);
+            assert_eq!(va.kind, vb.kind, "seed={seed} v{}", va.version);
+            assert_eq!(va.bytes, vb.bytes, "seed={seed} v{}", va.version);
+            assert_eq!(va.world, vb.world, "seed={seed} v{}", va.version);
+            assert_eq!(
+                va.published.to_bits(),
+                vb.published.to_bits(),
+                "seed={seed}: v{} published at a different virtual time",
+                va.version
+            );
+            assert_eq!(
+                va.latency().to_bits(),
+                vb.latency().to_bits(),
+                "seed={seed} v{}",
+                va.version
+            );
+        }
+    });
+}
+
+#[test]
+fn standalone_job_fold_matches_accumulated_metrics() {
+    // The TrainJob-level wiring (builder `.tracer()`, base advancing
+    // between runs) upholds the same invariant without a session.
+    let tracer = Tracer::new();
+    let dims = ModelDims {
+        batch: 8,
+        slots: 4,
+        valency: 2,
+        emb_dim: 8,
+        ..Default::default()
+    };
+    let mut job = TrainJob::builder()
+        .gmeta(1, 2)
+        .dims(dims)
+        .dataset(movielens_like())
+        .tracer(tracer.clone())
+        .build()
+        .unwrap();
+    job.run(3).unwrap();
+    job.run(2).unwrap();
+    assert_eq!(tracer.runs(), 2);
+    let folded = tracer.fold_phase_time();
+    let m = job.metrics();
+    for (phase, want) in &m.phase_time {
+        let got = folded.get(phase).copied().unwrap_or(0.0);
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "phase {phase}: fold {got} != charged {want} across two runs"
+        );
+    }
+    assert_eq!(folded.len(), m.phase_time.len());
+
+    // Back-to-back runs never overlap on a worker track: run 2's spans
+    // all start at or after the advanced base.
+    let spans = tracer.spans();
+    let run_of = |sp: &gmeta::obs::Span| sp.attr("run").unwrap_or(0.0) as u64;
+    let first_run = spans.iter().map(run_of).min().unwrap();
+    let end_run1 = spans
+        .iter()
+        .filter(|sp| run_of(sp) == first_run)
+        .map(|sp| sp.end_vsecs())
+        .fold(0.0f64, f64::max);
+    for sp in spans.iter().filter(|sp| run_of(sp) != first_run) {
+        assert!(
+            sp.start_vsecs >= end_run1 - 1e-9,
+            "run 2 span starts inside run 1: {sp:?} (run 1 ends {end_run1})"
+        );
+    }
+}
+
+#[test]
+fn exports_stay_machine_readable_for_a_real_session() {
+    let mut rng = Rng::seed_from_u64(0x0B5E);
+    let online = tiny_online(&mut rng);
+    let (_tmp, _s, tracer) = run_traced(Architecture::GMeta, online, true, true);
+
+    // Chrome trace: valid JSON, a traceEvents array, and the fields the
+    // CI validator (`examples/trace_check.rs`) requires on every event.
+    let chrome = gmeta::util::json::parse(&tracer.to_chrome_trace()).expect("chrome trace parses");
+    let events = chrome
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .expect("traceEvents array");
+    assert!(events.len() > tracer.spans().len());
+    for ev in events {
+        assert!(ev.get("ph").and_then(Value::as_str).is_some(), "missing ph: {ev:?}");
+        assert!(ev.get("ts").and_then(Value::as_f64).is_some(), "missing ts: {ev:?}");
+        assert!(ev.get("pid").and_then(Value::as_u64).is_some(), "missing pid: {ev:?}");
+    }
+    // Per-worker straggler attribution is visible: a post-rescale world
+    // of 3 workers means thread tracks 1..=3 plus the session track.
+    let tids: std::collections::BTreeSet<u64> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+        .filter_map(|e| e.get("tid").and_then(Value::as_u64))
+        .collect();
+    assert!(tids.contains(&0), "no session track in {tids:?}");
+    assert!(
+        tids.contains(&1) && tids.contains(&2) && tids.contains(&3),
+        "expected worker tracks 1..=3 after the 2→3 rescale, got {tids:?}"
+    );
+
+    // JSONL: one valid object per line, span/instant counts add up.
+    let jsonl = tracer.to_jsonl();
+    let mut n = 0;
+    for line in jsonl.lines() {
+        let v = gmeta::util::json::parse(line).expect("jsonl line parses");
+        assert!(v.get("type").and_then(Value::as_str).is_some(), "{line}");
+        n += 1;
+    }
+    assert_eq!(n, tracer.spans().len() + tracer.instants().len());
+}
