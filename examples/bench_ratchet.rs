@@ -1,0 +1,160 @@
+//! Baseline ratchet: propose tighter committed bench floors when the
+//! headline metrics have durably improved.
+//!
+//! The committed baselines in `rust/benches/baselines/` are *floors* —
+//! `bench_diff` fails CI when a headline metric drops below them, but a
+//! perf win silently leaves slack: the gate still only guards the old
+//! floor.  This tool closes the loop.  It compares a fresh
+//! `BENCH_*.json` against the committed baseline and, when every
+//! headline metric is at least at its floor **and** at least one of
+//! them improved by more than `--improve-over` percent (default 10),
+//! writes a proposed replacement baseline into `--propose-to`.
+//!
+//! The proposal is the *full current artifact* (the documented ratchet
+//! convention: `bench_diff` reads only the keys present in the
+//! baseline, so a full artifact works as-is and future schema growth is
+//! captured for free).  Nothing is committed automatically — CI uploads
+//! the proposals as an artifact and a human lands them as a normal
+//! review, so a one-off lucky run cannot tighten the gate by itself.
+//!
+//! Exit status is always success when inputs parse: "no proposal" is a
+//! normal outcome, not an error (CI runs this on every push).
+//!
+//! ```text
+//! cargo run --release --example bench_ratchet -- \
+//!     --baseline rust/benches/baselines/BENCH_serve.json \
+//!     --current  BENCH_serve.json \
+//!     --headline delta_swap_speedup,serve_hit_rate \
+//!     --improve-over 10 \
+//!     --propose-to proposed-baselines
+//! ```
+
+use gmeta::util::args::Args;
+use gmeta::util::json::{self, Value};
+
+/// Collect every numeric leaf as (dotted path, value), in document
+/// order — the same pairing `bench_diff` gates on.
+fn numeric_leaves(doc: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
+    match doc {
+        Value::Num(n) => out.push((prefix.to_string(), *n)),
+        Value::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let path = if prefix.is_empty() {
+                    i.to_string()
+                } else {
+                    format!("{prefix}.{i}")
+                };
+                numeric_leaves(item, &path, out);
+            }
+        }
+        Value::Obj(map) => {
+            for (k, v) in map {
+                let path = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                numeric_leaves(v, &path, out);
+            }
+        }
+        Value::Null | Value::Bool(_) | Value::Str(_) => {}
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let baseline_path = args.get("baseline").ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: bench_ratchet --baseline floors.json --current fresh.json \
+             --headline substr,substr [--improve-over pct] [--propose-to dir]"
+        )
+    })?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("--current <BENCH_*.json> is required"))?;
+    let headline = args.list_or("headline", &[]);
+    if headline.is_empty() {
+        anyhow::bail!("--headline is required: a ratchet without gated metrics is vacuous");
+    }
+    let improve_over_pct = args.f64_or("improve-over", 10.0)?;
+    let propose_to = args.get_or("propose-to", "proposed-baselines").to_string();
+
+    let current_text = std::fs::read_to_string(current_path)
+        .map_err(|e| anyhow::anyhow!("cannot read {current_path}: {e}"))?;
+    let current_doc =
+        json::parse(&current_text).map_err(|e| anyhow::anyhow!("corrupt {current_path}: {e}"))?;
+    let baseline_text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| anyhow::anyhow!("cannot read {baseline_path}: {e}"))?;
+    let baseline_doc =
+        json::parse(&baseline_text).map_err(|e| anyhow::anyhow!("corrupt {baseline_path}: {e}"))?;
+
+    let mut base = Vec::new();
+    numeric_leaves(&baseline_doc, "", &mut base);
+    let mut cur = Vec::new();
+    numeric_leaves(&current_doc, "", &mut cur);
+    let cur_map: std::collections::BTreeMap<&str, f64> =
+        cur.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let is_headline = |path: &str| headline.iter().any(|h| !h.is_empty() && path.contains(h));
+
+    println!("ratchet check: {current_path} vs floor {baseline_path}");
+    let mut all_at_floor = true;
+    let mut improved = 0usize;
+    let mut compared = 0usize;
+    for (path, floor) in base.iter().filter(|(p, _)| is_headline(p)) {
+        let Some(&now) = cur_map.get(path.as_str()) else {
+            // A floor the bench no longer emits: schema drift, never
+            // ratchet over it blindly.
+            println!("  {path}: floor {floor:.4} has no current value — holding");
+            all_at_floor = false;
+            continue;
+        };
+        compared += 1;
+        let gain_pct = if *floor != 0.0 {
+            (now - floor) / floor.abs() * 100.0
+        } else {
+            0.0
+        };
+        let verdict = if now < *floor {
+            all_at_floor = false;
+            "below floor"
+        } else if gain_pct > improve_over_pct {
+            improved += 1;
+            "improved"
+        } else {
+            "at floor"
+        };
+        println!("  {path}: floor {floor:.4} -> current {now:.4} ({gain_pct:+.1}%) {verdict}");
+    }
+    if compared == 0 {
+        anyhow::bail!(
+            "no baseline metric matched the headline patterns {headline:?} — \
+             the ratchet has nothing to gate on"
+        );
+    }
+
+    if all_at_floor && improved > 0 {
+        std::fs::create_dir_all(&propose_to)
+            .map_err(|e| anyhow::anyhow!("cannot create {propose_to}: {e}"))?;
+        let name = std::path::Path::new(current_path)
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("BENCH_proposed.json");
+        let out = std::path::Path::new(&propose_to).join(name);
+        std::fs::write(&out, json::write(&current_doc))?;
+        println!(
+            "proposal: {improved} headline metric(s) improved >{improve_over_pct}% — wrote {}",
+            out.display()
+        );
+        println!(
+            "to ratchet the gate, land this file over {baseline_path} in a normal review"
+        );
+    } else if all_at_floor {
+        println!("no proposal: headline metrics within {improve_over_pct}% of the floor");
+    } else {
+        println!(
+            "no proposal: at least one headline metric is below its floor \
+             (bench_diff gates that separately)"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! The serving plane end-to-end: a publish chain consumed by a fleet of
+//! versioned read replicas with in-place delta apply.
+//!
+//! Builds a [`gmeta::stream::DeltaStore`] the way the delivery loop
+//! does (one full snapshot, then bouncy deltas), then replays it
+//! against a [`gmeta::serve::ServeFleet`] under zipfian lookup traffic:
+//! replicas poll the registry on a staggered cadence, patch each new
+//! version **in place** (full reloads only when the reconstruction
+//! chain breaks), and serve hot rows through the per-replica row cache.
+//! Prints version-swap latency, staleness skew, cache hit rate, and
+//! freshness-weighted QPS.
+//!
+//! With `--migrate`, a [`gmeta::serve::RollingMigration`] rewires the
+//! fleet from Modulo to JumpHash ownership mid-traffic — one replica at
+//! a time, double-routing reads for rows whose owner maps disagree —
+//! and reports the migration window and the (asserted-zero) wrong-owner
+//! count.
+//!
+//! Run: `cargo run --release --example serve_replicas`
+//!        `[-- --replicas N] [--zipf E] [--versions V] [--migrate]`
+//!        `[--trace out.json]`
+
+use gmeta::checkpoint::Checkpoint;
+use gmeta::config::ModelDims;
+use gmeta::embedding::OwnerMap;
+use gmeta::obs::Tracer;
+use gmeta::serve::{PublishEvent, RollingMigration, ServeConfig, ServeFleet, ZipfTraffic};
+use gmeta::stream::DeltaStore;
+use gmeta::util::args::Args;
+use gmeta::util::json::write as json_write;
+use gmeta::util::{Rng, TempDir};
+
+const EMB_DIM: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let replicas = args.usize_or("replicas", 4)?;
+    let zipf = args.f64_or("zipf", 1.1)?;
+    let versions = args.usize_or("versions", 10)? as u64;
+    let migrate = args.flag("migrate");
+    let trace_path = args.get("trace").map(str::to_owned);
+
+    // Publish side: one base snapshot, then deltas touching a hot
+    // subset each window — the store shape `stream::OnlineSession`
+    // leaves behind.
+    let universe = 4096u64;
+    let cadence = 6.0;
+    let mut rng = Rng::seed_from_u64(7);
+    let tmp = TempDir::new()?;
+    let mut store = DeltaStore::open(tmp.path())?;
+    let mut state = Checkpoint {
+        step: 0,
+        variant: "g-meta".into(),
+        dims: ModelDims {
+            emb_dim: EMB_DIM,
+            ..ModelDims::default()
+        },
+        world: 8,
+        owner_map: OwnerMap::Modulo,
+        dense: (0..512).map(|_| rng.f64() as f32).collect(),
+        rows: (0..universe)
+            .map(|r| {
+                let vals = (0..EMB_DIM).map(|_| rng.f64() as f32).collect();
+                (r, vals)
+            })
+            .collect(),
+    };
+    store.publish(1, &state, None)?;
+    let mut schedule = vec![PublishEvent { at: 0.0, version: 1 }];
+    let mut prev = state.clone();
+    for v in 2..=versions {
+        state.step += 1;
+        for _ in 0..128 {
+            let i = rng.gen_range(0, universe) as usize;
+            state.rows[i].1 = (0..EMB_DIM).map(|_| rng.f64() as f32 - 0.5).collect();
+        }
+        store.publish(v, &state, Some((v - 1, &prev)))?;
+        prev = state.clone();
+        schedule.push(PublishEvent {
+            at: (v - 1) as f64 * cadence,
+            version: v,
+        });
+    }
+    let horizon = versions as f64 * cadence + 20.0;
+    println!(
+        "store: {versions} versions over {:.0}s, {universe} rows, dim {EMB_DIM}",
+        (versions - 1) as f64 * cadence
+    );
+
+    // Consume side.
+    let cfg = ServeConfig {
+        replicas,
+        emb_dim: EMB_DIM,
+        cache_capacity: 256,
+        ..ServeConfig::default()
+    };
+    let tracer = Tracer::new();
+    let mut fleet = ServeFleet::new(&store, cfg).with_tracer(tracer.clone());
+    let mut traffic = ZipfTraffic::new(universe as usize, zipf, 11);
+    let mut mig = migrate
+        .then(|| RollingMigration::new(OwnerMap::JumpHash, horizon * 0.4, replicas));
+    let m = fleet.run(&schedule, &mut traffic, horizon, mig.as_mut())?;
+
+    println!(
+        "\nfleet of {replicas} (zipf {zipf:.2}) over {horizon:.0}s virtual:"
+    );
+    println!(
+        "  lookups {} answered {} (untouched {}, wrong-owner {})",
+        m.queries, m.answered, m.untouched, m.wrong_owner
+    );
+    println!(
+        "  swaps {} (full reloads {}), {:.1} KB fetched",
+        m.total_swaps(),
+        m.total_full_reloads(),
+        m.total_bytes_fetched() as f64 / 1e3
+    );
+    println!(
+        "  swap latency p50 {:.2}s  p99 {:.2}s (publish -> serving)",
+        m.swap_latency_quantile(0.5),
+        m.swap_latency_quantile(0.99)
+    );
+    println!(
+        "  staleness: max lag {} versions, cross-replica skew {} versions / {:.1}s",
+        m.max_version_lag, m.max_skew_versions, m.max_skew_secs
+    );
+    println!(
+        "  cache hit rate {:.3}  qps {:.0}  freshness-weighted qps {:.0} ({:.0}%)",
+        m.hit_rate(),
+        m.qps(),
+        m.fresh_qps(),
+        m.fresh_ratio() * 100.0
+    );
+    if let Some(mig) = &mig {
+        let st = &mig.stats;
+        println!(
+            "  migration Modulo->JumpHash: window {:.2}s, {} rows / {:.1} KB adopted, double-routed {}",
+            st.finished_at - st.started_at,
+            st.adopted_rows,
+            st.bytes as f64 / 1e3,
+            m.double_routed
+        );
+        assert!(mig.done(), "migration must finish inside the horizon");
+    }
+    assert_eq!(m.wrong_owner, 0, "routing must never miss an owner");
+
+    if let Some(path) = trace_path {
+        std::fs::write(&path, tracer.to_chrome_trace())?;
+        println!("\nwrote {path} ({} spans)", tracer.spans().len());
+    }
+    // Machine-readable roll-up on stdout-adjacent path for scripting.
+    if let Some(out) = args.get("metrics-out") {
+        std::fs::write(out, json_write(&m.to_json()))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

@@ -10,8 +10,14 @@
 //! a trace with no complete events at all is rejected — it means the
 //! run recorded nothing worth uploading.
 //!
+//! Every tid a span event lands on must also be *named* by a
+//! `thread_name` metadata event — that is what keeps the track layout
+//! legible in the UI, and it validates new track families (the serving
+//! plane's per-replica tracks, `tid` 1001+r, ride the same rule as the
+//! session/worker tracks) without hard-coding the numbering here.
+//!
 //! ```text
-//! cargo run --release --example trace_check -- TRACE_delivery.json TRACE_elastic.json
+//! cargo run --release --example trace_check -- TRACE_delivery.json TRACE_serve.json
 //! ```
 //!
 //! Exits non-zero with a per-file message on the first malformed file,
@@ -33,6 +39,8 @@ fn check_file(path: &str) -> anyhow::Result<()> {
     }
     let mut spans = 0usize;
     let mut instants = 0usize;
+    let mut named_tids: Vec<u64> = Vec::new();
+    let mut span_tids: Vec<u64> = Vec::new();
     for (i, ev) in events.iter().enumerate() {
         let ph = ev
             .get("ph")
@@ -58,17 +66,41 @@ fn check_file(path: &str) -> anyhow::Result<()> {
                 if !dur.is_finite() || dur < 0.0 {
                     anyhow::bail!("{path}: span event {i} has bad dur {dur}");
                 }
+                let tid = ev
+                    .get("tid")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("{path}: span event {i} has no tid"))?;
+                span_tids.push(tid);
             }
             "i" => instants += 1,
+            "M" => {
+                if ev.get("name").and_then(Value::as_str) == Some("thread_name") {
+                    let tid = ev.get("tid").and_then(Value::as_u64).ok_or_else(|| {
+                        anyhow::anyhow!("{path}: thread_name event {i} has no tid")
+                    })?;
+                    named_tids.push(tid);
+                }
+            }
             _ => {}
         }
     }
     if spans == 0 {
         anyhow::bail!("{path}: no complete (ph:\"X\") span events");
     }
+    span_tids.sort_unstable();
+    span_tids.dedup();
+    for tid in &span_tids {
+        if !named_tids.contains(tid) {
+            anyhow::bail!(
+                "{path}: span tid {tid} has no thread_name metadata — \
+                 the track would render unlabeled"
+            );
+        }
+    }
     println!(
-        "{path}: ok ({} events, {spans} spans, {instants} instants)",
-        events.len()
+        "{path}: ok ({} events, {spans} spans, {instants} instants, {} named tracks)",
+        events.len(),
+        span_tids.len()
     );
     Ok(())
 }

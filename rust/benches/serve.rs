@@ -1,0 +1,301 @@
+//! Bench: the serving plane — in-place delta swaps vs full reloads,
+//! cache hit rate vs traffic skew, staleness, and the rolling
+//! owner-map migration.
+//!
+//! Four arms over one published base+delta chain:
+//!
+//! 1. **delta** — the fleet patches versions in place
+//!    ([`gmeta::serve::Replica::begin_catch_up`]); per-swap apply cost
+//!    is poll overhead + patch bytes + rows touched.
+//! 2. **full_reload** — the blue/green baseline: every swap re-reads
+//!    the whole table and pays the restart tax.  The headline
+//!    `swap.delta_swap_speedup` (full p50 apply / delta p50 apply) is
+//!    asserted ≥ 2× — in practice it is far larger, which is the §3.4
+//!    "continuous delivery" story extended to the consume side.
+//! 3. **zipf sweep** — hit rate of the hot-row cache under exponents
+//!    0.6 / 1.0 / 1.4 with a cache much smaller than the hosted shard;
+//!    asserted monotone in skew, and `cache.serve_hit_rate` (the hot
+//!    arm) ≥ 0.5 is the second headline.
+//! 4. **migration** — a live Modulo→JumpHash [`RollingMigration`]
+//!    mid-traffic: zero wrong-owner lookups, some double-routed reads,
+//!    finished before the horizon (all asserted).
+//!
+//! Results land in `BENCH_serve.json`; the delta arm's tracer export
+//! lands in `TRACE_serve.json` (per-replica tracks, validated by
+//! `examples/trace_check.rs`).  CI gates both headlines against
+//! `benches/baselines/BENCH_serve.json` via `examples/bench_diff.rs`.
+//!
+//! Run: `cargo bench --bench serve` (CI smoke: `-- --smoke`).
+
+mod common;
+
+use gmeta::checkpoint::Checkpoint;
+use gmeta::config::ModelDims;
+use gmeta::embedding::OwnerMap;
+use gmeta::obs::Tracer;
+use gmeta::serve::{
+    PublishEvent, RollingMigration, ServeConfig, ServeFleet, ServeMetrics, ZipfTraffic,
+};
+use gmeta::stream::DeltaStore;
+use gmeta::util::json::{num, obj, s};
+use gmeta::util::{Rng, TempDir};
+
+struct Scale {
+    /// Embedding ids the traffic draws from (all published in v1).
+    universe: u64,
+    versions: u64,
+    /// Rows each delta touches (hot subset, resampled per version).
+    touched_per_delta: u64,
+    publish_cadence: f64,
+    horizon: f64,
+    qps: f64,
+}
+
+const EMB_DIM: usize = 16;
+
+/// Publish a base snapshot + a delta chain where each version touches a
+/// random hot subset — the store shape the delivery loop produces.
+fn build_store(
+    tmp: &TempDir,
+    scale: &Scale,
+    rng: &mut Rng,
+) -> anyhow::Result<(DeltaStore, Vec<PublishEvent>)> {
+    let mut store = DeltaStore::open(tmp.path())?;
+    let dims = ModelDims {
+        emb_dim: EMB_DIM,
+        ..ModelDims::default()
+    };
+    let mut state = Checkpoint {
+        step: 0,
+        variant: "g-meta".into(),
+        dims,
+        world: 8,
+        owner_map: OwnerMap::Modulo,
+        dense: (0..256).map(|_| rng.f64() as f32).collect(),
+        rows: (0..scale.universe)
+            .map(|r| {
+                let vals = (0..EMB_DIM).map(|_| rng.f64() as f32).collect();
+                (r, vals)
+            })
+            .collect(),
+    };
+    let mut schedule = Vec::new();
+    store.publish(1, &state, None)?;
+    schedule.push(PublishEvent { at: 0.0, version: 1 });
+    let mut prev = state.clone();
+    for v in 2..=scale.versions {
+        state.step += 1;
+        for _ in 0..scale.touched_per_delta {
+            let i = rng.gen_range(0, scale.universe) as usize;
+            state.rows[i].1 = (0..EMB_DIM).map(|_| rng.f64() as f32 - 0.5).collect();
+        }
+        for x in state.dense.iter_mut() {
+            *x += 1e-3;
+        }
+        store.publish(v, &state, Some((v - 1, &prev)))?;
+        prev = state.clone();
+        schedule.push(PublishEvent {
+            at: (v - 1) as f64 * scale.publish_cadence,
+            version: v,
+        });
+    }
+    Ok((store, schedule))
+}
+
+fn serve_cfg(scale: &Scale) -> ServeConfig {
+    ServeConfig {
+        replicas: 2,
+        poll_interval: 3.0,
+        emb_dim: EMB_DIM,
+        // Cache far smaller than the hosted shard (universe/replicas),
+        // so hit rate actually measures skew, not capacity slack.
+        cache_capacity: (scale.universe / 16).max(32) as usize,
+        cache_ttl: 4096,
+        qps: scale.qps,
+        batch: 16,
+        ..ServeConfig::default()
+    }
+}
+
+fn run_fleet(
+    store: &DeltaStore,
+    schedule: &[PublishEvent],
+    scale: &Scale,
+    cfg: ServeConfig,
+    exponent: f64,
+    migration: Option<&mut RollingMigration>,
+    tracer: Option<&Tracer>,
+) -> anyhow::Result<ServeMetrics> {
+    let mut fleet = ServeFleet::new(store, cfg);
+    if let Some(t) = tracer {
+        fleet = fleet.with_tracer(t.clone());
+    }
+    let mut traffic = ZipfTraffic::new(scale.universe as usize, exponent, 0xBEEF);
+    fleet.run(schedule, &mut traffic, scale.horizon, migration)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scale = if smoke {
+        Scale {
+            universe: 2048,
+            versions: 8,
+            touched_per_delta: 96,
+            publish_cadence: 5.0,
+            horizon: 60.0,
+            qps: 400.0,
+        }
+    } else {
+        Scale {
+            universe: 8192,
+            versions: 20,
+            touched_per_delta: 256,
+            publish_cadence: 8.0,
+            horizon: 240.0,
+            qps: 800.0,
+        }
+    };
+    let mut rng = Rng::seed_from_u64(0x5E4E);
+    let tmp = TempDir::new()?;
+    let (store, schedule) = build_store(&tmp, &scale, &mut rng)?;
+
+    // Arm 1+2: in-place delta swaps vs the full-reload baseline, same
+    // schedule, same traffic.  The delta arm carries the tracer.
+    let tracer = Tracer::new();
+    let delta = run_fleet(
+        &store,
+        &schedule,
+        &scale,
+        serve_cfg(&scale),
+        1.0,
+        None,
+        Some(&tracer),
+    )?;
+    let full_cfg = ServeConfig {
+        force_full_reload: true,
+        ..serve_cfg(&scale)
+    };
+    let full = run_fleet(&store, &schedule, &scale, full_cfg, 1.0, None, None)?;
+
+    let delta_apply_p50 = delta.apply_secs_quantile(0.5);
+    let full_apply_p50 = full.apply_secs_quantile(0.5);
+    let speedup = full_apply_p50 / delta_apply_p50;
+    println!(
+        "swap apply p50: delta {delta_apply_p50:.4}s  full-reload {full_apply_p50:.4}s  speedup {speedup:.1}x"
+    );
+    assert_eq!(delta.wrong_owner, 0, "delta arm routed a lookup wrong");
+    assert_eq!(full.wrong_owner, 0, "full arm routed a lookup wrong");
+    assert!(
+        delta.total_full_reloads() as usize <= delta.replicas.len(),
+        "in-place fleet reloaded beyond the initial load per replica"
+    );
+    assert!(
+        speedup >= 2.0,
+        "in-place apply must beat full reloads >=2x (got {speedup:.2})"
+    );
+    assert!(
+        delta.total_bytes_fetched() < full.total_bytes_fetched(),
+        "delta swaps must move fewer bytes"
+    );
+
+    // Arm 3: hit rate vs zipf exponent.
+    let exponents = [0.6, 1.0, 1.4];
+    let mut sweep: Vec<(f64, ServeMetrics)> = Vec::new();
+    for &e in &exponents {
+        let m = run_fleet(&store, &schedule, &scale, serve_cfg(&scale), e, None, None)?;
+        println!("zipf {e:.1}: hit rate {:.3}  qps {:.0}", m.hit_rate(), m.qps());
+        sweep.push((e, m));
+    }
+    for w in sweep.windows(2) {
+        assert!(
+            w[1].1.hit_rate() > w[0].1.hit_rate(),
+            "hit rate must grow with skew ({:.1}: {:.3} vs {:.1}: {:.3})",
+            w[0].0,
+            w[0].1.hit_rate(),
+            w[1].0,
+            w[1].1.hit_rate()
+        );
+    }
+    let hot_hit_rate = sweep.last().unwrap().1.hit_rate();
+    assert!(
+        hot_hit_rate >= 0.5,
+        "hot zipf traffic must mostly hit the cache (got {hot_hit_rate:.3})"
+    );
+
+    // Arm 4: rolling Modulo→JumpHash migration mid-traffic.
+    let mut mig = RollingMigration::new(
+        OwnerMap::JumpHash,
+        scale.horizon * 0.4,
+        serve_cfg(&scale).replicas,
+    );
+    let migrated = run_fleet(
+        &store,
+        &schedule,
+        &scale,
+        serve_cfg(&scale),
+        1.0,
+        Some(&mut mig),
+        Some(&tracer),
+    )?;
+    println!(
+        "migration: double-routed {}  wrong-owner {}  window {:.2}s",
+        migrated.double_routed,
+        migrated.wrong_owner,
+        mig.stats.finished_at - mig.stats.started_at
+    );
+    assert_eq!(migrated.wrong_owner, 0, "migration leaked a wrong-owner lookup");
+    assert!(migrated.double_routed > 0, "migration never double-routed");
+    assert!(mig.done(), "migration did not finish inside the horizon");
+
+    let doc = obj(vec![
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        (
+            "swap",
+            obj(vec![
+                ("delta_swap_speedup", num(speedup)),
+                ("delta_apply_p50_secs", num(delta_apply_p50)),
+                ("full_apply_p50_secs", num(full_apply_p50)),
+                ("delta", delta.to_json()),
+                ("full_reload", full.to_json()),
+            ]),
+        ),
+        (
+            "cache",
+            obj(vec![
+                ("serve_hit_rate", num(hot_hit_rate)),
+                (
+                    "by_exponent",
+                    obj(sweep
+                        .iter()
+                        .map(|(e, m)| {
+                            // "0.6" is not a valid key char set for dotted
+                            // paths; use e06/e10/e14.
+                            let key = match *e {
+                                x if x < 0.8 => "e06",
+                                x if x < 1.2 => "e10",
+                                _ => "e14",
+                            };
+                            (key, m.to_json())
+                        })
+                        .collect()),
+                ),
+            ]),
+        ),
+        ("migration", migrated.to_json()),
+        (
+            "staleness",
+            obj(vec![
+                ("swap_latency_p50", num(delta.swap_latency_quantile(0.5))),
+                ("swap_latency_p99", num(delta.swap_latency_quantile(0.99))),
+                ("max_version_lag", num(delta.max_version_lag as f64)),
+                ("max_skew_versions", num(delta.max_skew_versions as f64)),
+                ("max_skew_secs", num(delta.max_skew_secs)),
+                ("fresh_qps", num(delta.fresh_qps())),
+                ("fresh_ratio", num(delta.fresh_ratio())),
+            ]),
+        ),
+    ]);
+    common::write_bench_json("serve", &doc);
+    common::write_trace_json("serve", &tracer);
+    Ok(())
+}

@@ -119,6 +119,14 @@ impl RowCache {
         self.map.remove(&row);
     }
 
+    /// Drop every cached entry (a serving replica's full version reload
+    /// replaces the whole row set, so nothing cached can be trusted).
+    /// Hit/miss counters survive — they describe the lookup stream, not
+    /// the current contents.
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }

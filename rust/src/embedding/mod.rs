@@ -22,7 +22,7 @@ pub mod cache;
 pub mod owner;
 pub mod plan;
 
-pub use cache::{row_fingerprint, RowCache};
+pub use cache::{partition_lookups, row_fingerprint, RowCache};
 pub use owner::OwnerMap;
 pub use plan::{build_overlap, LookupPlan, WorkerLookup};
 

@@ -28,7 +28,13 @@
 //!   policies resize the cluster between windows through
 //!   [`job::JobSpec`] + checkpoint resharding, and an injected
 //!   [`stream::elastic::FailurePlan`] models mid-window worker death and
-//!   slow-registry publish tails.  Cross-cutting **observability**
+//!   slow-registry publish tails.  The **serving plane** ([`serve`])
+//!   closes the publish→consume loop: a fleet of versioned read
+//!   replicas tracks the delta registry on the same virtual clock,
+//!   patches each version *in place* (bit-identical to a full
+//!   reconstruction), serves zipfian lookup traffic through the hot-row
+//!   cache, and supports live owner-map migration with double-routed
+//!   reads.  Cross-cutting **observability**
 //!   ([`obs`]): an [`obs::Tracer`] records virtual-clock spans from the
 //!   trainers (per-worker, so stragglers are visible) and the delivery
 //!   loop, exports Chrome-trace/JSONL/metrics-snapshot views, and folds
@@ -71,6 +77,7 @@ pub mod net;
 pub mod obs;
 pub mod ps;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stream;
 pub mod util;

@@ -53,14 +53,22 @@ pub enum Track {
     Session,
     /// One worker rank's track (per-iteration phase seconds).
     Worker(usize),
+    /// One serving replica's track (version swaps, migration legs) —
+    /// the consume side of the publish→consume loop
+    /// ([`crate::serve`]).
+    Replica(usize),
 }
 
 impl Track {
-    /// Stable Chrome-trace thread id: session = 0, worker r = r + 1.
+    /// Stable Chrome-trace thread id: session = 0, worker r = r + 1,
+    /// replica r = 1001 + r.  The replica block starts far above any
+    /// simulated training world so the two fleets never collide in one
+    /// trace.
     pub fn tid(self) -> usize {
         match self {
             Track::Session => 0,
             Track::Worker(r) => r + 1,
+            Track::Replica(r) => 1001 + r,
         }
     }
 
@@ -69,6 +77,7 @@ impl Track {
         match self {
             Track::Session => "session".to_string(),
             Track::Worker(r) => format!("worker {r}"),
+            Track::Replica(r) => format!("replica {r}"),
         }
     }
 }
@@ -254,6 +263,11 @@ impl Tracer {
                     *slot = slot.max(sp.dur_vsecs);
                 }
                 Track::Session => session.push((sp.name.as_str(), sp.dur_vsecs)),
+                // Serving-plane spans never feed `RunMetrics.phase_time`
+                // (replicas charge no training phases), so the fold
+                // skips them — including them would break the bit-exact
+                // replay invariant for traces that carry both planes.
+                Track::Replica(_) => {}
             }
         }
         let mut out: BTreeMap<String, f64> = BTreeMap::new();
@@ -564,10 +578,13 @@ impl MetricsSnapshot {
 
         let mut end = 0.0f64;
         let mut workers = 0usize;
+        let mut replicas = 0usize;
         for sp in &spans {
             end = end.max(sp.end_vsecs());
-            if let Track::Worker(r) = sp.track {
-                workers = workers.max(r + 1);
+            match sp.track {
+                Track::Worker(r) => workers = workers.max(r + 1),
+                Track::Replica(r) => replicas = replicas.max(r + 1),
+                Track::Session => {}
             }
         }
         for inst in &instants {
@@ -576,6 +593,7 @@ impl MetricsSnapshot {
         let mut gauges = BTreeMap::new();
         gauges.insert("trace_end_vsecs".to_string(), end);
         gauges.insert("worker_tracks".to_string(), workers as f64);
+        gauges.insert("replica_tracks".to_string(), replicas as f64);
 
         let mut histograms: BTreeMap<String, Histogram> = BTreeMap::new();
         let mut publish = Histogram::log_spaced(1e-4, 1e4, 17);
@@ -590,6 +608,12 @@ impl MetricsSnapshot {
                 Track::Worker(_) => {
                     histograms
                         .entry(format!("phase_secs/{}", sp.name))
+                        .or_insert_with(|| Histogram::log_spaced(1e-6, 1e3, 19))
+                        .record(sp.dur_vsecs);
+                }
+                Track::Replica(_) => {
+                    histograms
+                        .entry(format!("serve_secs/{}", sp.name))
                         .or_insert_with(|| Histogram::log_spaced(1e-6, 1e3, 19))
                         .record(sp.dur_vsecs);
                 }

@@ -1,0 +1,417 @@
+//! The serving fleet: N sharded read replicas on the virtual clock.
+//!
+//! [`ServeFleet::run`] is a discrete-event replay: a *registry
+//! schedule* (which version became visible when — the publish side's
+//! [`crate::metrics::VersionRecord`] timeline), per-replica registry
+//! polls at a staggered cadence, and zipfian query batches.  Each poll
+//! that finds a newer version starts an in-place swap
+//! ([`super::Replica::begin_catch_up`]); the swap's cost on the
+//! virtual clock comes from [`SwapModel`], and until it commits the
+//! replica keeps serving the old view (the undo shadow — the same
+//! double-routed-read idea the rolling migration scales fleet-wide).
+//!
+//! Staleness bookkeeping samples the fleet at every event instant, so
+//! "max version lag at any virtual instant" is exact for the event
+//! grid (nothing changes between events).
+
+use crate::embedding::{OwnerMap, RowCache};
+use crate::obs::{Tracer, Track};
+use crate::serve::metrics::{ReplicaServeStats, ServeMetrics};
+use crate::serve::migration::{RollingMigration, Route};
+use crate::serve::replica::{Lookup, Replica};
+use crate::serve::traffic::ZipfTraffic;
+use crate::stream::DeltaStore;
+use crate::Result;
+
+/// One registry entry: `version` became visible to pollers at `at`.
+#[derive(Debug, Clone, Copy)]
+pub struct PublishEvent {
+    pub at: f64,
+    pub version: u64,
+}
+
+/// Analytic cost of a version swap on a replica (the serving-side
+/// sibling of the publish side's upload model).
+#[derive(Debug, Clone, Copy)]
+pub struct SwapModel {
+    /// Registry round-trip + process overhead per poll that swaps.
+    pub poll_overhead: f64,
+    /// Download bandwidth for patch payloads, bytes/s.
+    pub read_bw: f64,
+    /// Per-row cost of patching the table in place (hash insert +
+    /// cache invalidation), seconds.
+    pub row_patch_secs: f64,
+    /// Extra cost of a full reload (allocate + rebuild + warm the
+    /// process) on top of the byte/row terms — the blue/green restart
+    /// tax the in-place path avoids.
+    pub full_reload_overhead: f64,
+}
+
+impl Default for SwapModel {
+    fn default() -> Self {
+        Self {
+            poll_overhead: 0.02,
+            read_bw: 200e6,
+            row_patch_secs: 1e-6,
+            full_reload_overhead: 0.5,
+        }
+    }
+}
+
+impl SwapModel {
+    /// Seconds one swap costs.
+    pub fn swap_secs(&self, bytes: u64, rows_patched: usize, full_reload: bool) -> f64 {
+        let base = self.poll_overhead
+            + bytes as f64 / self.read_bw
+            + rows_patched as f64 * self.row_patch_secs;
+        if full_reload {
+            base + self.full_reload_overhead
+        } else {
+            base
+        }
+    }
+
+    /// Seconds a migration adopt (bulk row load) costs — byte/row
+    /// terms only: the replica stays up, no restart tax.
+    pub fn adopt_secs(&self, bytes: u64, rows: usize) -> f64 {
+        self.poll_overhead + bytes as f64 / self.read_bw + rows as f64 * self.row_patch_secs
+    }
+}
+
+/// Fleet shape and cost knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Fleet size N (shards under the owner map).
+    pub replicas: usize,
+    /// Registry poll cadence per replica, virtual seconds.  Polls are
+    /// staggered: replica r's phase offset is `r/N` of the interval.
+    pub poll_interval: f64,
+    /// Owner map sharding rows over the fleet.
+    pub owner_map: OwnerMap,
+    pub swap: SwapModel,
+    /// Hot-row cache TTL in lookups served by that replica.
+    pub cache_ttl: u64,
+    pub cache_capacity: usize,
+    /// Embedding dimension (cache slot width).
+    pub emb_dim: usize,
+    /// Aggregate lookup arrival rate, queries per virtual second.
+    pub qps: f64,
+    /// Lookups per query event (one batch arrives per `batch/qps`).
+    pub batch: usize,
+    /// Freshness half-scale τ: an answer from a version published τ
+    /// seconds ago weighs 1/2.
+    pub freshness_tau: f64,
+    /// Disable in-place patching: every swap is a full reload — the
+    /// baseline arm the serve bench compares against.
+    pub force_full_reload: bool,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 4,
+            poll_interval: 5.0,
+            owner_map: OwnerMap::Modulo,
+            swap: SwapModel::default(),
+            cache_ttl: 512,
+            cache_capacity: 1024,
+            emb_dim: 8,
+            qps: 200.0,
+            batch: 16,
+            freshness_tau: 30.0,
+            force_full_reload: false,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    /// Replica r polls the registry.
+    Poll(usize),
+    /// A batch of lookups arrives.
+    Query,
+}
+
+/// A swap in flight: committed (served) when the clock reaches
+/// `done_at`.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    done_at: f64,
+    published_at: f64,
+}
+
+/// The fleet (see module docs).
+pub struct ServeFleet<'a> {
+    store: &'a DeltaStore,
+    pub cfg: ServeConfig,
+    pub replicas: Vec<Replica>,
+    tracer: Option<Tracer>,
+}
+
+impl<'a> ServeFleet<'a> {
+    pub fn new(store: &'a DeltaStore, cfg: ServeConfig) -> Self {
+        let replicas = (0..cfg.replicas)
+            .map(|rank| {
+                Replica::new(
+                    rank,
+                    cfg.replicas,
+                    cfg.owner_map,
+                    RowCache::new(
+                        cfg.cache_ttl,
+                        cfg.cache_capacity,
+                        cfg.emb_dim,
+                        cfg.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9),
+                    ),
+                )
+            })
+            .collect();
+        Self {
+            store,
+            cfg,
+            replicas,
+            tracer: None,
+        }
+    }
+
+    /// Attach a tracer: swaps and migration legs become spans on
+    /// per-replica tracks ([`Track::Replica`]), version commits become
+    /// instants.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// Replay `schedule` against zipfian `traffic` for `horizon`
+    /// virtual seconds, optionally driving a [`RollingMigration`].
+    pub fn run(
+        &mut self,
+        schedule: &[PublishEvent],
+        traffic: &mut ZipfTraffic,
+        horizon: f64,
+        mut migration: Option<&mut RollingMigration>,
+    ) -> Result<ServeMetrics> {
+        assert!(!self.replicas.is_empty(), "empty fleet");
+        assert!(
+            schedule.windows(2).all(|w| w[0].at <= w[1].at),
+            "schedule must be time-ordered"
+        );
+        let n = self.replicas.len();
+
+        // Static event grid: staggered polls + query batches.
+        let mut events: Vec<(f64, Event)> = Vec::new();
+        for r in 0..n {
+            let phase = self.cfg.poll_interval * r as f64 / n as f64;
+            let mut k = 0u64;
+            loop {
+                let t = phase + k as f64 * self.cfg.poll_interval;
+                if t > horizon {
+                    break;
+                }
+                events.push((t, Event::Poll(r)));
+                k += 1;
+            }
+        }
+        let batch_dt = self.cfg.batch as f64 / self.cfg.qps;
+        let mut k = 1u64;
+        loop {
+            let t = k as f64 * batch_dt;
+            if t > horizon {
+                break;
+            }
+            events.push((t, Event::Query));
+            k += 1;
+        }
+        // Polls sort before queries at equal instants (Event derives
+        // nothing: sort by time, then poll-before-query, then rank for
+        // determinism).
+        events.sort_by(|(ta, ea), (tb, eb)| {
+            ta.partial_cmp(tb)
+                .expect("finite event times")
+                .then_with(|| {
+                    let key = |e: &Event| match e {
+                        Event::Poll(r) => (0usize, *r),
+                        Event::Query => (1, 0),
+                    };
+                    key(ea).cmp(&key(eb))
+                })
+        });
+
+        let mut stats: Vec<ReplicaServeStats> = (0..n)
+            .map(|rank| ReplicaServeStats {
+                rank,
+                ..ReplicaServeStats::default()
+            })
+            .collect();
+        let mut out = ServeMetrics {
+            horizon,
+            ..ServeMetrics::default()
+        };
+        let mut in_flight: Vec<Option<InFlight>> = vec![None; n];
+        // Version → schedule index / publish instant, for staleness math.
+        let sched_index = |version: u64| -> Option<usize> {
+            schedule.iter().position(|p| p.version == version)
+        };
+
+        for (t, ev) in events {
+            // 1. Commit swaps that finished by now (old view retires).
+            for r in 0..n {
+                if let Some(fl) = in_flight[r] {
+                    if fl.done_at <= t {
+                        self.replicas[r].commit_swap();
+                        stats[r].swap_latency.push(fl.done_at - fl.published_at);
+                        stats[r].swaps += 1;
+                        in_flight[r] = None;
+                        if let Some(tr) = &self.tracer {
+                            tr.instant(
+                                "serve_version",
+                                fl.done_at,
+                                &[
+                                    ("replica", r as f64),
+                                    (
+                                        "version",
+                                        self.replicas[r].version.unwrap_or(0) as f64,
+                                    ),
+                                ],
+                            );
+                        }
+                    }
+                }
+            }
+            // 2. Drive the migration state machine up to now.
+            if let Some(mig) = migration.as_deref_mut() {
+                mig.advance(t, &mut self.replicas, self.store, &self.cfg.swap, self.tracer.as_ref())?;
+            }
+            // 3. The event itself.
+            match ev {
+                Event::Poll(r) => {
+                    if in_flight[r].is_some() {
+                        // Still applying the previous swap: this poll
+                        // is a no-op; the next one catches up further.
+                    } else if let Some(target) = schedule
+                        .iter()
+                        .take_while(|p| p.at <= t)
+                        .last()
+                        .filter(|p| self.replicas[r].version != Some(p.version))
+                    {
+                        if self.cfg.force_full_reload {
+                            // Baseline arm: forget the resume point so
+                            // the chain never passes through us.
+                            self.replicas[r].version = None;
+                        }
+                        let swap = self.replicas[r].begin_catch_up(self.store, target.version)?;
+                        let secs =
+                            self.cfg
+                                .swap
+                                .swap_secs(swap.bytes, swap.rows_patched, swap.full_reload);
+                        in_flight[r] = Some(InFlight {
+                            done_at: t + secs,
+                            published_at: target.at,
+                        });
+                        stats[r].apply_secs.push(secs);
+                        stats[r].bytes_fetched += swap.bytes;
+                        stats[r].rows_patched += swap.rows_patched as u64;
+                        if let Some(tr) = &self.tracer {
+                            tr.span(
+                                "swap_apply",
+                                Track::Replica(r),
+                                t,
+                                secs,
+                                &[
+                                    ("version", target.version as f64),
+                                    ("bytes", swap.bytes as f64),
+                                    ("rows", swap.rows_patched as f64),
+                                    ("full", if swap.full_reload { 1.0 } else { 0.0 }),
+                                ],
+                            );
+                        }
+                    }
+                }
+                Event::Query => {
+                    // The cache TTL clock ticks once per arriving
+                    // batch on every replica.
+                    for rep in &mut self.replicas {
+                        rep.cache.tick();
+                    }
+                    let ids = traffic.batch(self.cfg.batch);
+                    for row in ids {
+                        out.queries += 1;
+                        let route = match migration.as_deref() {
+                            Some(mig) => mig.route(row, n, self.cfg.owner_map, t),
+                            None => Route::Single(self.cfg.owner_map.owner(row, n)),
+                        };
+                        let rank = match route {
+                            Route::Single(rank) => rank,
+                            Route::Double { chosen, .. } => {
+                                out.double_routed += 1;
+                                chosen
+                            }
+                        };
+                        match self.replicas[rank].lookup(row) {
+                            Lookup::CacheHit(_) => {
+                                out.answered += 1;
+                                out.cache_hits += 1;
+                            }
+                            Lookup::StateHit(_) => {
+                                out.answered += 1;
+                                out.state_hits += 1;
+                            }
+                            Lookup::Untouched => {
+                                out.answered += 1;
+                                out.untouched += 1;
+                            }
+                            Lookup::NotHosted => {
+                                out.wrong_owner += 1;
+                                continue;
+                            }
+                        }
+                        // Freshness weight from the *served* version's
+                        // publish instant.
+                        if let Some(v) = self.replicas[rank].version {
+                            if let Some(i) = sched_index(v) {
+                                let age = (t - schedule[i].at).max(0.0);
+                                out.fresh_weight += 1.0 / (1.0 + age / self.cfg.freshness_tau);
+                            }
+                        }
+                    }
+                }
+            }
+            // 4. Staleness sample at this instant (skew only once the
+            // whole fleet has loaded something — startup is not skew).
+            let published_upto = schedule.iter().take_while(|p| p.at <= t).count();
+            if published_upto > 0 {
+                let idxs: Vec<Option<usize>> = self
+                    .replicas
+                    .iter()
+                    .map(|rep| rep.version.and_then(sched_index))
+                    .collect();
+                let newest = published_upto - 1;
+                for idx in idxs.iter().flatten() {
+                    out.max_version_lag = out.max_version_lag.max((newest - idx) as u64);
+                }
+                if idxs.iter().all(Option::is_some) {
+                    let lo = idxs.iter().flatten().min().copied().unwrap_or(0);
+                    let hi = idxs.iter().flatten().max().copied().unwrap_or(0);
+                    out.max_skew_versions = out.max_skew_versions.max((hi - lo) as u64);
+                    out.max_skew_secs = out
+                        .max_skew_secs
+                        .max(schedule[hi].at - schedule[lo].at);
+                }
+            }
+        }
+
+        // Final fold: cache counters + residency.
+        for (r, rep) in self.replicas.iter().enumerate() {
+            stats[r].full_reloads = rep.full_reloads;
+            stats[r].cache_hits = rep.cache.hits;
+            stats[r].cache_misses = rep.cache.misses;
+            stats[r].rows_held = rep.rows_held();
+        }
+        out.replicas = stats;
+        if let Some(mig) = migration {
+            out.migration = Some(mig.stats.clone());
+        }
+        Ok(out)
+    }
+}

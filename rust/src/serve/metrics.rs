@@ -1,0 +1,204 @@
+//! What the serving plane measures — the production-facing counters a
+//! fleet run folds down to.
+//!
+//! Definitions (also in ARCHITECTURE.md "Serving plane"):
+//!
+//! * **version-swap latency** — virtual seconds from a version's
+//!   publish instant to the moment a replica *serves* it (poll delay +
+//!   fetch + apply); the tail (p99) across every swap on every replica
+//!   is the headline.
+//! * **staleness skew** — at any virtual instant, the spread between
+//!   the most- and least-caught-up replica, in versions
+//!   (`max_skew_versions`) and in publish-timestamp seconds
+//!   (`max_skew_secs`); `max_version_lag` is the worst single-replica
+//!   lag behind the newest published version.
+//! * **cache hit rate** — hot-row cache hits over cacheable lookups
+//!   (hits + table hits); untouched-row lookups can never be cached
+//!   and are reported separately.
+//! * **freshness-weighted QPS** — each answered lookup contributes
+//!   `1 / (1 + age/τ)` where `age` is how long ago the serving
+//!   replica's version was published; the sum over the horizon is QPS
+//!   discounted by staleness.
+
+use crate::metrics::nearest_rank;
+use crate::util::json::{num, obj, Value};
+
+/// Per-replica roll-up of one fleet run.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaServeStats {
+    pub rank: usize,
+    /// Version swaps completed (in-place applies + full reloads).
+    pub swaps: usize,
+    pub full_reloads: u64,
+    /// publish→serving latency per completed swap, seconds.
+    pub swap_latency: Vec<f64>,
+    /// Fetch+apply cost per swap, seconds.
+    pub apply_secs: Vec<f64>,
+    pub bytes_fetched: u64,
+    pub rows_patched: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Rows held at the end of the run.
+    pub rows_held: usize,
+}
+
+/// What one [`super::RollingMigration`] did.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationStats {
+    pub started_at: f64,
+    pub finished_at: f64,
+    /// Per-replica adopt (new-map row load) cost, in migration order.
+    pub adopt_secs: Vec<f64>,
+    /// Rows loaded into their new owners.
+    pub adopted_rows: u64,
+    pub bytes: u64,
+}
+
+impl MigrationStats {
+    pub fn to_json(&self) -> Value {
+        let mut sorted = self.adopt_secs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite adopt secs"));
+        obj(vec![
+            ("started_at", num(self.started_at)),
+            ("finished_at", num(self.finished_at)),
+            ("duration_secs", num(self.finished_at - self.started_at)),
+            ("adopt_p99_secs", num(nearest_rank(&sorted, 0.99))),
+            ("adopted_rows", num(self.adopted_rows as f64)),
+            ("bytes", num(self.bytes as f64)),
+        ])
+    }
+}
+
+/// Fleet-wide roll-up of one serve run ([`super::ServeFleet::run`]).
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub replicas: Vec<ReplicaServeStats>,
+    /// Lookups issued / answered (answered = hosted by the routed
+    /// replica; an unanswered lookup is a routing bug).
+    pub queries: u64,
+    pub answered: u64,
+    pub cache_hits: u64,
+    pub state_hits: u64,
+    /// Lookups of rows no published version ever touched (served by
+    /// the zero-shot/default path).
+    pub untouched: u64,
+    /// Lookups the routed replica did not host — must be zero; the
+    /// rolling-migration acceptance gate.
+    pub wrong_owner: u64,
+    /// Lookups that consulted both owner maps mid-migration.
+    pub double_routed: u64,
+    /// Σ 1/(1+age/τ) over answered lookups.
+    pub fresh_weight: f64,
+    pub horizon: f64,
+    /// Worst single-replica lag behind the newest published version.
+    pub max_version_lag: u64,
+    /// Worst most-vs-least-caught-up spread, in versions.
+    pub max_skew_versions: u64,
+    /// Same spread in publish-timestamp seconds.
+    pub max_skew_secs: f64,
+    pub migration: Option<MigrationStats>,
+}
+
+impl ServeMetrics {
+    fn sorted_over_replicas(&self, pick: impl Fn(&ReplicaServeStats) -> &[f64]) -> Vec<f64> {
+        let mut all: Vec<f64> = self
+            .replicas
+            .iter()
+            .flat_map(|r| pick(r).iter().copied())
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+        all
+    }
+
+    /// publish→serving latency quantile across every swap on every
+    /// replica (`q` in `[0,1]`, nearest-rank).
+    pub fn swap_latency_quantile(&self, q: f64) -> f64 {
+        nearest_rank(&self.sorted_over_replicas(|r| &r.swap_latency), q)
+    }
+
+    /// Fetch+apply cost quantile across every swap.
+    pub fn apply_secs_quantile(&self, q: f64) -> f64 {
+        nearest_rank(&self.sorted_over_replicas(|r| &r.apply_secs), q)
+    }
+
+    /// Hot-row cache hit rate over cacheable lookups.
+    pub fn hit_rate(&self) -> f64 {
+        let cacheable = self.cache_hits + self.state_hits;
+        if cacheable == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / cacheable as f64
+        }
+    }
+
+    /// Raw answered lookups per virtual second.
+    pub fn qps(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.answered as f64 / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// Freshness-weighted lookups per virtual second (see module docs).
+    pub fn fresh_qps(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.fresh_weight / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// `fresh_qps / qps` — 1.0 means every lookup was served from a
+    /// just-published version; staleness discounts it toward 0.
+    pub fn fresh_ratio(&self) -> f64 {
+        if self.answered == 0 {
+            0.0
+        } else {
+            self.fresh_weight / self.answered as f64
+        }
+    }
+
+    pub fn total_swaps(&self) -> usize {
+        self.replicas.iter().map(|r| r.swaps).sum()
+    }
+
+    pub fn total_full_reloads(&self) -> u64 {
+        self.replicas.iter().map(|r| r.full_reloads).sum()
+    }
+
+    pub fn total_bytes_fetched(&self) -> u64 {
+        self.replicas.iter().map(|r| r.bytes_fetched).sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("replicas", num(self.replicas.len() as f64)),
+            ("queries", num(self.queries as f64)),
+            ("answered", num(self.answered as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("state_hits", num(self.state_hits as f64)),
+            ("untouched", num(self.untouched as f64)),
+            ("wrong_owner", num(self.wrong_owner as f64)),
+            ("double_routed", num(self.double_routed as f64)),
+            ("hit_rate", num(self.hit_rate())),
+            ("qps", num(self.qps())),
+            ("fresh_qps", num(self.fresh_qps())),
+            ("fresh_ratio", num(self.fresh_ratio())),
+            ("swap_latency_p50", num(self.swap_latency_quantile(0.5))),
+            ("swap_latency_p99", num(self.swap_latency_quantile(0.99))),
+            ("apply_p50_secs", num(self.apply_secs_quantile(0.5))),
+            ("apply_p99_secs", num(self.apply_secs_quantile(0.99))),
+            ("swaps", num(self.total_swaps() as f64)),
+            ("full_reloads", num(self.total_full_reloads() as f64)),
+            ("bytes_fetched", num(self.total_bytes_fetched() as f64)),
+            ("max_version_lag", num(self.max_version_lag as f64)),
+            ("max_skew_versions", num(self.max_skew_versions as f64)),
+            ("max_skew_secs", num(self.max_skew_secs)),
+        ];
+        if let Some(m) = &self.migration {
+            fields.push(("migration", m.to_json()));
+        }
+        obj(fields)
+    }
+}

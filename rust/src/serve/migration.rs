@@ -1,0 +1,219 @@
+//! Rolling owner-map migration: move a live fleet from one
+//! [`OwnerMap`] to another replica-by-replica, with double-routed
+//! reads and zero wrong-owner lookups.
+//!
+//! State machine (one replica at a time, in rank order):
+//!
+//! ```text
+//! Pending ──start──▶ Adopting(0) ──▶ Adopting(1) ──▶ … ──▶ cutover ──▶ Done
+//! ```
+//!
+//! * **adopt** — replica `r` loads, *in addition to* the rows it
+//!   already hosts under the old map, the rows the new map assigns to
+//!   it (at its currently-served version: a migration never jumps
+//!   versions).  Until the fleet-wide cutover it hosts old ∪ new
+//!   ([`super::Hosting::Both`]), so every row keeps its old-map owner
+//!   alive throughout the transition — that standing overlap is why a
+//!   double-routed read can never miss.
+//! * **double-routed read** — while the migration is in transition, a
+//!   row whose old- and new-map owners differ consults both: the read
+//!   goes to the new owner once its adopt has *completed*, and to the
+//!   old owner (still hosting) before that.
+//! * **cutover** — after the last adopt completes, every replica drops
+//!   the rows the new map does not assign to it
+//!   ([`super::Replica::retire_to`]) and routing collapses back to
+//!   single-map.  The fleet is then bit-exact with one freshly built
+//!   under the new map (pinned in `tests/serve.rs`).
+
+use crate::embedding::OwnerMap;
+use crate::obs::{Tracer, Track};
+use crate::serve::metrics::MigrationStats;
+use crate::serve::replica::Replica;
+use crate::serve::SwapModel;
+use crate::stream::DeltaStore;
+use crate::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum MigState {
+    Pending,
+    /// `replica` is loading its new-map rows; done (and routable as a
+    /// new owner) at `done_at`.
+    Adopting { replica: usize, done_at: f64 },
+    Done,
+}
+
+/// Where a double-routed read should go (decided per lookup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Old and new owner agree (or no migration is in transition).
+    Single(usize),
+    /// Owners differ: `chosen` is the one to serve from (the new
+    /// owner once adopted, the old owner before that); both are
+    /// consulted, which is the double-read cost.
+    Double { chosen: usize, shadow: usize },
+}
+
+/// Live Modulo→JumpHash (or any map→map) migration driver.
+#[derive(Debug)]
+pub struct RollingMigration {
+    pub to: OwnerMap,
+    /// Virtual instant the first adopt may start.
+    pub start: f64,
+    state: MigState,
+    /// `adopted[r]` — replica `r`'s adopt completed; reads may prefer
+    /// it as a new-map owner.
+    adopted: Vec<bool>,
+    pub stats: MigrationStats,
+}
+
+impl RollingMigration {
+    pub fn new(to: OwnerMap, start: f64, fleet: usize) -> Self {
+        Self {
+            to,
+            start,
+            state: MigState::Pending,
+            adopted: vec![false; fleet],
+            stats: MigrationStats {
+                started_at: start,
+                ..MigrationStats::default()
+            },
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.state == MigState::Done
+    }
+
+    /// Is the fleet between the first adopt and the cutover at `now`?
+    /// (Double-routing is only needed inside this window.)
+    pub fn in_transition(&self, now: f64) -> bool {
+        now >= self.start && !self.done()
+    }
+
+    /// Drive every step due by `now`: start the first adopt, complete
+    /// due adopts, chain the next replica, and cut the fleet over
+    /// after the last one.  Call before serving each event; replicas
+    /// with a version swap in flight defer their adopt (the swap
+    /// commits first).
+    pub fn advance(
+        &mut self,
+        now: f64,
+        replicas: &mut [Replica],
+        store: &DeltaStore,
+        swap: &SwapModel,
+        tracer: Option<&Tracer>,
+    ) -> Result<()> {
+        loop {
+            match self.state {
+                MigState::Pending => {
+                    if now < self.start || replicas.is_empty() {
+                        return Ok(());
+                    }
+                    // Defer while the replica has a version swap in
+                    // flight: adopting mid-swap would load new-map rows
+                    // at the old version while the old-map rows patch
+                    // to the target — a mixed-version replica.  The
+                    // swap commits first; the next event retries.
+                    if replicas[0].swap_in_flight() {
+                        return Ok(());
+                    }
+                    self.begin_adopt(0, now, replicas, store, swap, tracer)?;
+                }
+                MigState::Adopting { replica, done_at } => {
+                    if now < done_at {
+                        return Ok(());
+                    }
+                    self.adopted[replica] = true;
+                    let next = replica + 1;
+                    if next < replicas.len() {
+                        if replicas[next].swap_in_flight() {
+                            // Same deferral as above (idempotent: the
+                            // `adopted` mark above re-runs harmlessly
+                            // until the swap commits).
+                            return Ok(());
+                        }
+                        self.begin_adopt(next, done_at.max(now), replicas, store, swap, tracer)?;
+                    } else {
+                        // Cutover: drop old-map rows everywhere, back
+                        // to single-map routing.
+                        for r in replicas.iter_mut() {
+                            r.retire_to(self.to);
+                        }
+                        self.stats.finished_at = done_at;
+                        self.state = MigState::Done;
+                        if let Some(t) = tracer {
+                            t.instant(
+                                "migration_cutover",
+                                done_at,
+                                &[("replicas", replicas.len() as f64)],
+                            );
+                        }
+                        return Ok(());
+                    }
+                }
+                MigState::Done => return Ok(()),
+            }
+        }
+    }
+
+    fn begin_adopt(
+        &mut self,
+        rank: usize,
+        at: f64,
+        replicas: &mut [Replica],
+        store: &DeltaStore,
+        swap: &SwapModel,
+        tracer: Option<&Tracer>,
+    ) -> Result<()> {
+        let stats = replicas[rank].adopt(store, self.to)?;
+        let secs = swap.adopt_secs(stats.bytes, stats.rows_patched);
+        self.stats.adopt_secs.push(secs);
+        self.stats.adopted_rows += stats.rows_patched as u64;
+        self.stats.bytes += stats.bytes;
+        if let Some(t) = tracer {
+            t.span(
+                "migrate_adopt",
+                Track::Replica(rank),
+                at,
+                secs,
+                &[
+                    ("rows", stats.rows_patched as f64),
+                    ("bytes", stats.bytes as f64),
+                ],
+            );
+        }
+        self.state = MigState::Adopting {
+            replica: rank,
+            done_at: at + secs,
+        };
+        Ok(())
+    }
+
+    /// Route one lookup at `now` under `old_map` (the fleet's
+    /// pre-migration active map).  Outside the transition window this
+    /// is plain single-map routing; inside it, rows whose owners
+    /// differ double-route (see module docs).
+    pub fn route(&self, row: u64, fleet: usize, old_map: OwnerMap, now: f64) -> Route {
+        if self.done() {
+            return Route::Single(self.to.owner(row, fleet));
+        }
+        if !self.in_transition(now) {
+            return Route::Single(old_map.owner(row, fleet));
+        }
+        let old = old_map.owner(row, fleet);
+        let new = self.to.owner(row, fleet);
+        if old == new {
+            Route::Single(old)
+        } else if self.adopted[new] {
+            Route::Double {
+                chosen: new,
+                shadow: old,
+            }
+        } else {
+            Route::Double {
+                chosen: old,
+                shadow: new,
+            }
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! The serving plane: versioned-model read replicas consuming the
+//! publish side's base+delta checkpoints.
+//!
+//! The paper's production claim — continuous delivery shrunk 4× — only
+//! pays off if inference replicas actually pick the versions up.  This
+//! subsystem closes that publish→consume loop on the virtual clock:
+//!
+//! * [`Replica`] — one shard of the fleet under an
+//!   [`crate::embedding::OwnerMap`].  It tracks the
+//!   [`crate::stream::DeltaStore`] by version and patches **in
+//!   place**: a delta version's changed-rows file
+//!   ([`crate::stream::DeltaStore::delta_rows`]) is applied row by row
+//!   into the live table (invalidating each patched row in the hot-row
+//!   [`crate::embedding::RowCache`]); full reloads happen only when
+//!   the reconstruction chain no longer passes through the served
+//!   version (full snapshot, compaction, GC).  In-place reconstruction
+//!   is pinned bit-identical to [`crate::stream::DeltaStore::load`]
+//!   (`tests/serve.rs`).
+//! * [`ServeFleet`] — the discrete-event driver: registry polls,
+//!   zipfian lookups ([`ZipfTraffic`]), swap costs ([`SwapModel`]),
+//!   staleness/freshness bookkeeping ([`ServeMetrics`]).
+//! * [`RollingMigration`] — live owner-map migration (e.g.
+//!   Modulo→JumpHash) moving the fleet replica-by-replica with
+//!   double-routed reads, zero wrong-owner lookups, and a bit-exact
+//!   post-cutover fleet.
+//!
+//! Traces: fleet activity lands on per-replica tracks
+//! ([`crate::obs::Track::Replica`]) — `swap_apply` / `migrate_adopt`
+//! spans, `serve_version` / `migration_cutover` instants — exported
+//! alongside the training/delivery tracks (`benches/serve.rs` writes
+//! `TRACE_serve.json`).
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use gmeta::config::ModelDims;
+//! use gmeta::serve::{PublishEvent, ServeConfig, ServeFleet, ZipfTraffic};
+//! use gmeta::stream::DeltaStore;
+//! use gmeta::util::TempDir;
+//!
+//! // A store with one published full snapshot…
+//! let tmp = TempDir::new()?;
+//! let mut store = DeltaStore::open(tmp.path())?;
+//! let dims = ModelDims { emb_dim: 4, ..ModelDims::default() };
+//! let ckpt = gmeta::checkpoint::Checkpoint {
+//!     step: 1,
+//!     variant: "g-meta".into(),
+//!     dims,
+//!     world: 2,
+//!     owner_map: Default::default(),
+//!     dense: vec![0.5; 8],
+//!     rows: vec![(0, vec![1.0; 4]), (1, vec![2.0; 4])],
+//! };
+//! store.publish(1, &ckpt, None)?;
+//!
+//! // …served by a 2-replica fleet under zipfian traffic.
+//! let cfg = ServeConfig { replicas: 2, emb_dim: 4, ..ServeConfig::default() };
+//! let mut fleet = ServeFleet::new(&store, cfg);
+//! let mut traffic = ZipfTraffic::new(16, 1.1, 7);
+//! let m = fleet.run(&[PublishEvent { at: 0.0, version: 1 }], &mut traffic, 60.0, None)?;
+//! assert_eq!(m.wrong_owner, 0);
+//! # Ok(()) }
+//! ```
+
+pub mod fleet;
+pub mod metrics;
+pub mod migration;
+pub mod replica;
+pub mod traffic;
+
+pub use fleet::{PublishEvent, ServeConfig, ServeFleet, SwapModel};
+pub use metrics::{MigrationStats, ReplicaServeStats, ServeMetrics};
+pub use migration::{RollingMigration, Route};
+pub use replica::{Hosting, Lookup, Replica, SwapStats};
+pub use traffic::ZipfTraffic;

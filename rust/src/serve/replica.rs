@@ -1,0 +1,317 @@
+//! One read replica: an in-place-patched shard of the published model.
+//!
+//! A replica owns the rows the fleet's [`OwnerMap`] assigns to its rank
+//! and serves lookups for them.  It tracks the [`DeltaStore`] by
+//! version: a delta version's changed-rows file is *already* an
+//! in-place patch, so catching up means inserting the overlay rows it
+//! hosts and swapping the dense replica — a full reload happens only
+//! when the reconstruction chain no longer passes through the
+//! replica's current version (a full snapshot, a compaction that
+//! rewrote a link, or GC that retired it).
+//!
+//! Every patched row is invalidated in the replica's hot-row
+//! [`RowCache`] — the cache must never serve a value the store has
+//! superseded (pinned in `tests/serve.rs`).
+
+use crate::embedding::{OwnerMap, RowCache};
+use crate::stream::{DeltaStore, VersionKind};
+use crate::util::fxhash::FxHashMap;
+use crate::Result;
+
+/// Which rows a replica hosts.  `Both` is the rolling-migration
+/// transitional state: the replica has adopted its new-map rows but
+/// still holds (and serves) its old-map rows until the fleet-wide
+/// cutover retires them — that overlap is what makes double-routed
+/// reads always find an owner.
+#[derive(Debug, Clone, Copy)]
+pub enum Hosting {
+    Single(OwnerMap),
+    Both { old: OwnerMap, new: OwnerMap },
+}
+
+impl Hosting {
+    /// Does a replica with this hosting state at `rank` of `fleet` hold
+    /// `row`?
+    pub fn hosts(&self, row: u64, rank: usize, fleet: usize) -> bool {
+        match self {
+            Hosting::Single(map) => map.owner(row, fleet) == rank,
+            Hosting::Both { old, new } => {
+                old.owner(row, fleet) == rank || new.owner(row, fleet) == rank
+            }
+        }
+    }
+}
+
+/// What one catch-up (version swap) actually did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwapStats {
+    /// Patch payload bytes fetched from the store (all hosted-or-not
+    /// rows ship over the wire; filtering happens on the replica).
+    pub bytes: u64,
+    /// Rows inserted/overwritten in this replica's table.
+    pub rows_patched: usize,
+    /// Versions applied (chain links walked).
+    pub versions_applied: usize,
+    /// True when the state was rebuilt from a full snapshot instead of
+    /// patched forward in place.
+    pub full_reload: bool,
+}
+
+/// The outcome of one lookup against a replica.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Lookup {
+    /// Served from the hot-row cache.
+    CacheHit(Vec<f32>),
+    /// Served from the replica's table (and promoted into the cache).
+    StateHit(Vec<f32>),
+    /// The replica owns this id but no published version ever touched
+    /// it — the serving tier falls back to the zero-shot/default
+    /// embedding.
+    Untouched,
+    /// The replica does not host this row: a routing bug upstream.
+    NotHosted,
+}
+
+/// The double-routed-read shadow of an in-flight swap: while the apply
+/// is "running" on the virtual clock, lookups route to the *old* view —
+/// for a delta swap that is the undo overlay (just the patched rows'
+/// previous values), for a full reload the entire previous row set.
+/// Undo-served values never enter the cache (they would outlive the
+/// commit and go stale).
+#[derive(Debug)]
+struct ShadowSwap {
+    to_version: u64,
+    /// Full reload: the old view is `undo` alone (no fallthrough to
+    /// the new table).
+    full: bool,
+    /// Patched row → previous value (`None` = row was absent).
+    undo: FxHashMap<u64, Option<Vec<f32>>>,
+}
+
+/// One serving replica (see module docs).
+#[derive(Debug)]
+pub struct Replica {
+    pub rank: usize,
+    /// Fleet size the owner map shards over (not the training world).
+    pub fleet: usize,
+    pub hosting: Hosting,
+    /// Store version currently *served* (`None` before the first
+    /// load).  While a swap is in flight this stays at the old version
+    /// — the new one becomes visible at [`Replica::commit_swap`].
+    pub version: Option<u64>,
+    /// Training step of the served version (from the patch header).
+    pub step: u64,
+    /// Dense replica θ of the served version.
+    pub dense: Vec<f32>,
+    rows: FxHashMap<u64, Vec<f32>>,
+    shadow: Option<ShadowSwap>,
+    pub cache: RowCache,
+    /// Lifetime counters, folded into `ServeMetrics`.
+    pub full_reloads: u64,
+    pub delta_applies: u64,
+}
+
+impl Replica {
+    pub fn new(rank: usize, fleet: usize, map: OwnerMap, cache: RowCache) -> Self {
+        Self {
+            rank,
+            fleet,
+            hosting: Hosting::Single(map),
+            version: None,
+            step: 0,
+            dense: Vec::new(),
+            rows: FxHashMap::default(),
+            shadow: None,
+            cache,
+            full_reloads: 0,
+            delta_applies: 0,
+        }
+    }
+
+    pub fn hosts(&self, row: u64) -> bool {
+        self.hosting.hosts(row, self.rank, self.fleet)
+    }
+
+    /// Rows currently held, sorted by id — comparable bit-for-bit
+    /// against [`DeltaStore::load`]'s sorted reconstruction.
+    pub fn rows_sorted(&self) -> Vec<(u64, Vec<f32>)> {
+        let mut out: Vec<(u64, Vec<f32>)> =
+            self.rows.iter().map(|(r, v)| (*r, v.clone())).collect();
+        out.sort_by_key(|(r, _)| *r);
+        out
+    }
+
+    pub fn row(&self, id: u64) -> Option<&[f32]> {
+        self.rows.get(&id).map(Vec::as_slice)
+    }
+
+    pub fn rows_held(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Catch up to `target` atomically: apply in place and make it
+    /// servable immediately.  The form the property tests and simple
+    /// consumers use; the fleet's clocked path is
+    /// [`Replica::begin_catch_up`] + [`Replica::commit_swap`].
+    pub fn catch_up(&mut self, store: &DeltaStore, target: u64) -> Result<SwapStats> {
+        let stats = self.begin_catch_up(store, target)?;
+        self.commit_swap();
+        Ok(stats)
+    }
+
+    /// Catch up to `target` in place, keeping the *old* view servable
+    /// until [`Replica::commit_swap`].  Walks the store's
+    /// reconstruction chain: if the replica's current version is on
+    /// it, every later link is a delta overlay — insert the hosted
+    /// rows (recording their previous values as the undo shadow) and
+    /// invalidate them in the cache.  Otherwise rebuild from the
+    /// chain's full head, parking the whole old row set as the shadow
+    /// and clearing the cache (nothing cached survives a reload).
+    pub fn begin_catch_up(&mut self, store: &DeltaStore, target: u64) -> Result<SwapStats> {
+        assert!(self.shadow.is_none(), "swap already in flight");
+        let chain = store.chain(target)?;
+        let mut stats = SwapStats::default();
+        let mut undo: FxHashMap<u64, Option<Vec<f32>>> = FxHashMap::default();
+        let resume = self
+            .version
+            .and_then(|cur| chain.iter().position(|m| m.version == cur))
+            .map(|p| p + 1);
+        let start = match resume {
+            Some(next) => next,
+            None => {
+                // Chain does not pass through us: full rebuild.  The
+                // entire old row set becomes the shadow's old view.
+                for (row, vals) in self.rows.drain() {
+                    undo.insert(row, Some(vals));
+                }
+                self.cache.clear();
+                stats.full_reload = true;
+                self.full_reloads += 1;
+                0
+            }
+        };
+        for meta in &chain[start..] {
+            let patch = store.delta_rows(meta.version)?;
+            debug_assert!(
+                start > 0 || meta.version != chain[0].version || patch.kind == VersionKind::Full,
+                "chain head must be a full snapshot"
+            );
+            stats.bytes += patch.payload_bytes();
+            stats.versions_applied += 1;
+            self.step = patch.step;
+            self.dense = patch.dense;
+            for (row, vals) in patch.rows {
+                if !self.hosting.hosts(row, self.rank, self.fleet) {
+                    continue;
+                }
+                self.cache.invalidate(row);
+                let prev = self.rows.insert(row, vals);
+                if !stats.full_reload {
+                    // First write wins: the undo must hold the value
+                    // served *before* this whole swap, not an
+                    // intermediate chain link's.
+                    undo.entry(row).or_insert(prev);
+                }
+                stats.rows_patched += 1;
+            }
+        }
+        if !stats.full_reload && stats.versions_applied > 0 {
+            self.delta_applies += 1;
+        }
+        self.shadow = Some(ShadowSwap {
+            to_version: target,
+            full: stats.full_reload,
+            undo,
+        });
+        Ok(stats)
+    }
+
+    /// Make the in-flight swap's version servable and drop the shadow.
+    pub fn commit_swap(&mut self) {
+        if let Some(shadow) = self.shadow.take() {
+            self.version = Some(shadow.to_version);
+        }
+    }
+
+    /// Is a swap applied but not yet committed?
+    pub fn swap_in_flight(&self) -> bool {
+        self.shadow.is_some()
+    }
+
+    /// Rolling migration, adopt step: additionally host the rows the
+    /// `new` map assigns to this rank, loaded from the replica's
+    /// *current* version (the version it serves does not jump
+    /// mid-migration).  Returns the stats of the extra load.  After
+    /// this the replica hosts old ∪ new until [`Replica::retire_to`].
+    pub fn adopt(&mut self, store: &DeltaStore, new: OwnerMap) -> Result<SwapStats> {
+        let version = self
+            .version
+            .ok_or_else(|| anyhow::anyhow!("replica {} adopted before first load", self.rank))?;
+        let old = match self.hosting {
+            Hosting::Single(map) => map,
+            Hosting::Both { .. } => anyhow::bail!("replica {} adopted twice", self.rank),
+        };
+        let state = store.load(version)?;
+        let mut stats = SwapStats::default();
+        for (row, vals) in state.rows {
+            if new.owner(row, self.fleet) != self.rank || self.rows.contains_key(&row) {
+                continue;
+            }
+            stats.bytes += (8 + vals.len() * 4) as u64;
+            self.rows.insert(row, vals);
+            stats.rows_patched += 1;
+        }
+        self.hosting = Hosting::Both { old, new };
+        Ok(stats)
+    }
+
+    /// Rolling migration, cutover step: drop every row the `map` does
+    /// not assign to this rank (invalidating it in the cache) and
+    /// return to single-map hosting.
+    pub fn retire_to(&mut self, map: OwnerMap) {
+        let rank = self.rank;
+        let fleet = self.fleet;
+        let dropped: Vec<u64> = self
+            .rows
+            .keys()
+            .filter(|&&row| map.owner(row, fleet) != rank)
+            .copied()
+            .collect();
+        for row in dropped {
+            self.rows.remove(&row);
+            self.cache.invalidate(row);
+        }
+        self.hosting = Hosting::Single(map);
+    }
+
+    /// Serve one lookup through the cache (a state hit is promoted).
+    ///
+    /// While a swap is in flight the read double-routes to the old
+    /// view: a row the swap patched serves its undo value (uncached —
+    /// it dies at commit), everything else flows through the normal
+    /// cache → table path.
+    pub fn lookup(&mut self, row: u64) -> Lookup {
+        if !self.hosts(row) {
+            return Lookup::NotHosted;
+        }
+        if let Some(shadow) = &self.shadow {
+            match shadow.undo.get(&row) {
+                Some(Some(vals)) => return Lookup::StateHit(vals.clone()),
+                Some(None) => return Lookup::Untouched,
+                None if shadow.full => return Lookup::Untouched,
+                None => {}
+            }
+        }
+        if let Some(vals) = self.cache.get(row) {
+            return Lookup::CacheHit(vals.to_vec());
+        }
+        match self.rows.get(&row) {
+            Some(vals) => {
+                let out = vals.clone();
+                self.cache.put(row, &out);
+                Lookup::StateHit(out)
+            }
+            None => Lookup::Untouched,
+        }
+    }
+}

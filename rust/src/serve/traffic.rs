@@ -1,0 +1,111 @@
+//! Zipfian lookup traffic for the serving fleet.
+//!
+//! Recommender id streams are Zipf-skewed (the same skew the training
+//! side's [`crate::embedding::cache::RowCache`] exploits): rank-`k`
+//! popularity ∝ `(k+1)^-s`.  The generator is seeded and fully
+//! deterministic — sampling walks a precomputed CDF — so every serve
+//! simulation replays bit-identically.
+//!
+//! The rank→id mapping is a seeded permutation of the id universe:
+//! without it the hottest rows would always be ids `0..k`, which both
+//! the modulo owner map and the training data generators treat
+//! specially, and the cache measurement would be confounded by
+//! placement.
+
+use crate::util::Rng;
+
+/// Seeded zipfian id sampler over a bounded universe.
+#[derive(Debug, Clone)]
+pub struct ZipfTraffic {
+    /// Cumulative popularity by rank, normalized to `[0, 1]`.
+    cdf: Vec<f64>,
+    /// Rank → row id (seeded permutation of `0..universe`).
+    ids: Vec<u64>,
+    exponent: f64,
+    rng: Rng,
+}
+
+impl ZipfTraffic {
+    /// A sampler over row ids `0..universe` with popularity
+    /// `(rank+1)^-exponent`.  `exponent = 0` is uniform; `~1` is the
+    /// classic web/recsys skew; higher concentrates further.
+    pub fn new(universe: usize, exponent: f64, seed: u64) -> Self {
+        assert!(universe > 0, "empty id universe");
+        let mut rng = Rng::seed_from_u64(seed ^ 0x21BF);
+        let mut weights = Vec::with_capacity(universe);
+        let mut total = 0.0f64;
+        for k in 0..universe {
+            let w = ((k + 1) as f64).powf(-exponent);
+            total += w;
+            weights.push(total);
+        }
+        let cdf = weights.into_iter().map(|w| w / total).collect();
+        let mut ids: Vec<u64> = (0..universe as u64).collect();
+        rng.shuffle(&mut ids);
+        Self {
+            cdf,
+            ids,
+            exponent,
+            rng,
+        }
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    /// Draw one row id.
+    pub fn sample(&mut self) -> u64 {
+        let u = self.rng.f64();
+        // First rank whose cumulative weight covers u.
+        let rank = match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).expect("finite cdf"))
+        {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
+        };
+        self.ids[rank]
+    }
+
+    /// Draw a batch of `n` row ids.
+    pub fn batch(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ZipfTraffic::new(1000, 1.1, 7);
+        let mut b = ZipfTraffic::new(1000, 1.1, 7);
+        assert_eq!(a.batch(256), b.batch(256));
+    }
+
+    #[test]
+    fn skew_concentrates_mass() {
+        // At s=1.2 the hottest 1% of ranks should absorb far more than
+        // 1% of draws; under uniform (s=0) they should not.
+        let universe = 10_000;
+        let draws = 20_000;
+        let frac = |exponent: f64| {
+            let mut t = ZipfTraffic::new(universe, exponent, 11);
+            let hot: std::collections::HashSet<u64> =
+                t.ids[..universe / 100].iter().copied().collect();
+            let hits = (0..draws).filter(|_| hot.contains(&t.sample())).count();
+            hits as f64 / draws as f64
+        };
+        assert!(frac(1.2) > 0.4, "zipf 1.2 hot mass {}", frac(1.2));
+        assert!(frac(0.0) < 0.05, "uniform hot mass {}", frac(0.0));
+    }
+
+    #[test]
+    fn samples_stay_in_universe() {
+        let mut t = ZipfTraffic::new(37, 0.9, 3);
+        for _ in 0..1000 {
+            assert!(t.sample() < 37);
+        }
+    }
+}

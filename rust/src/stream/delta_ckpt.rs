@@ -87,6 +87,44 @@ pub struct VersionMeta {
     pub step: u64,
 }
 
+/// One version's files read verbatim — the changed-rows view a serving
+/// replica patches in place, without materializing the full
+/// reconstruction [`DeltaStore::load`] would build.
+///
+/// For a [`VersionKind::Full`] version `rows` is the complete touched
+/// set (a reload); for a [`VersionKind::Delta`] it is the overlay only:
+/// rows that appeared or bit-changed since `parent`.  `dense` always
+/// carries the complete dense replica θ (it is small and ships with
+/// every version).  Rows are in file order, not sorted.
+#[derive(Debug, Clone)]
+pub struct VersionPatch {
+    pub version: u64,
+    pub kind: VersionKind,
+    /// The version this overlay applies to (`None` for fulls).
+    pub parent: Option<u64>,
+    pub step: u64,
+    /// Training world size recorded at publish (not the serving fleet).
+    pub world: usize,
+    pub owner_map: crate::embedding::OwnerMap,
+    /// Embedding dimension of each row in `rows`.
+    pub emb_dim: usize,
+    /// Complete dense replica for this version.
+    pub dense: Vec<f32>,
+    /// Changed rows (full touched set when `kind` is `Full`).
+    pub rows: Vec<(u64, Vec<f32>)>,
+}
+
+impl VersionPatch {
+    /// On-disk payload bytes this patch cost to fetch (dense + rows
+    /// payloads; headers/framing excluded — they are noise at row
+    /// scale).  What a consumer charges its download against a
+    /// bandwidth model.
+    pub fn payload_bytes(&self) -> u64 {
+        let row_stride = 8 + self.emb_dim * 4;
+        (self.dense.len() * 4 + self.rows.len() * row_stride) as u64
+    }
+}
+
 /// What one publish actually uploaded.
 #[derive(Debug, Clone, Copy)]
 pub struct PublishStats {
@@ -644,6 +682,39 @@ impl DeltaStore {
         }
         state.rows = rows.into_iter().collect();
         Ok(state)
+    }
+
+    /// The reconstruction chain `[nearest full ancestor, …, version]` —
+    /// public so a consumer holding an already-applied version can
+    /// decide whether it can patch forward in place (its version is on
+    /// the chain, everything after it a delta) or must reload (the
+    /// chain no longer passes through it: compaction rewrote a link, or
+    /// GC retired it).
+    pub fn chain(&self, version: u64) -> Result<Vec<VersionMeta>> {
+        self.chain_to_full(version)
+    }
+
+    /// Read one version's changed rows verbatim — the in-place patch a
+    /// read replica applies, without reconstructing the full state via
+    /// [`DeltaStore::load`] (and without re-reading the base chain per
+    /// version).  A delta's rows are the overlay on `parent` only; a
+    /// full's rows are the complete touched set.  Applying a delta
+    /// patch on top of the parent's state reproduces `load(version)`
+    /// bit-for-bit (property-tested in `tests/serve.rs`).
+    pub fn delta_rows(&self, version: u64) -> Result<VersionPatch> {
+        let meta = self.meta_of(version)?.clone();
+        let state = self.read_version(version)?;
+        Ok(VersionPatch {
+            version: meta.version,
+            kind: meta.kind,
+            parent: meta.parent,
+            step: state.step,
+            world: state.world,
+            owner_map: state.owner_map,
+            emb_dim: state.dims.emb_dim,
+            dense: state.dense,
+            rows: state.rows,
+        })
     }
 
     /// Compact `version` in place: rewrite it as a full snapshot of its

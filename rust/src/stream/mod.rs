@@ -48,7 +48,7 @@ pub mod session;
 
 pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
 pub use delta_ckpt::{
-    DeltaStore, GcStats, PublishStats, RowFingerprints, VersionKind, VersionMeta,
+    DeltaStore, GcStats, PublishStats, RowFingerprints, VersionKind, VersionMeta, VersionPatch,
 };
 pub use elastic::{
     BacklogPolicy, ElasticEvent, FailurePlan, PhaseTimePolicy, ScaleDecision, ScalePolicy,

@@ -1,0 +1,252 @@
+//! Property tests for the hot-row cache ([`gmeta::embedding::RowCache`])
+//! — the serving plane leans on it (per-replica hot rows, invalidation
+//! on delta apply), so its contract gets its own seeded sweep:
+//!
+//! * TTL expiry is exact at the boundary (valid while `age < ttl`,
+//!   including the degenerate `ttl = 0` cache that never serves).
+//! * Capacity is a hard bound; eviction removes exactly one existing
+//!   victim and never fires on a re-put of a cached key.
+//! * `invalidate` forces a miss for that row and only that row.
+//! * `hit_rate` edge cases: empty cache, fresh counters, exact ratio,
+//!   counters surviving `clear`.
+//! * `partition_lookups` splits a stream into per-position hits and a
+//!   deduplicated, order-preserving miss list.
+//! * Same seed + same op stream ⇒ same cache (eviction is random but
+//!   deterministic).
+
+use gmeta::embedding::{partition_lookups, RowCache};
+use gmeta::util::Rng;
+
+/// Run `body(seed, rng)` for `n` seeded cases; panic with the seed on
+/// failure so the case is replayable.
+fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(0xCAC4E ^ seed);
+        body(seed, &mut rng);
+    }
+}
+
+const DIM: usize = 3;
+
+fn vals(row: u64) -> Vec<f32> {
+    vec![row as f32, -(row as f32), 0.5]
+}
+
+#[test]
+fn ttl_expiry_is_exact_at_the_boundary() {
+    cases(40, |seed, rng| {
+        let ttl = rng.gen_range(1, 6);
+        let ticks = rng.gen_range(0, 8);
+        let mut c = RowCache::new(ttl, 64, DIM, seed);
+        c.put(9, &vals(9));
+        for _ in 0..ticks {
+            c.tick();
+        }
+        let want_hit = ticks < ttl;
+        assert_eq!(
+            c.get(9).is_some(),
+            want_hit,
+            "seed {seed}: ttl {ttl}, age {ticks}"
+        );
+        // A re-put refreshes the stamp: the row survives another ttl-1
+        // ticks from now.
+        c.put(9, &vals(9));
+        for _ in 0..ttl - 1 {
+            c.tick();
+        }
+        assert!(c.get(9).is_some(), "seed {seed}: refresh did not reset age");
+        c.tick();
+        assert!(c.get(9).is_none(), "seed {seed}: expired after refreshed ttl");
+    });
+}
+
+#[test]
+fn zero_ttl_cache_never_serves() {
+    let mut c = RowCache::new(0, 8, DIM, 1);
+    c.put(1, &vals(1));
+    assert!(c.get(1).is_none(), "ttl=0 means nothing is ever fresh");
+    assert_eq!(c.hit_rate(), 0.0);
+}
+
+#[test]
+fn capacity_is_a_hard_bound_and_eviction_takes_one_victim() {
+    cases(30, |seed, rng| {
+        let capacity = rng.gen_range(1, 33) as usize;
+        let mut c = RowCache::new(u64::MAX, capacity, DIM, seed);
+        for i in 0..(capacity as u64 * 3) {
+            c.put(i, &vals(i));
+            let expect = ((i + 1) as usize).min(capacity);
+            assert_eq!(
+                c.len(),
+                expect,
+                "seed {seed}: len after {} distinct puts (capacity {capacity})",
+                i + 1
+            );
+        }
+        // Re-putting a key that is already cached never evicts: the
+        // whole population survives.
+        let survivors: Vec<u64> = (0..capacity as u64 * 3).filter(|&i| c.get(i).is_some()).collect();
+        assert_eq!(survivors.len(), capacity, "seed {seed}");
+        for &row in &survivors {
+            c.put(row, &vals(row));
+            assert_eq!(c.len(), capacity, "seed {seed}: re-put of {row} evicted");
+        }
+        for &row in &survivors {
+            assert!(c.get(row).is_some(), "seed {seed}: re-put dropped {row}");
+        }
+    });
+}
+
+#[test]
+fn invalidate_hits_one_row_only() {
+    cases(30, |seed, rng| {
+        let mut c = RowCache::new(u64::MAX, 128, DIM, seed);
+        let rows: Vec<u64> = (0..16).map(|_| rng.gen_range(0, 1 << 20)).collect();
+        for &r in &rows {
+            c.put(r, &vals(r));
+        }
+        let victim = rows[rng.gen_range(0, rows.len() as u64) as usize];
+        c.invalidate(victim);
+        for &r in &rows {
+            if r == victim {
+                assert!(c.get(r).is_none(), "seed {seed}: {r} survived invalidate");
+            } else {
+                assert!(c.get(r).is_some(), "seed {seed}: bystander {r} was dropped");
+            }
+        }
+        // Invalidating an absent row is a no-op.
+        let before = c.len();
+        c.invalidate(0xDEAD_BEEF_0000 + seed);
+        assert_eq!(c.len(), before);
+    });
+}
+
+#[test]
+fn hit_rate_edges_and_exact_ratio() {
+    // Empty cache, no lookups: defined as 0, not NaN.
+    let mut c = RowCache::new(8, 8, DIM, 0);
+    assert_eq!(c.hit_rate(), 0.0);
+    // Only misses.
+    assert!(c.get(1).is_none());
+    assert!(c.get(2).is_none());
+    assert_eq!(c.hit_rate(), 0.0);
+
+    cases(20, |seed, rng| {
+        let mut c = RowCache::new(u64::MAX, 256, DIM, seed);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for _ in 0..200 {
+            let row = rng.gen_range(0, 40);
+            if c.get(row).is_some() {
+                hits += 1;
+            } else {
+                misses += 1;
+                c.put(row, &vals(row));
+            }
+        }
+        assert_eq!((c.hits, c.misses), (hits, misses), "seed {seed}");
+        let want = hits as f64 / (hits + misses) as f64;
+        assert!(
+            (c.hit_rate() - want).abs() < 1e-12,
+            "seed {seed}: {} vs {want}",
+            c.hit_rate()
+        );
+    });
+}
+
+#[test]
+fn clear_empties_contents_but_keeps_counters() {
+    let mut c = RowCache::new(u64::MAX, 32, DIM, 0);
+    for i in 0..10u64 {
+        c.put(i, &vals(i));
+    }
+    let _ = c.get(3); // hit
+    let _ = c.get(99); // miss
+    let (h, m) = (c.hits, c.misses);
+    c.clear();
+    assert!(c.is_empty());
+    assert_eq!(c.len(), 0);
+    assert_eq!((c.hits, c.misses), (h, m), "counters describe the stream");
+    assert!(c.get(3).is_none(), "cleared rows miss");
+}
+
+/// `put` with the wrong row width is a caller bug; debug builds catch
+/// it at the boundary.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "assertion")]
+fn dim_mismatch_put_panics_in_debug() {
+    let mut c = RowCache::new(8, 8, DIM, 0);
+    c.put(1, &[1.0; DIM + 1]);
+}
+
+#[test]
+fn partition_splits_hits_and_deduped_ordered_misses() {
+    cases(30, |seed, rng| {
+        let mut c = RowCache::new(u64::MAX, 256, DIM, seed);
+        let universe = 24u64;
+        for r in 0..universe {
+            if rng.gen_bool(0.5) {
+                c.put(r, &vals(r));
+            }
+        }
+        let ids: Vec<u64> = (0..rng.gen_range(0, 40))
+            .map(|_| rng.gen_range(0, universe))
+            .collect();
+        let cached: Vec<bool> = (0..universe).map(|r| c.get(r).is_some()).collect();
+        let (hits, missing) = partition_lookups(&mut c, &ids);
+
+        assert_eq!(hits.len(), ids.len(), "seed {seed}: positional");
+        for (pos, id) in ids.iter().enumerate() {
+            match &hits[pos] {
+                Some(v) => {
+                    assert!(cached[*id as usize], "seed {seed}: hit on uncached {id}");
+                    assert_eq!(v, &vals(*id), "seed {seed}: wrong values for {id}");
+                }
+                None => assert!(!cached[*id as usize], "seed {seed}: miss on cached {id}"),
+            }
+        }
+        // Miss list: exactly the distinct uncached ids, first-seen order.
+        let mut want_missing = Vec::new();
+        for &id in &ids {
+            if !cached[id as usize] && !want_missing.contains(&id) {
+                want_missing.push(id);
+            }
+        }
+        assert_eq!(missing, want_missing, "seed {seed}");
+    });
+}
+
+#[test]
+fn same_seed_same_ops_same_cache() {
+    cases(10, |seed, rng| {
+        let mut a = RowCache::new(64, 8, DIM, seed);
+        let mut b = RowCache::new(64, 8, DIM, seed);
+        let ops: Vec<(u8, u64)> = (0..300)
+            .map(|_| (rng.gen_range(0, 4) as u8, rng.gen_range(0, 64)))
+            .collect();
+        for &(op, row) in &ops {
+            match op {
+                0 => {
+                    a.put(row, &vals(row));
+                    b.put(row, &vals(row));
+                }
+                1 => {
+                    assert_eq!(a.get(row).is_some(), b.get(row).is_some(), "seed {seed}");
+                }
+                2 => {
+                    a.invalidate(row);
+                    b.invalidate(row);
+                }
+                _ => {
+                    a.tick();
+                    b.tick();
+                }
+            }
+        }
+        assert_eq!(a.len(), b.len(), "seed {seed}: diverged despite same seed");
+        assert_eq!((a.hits, a.misses), (b.hits, b.misses), "seed {seed}");
+        for row in 0..64 {
+            assert_eq!(a.get(row).is_some(), b.get(row).is_some(), "seed {seed}");
+        }
+    });
+}

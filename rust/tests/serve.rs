@@ -1,0 +1,464 @@
+//! Serving-plane invariants (ISSUE 7 acceptance):
+//!
+//! * **In-place reconstruction ≡ `DeltaStore::load`** — a replica that
+//!   patches delta overlays in place holds, at every published version
+//!   it lands on, exactly the rows `load` reconstructs — bit-for-bit,
+//!   across random publish/compact/gc interleavings, under both dedup
+//!   policies (exact diff and fingerprint).
+//! * **Sharded fleets tile the table** — per-replica state is `load`
+//!   filtered by ownership; the fleet union is the whole table, under
+//!   both owner maps.
+//! * **Swap shadow** — while a swap is in flight the old view serves
+//!   (undo overlay / parked full state); commit flips atomically; the
+//!   hot-row cache never serves a superseded value.
+//! * **Rolling migration** — Modulo→JumpHash completes with zero
+//!   wrong-owner lookups while double-routing, and the post-cutover
+//!   fleet is bit-exact with one freshly built under the new map.
+
+use gmeta::checkpoint::Checkpoint;
+use gmeta::config::ModelDims;
+use gmeta::embedding::{OwnerMap, RowCache};
+use gmeta::serve::{
+    Lookup, PublishEvent, Replica, RollingMigration, ServeConfig, ServeFleet, ZipfTraffic,
+};
+use gmeta::stream::DeltaStore;
+use gmeta::util::{Rng, TempDir};
+
+/// Run `body(seed, rng)` for `n` seeded cases; panic with the seed on
+/// failure so the case is replayable.
+fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(0x5E21E ^ seed);
+        body(seed, &mut rng);
+    }
+}
+
+const EMB_DIM: usize = 4;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        emb_dim: EMB_DIM,
+        ..ModelDims::default()
+    }
+}
+
+fn ckpt(step: u64, dense: Vec<f32>, rows: Vec<(u64, Vec<f32>)>) -> Checkpoint {
+    Checkpoint {
+        step,
+        variant: "g-meta".into(),
+        dims: dims(),
+        world: 4,
+        owner_map: OwnerMap::Modulo,
+        dense,
+        rows,
+    }
+}
+
+fn rand_vals(rng: &mut Rng) -> Vec<f32> {
+    (0..EMB_DIM).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+/// Evolve `state` like a delivery window: mutate some existing rows,
+/// append some new ones, refresh the dense replica.
+fn evolve(rng: &mut Rng, state: &mut Checkpoint, universe: u64) {
+    state.step += 1;
+    for v in state.dense.iter_mut() {
+        *v += rng.f64() as f32 * 0.1;
+    }
+    let n = state.rows.len();
+    for _ in 0..rng.gen_range(1, 8) {
+        let i = rng.gen_range(0, n as u64) as usize;
+        state.rows[i].1 = rand_vals(rng);
+    }
+    for _ in 0..rng.gen_range(0, 5) {
+        let id = rng.gen_range(0, universe);
+        if !state.rows.iter().any(|(r, _)| *r == id) {
+            let vals = rand_vals(rng);
+            state.rows.push((id, vals));
+        }
+    }
+    state.rows.sort_by_key(|(r, _)| *r);
+}
+
+fn bits(rows: &[(u64, Vec<f32>)]) -> Vec<(u64, Vec<u32>)> {
+    rows.iter()
+        .map(|(r, v)| (*r, v.iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+fn assert_replica_matches_load(
+    seed: u64,
+    replica: &Replica,
+    store: &DeltaStore,
+    version: u64,
+    map: OwnerMap,
+    fleet: usize,
+) {
+    let want = store.load(version).expect("load");
+    let want_rows: Vec<(u64, Vec<f32>)> = want
+        .rows
+        .into_iter()
+        .filter(|(r, _)| map.owner(*r, fleet) == replica.rank)
+        .collect();
+    assert_eq!(
+        bits(&replica.rows_sorted()),
+        bits(&want_rows),
+        "seed {seed}: replica {} rows diverge from load({version})",
+        replica.rank
+    );
+    let dense_bits: Vec<u32> = replica.dense.iter().map(|x| x.to_bits()).collect();
+    let want_dense: Vec<u32> = want.dense.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(dense_bits, want_dense, "seed {seed}: dense diverges");
+    assert_eq!(replica.step, want.step, "seed {seed}: step diverges");
+}
+
+fn fresh_replica(rank: usize, fleet: usize, map: OwnerMap) -> Replica {
+    Replica::new(rank, fleet, map, RowCache::new(64, 256, EMB_DIM, rank as u64))
+}
+
+/// The acceptance property: random publish/compact/gc interleavings,
+/// both dedup policies, replicas catching up at random points — every
+/// landing is bit-identical to `load`.
+#[test]
+fn in_place_reconstruction_matches_load_across_interleavings() {
+    for fingerprint_dedup in [false, true] {
+        cases(12, |seed, rng| {
+            let tmp = TempDir::new().unwrap();
+            let mut store = DeltaStore::open(tmp.path()).unwrap();
+            if fingerprint_dedup {
+                store.enable_dedup(1 << 12);
+            }
+            let universe = 64;
+            let mut state = ckpt(
+                0,
+                (0..6).map(|_| rng.f64() as f32).collect(),
+                (0..universe / 2)
+                    .map(|r| {
+                        let vals = rand_vals(rng);
+                        (r, vals)
+                    })
+                    .collect(),
+            );
+            let mut version = 1u64;
+            store.publish(version, &state, None).unwrap();
+            let mut prev = state.clone();
+
+            // One all-rows replica and a 3-shard fleet catching up at
+            // staggered random moments.
+            let mut solo = fresh_replica(0, 1, OwnerMap::Modulo);
+            let mut shards: Vec<Replica> = (0..3)
+                .map(|r| fresh_replica(r, 3, OwnerMap::JumpHash))
+                .collect();
+
+            for _ in 0..14 {
+                match rng.gen_range(0, 10) {
+                    // Publish a delta (the common delivery op).
+                    0..=4 => {
+                        evolve(rng, &mut state, universe);
+                        version += 1;
+                        if fingerprint_dedup {
+                            store.save_delta(version, &state, version - 1).unwrap();
+                        } else {
+                            store
+                                .publish(version, &state, Some((version - 1, &prev)))
+                                .unwrap();
+                        }
+                        prev = state.clone();
+                    }
+                    // Publish a full snapshot.
+                    5 => {
+                        evolve(rng, &mut state, universe);
+                        version += 1;
+                        store.publish(version, &state, None).unwrap();
+                        prev = state.clone();
+                    }
+                    // Compact a random existing version in place.
+                    6 => {
+                        let vs: Vec<u64> =
+                            store.versions().iter().map(|m| m.version).collect();
+                        let pick = vs[rng.gen_range(0, vs.len() as u64) as usize];
+                        store.compact(pick).unwrap();
+                    }
+                    // Retention GC.
+                    7 => {
+                        let keep = rng.gen_range(1, 3) as usize;
+                        store.gc(keep).unwrap();
+                    }
+                    // A replica catches up to a random live version.
+                    _ => {
+                        let vs: Vec<u64> =
+                            store.versions().iter().map(|m| m.version).collect();
+                        let target = vs[rng.gen_range(0, vs.len() as u64) as usize];
+                        if rng.gen_bool(0.5) {
+                            solo.catch_up(&store, target).unwrap();
+                            assert_replica_matches_load(
+                                seed,
+                                &solo,
+                                &store,
+                                target,
+                                OwnerMap::Modulo,
+                                1,
+                            );
+                        } else {
+                            let r = rng.gen_range(0, 3) as usize;
+                            shards[r].catch_up(&store, target).unwrap();
+                            assert_replica_matches_load(
+                                seed,
+                                &shards[r],
+                                &store,
+                                target,
+                                OwnerMap::JumpHash,
+                                3,
+                            );
+                        }
+                    }
+                }
+            }
+
+            // Everyone lands on the latest version; the shard union
+            // tiles the full table exactly.
+            let latest = store.latest().unwrap().version;
+            solo.catch_up(&store, latest).unwrap();
+            assert_replica_matches_load(seed, &solo, &store, latest, OwnerMap::Modulo, 1);
+            let mut union: Vec<(u64, Vec<f32>)> = Vec::new();
+            for shard in &mut shards {
+                shard.catch_up(&store, latest).unwrap();
+                assert_replica_matches_load(
+                    seed,
+                    shard,
+                    &store,
+                    latest,
+                    OwnerMap::JumpHash,
+                    3,
+                );
+                union.extend(shard.rows_sorted());
+            }
+            union.sort_by_key(|(r, _)| *r);
+            assert_eq!(
+                bits(&union),
+                bits(&store.load(latest).unwrap().rows),
+                "seed {seed}: shard union does not tile the table"
+            );
+        });
+    }
+}
+
+/// While a swap is in flight the replica serves the old view; commit
+/// flips; the cache never leaks a superseded value through either path.
+#[test]
+fn swap_shadow_serves_old_view_and_cache_never_goes_stale() {
+    let tmp = TempDir::new().unwrap();
+    let mut store = DeltaStore::open(tmp.path()).unwrap();
+    let v1_row7 = vec![1.0f32, 2.0, 3.0, 4.0];
+    let v2_row7 = vec![9.0f32, 9.0, 9.0, 9.0];
+    let s1 = ckpt(1, vec![0.5; 6], vec![(7, v1_row7.clone()), (8, vec![0.25; 4])]);
+    let mut s2 = s1.clone();
+    s2.step = 2;
+    s2.rows[0].1 = v2_row7.clone();
+    s2.rows.push((9, vec![7.0; 4]));
+    store.publish(1, &s1, None).unwrap();
+    store.publish(2, &s2, Some((1, &s1))).unwrap();
+
+    let mut rep = fresh_replica(0, 1, OwnerMap::Modulo);
+    rep.catch_up(&store, 1).unwrap();
+    // Warm the cache with row 7 (miss→promote, then hit).
+    assert_eq!(rep.lookup(7), Lookup::StateHit(v1_row7.clone()));
+    assert_eq!(rep.lookup(7), Lookup::CacheHit(v1_row7.clone()));
+
+    // Swap in flight: old values serve (patched row 7 via undo, new
+    // row 9 invisible), version unchanged.
+    let stats = rep.begin_catch_up(&store, 2).unwrap();
+    assert!(!stats.full_reload, "delta chain must patch in place");
+    assert!(rep.swap_in_flight());
+    assert_eq!(rep.version, Some(1));
+    assert_eq!(rep.lookup(7), Lookup::StateHit(v1_row7.clone()));
+    assert_eq!(rep.lookup(9), Lookup::Untouched);
+    // Unpatched rows flow through the cache as usual.
+    assert_eq!(rep.lookup(8), Lookup::StateHit(vec![0.25; 4]));
+
+    // Commit: the new version serves everywhere; the cache was
+    // invalidated for the patched row, so no stale hit is possible.
+    rep.commit_swap();
+    assert_eq!(rep.version, Some(2));
+    assert_eq!(rep.lookup(7), Lookup::StateHit(v2_row7.clone()));
+    assert_eq!(rep.lookup(7), Lookup::CacheHit(v2_row7));
+    assert_eq!(rep.lookup(9), Lookup::StateHit(vec![7.0; 4]));
+
+    // Full-reload shadow (catching up *backwards* forces one): the
+    // whole old row set keeps serving until commit.
+    let stats = rep.begin_catch_up(&store, 1).unwrap();
+    assert!(stats.full_reload);
+    assert_eq!(rep.version, Some(2));
+    assert_eq!(rep.lookup(9), Lookup::StateHit(vec![7.0; 4]));
+    rep.commit_swap();
+    assert_eq!(rep.version, Some(1));
+    assert_eq!(rep.lookup(9), Lookup::Untouched);
+    assert_eq!(rep.lookup(7), Lookup::StateHit(v1_row7));
+}
+
+/// Build a store + publish schedule shaped like a delivery session.
+fn seeded_store(
+    rng: &mut Rng,
+    tmp: &TempDir,
+    universe: u64,
+    versions: usize,
+    cadence: f64,
+) -> (DeltaStore, Vec<PublishEvent>) {
+    let mut store = DeltaStore::open(tmp.path()).unwrap();
+    let mut state = ckpt(
+        0,
+        (0..6).map(|_| rng.f64() as f32).collect(),
+        (0..universe)
+            .map(|r| {
+                let vals = (0..EMB_DIM).map(|_| rng.f64() as f32).collect();
+                (r, vals)
+            })
+            .collect(),
+    );
+    let mut schedule = Vec::new();
+    store.publish(1, &state, None).unwrap();
+    schedule.push(PublishEvent { at: 0.0, version: 1 });
+    let mut prev = state.clone();
+    for v in 2..=(versions as u64) {
+        evolve(rng, &mut state, universe);
+        store.publish(v, &state, Some((v - 1, &prev))).unwrap();
+        prev = state.clone();
+        schedule.push(PublishEvent {
+            at: (v - 1) as f64 * cadence,
+            version: v,
+        });
+    }
+    (store, schedule)
+}
+
+/// Rolling Modulo→JumpHash migration: zero wrong-owner lookups during
+/// double-routing, and a post-cutover fleet bit-exact with one freshly
+/// built under JumpHash.
+#[test]
+fn rolling_migration_is_lossless_and_bit_exact() {
+    cases(6, |seed, rng| {
+        let tmp = TempDir::new().unwrap();
+        let (store, schedule) = seeded_store(rng, &tmp, 96, 8, 6.0);
+        let horizon = 90.0;
+        let cfg = ServeConfig {
+            replicas: 4,
+            poll_interval: 2.0,
+            emb_dim: EMB_DIM,
+            qps: 100.0,
+            batch: 8,
+            seed,
+            ..ServeConfig::default()
+        };
+        let mut fleet = ServeFleet::new(&store, cfg.clone());
+        let mut traffic = ZipfTraffic::new(96, 1.1, seed ^ 0xFACE);
+        let mut mig = RollingMigration::new(OwnerMap::JumpHash, 25.0, cfg.replicas);
+        let m = fleet
+            .run(&schedule, &mut traffic, horizon, Some(&mut mig))
+            .unwrap();
+
+        assert_eq!(m.wrong_owner, 0, "seed {seed}: wrong-owner lookups");
+        assert!(m.double_routed > 0, "seed {seed}: migration never double-routed");
+        assert!(mig.done(), "seed {seed}: migration did not finish");
+        let mstats = m.migration.as_ref().unwrap();
+        assert!(
+            mstats.finished_at > mstats.started_at,
+            "seed {seed}: empty migration window"
+        );
+        assert_eq!(mstats.adopt_secs.len(), cfg.replicas);
+
+        // Post-cutover: land everyone on the latest version and demand
+        // bit-exact equality with a fresh JumpHash fleet.
+        let latest = store.latest().unwrap().version;
+        let jump_cfg = ServeConfig {
+            owner_map: OwnerMap::JumpHash,
+            ..cfg.clone()
+        };
+        let mut fresh = ServeFleet::new(&store, jump_cfg);
+        for r in 0..cfg.replicas {
+            fleet.replicas[r].catch_up(&store, latest).unwrap();
+            fresh.replicas[r].catch_up(&store, latest).unwrap();
+            assert_eq!(
+                bits(&fleet.replicas[r].rows_sorted()),
+                bits(&fresh.replicas[r].rows_sorted()),
+                "seed {seed}: migrated replica {r} != fresh JumpHash replica"
+            );
+            assert_replica_matches_load(
+                seed,
+                &fleet.replicas[r],
+                &store,
+                latest,
+                OwnerMap::JumpHash,
+                cfg.replicas,
+            );
+        }
+    });
+}
+
+/// Fleet-level sanity: the run answers every query, measures sensible
+/// rates, and staleness skew stays within the poll interval's reach.
+#[test]
+fn fleet_metrics_are_coherent() {
+    let mut rng = Rng::seed_from_u64(0xF1EE7);
+    let tmp = TempDir::new().unwrap();
+    let (store, schedule) = seeded_store(&mut rng, &tmp, 128, 10, 5.0);
+    let cfg = ServeConfig {
+        replicas: 3,
+        poll_interval: 4.0,
+        emb_dim: EMB_DIM,
+        qps: 150.0,
+        batch: 10,
+        ..ServeConfig::default()
+    };
+    let mut fleet = ServeFleet::new(&store, cfg);
+    let mut traffic = ZipfTraffic::new(128, 1.2, 42);
+    let m = fleet.run(&schedule, &mut traffic, 80.0, None).unwrap();
+
+    assert_eq!(m.wrong_owner, 0);
+    assert_eq!(m.double_routed, 0, "no migration, no double reads");
+    assert_eq!(m.queries, m.answered);
+    assert!(m.queries > 0);
+    assert!(m.total_swaps() > 0, "fleet never swapped a version");
+    assert!(m.qps() > 0.0);
+    assert!(m.hit_rate() > 0.0 && m.hit_rate() <= 1.0, "hit rate {}", m.hit_rate());
+    assert!(m.fresh_ratio() > 0.0 && m.fresh_ratio() <= 1.0);
+    assert!(m.swap_latency_quantile(0.99) >= m.swap_latency_quantile(0.5));
+    assert!(
+        m.swap_latency_quantile(0.5) > 0.0,
+        "swaps take time on the virtual clock"
+    );
+    // Replicas poll every 4s against a 5s publish cadence: nobody
+    // should ever fall a whole chain behind.
+    assert!(
+        m.max_version_lag <= 3,
+        "version lag {} exceeds the poll cadence's reach",
+        m.max_version_lag
+    );
+}
+
+/// The zipf knob does what the cache expects: hotter traffic, higher
+/// hit rate (the bench pins the full sweep; this is the cheap pin).
+#[test]
+fn hotter_zipf_traffic_raises_hit_rate() {
+    let mut rng = Rng::seed_from_u64(0x21FF);
+    let tmp = TempDir::new().unwrap();
+    let (store, schedule) = seeded_store(&mut rng, &tmp, 512, 6, 8.0);
+    let run = |exponent: f64| {
+        let cfg = ServeConfig {
+            replicas: 2,
+            emb_dim: EMB_DIM,
+            cache_capacity: 64,
+            qps: 400.0,
+            batch: 16,
+            ..ServeConfig::default()
+        };
+        let mut fleet = ServeFleet::new(&store, cfg);
+        let mut traffic = ZipfTraffic::new(512, exponent, 9);
+        fleet.run(&schedule, &mut traffic, 60.0, None).unwrap().hit_rate()
+    };
+    let cold = run(0.2);
+    let hot = run(1.4);
+    assert!(
+        hot > cold,
+        "hit rate must grow with skew (zipf 0.2 -> {cold:.3}, 1.4 -> {hot:.3})"
+    );
+}
