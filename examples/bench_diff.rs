@@ -31,45 +31,18 @@
 //! regressions: they are printed as `(new)` / `(removed)`, and when
 //! headline-matched they count toward the gate with a warning instead
 //! of failing the run.  Only a metric measured on *both* sides can fail.
+//!
+//! The pairing/gating decisions live in [`gmeta::util::benchcmp`]
+//! (unit-tested, fail-closed on malformed input); this binary is the
+//! CLI and the printing.
 
 use gmeta::util::args::Args;
-use gmeta::util::json::{self, Value};
-
-/// Collect every numeric leaf as (dotted path, value), in document order.
-fn numeric_leaves(doc: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
-    match doc {
-        Value::Num(n) => out.push((prefix.to_string(), *n)),
-        Value::Arr(items) => {
-            for (i, item) in items.iter().enumerate() {
-                let path = if prefix.is_empty() {
-                    i.to_string()
-                } else {
-                    format!("{prefix}.{i}")
-                };
-                numeric_leaves(item, &path, out);
-            }
-        }
-        Value::Obj(map) => {
-            for (k, v) in map {
-                let path = if prefix.is_empty() {
-                    k.clone()
-                } else {
-                    format!("{prefix}.{k}")
-                };
-                numeric_leaves(v, &path, out);
-            }
-        }
-        Value::Null | Value::Bool(_) | Value::Str(_) => {}
-    }
-}
+use gmeta::util::benchcmp::{self, DiffLine};
 
 fn load(path: &str) -> anyhow::Result<Vec<(String, f64)>> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
-    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt {path}: {e}"))?;
-    let mut out = Vec::new();
-    numeric_leaves(&doc, "", &mut out);
-    Ok(out)
+    benchcmp::parse_leaves(&text, path)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -86,10 +59,7 @@ fn main() -> anyhow::Result<()> {
 
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
-    let base_map: std::collections::BTreeMap<&str, f64> =
-        baseline.iter().map(|(k, v)| (k.as_str(), *v)).collect();
-    let cur_map: std::collections::BTreeMap<&str, f64> =
-        current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let report = benchcmp::diff(&baseline, &current, &headline, fail_over_pct);
 
     println!("bench diff: {baseline_path} -> {current_path}");
     println!("{:-<100}", "");
@@ -97,76 +67,40 @@ fn main() -> anyhow::Result<()> {
         "{:<58} {:>12} {:>12} {:>9}  gate",
         "metric", "baseline", "current", "delta"
     );
-
-    let is_headline = |path: &str| headline.iter().any(|h| !h.is_empty() && path.contains(h));
-    let mut regressions: Vec<String> = Vec::new();
-    let mut warnings: Vec<String> = Vec::new();
-    let mut gated = 0usize;
-    // Current-document order keeps related metrics adjacent in the print.
-    for (path, cur) in &current {
-        let Some(&base) = base_map.get(path.as_str()) else {
-            if is_headline(path) {
-                gated += 1;
-                warnings.push(format!("{path}: headline metric has no baseline yet"));
+    for line in &report.lines {
+        match line {
+            DiffLine::Both {
+                path,
+                base,
+                cur,
+                delta_pct,
+                gated,
+                regressed,
+            } => {
+                let gate = match (gated, regressed) {
+                    (true, true) => "REGRESSED",
+                    (true, false) => "ok",
+                    (false, _) => "",
+                };
+                println!("{path:<58} {base:>12.4} {cur:>12.4} {delta_pct:>+8.1}%  {gate}");
             }
-            println!("{path:<58} {:>12} {cur:>12.4} {:>9}  (new)", "-", "-");
-            continue;
-        };
-        let delta_pct = if base != 0.0 {
-            (cur - base) / base.abs() * 100.0
-        } else if *cur == 0.0 {
-            0.0
-        } else {
-            f64::INFINITY
-        };
-        let gate = if is_headline(path) {
-            gated += 1;
-            // Headline metrics are higher-is-better ratios by the bench
-            // emission convention; a drop past the threshold fails.
-            if *cur < base * (1.0 - fail_over_pct / 100.0) {
-                regressions.push(format!(
-                    "{path}: {base:.4} -> {cur:.4} ({delta_pct:+.1}%)"
-                ));
-                "REGRESSED"
-            } else {
-                "ok"
+            DiffLine::New { path, cur, .. } => {
+                println!("{path:<58} {:>12} {cur:>12.4} {:>9}  (new)", "-", "-");
             }
-        } else {
-            ""
-        };
-        println!("{path:<58} {base:>12.4} {cur:>12.4} {delta_pct:>+8.1}%  {gate}");
-    }
-    for (path, base) in &baseline {
-        if !cur_map.contains_key(path.as_str()) {
-            println!("{path:<58} {base:>12.4} {:>12} {:>9}  (removed)", "-", "-");
-            if is_headline(path) {
-                gated += 1;
-                warnings.push(format!("{path}: headline metric only in baseline"));
+            DiffLine::Removed { path, base, .. } => {
+                println!("{path:<58} {base:>12.4} {:>12} {:>9}  (removed)", "-", "-");
             }
         }
     }
     println!("{:-<100}", "");
-    for w in &warnings {
+    for w in &report.warnings {
         println!("warning: {w} (one-sided keys never fail the gate)");
     }
 
-    if !headline.is_empty() && gated == 0 && regressions.is_empty() {
-        anyhow::bail!(
-            "no metric matched the headline patterns {headline:?} — \
-             gate would be vacuous; fix the pattern or the bench output"
-        );
-    }
-    if !regressions.is_empty() {
-        anyhow::bail!(
-            "{} headline metric(s) regressed more than {fail_over_pct}%:\n  {}",
-            regressions.len(),
-            regressions.join("\n  ")
-        );
-    }
+    report.verdict(&headline, fail_over_pct)?;
     println!(
         "{} metrics compared, {} gated (threshold {fail_over_pct}%): no regression",
-        current.len(),
-        gated
+        report.compared, report.gated
     );
     Ok(())
 }

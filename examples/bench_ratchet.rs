@@ -28,38 +28,15 @@
 //!     --improve-over 10 \
 //!     --propose-to proposed-baselines
 //! ```
+//!
+//! The floor comparison itself lives in [`gmeta::util::benchcmp`]
+//! (unit-tested: holds on missing keys, fails closed on vacuous
+//! patterns and malformed artifacts); this binary is the CLI, the
+//! printing, and the proposal file write.
 
 use gmeta::util::args::Args;
-use gmeta::util::json::{self, Value};
-
-/// Collect every numeric leaf as (dotted path, value), in document
-/// order — the same pairing `bench_diff` gates on.
-fn numeric_leaves(doc: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
-    match doc {
-        Value::Num(n) => out.push((prefix.to_string(), *n)),
-        Value::Arr(items) => {
-            for (i, item) in items.iter().enumerate() {
-                let path = if prefix.is_empty() {
-                    i.to_string()
-                } else {
-                    format!("{prefix}.{i}")
-                };
-                numeric_leaves(item, &path, out);
-            }
-        }
-        Value::Obj(map) => {
-            for (k, v) in map {
-                let path = if prefix.is_empty() {
-                    k.clone()
-                } else {
-                    format!("{prefix}.{k}")
-                };
-                numeric_leaves(v, &path, out);
-            }
-        }
-        Value::Null | Value::Bool(_) | Value::Str(_) => {}
-    }
-}
+use gmeta::util::benchcmp::{self, RatchetVerdict};
+use gmeta::util::json;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -88,51 +65,33 @@ fn main() -> anyhow::Result<()> {
     let baseline_doc =
         json::parse(&baseline_text).map_err(|e| anyhow::anyhow!("corrupt {baseline_path}: {e}"))?;
 
-    let mut base = Vec::new();
-    numeric_leaves(&baseline_doc, "", &mut base);
-    let mut cur = Vec::new();
-    numeric_leaves(&current_doc, "", &mut cur);
-    let cur_map: std::collections::BTreeMap<&str, f64> =
-        cur.iter().map(|(k, v)| (k.as_str(), *v)).collect();
-    let is_headline = |path: &str| headline.iter().any(|h| !h.is_empty() && path.contains(h));
+    let base = benchcmp::numeric_leaves(&baseline_doc);
+    let cur = benchcmp::numeric_leaves(&current_doc);
 
     println!("ratchet check: {current_path} vs floor {baseline_path}");
-    let mut all_at_floor = true;
-    let mut improved = 0usize;
-    let mut compared = 0usize;
-    for (path, floor) in base.iter().filter(|(p, _)| is_headline(p)) {
-        let Some(&now) = cur_map.get(path.as_str()) else {
-            // A floor the bench no longer emits: schema drift, never
-            // ratchet over it blindly.
-            println!("  {path}: floor {floor:.4} has no current value — holding");
-            all_at_floor = false;
-            continue;
-        };
-        compared += 1;
-        let gain_pct = if *floor != 0.0 {
-            (now - floor) / floor.abs() * 100.0
-        } else {
-            0.0
-        };
-        let verdict = if now < *floor {
-            all_at_floor = false;
-            "below floor"
-        } else if gain_pct > improve_over_pct {
-            improved += 1;
-            "improved"
-        } else {
-            "at floor"
-        };
-        println!("  {path}: floor {floor:.4} -> current {now:.4} ({gain_pct:+.1}%) {verdict}");
-    }
-    if compared == 0 {
-        anyhow::bail!(
-            "no baseline metric matched the headline patterns {headline:?} — \
-             the ratchet has nothing to gate on"
-        );
+    let report = benchcmp::ratchet(&base, &cur, &headline, improve_over_pct)?;
+    for line in &report.lines {
+        let (path, floor) = (&line.path, line.floor);
+        match line.current {
+            None => {
+                println!("  {path}: floor {floor:.4} has no current value — holding");
+            }
+            Some(now) => {
+                let verdict = match line.verdict {
+                    RatchetVerdict::BelowFloor => "below floor",
+                    RatchetVerdict::Improved => "improved",
+                    RatchetVerdict::AtFloor => "at floor",
+                    RatchetVerdict::Missing => unreachable!("missing floors have no current"),
+                };
+                let gain_pct = line.gain_pct;
+                println!(
+                    "  {path}: floor {floor:.4} -> current {now:.4} ({gain_pct:+.1}%) {verdict}"
+                );
+            }
+        }
     }
 
-    if all_at_floor && improved > 0 {
+    if report.should_propose() {
         std::fs::create_dir_all(&propose_to)
             .map_err(|e| anyhow::anyhow!("cannot create {propose_to}: {e}"))?;
         let name = std::path::Path::new(current_path)
@@ -142,13 +101,14 @@ fn main() -> anyhow::Result<()> {
         let out = std::path::Path::new(&propose_to).join(name);
         std::fs::write(&out, json::write(&current_doc))?;
         println!(
-            "proposal: {improved} headline metric(s) improved >{improve_over_pct}% — wrote {}",
+            "proposal: {} headline metric(s) improved >{improve_over_pct}% — wrote {}",
+            report.improved,
             out.display()
         );
         println!(
             "to ratchet the gate, land this file over {baseline_path} in a normal review"
         );
-    } else if all_at_floor {
+    } else if report.all_at_floor {
         println!("no proposal: headline metrics within {improve_over_pct}% of the floor");
     } else {
         println!(

@@ -1,0 +1,108 @@
+//! Bench: the chaos lab's own cost.
+//!
+//! The chaos harness runs in unit tests, nightly long-soaks, and CI
+//! smoke steps, so its wall-clock cost is a budget we track like any
+//! other: this bench times the fault-free twin, single-scenario replays
+//! of the recorded regression seeds, and the full invariant check
+//! (clean + chaos + bit-exact diff + wedge probe) on both
+//! architectures.  It also records each scenario's *virtual* fault
+//! bill (detection, redo, partition stall, skew wait, torn-publish
+//! repair) — deterministic numbers that double as a drift canary for
+//! the injection paths.
+//!
+//! Results land in `BENCH_chaos.json` (CI uploads it as an artifact;
+//! the seeds here are a subset of `CHAOS_REGRESSION_SEEDS` in
+//! `tests/chaos.rs`).
+//!
+//! Run: `cargo bench --bench chaos`
+//! CI smoke mode (fewer iters/seeds, same paths): `cargo bench --bench chaos -- --smoke`
+
+mod common;
+
+use gmeta::chaos::Runner;
+use gmeta::config::Architecture;
+use gmeta::util::args::Args;
+use gmeta::util::json::{num, obj, s, Value};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let smoke = args.flag("smoke");
+    let (warmup, iters, seeds): (usize, usize, &[u64]) = if smoke {
+        (1, 2, &[5, 8])
+    } else {
+        (1, 5, &[0, 2, 5, 8, 125])
+    };
+    println!(
+        "chaos lab bench ({} mode): {} measured iters over seeds {seeds:?}\n",
+        if smoke { "smoke" } else { "full" },
+        iters
+    );
+
+    let mut arch_docs: Vec<(&'static str, Value)> = Vec::new();
+    for (label, arch) in [
+        ("gmeta", Architecture::GMeta),
+        ("ps", Architecture::ParameterServer),
+    ] {
+        println!("--- {label} ---");
+        let runner = Runner::new(arch);
+
+        let clean = common::bench(&format!("{label}: fault-free twin"), warmup, iters, || {
+            runner.run_clean().unwrap();
+        });
+
+        let mut seed_docs: Vec<(String, Value)> = Vec::new();
+        for &seed in seeds {
+            let scenario = runner.scenario(seed);
+            let replay = common::bench(
+                &format!("{label}: replay seed {seed} ({} faults)", scenario.faults.len()),
+                warmup,
+                iters,
+                || {
+                    runner.run_chaos(&scenario).unwrap();
+                },
+            );
+            let check = common::bench(
+                &format!("{label}: full invariant check seed {seed}"),
+                warmup,
+                iters,
+                || {
+                    runner.check(&scenario).unwrap();
+                },
+            );
+            // The deterministic virtual fault bill (identical every run).
+            let report = runner.check(&scenario).unwrap();
+            seed_docs.push((
+                format!("seed_{seed}"),
+                obj(vec![
+                    ("faults", num(report.faults as f64)),
+                    ("versions", num(report.versions as f64)),
+                    ("replay_mean_ms", num(replay.mean_s * 1e3)),
+                    ("check_mean_ms", num(check.mean_s * 1e3)),
+                    ("virtual_detect_secs", num(report.detect_secs)),
+                    ("virtual_redo_secs", num(report.redo_secs)),
+                    ("virtual_partition_secs", num(report.partition_secs)),
+                    ("virtual_skew_secs", num(report.skew_secs)),
+                    ("virtual_repair_secs", num(report.repair_secs)),
+                ]),
+            ));
+        }
+
+        let seed_fields: Vec<(&str, Value)> = seed_docs
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        let mut fields = vec![("clean_mean_ms", num(clean.mean_s * 1e3))];
+        fields.extend(seed_fields);
+        arch_docs.push((label, obj(fields)));
+        println!();
+    }
+
+    let doc = obj(vec![
+        ("bench", s("chaos")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("gmeta", arch_docs[0].1.clone()),
+        ("ps", arch_docs[1].1.clone()),
+    ]);
+    common::write_bench_json("chaos", &doc);
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Deterministic chaos lab: seed-replayable fault scenarios for the
+//! online delivery loop, with a property-tested no-silent-corruption
+//! invariant.
+//!
+//! Production recommender delivery pipelines live with a menagerie of
+//! correlated infrastructure faults: multi-worker spot reclamations,
+//! parameter-server shard partitions, DFS writers dying mid-checkpoint,
+//! heartbeat-delayed failure detection, per-host clock skew.  Each of
+//! those exists in isolation elsewhere in this codebase; what chaos
+//! engineering adds is *composition under replay* — many faults in one
+//! run, generated from a single `u64` seed, replayable bit-for-bit.
+//!
+//! * [`Scenario`] / [`Fault`] — the scenario DSL.
+//!   [`Scenario::from_seed`] deterministically composes worker kills,
+//!   shard partitions, torn publishes, preemption-driven rescales,
+//!   clock skew, and publish-tail stretch; [`Scenario::schedule`]
+//!   lowers it onto the session's generalized injection surface
+//!   ([`crate::stream::FaultSchedule`] — the same surface
+//!   [`crate::stream::FailurePlan`] lowers to), and
+//!   [`Scenario::preemptions`] onto a
+//!   [`crate::stream::ScheduledPolicy`].
+//! * [`Runner`] — executes a scenario against a fault-free twin over
+//!   the same sample stream and enforces the **global invariant**:
+//!   every window either publishes a version bit-exact to the clean
+//!   run's or cleanly rolls back to the last published version — no
+//!   silent corruption, no wedged [`crate::stream::DeltaStore`], no
+//!   orphaned chain files after recovery + GC
+//!   ([`crate::stream::DeltaStore::recover`]).  Works on both
+//!   architectures (G-Meta hybrid and the PS baseline).
+//! * [`Scenario::shrink`] / [`Runner::shrink`] — greedy single-fault
+//!   removal to a locally-minimal reproducer; `tests/chaos.rs` records
+//!   discovered-failing seeds in its `CHAOS_REGRESSION_SEEDS` table.
+//!
+//! Why this is tractable at all: every fault class is either
+//! latency-only (partitions, skew, detection gaps, publish tail) or
+//! state-discarding with recovery from durable state (kills redo from
+//! the last published version; torn publishes are swept at the
+//! manifest commit point and retried).  Simulation determinism then
+//! makes the retried/redone work bit-exact, so "no silent corruption"
+//! is a checkable equality, not a statistical claim.  See
+//! `docs/TESTING.md` for the testing strategy and
+//! `docs/ARCHITECTURE.md` for where the injection points sit in the
+//! window lifecycle.
+
+pub mod runner;
+pub mod scenario;
+
+pub use runner::{ChaosReport, Runner};
+pub use scenario::{Fault, Scenario};

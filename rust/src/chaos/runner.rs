@@ -1,0 +1,271 @@
+//! Scenario execution + the no-silent-corruption check.
+//!
+//! [`Runner::check`] runs a scenario and a fault-free twin over the
+//! same sample stream and enforces the chaos lab's global invariant
+//! (see the module doc of [`crate::chaos`]).  A violation comes back as
+//! an `Err` naming the first divergence, so property tests can treat
+//! `check(..).is_err()` as the shrink predicate.
+
+use crate::config::{Architecture, ModelDims};
+use crate::data::movielens_like;
+use crate::job::TrainJob;
+use crate::metrics::{PHASE_DETECT, PHASE_PARTITION, PHASE_REDO, PHASE_REPAIR, PHASE_SKEW};
+use crate::stream::{
+    CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+};
+use crate::util::TempDir;
+use crate::Result;
+
+use super::Scenario;
+
+/// What one [`Runner::check`] proved, plus where the injected faults'
+/// cost landed (virtual seconds per fault phase).
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    /// Versions compared bit-exact against the clean run.
+    pub versions: usize,
+    /// Faults the scenario injected.
+    pub faults: usize,
+    /// Failure-detection seconds charged ([`PHASE_DETECT`]).
+    pub detect_secs: f64,
+    /// Redone-work seconds charged ([`PHASE_REDO`]).
+    pub redo_secs: f64,
+    /// Partition-stall seconds charged ([`PHASE_PARTITION`]).
+    pub partition_secs: f64,
+    /// Clock-skew barrier seconds charged ([`PHASE_SKEW`]).
+    pub skew_secs: f64,
+    /// Torn-publish repair seconds charged ([`PHASE_REPAIR`]).
+    pub repair_secs: f64,
+}
+
+/// Deterministic chaos harness: a small, fully-covered delivery config
+/// (mirroring the elastic test fixture — every window's episodes are
+/// covered at every world size in `[2, max_world]`, so rescales and
+/// redos stay bit-exact) driven by composed fault scenarios.
+#[derive(Debug, Clone, Copy)]
+pub struct Runner {
+    pub arch: Architecture,
+    /// Starting worker count (and the clean twin's fixed world).
+    pub world: usize,
+    /// Delivery windows per run (delta micro-batches).
+    pub windows: usize,
+    /// Largest world a preemption/rescale may target.
+    pub max_world: usize,
+}
+
+impl Runner {
+    pub fn new(arch: Architecture) -> Self {
+        Self {
+            arch,
+            world: 2,
+            windows: 3,
+            max_world: 4,
+        }
+    }
+
+    /// A scenario sized to this runner (windows + world bounds).
+    pub fn scenario(&self, seed: u64) -> Scenario {
+        Scenario::from_seed(seed, self.windows, self.max_world)
+    }
+
+    /// The delivery config both runs share.  `steps_per_window` covers
+    /// every window episode at every world size in `[2, max_world]` —
+    /// the precondition for cross-world bit-exactness (same reasoning
+    /// as `tests/elastic.rs`).
+    pub fn online(&self) -> OnlineConfig {
+        OnlineConfig {
+            warmup_samples: 800,
+            warmup_steps: 3,
+            steps_per_window: 32,
+            mode: PublishMode::DeltaRepublish,
+            compact: CompactPolicy::EveryN(2),
+            feed: DeltaFeedConfig {
+                n_deltas: self.windows,
+                samples_per_delta: 60,
+                interval: 0.05,
+                start_ts: 0.0,
+                cold_start_at: Some(1),
+                cold_fraction: 0.5,
+            },
+            seed: 21,
+            ..OnlineConfig::default()
+        }
+    }
+
+    fn job(&self, world: usize) -> Result<TrainJob<'static>> {
+        let dims = ModelDims {
+            batch: 8,
+            slots: 4,
+            valency: 2,
+            emb_dim: 8,
+            hidden1: 16,
+            hidden2: 8,
+            ..Default::default()
+        };
+        let builder = TrainJob::builder().dims(dims).dataset(movielens_like());
+        match self.arch {
+            Architecture::GMeta => builder.gmeta(1, world),
+            Architecture::ParameterServer => builder.parameter_server(world, 1),
+        }
+        .build()
+    }
+
+    /// The fault-free twin: fixed world, no injected faults, same
+    /// stream.  Public so tests and the example can diff against it.
+    pub fn run_clean(&self) -> Result<(TempDir, OnlineSession<'static>)> {
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(self.job(self.world)?, self.online(), tmp.path())?;
+        s.run()?;
+        Ok((tmp, s))
+    }
+
+    /// Run `scenario` (faults lowered to the session's injection
+    /// surface, preemptions to a [`ScheduledPolicy`]).  Public so tests
+    /// can pin determinism (same seed ⇒ bit-identical records/trace).
+    pub fn run_chaos(&self, scenario: &Scenario) -> Result<(TempDir, OnlineSession<'static>)> {
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(self.job(self.world)?, self.online(), tmp.path())?
+            .with_faults(scenario.schedule())?;
+        let preemptions = scenario.preemptions();
+        if !preemptions.is_empty() {
+            s = s.with_policy(Box::new(ScheduledPolicy::new(preemptions)))?;
+        }
+        s.run()?;
+        Ok((tmp, s))
+    }
+
+    /// [`Runner::run_chaos`] with a fresh [`crate::obs::Tracer`]
+    /// attached — the determinism pin runs this twice and compares the
+    /// exported trace streams byte for byte.
+    pub fn run_chaos_traced(
+        &self,
+        scenario: &Scenario,
+    ) -> Result<(TempDir, OnlineSession<'static>)> {
+        let tmp = TempDir::new()?;
+        let mut s = OnlineSession::new(self.job(self.world)?, self.online(), tmp.path())?
+            .with_faults(scenario.schedule())?
+            .with_tracer(crate::obs::Tracer::new());
+        let preemptions = scenario.preemptions();
+        if !preemptions.is_empty() {
+            s = s.with_policy(Box::new(ScheduledPolicy::new(preemptions)))?;
+        }
+        s.run()?;
+        Ok((tmp, s))
+    }
+
+    /// Execute `scenario` and enforce the global invariant against a
+    /// clean twin:
+    ///
+    /// 1. same number of published versions, each bit-exact (kind,
+    ///    step, dense bits, row ids + value bits) to the clean run's —
+    ///    faults may slow delivery but never change what ships;
+    /// 2. no orphaned version directories after recovery + GC;
+    /// 3. the store is not wedged: a fresh publish, compact, GC, and
+    ///    load all still succeed after the run.
+    ///
+    /// Violations return `Err` naming the first divergence.
+    pub fn check(&self, scenario: &Scenario) -> Result<ChaosReport> {
+        let (_ct, clean) = self.run_clean()?;
+        let (_ft, mut sess) = self.run_chaos(scenario)?;
+
+        // 1. Bit-exact version stream.
+        if sess.delivery.versions.len() != clean.delivery.versions.len() {
+            anyhow::bail!(
+                "[{}] version count diverged: chaos {} vs clean {}",
+                scenario.describe(),
+                sess.delivery.versions.len(),
+                clean.delivery.versions.len()
+            );
+        }
+        for (vf, vc) in sess.delivery.versions.iter().zip(&clean.delivery.versions) {
+            if vf.version != vc.version || vf.kind != vc.kind {
+                anyhow::bail!(
+                    "[{}] version stream diverged: chaos v{}({:?}) vs clean v{}({:?})",
+                    scenario.describe(),
+                    vf.version,
+                    vf.kind,
+                    vc.version,
+                    vc.kind
+                );
+            }
+            let cf = sess.publisher.store.load(vf.version)?;
+            let cc = clean.publisher.store.load(vc.version)?;
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            if cf.step != cc.step {
+                anyhow::bail!(
+                    "[{}] v{} step diverged: {} vs {}",
+                    scenario.describe(),
+                    vf.version,
+                    cf.step,
+                    cc.step
+                );
+            }
+            if bits(&cf.dense) != bits(&cc.dense) {
+                anyhow::bail!(
+                    "[{}] v{} dense bits diverged",
+                    scenario.describe(),
+                    vf.version
+                );
+            }
+            if cf.rows.len() != cc.rows.len() {
+                anyhow::bail!(
+                    "[{}] v{} row count diverged: {} vs {}",
+                    scenario.describe(),
+                    vf.version,
+                    cf.rows.len(),
+                    cc.rows.len()
+                );
+            }
+            for ((rf, xf), (rc, xc)) in cf.rows.iter().zip(&cc.rows) {
+                if rf != rc || bits(xf) != bits(xc) {
+                    anyhow::bail!(
+                        "[{}] v{} row {rf} diverged from clean row {rc}",
+                        scenario.describe(),
+                        vf.version
+                    );
+                }
+            }
+        }
+
+        // 2. Recovery left nothing behind.
+        let orphans = sess.publisher.store.orphan_versions()?;
+        if !orphans.is_empty() {
+            anyhow::bail!(
+                "[{}] orphaned version dirs after recovery: {orphans:?}",
+                scenario.describe()
+            );
+        }
+
+        // 3. The store still works end to end — publish, compact, GC,
+        // reconstruct.  A wedged store (stale manifest entry, chain
+        // broken by the faults) fails here, not silently later.
+        let store = &mut sess.publisher.store;
+        let latest = store
+            .latest()
+            .map(|m| m.version)
+            .ok_or_else(|| anyhow::anyhow!("[{}] empty store after run", scenario.describe()))?;
+        let state = store.load(latest)?;
+        let next = latest + 1;
+        store.publish(next, &state, Some((latest, &state)))?;
+        store.compact(next)?;
+        store.gc(1)?;
+        store.load(next)?;
+
+        let t = &sess.delivery.train;
+        Ok(ChaosReport {
+            versions: sess.delivery.versions.len(),
+            faults: scenario.faults.len(),
+            detect_secs: t.phase(PHASE_DETECT),
+            redo_secs: t.phase(PHASE_REDO),
+            partition_secs: t.phase(PHASE_PARTITION),
+            skew_secs: t.phase(PHASE_SKEW),
+            repair_secs: t.phase(PHASE_REPAIR),
+        })
+    }
+
+    /// Shrink a failing scenario to a locally-minimal reproducer using
+    /// [`Runner::check`] as the predicate (see [`Scenario::shrink`]).
+    pub fn shrink(&self, scenario: &Scenario) -> Scenario {
+        scenario.shrink(&mut |c| self.check(c).is_err())
+    }
+}

@@ -1,0 +1,453 @@
+//! Seed-replayable fault scenarios: the chaos DSL.
+//!
+//! A [`Scenario`] is a list of [`Fault`]s plus the `u64` seed it was
+//! generated from.  [`Scenario::from_seed`] is a pure function — the
+//! same seed always yields the same faults, and the derived stochastic
+//! models (clock skew, publish tail) key their own streams off the
+//! scenario seed — so a failing scenario replays from a single integer.
+//! [`Scenario::schedule`] lowers the composition to the session's
+//! generalized injection surface ([`FaultSchedule`]);
+//! [`Scenario::preemptions`] lowers spot/preemption reclamations to a
+//! [`crate::stream::ScheduledPolicy`] script.
+
+use crate::sim::{SkewModel, TailModel};
+use crate::stream::faults::{FaultSchedule, KillEvent, PartitionEvent, TornPublishEvent};
+use crate::util::rng::splitmix64;
+use crate::util::Rng;
+
+/// One injected fault.  The first three land in a specific delivery
+/// window; the last three shape the whole run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Correlated worker death: `workers` die together `fraction` of the
+    /// way through `window`'s training, noticed after `detection_secs`.
+    WorkerKill {
+        window: usize,
+        workers: usize,
+        fraction: f64,
+        detection_secs: f64,
+    },
+    /// A PS shard (or worker) is unreachable for `stall_secs` at the
+    /// start of `window`; synchronous progress waits for the heal.
+    ShardPartition {
+        window: usize,
+        shard: usize,
+        stall_secs: f64,
+    },
+    /// The DFS writer dies mid-version-write during `window`'s publish,
+    /// leaving `surviving_files` (0–2) complete files and no manifest
+    /// entry; the store recovers and the publish retries.
+    TornPublish {
+        window: usize,
+        surviving_files: usize,
+    },
+    /// Spot/preemption reclamation: the scheduler reclaims capacity
+    /// after `after_window`, forcing a rescale to `to_world` workers
+    /// (replayed through [`crate::stream::ScheduledPolicy`]).
+    Preemption { after_window: usize, to_world: usize },
+    /// Per-worker clock skew every window, half-normal with scale
+    /// `sigma` seconds ([`SkewModel`]); the barrier pays the max.
+    ClockSkew { sigma: f64 },
+    /// Slow-registry publish tail: lognormal per-version stretch factor
+    /// with shape `sigma` ([`TailModel`]).
+    PublishTail { sigma: f64 },
+}
+
+impl Fault {
+    /// Short trace-friendly tag for this fault's type.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Fault::WorkerKill { .. } => "kill",
+            Fault::ShardPartition { .. } => "partition",
+            Fault::TornPublish { .. } => "torn_publish",
+            Fault::Preemption { .. } => "preemption",
+            Fault::ClockSkew { .. } => "clock_skew",
+            Fault::PublishTail { .. } => "publish_tail",
+        }
+    }
+}
+
+/// A composed, replayable fault scenario.
+///
+/// Plain data: property tests mutate `faults` freely while shrinking
+/// (the `seed` is kept so the derived skew/tail streams — and the
+/// reproducer command line — stay stable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// The seed this scenario was generated from (also keys the skew
+    /// and tail streams in [`Scenario::schedule`]).
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+impl Scenario {
+    /// Generate a random scenario over `windows` delivery windows on a
+    /// cluster that may rescale within `[2, max_world]` workers.  Pure
+    /// in `seed`.  Every fault type appears with its own probability;
+    /// windows are distinct *within* each fault type (the session
+    /// consults at most one event of a type per window) but freely
+    /// collide *across* types — that composition is the point.  At
+    /// least one fault is always present.
+    pub fn from_seed(seed: u64, windows: usize, max_world: usize) -> Self {
+        assert!(windows >= 1, "need at least one delivery window");
+        assert!(max_world >= 2, "need at least two workers");
+        let mut rng = Rng::seed_from_u64(splitmix64(seed ^ 0xC4A0_5CE7));
+        let mut faults = Vec::new();
+
+        // Distinct windows per state-touching fault type.
+        let pick_windows = |rng: &mut Rng, n: usize| -> Vec<usize> {
+            let mut slots: Vec<usize> = (0..windows).collect();
+            rng.shuffle(&mut slots);
+            slots.truncate(n.min(windows));
+            slots
+        };
+
+        if rng.gen_bool(0.7) {
+            let n = 1 + (rng.next_u64() % 2) as usize;
+            for window in pick_windows(&mut rng, n) {
+                faults.push(Fault::WorkerKill {
+                    window,
+                    workers: rng.gen_range(1, max_world as u64 + 1) as usize,
+                    fraction: 0.1 + 0.8 * rng.f64(),
+                    detection_secs: 30.0 * rng.f64(),
+                });
+            }
+        }
+        if rng.gen_bool(0.6) {
+            let n = 1 + (rng.next_u64() % 2) as usize;
+            for window in pick_windows(&mut rng, n) {
+                faults.push(Fault::ShardPartition {
+                    window,
+                    shard: rng.gen_range(0, max_world as u64) as usize,
+                    stall_secs: 1.0 + 119.0 * rng.f64(),
+                });
+            }
+        }
+        if rng.gen_bool(0.7) {
+            let n = 1 + (rng.next_u64() % 2) as usize;
+            for window in pick_windows(&mut rng, n) {
+                faults.push(Fault::TornPublish {
+                    window,
+                    surviving_files: rng.gen_range(0, 3) as usize,
+                });
+            }
+        }
+        if windows >= 2 && rng.gen_bool(0.5) {
+            faults.push(Fault::Preemption {
+                after_window: rng.gen_range(0, windows as u64 - 1) as usize,
+                to_world: rng.gen_range(2, max_world as u64 + 1) as usize,
+            });
+        }
+        if rng.gen_bool(0.5) {
+            faults.push(Fault::ClockSkew {
+                sigma: 0.5 + 29.5 * rng.f64(),
+            });
+        }
+        if rng.gen_bool(0.5) {
+            faults.push(Fault::PublishTail {
+                sigma: 0.2 + 0.6 * rng.f64(),
+            });
+        }
+        if faults.is_empty() {
+            // Never hand back a fault-free "chaos" run.
+            faults.push(Fault::WorkerKill {
+                window: rng.gen_range(0, windows as u64) as usize,
+                workers: 1,
+                fraction: 0.5,
+                detection_secs: 0.0,
+            });
+        }
+        Self { seed, faults }
+    }
+
+    /// Lower the scenario to the session's generalized injection
+    /// surface.  Preemptions are *not* part of the schedule — they
+    /// replay through a [`crate::stream::ScheduledPolicy`] built from
+    /// [`Scenario::preemptions`].  The skew and tail streams are keyed
+    /// off the scenario seed, so a scenario is fully determined by its
+    /// `(seed, faults)` pair.
+    pub fn schedule(&self) -> FaultSchedule {
+        let mut s = FaultSchedule::default();
+        for f in &self.faults {
+            match *f {
+                Fault::WorkerKill {
+                    window,
+                    workers,
+                    fraction,
+                    detection_secs,
+                } => s.kills.push(KillEvent {
+                    window,
+                    workers,
+                    fraction,
+                    detection_secs,
+                }),
+                Fault::ShardPartition {
+                    window,
+                    shard,
+                    stall_secs,
+                } => s.partitions.push(PartitionEvent {
+                    window,
+                    shard,
+                    stall_secs,
+                }),
+                Fault::TornPublish {
+                    window,
+                    surviving_files,
+                } => s.torn_publishes.push(TornPublishEvent {
+                    window,
+                    surviving_files,
+                }),
+                Fault::ClockSkew { sigma } => {
+                    s.skew = Some(SkewModel {
+                        sigma,
+                        seed: splitmix64(self.seed ^ 0x5E3A),
+                    });
+                }
+                Fault::PublishTail { sigma } => {
+                    s.publish_tail = Some(TailModel {
+                        sigma,
+                        seed: splitmix64(self.seed ^ 0x7A11),
+                    });
+                }
+                Fault::Preemption { .. } => {}
+            }
+        }
+        s
+    }
+
+    /// The spot/preemption reclamation trace as a
+    /// [`crate::stream::ScheduledPolicy`] script, ordered by window.
+    pub fn preemptions(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = self
+            .faults
+            .iter()
+            .filter_map(|f| match *f {
+                Fault::Preemption {
+                    after_window,
+                    to_world,
+                } => Some((after_window, to_world)),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// One-line human description (`seed=… kill@1(w2) torn@0(s1) skew(σ=…)`).
+    pub fn describe(&self) -> String {
+        let mut parts = vec![format!("seed={:#x}", self.seed)];
+        for f in &self.faults {
+            parts.push(match *f {
+                Fault::WorkerKill {
+                    window,
+                    workers,
+                    fraction,
+                    detection_secs,
+                } => format!("kill@{window}(workers={workers} frac={fraction:.2} detect={detection_secs:.1}s)"),
+                Fault::ShardPartition {
+                    window,
+                    shard,
+                    stall_secs,
+                } => format!("partition@{window}(shard={shard} stall={stall_secs:.1}s)"),
+                Fault::TornPublish {
+                    window,
+                    surviving_files,
+                } => format!("torn@{window}(surviving={surviving_files})"),
+                Fault::Preemption {
+                    after_window,
+                    to_world,
+                } => format!("preempt@{after_window}(to_world={to_world})"),
+                Fault::ClockSkew { sigma } => format!("skew(sigma={sigma:.1}s)"),
+                Fault::PublishTail { sigma } => format!("tail(sigma={sigma:.2})"),
+            });
+        }
+        parts.join(" ")
+    }
+
+    /// Greedy single-fault shrink: repeatedly drop any fault whose
+    /// removal keeps `still_fails` true, until no single removal does.
+    /// The result is a locally-minimal reproducer (removing any one of
+    /// its faults makes the failure disappear); `seed` is preserved so
+    /// the skew/tail streams — and the reproducer's replay identity —
+    /// don't shift under the shrink.
+    pub fn shrink(&self, still_fails: &mut dyn FnMut(&Scenario) -> bool) -> Scenario {
+        let mut best = self.clone();
+        loop {
+            let mut reduced = false;
+            for i in 0..best.faults.len() {
+                let mut candidate = best.clone();
+                candidate.faults.remove(i);
+                if candidate.faults.is_empty() {
+                    continue;
+                }
+                if still_fails(&candidate) {
+                    best = candidate;
+                    reduced = true;
+                    break;
+                }
+            }
+            if !reduced {
+                return best;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seed_is_pure_and_never_empty() {
+        for seed in 0..64u64 {
+            let a = Scenario::from_seed(seed, 3, 4);
+            let b = Scenario::from_seed(seed, 3, 4);
+            assert_eq!(a, b, "seed {seed} not replayable");
+            assert!(!a.faults.is_empty(), "seed {seed} produced no faults");
+            // Windowed faults stay inside the stream; worlds stay sane.
+            for f in &a.faults {
+                match *f {
+                    Fault::WorkerKill {
+                        window,
+                        workers,
+                        fraction,
+                        detection_secs,
+                    } => {
+                        assert!(window < 3);
+                        assert!((1..=4).contains(&workers));
+                        assert!(fraction > 0.0 && fraction <= 1.0);
+                        assert!(detection_secs >= 0.0);
+                    }
+                    Fault::ShardPartition {
+                        window, stall_secs, ..
+                    } => {
+                        assert!(window < 3);
+                        assert!(stall_secs > 0.0);
+                    }
+                    Fault::TornPublish {
+                        window,
+                        surviving_files,
+                    } => {
+                        assert!(window < 3);
+                        assert!(surviving_files <= 2);
+                    }
+                    Fault::Preemption {
+                        after_window,
+                        to_world,
+                    } => {
+                        assert!(after_window + 1 < 3);
+                        assert!((2..=4).contains(&to_world));
+                    }
+                    Fault::ClockSkew { sigma } | Fault::PublishTail { sigma } => {
+                        assert!(sigma > 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_fault_types_appear_across_seeds() {
+        let mut seen = std::collections::BTreeSet::new();
+        for seed in 0..256u64 {
+            for f in &Scenario::from_seed(seed, 3, 4).faults {
+                seen.insert(f.tag());
+            }
+        }
+        for tag in [
+            "kill",
+            "partition",
+            "torn_publish",
+            "preemption",
+            "clock_skew",
+            "publish_tail",
+        ] {
+            assert!(seen.contains(tag), "no seed in 0..256 produced {tag}");
+        }
+    }
+
+    #[test]
+    fn windows_are_distinct_within_each_fault_type() {
+        for seed in 0..128u64 {
+            let sc = Scenario::from_seed(seed, 3, 4);
+            let mut kills = std::collections::BTreeSet::new();
+            let mut torn = std::collections::BTreeSet::new();
+            let mut parts = std::collections::BTreeSet::new();
+            for f in &sc.faults {
+                match *f {
+                    Fault::WorkerKill { window, .. } => assert!(kills.insert(window)),
+                    Fault::TornPublish { window, .. } => assert!(torn.insert(window)),
+                    Fault::ShardPartition { window, .. } => assert!(parts.insert(window)),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_lowers_every_fault_type() {
+        let sc = Scenario {
+            seed: 9,
+            faults: vec![
+                Fault::WorkerKill {
+                    window: 1,
+                    workers: 2,
+                    fraction: 0.5,
+                    detection_secs: 5.0,
+                },
+                Fault::ShardPartition {
+                    window: 0,
+                    shard: 1,
+                    stall_secs: 30.0,
+                },
+                Fault::TornPublish {
+                    window: 2,
+                    surviving_files: 1,
+                },
+                Fault::Preemption {
+                    after_window: 0,
+                    to_world: 3,
+                },
+                Fault::ClockSkew { sigma: 2.0 },
+                Fault::PublishTail { sigma: 0.6 },
+            ],
+        };
+        let s = sc.schedule();
+        assert_eq!(s.kills.len(), 1);
+        assert_eq!(s.partitions.len(), 1);
+        assert_eq!(s.torn_publishes.len(), 1);
+        let skew = s.skew.unwrap();
+        assert_eq!(skew.sigma, 2.0);
+        assert_eq!(skew.seed, splitmix64(9 ^ 0x5E3A));
+        assert_eq!(s.publish_tail.unwrap().sigma, 0.6);
+        assert_eq!(sc.preemptions(), vec![(0, 3)]);
+        // Same seed, same derived streams: replaying the scenario gives
+        // the identical schedule.
+        assert_eq!(sc.schedule(), sc.schedule());
+    }
+
+    #[test]
+    fn shrink_drops_irrelevant_faults_and_is_locally_minimal() {
+        let sc = Scenario {
+            seed: 1,
+            faults: vec![
+                Fault::ClockSkew { sigma: 1.0 },
+                Fault::TornPublish {
+                    window: 1,
+                    surviving_files: 0,
+                },
+                Fault::PublishTail { sigma: 0.3 },
+            ],
+        };
+        // Synthetic predicate: the "bug" needs only the torn publish.
+        let mut still_fails = |c: &Scenario| {
+            c.faults
+                .iter()
+                .any(|f| matches!(f, Fault::TornPublish { .. }))
+        };
+        let min = sc.shrink(&mut still_fails);
+        assert_eq!(min.faults.len(), 1);
+        assert!(matches!(min.faults[0], Fault::TornPublish { .. }));
+        assert_eq!(min.seed, 1);
+    }
+}

@@ -28,7 +28,12 @@
 //!   policies resize the cluster between windows through
 //!   [`job::JobSpec`] + checkpoint resharding, and an injected
 //!   [`stream::elastic::FailurePlan`] models mid-window worker death and
-//!   slow-registry publish tails.  The **serving plane** ([`serve`])
+//!   slow-registry publish tails — both lowered to the generalized
+//!   fault-injection surface ([`stream::FaultSchedule`]) that the
+//!   **chaos lab** ([`chaos`]) drives: seed-replayable composed fault
+//!   scenarios (correlated kills, shard partitions, torn publishes,
+//!   preemption traces, clock skew) with a property-tested
+//!   no-silent-corruption invariant.  The **serving plane** ([`serve`])
 //!   closes the publish→consume loop: a fleet of versioned read
 //!   replicas tracks the delta registry on the same virtual clock,
 //!   patches each version *in place* (bit-identical to a full
@@ -60,6 +65,7 @@
 //! reshard/redo detours — lives in `docs/ARCHITECTURE.md` at the
 //! repository root.
 
+pub mod chaos;
 pub mod checkpoint;
 pub mod collectives;
 pub mod config;

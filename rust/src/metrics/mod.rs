@@ -68,6 +68,21 @@ pub const PHASE_REDO: &str = "redo";
 /// ([`crate::stream::elastic::FailurePlan::detection_secs`]; 0 with an
 /// oracle detector).
 pub const PHASE_DETECT: &str = "detect";
+/// PS-shard (or worker) network partition: synchronous progress stalls
+/// until the shard heals.  Pure latency — no state is lost, so published
+/// artifacts stay bit-identical to a partition-free run
+/// ([`crate::stream::FaultSchedule::partitions`]).
+pub const PHASE_PARTITION: &str = "partition_stall";
+/// Per-worker clock-skew barrier wait: the window's synchronous barrier
+/// aligns every worker to the most-skewed one, charging the max offset
+/// drawn by the deterministic [`crate::sim::SkewModel`].  Pure latency,
+/// like [`PHASE_PARTITION`].
+pub const PHASE_SKEW: &str = "skew_wait";
+/// Store repair after a torn publish: the wasted partial upload of a
+/// version directory the DFS writer died on, plus the orphan-removal
+/// pass ([`crate::stream::DeltaStore::recover`]) before the publish
+/// retries ([`crate::stream::FaultSchedule::torn_publishes`]).
+pub const PHASE_REPAIR: &str = "store_repair";
 
 /// Nearest-rank quantile of an already-sorted (ascending) sample slice:
 /// the smallest value whose rank covers fraction `q` of the samples,

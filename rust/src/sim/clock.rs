@@ -99,6 +99,70 @@ impl WorkerClocks {
         }
         t + dt
     }
+
+    /// Apply one per-worker skew offset each (`offsets[rank]` seconds of
+    /// extra local delay) — the clock-disagreement injection the chaos
+    /// lab composes: a skewed worker simply runs that much behind, and
+    /// the next [`WorkerClocks::barrier`] aligns everyone to it.
+    pub fn skew(&mut self, offsets: &[f64]) {
+        for (c, &dt) in self.clocks.iter_mut().zip(offsets) {
+            c.advance(dt.max(0.0));
+        }
+    }
+}
+
+/// Deterministic per-worker clock skew: worker `w`'s clock runs
+/// `offset(w, window)` seconds behind true time during a delivery
+/// window.  Synchronous training pays the *maximum* offset at the
+/// window barrier ([`SkewModel::barrier_penalty`]) — the skewed-est
+/// worker holds everyone up, but no state is affected, so published
+/// artifacts stay bit-identical to a skew-free run.
+///
+/// Draws are pure functions of `(seed, worker, window)` — same
+/// SplitMix64 + Box-Muller technique as
+/// [`crate::sim::TailModel::factor`], half-normal so offsets are
+/// non-negative.  This is what makes chaos scenarios seed-replayable:
+/// no RNG state threads through the session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SkewModel {
+    /// Scale of the half-normal per-worker offset, seconds (0 disables).
+    pub sigma: f64,
+    /// Stream seed: fixes every `(worker, window)` draw.
+    pub seed: u64,
+}
+
+impl SkewModel {
+    /// Worker `worker`'s non-negative clock offset during `window`,
+    /// seconds; deterministic in `(seed, worker, window)`.
+    pub fn offset(&self, worker: usize, window: u64) -> f64 {
+        if self.sigma <= 0.0 {
+            return 0.0;
+        }
+        let mut z = self
+            .seed
+            ^ (worker as u64).wrapping_mul(0xD1B54A32D192ED03)
+            ^ window.wrapping_mul(0x9E3779B97F4A7C15)
+            ^ 0x5E3A;
+        let mut next = || {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            let mut x = z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+            (x ^ (x >> 31)) as f64 / u64::MAX as f64
+        };
+        let (u1, u2) = (next().max(1e-12), next());
+        let n = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        (self.sigma * n).abs()
+    }
+
+    /// What a `world`-worker synchronous barrier pays for this window:
+    /// the maximum per-worker offset (the barrier aligns everyone to the
+    /// most-delayed worker).
+    pub fn barrier_penalty(&self, world: usize, window: u64) -> f64 {
+        (0..world)
+            .map(|w| self.offset(w, window))
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -145,5 +209,37 @@ mod tests {
     fn negative_charge_panics_in_debug() {
         let mut c = Clock::new();
         c.advance(-1.0);
+    }
+
+    #[test]
+    fn skew_offsets_are_deterministic_nonnegative_and_distinct() {
+        let m = SkewModel { sigma: 2.0, seed: 7 };
+        for w in 0..4 {
+            for win in 0..4u64 {
+                let a = m.offset(w, win);
+                assert!(a >= 0.0);
+                assert_eq!(a, m.offset(w, win), "same (worker, window) must replay");
+            }
+        }
+        // Different workers / windows draw from independent points of the
+        // stream (all-equal draws would mean the keying is broken).
+        assert_ne!(m.offset(0, 0), m.offset(1, 0));
+        assert_ne!(m.offset(0, 0), m.offset(0, 1));
+        // Disabled model charges nothing.
+        let off = SkewModel { sigma: 0.0, seed: 7 };
+        assert_eq!(off.barrier_penalty(8, 3), 0.0);
+    }
+
+    #[test]
+    fn barrier_penalty_is_the_max_offset_and_grows_with_world() {
+        let m = SkewModel { sigma: 1.0, seed: 99 };
+        let p2 = m.barrier_penalty(2, 0);
+        let p8 = m.barrier_penalty(8, 0);
+        assert_eq!(p2, m.offset(0, 0).max(m.offset(1, 0)));
+        assert!(p8 >= p2, "max over a superset cannot shrink");
+        // Skewed worker clocks really hold the barrier back.
+        let mut w = WorkerClocks::new(2);
+        w.skew(&[m.offset(0, 0), m.offset(1, 0)]);
+        assert_eq!(w.barrier(0.0), p2);
     }
 }

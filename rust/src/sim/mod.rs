@@ -12,6 +12,6 @@ pub mod clock;
 pub mod device;
 pub mod storage;
 
-pub use clock::{Clock, WorkerClocks};
+pub use clock::{Clock, SkewModel, WorkerClocks};
 pub use device::{DeviceModel, DeviceKind};
 pub use storage::{ReadPattern, StorageModel, TailModel};

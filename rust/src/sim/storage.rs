@@ -158,7 +158,7 @@ impl StorageModel {
 /// // Analytic quantile ratio: p99/p50 = exp(sigma * z_0.99).
 /// assert!(tail.p99_over_p50() > 5.0);
 /// ```
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TailModel {
     /// Lognormal sigma of the multiplicative factor (0 disables the tail).
     pub sigma: f64,

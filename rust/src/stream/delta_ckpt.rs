@@ -151,6 +151,34 @@ pub struct GcStats {
     pub files_deleted: usize,
 }
 
+/// What one [`DeltaStore::recover`] pass swept up: version directories
+/// present on disk but absent from the manifest — the wreckage of a
+/// writer that died after `create_dir_all` but before the manifest
+/// commit point (a torn publish), or of a GC that died between its
+/// manifest write and the unlink.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// Orphaned version numbers whose directories were removed.
+    pub orphans_removed: Vec<u64>,
+    /// Files unlinked (the metadata-operation count a
+    /// [`crate::sim::StorageModel::delete_time`] charge uses).
+    pub files_removed: usize,
+    /// Bytes those files held (including torn partial files).
+    pub bytes_removed: u64,
+}
+
+/// What a simulated torn write left on disk
+/// ([`DeltaStore::simulate_torn_write`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TornWriteStats {
+    /// Bytes that reached the DFS before the writer died (complete
+    /// surviving files plus the truncated one) — the wasted partial
+    /// upload a cost model charges.
+    pub bytes_written: u64,
+    /// Files present in the torn directory (complete or truncated).
+    pub files_written: usize,
+}
+
 /// Bounded cache of last-published row fingerprints — the publish-side
 /// row dedup behind [`DeltaStore::save_delta`].
 ///
@@ -806,6 +834,135 @@ impl DeltaStore {
         }
         Ok(stats)
     }
+
+    /// Version directories present under the store root but absent from
+    /// the manifest — orphans.  The manifest write is the durability
+    /// commit point of every publish ([`DeltaStore::publish`] /
+    /// [`DeltaStore::save_delta`] write the version directory first,
+    /// then append the manifest), so an orphan is always the wreckage of
+    /// a writer that died mid-publish, never a servable version.
+    /// Non-`v%06d` entries under the root are ignored.
+    pub fn orphan_versions(&self) -> Result<Vec<u64>> {
+        let live: BTreeSet<u64> = self.versions.iter().map(|m| m.version).collect();
+        let mut orphans = Vec::new();
+        for entry in fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if !entry.file_type()?.is_dir() {
+                continue;
+            }
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(digits) = name.strip_prefix('v') else {
+                continue;
+            };
+            if digits.len() != 6 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+                continue;
+            }
+            let version: u64 = digits.parse()?;
+            if !live.contains(&version) {
+                orphans.push(version);
+            }
+        }
+        orphans.sort_unstable();
+        Ok(orphans)
+    }
+
+    /// Manifest recovery: remove every orphaned version directory
+    /// ([`DeltaStore::orphan_versions`]) and report what was swept.
+    /// Safe at any point — the manifest is never touched (orphans are by
+    /// definition not in it), so recovery cannot lose a servable
+    /// version, and a publish retried after recovery reuses the swept
+    /// version number cleanly.  Idempotent: a second pass finds nothing.
+    pub fn recover(&mut self) -> Result<RecoveryReport> {
+        let mut report = RecoveryReport::default();
+        for version in self.orphan_versions()? {
+            let dir = self.dir(version);
+            for name in ["publish.json", "dense.bin", "rows.bin"] {
+                if let Ok(md) = fs::metadata(dir.join(name)) {
+                    report.bytes_removed += md.len();
+                    report.files_removed += 1;
+                }
+            }
+            fs::remove_dir_all(&dir).map_err(|e| {
+                anyhow::anyhow!("cannot remove orphan version dir {}: {e}", dir.display())
+            })?;
+            report.orphans_removed.push(version);
+        }
+        Ok(report)
+    }
+
+    /// Simulate a DFS writer dying mid-version-write: create version
+    /// `version`'s directory holding only the first `surviving_files`
+    /// (0–2) of the three data files — written complete, in
+    /// [`DeltaStore::write_version`]'s order (`publish.json`,
+    /// `dense.bin`, `rows.bin`) — with the next file in order left
+    /// truncated halfway through its payload, and do **not** touch the
+    /// manifest.  This is exactly the wreckage `write_version` leaves
+    /// when it dies before the manifest commit point; the store itself
+    /// still considers the version unpublished, and
+    /// [`DeltaStore::recover`] sweeps it.
+    ///
+    /// `version` must not already be published (that would corrupt a
+    /// servable version, which a mid-*write* death cannot do — versions
+    /// are never rewritten except by [`DeltaStore::compact`]).
+    pub fn simulate_torn_write(
+        &self,
+        version: u64,
+        cur: &Checkpoint,
+        rows: &[(u64, Vec<f32>)],
+        surviving_files: usize,
+    ) -> Result<TornWriteStats> {
+        if self.versions.iter().any(|m| m.version == version) {
+            anyhow::bail!(
+                "version {version} is already published — a torn write can only \
+                 hit an in-flight version, never a committed one"
+            );
+        }
+        let surviving = surviving_files.min(2);
+        let dir = self.dir(version);
+        fs::create_dir_all(&dir)?;
+        // The same bytes `write_version` would produce, file by file.
+        let header = obj(vec![
+            ("version", num(version as f64)),
+            ("kind", s(VersionKind::Delta.as_str())),
+            ("parent", Value::Null),
+            ("step", num(cur.step as f64)),
+            ("variant", s(&cur.variant)),
+            ("world", num(cur.world as f64)),
+            ("owner_map", s(cur.owner_map.as_str())),
+            ("dims", dims_to_json(&cur.dims)),
+        ]);
+        let mut payload = Vec::new();
+        for (row, vals) in rows {
+            payload.extend_from_slice(&row.to_le_bytes());
+            payload.extend_from_slice(&f32s_to_bytes(vals));
+        }
+        let files: [(&str, Vec<u8>); 3] = [
+            ("publish.json", json::write(&header).into_bytes()),
+            ("dense.bin", frame(&f32s_to_bytes(&cur.dense))),
+            ("rows.bin", frame(&payload)),
+        ];
+        let mut stats = TornWriteStats::default();
+        for (i, (name, bytes)) in files.iter().enumerate() {
+            if i < surviving {
+                fs::write(dir.join(name), bytes)?;
+            } else {
+                // The writer died mid-stream: half the payload hit disk.
+                fs::write(dir.join(name), &bytes[..bytes.len() / 2])?;
+            }
+            let written = if i < surviving {
+                bytes.len()
+            } else {
+                bytes.len() / 2
+            };
+            stats.bytes_written += written as u64;
+            stats.files_written += 1;
+            if i >= surviving {
+                break;
+            }
+        }
+        Ok(stats)
+    }
 }
 
 #[cfg(test)]
@@ -1220,5 +1377,66 @@ mod tests {
         assert!(store.publish(4, &v0, Some((99, &v0))).is_err());
         // Unknown version load.
         assert!(store.load(7).is_err());
+    }
+
+    #[test]
+    fn recover_sweeps_orphans_and_is_idempotent() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0), (2, 2.0)]);
+        store.publish(0, &v0, None).unwrap();
+        assert!(store.orphan_versions().unwrap().is_empty());
+
+        // A torn write at every survivor count leaves an orphan the
+        // manifest never saw; published state is untouched.
+        for (version, surviving) in [(1u64, 0usize), (2, 1), (3, 2)] {
+            let next = ckpt(2, 0.2, &[(1, 3.0)]);
+            let stats = store
+                .simulate_torn_write(version, &next, &next.rows, surviving)
+                .unwrap();
+            assert_eq!(stats.files_written, surviving + 1);
+            assert!(stats.bytes_written > 0);
+        }
+        assert_eq!(store.orphan_versions().unwrap(), vec![1, 2, 3]);
+        assert_eq!(store.versions().len(), 1, "manifest never saw the orphans");
+
+        let report = store.recover().unwrap();
+        assert_eq!(report.orphans_removed, vec![1, 2, 3]);
+        assert!(report.files_removed >= 3);
+        assert!(report.bytes_removed > 0);
+        assert!(store.orphan_versions().unwrap().is_empty());
+        // Idempotent: a second pass finds nothing.
+        let again = store.recover().unwrap();
+        assert!(again.orphans_removed.is_empty());
+        assert_eq!(again.files_removed, 0);
+
+        // The swept version numbers are cleanly reusable: the retried
+        // publish lands and reconstructs.
+        let v1 = ckpt(2, 0.2, &[(1, 3.0)]);
+        store.publish(1, &v1, Some((0, &v0))).unwrap();
+        assert_state_eq(&store.load(1).unwrap(), &v1);
+        assert_state_eq(&store.load(0).unwrap(), &v0);
+    }
+
+    #[test]
+    fn torn_write_refuses_published_versions_and_ignores_foreign_dirs() {
+        let tmp = TempDir::new().unwrap();
+        let mut store = DeltaStore::create(tmp.path()).unwrap();
+        let v0 = ckpt(1, 0.1, &[(1, 1.0)]);
+        store.publish(0, &v0, None).unwrap();
+        // Tearing a committed version is a different corruption class
+        // (bit rot), not a mid-publish death — refused loudly.
+        let err = store
+            .simulate_torn_write(0, &v0, &v0.rows, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already published"), "{err}");
+        // Non-version directories under the root are not orphans.
+        fs::create_dir_all(tmp.path().join("scratch")).unwrap();
+        fs::create_dir_all(tmp.path().join("v12")).unwrap(); // wrong width
+        assert!(store.orphan_versions().unwrap().is_empty());
+        let report = store.recover().unwrap();
+        assert!(report.orphans_removed.is_empty());
+        assert!(tmp.path().join("scratch").exists());
     }
 }

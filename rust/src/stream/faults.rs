@@ -1,0 +1,243 @@
+//! Generalized fault-injection surface for [`crate::stream::OnlineSession`].
+//!
+//! PR 3's [`FailurePlan`] injects exactly one mid-window worker death
+//! plus one publish-tail model.  The chaos lab
+//! ([`crate::chaos`]) needs to *compose* the production menagerie —
+//! correlated multi-worker kills, PS-shard partitions, torn publishes,
+//! per-worker clock skew — deterministically from a seed.  A
+//! [`FaultSchedule`] is that composition: plain data, one entry per
+//! injected event, consumed by the session's window loop.
+//!
+//! [`FailurePlan`] stays the thin compatibility constructor:
+//! `FaultSchedule::from(plan)` lowers it to a one-kill schedule with the
+//! identical numeric flow, so every PR 3/5 failure test runs unchanged
+//! (bit-compatibly) through this surface.
+//!
+//! Design rule — every fault type falls in one of two classes, which is
+//! what makes the chaos invariant (`tests/chaos.rs`) tractable:
+//!
+//! * **latency-only** (partitions, skew, detection gaps): the clock is
+//!   charged, state is untouched, published artifacts stay bit-exact;
+//! * **state-discarding** (kills, torn publishes): partial work is
+//!   thrown away and recovery restarts from durable state (the last
+//!   published version / the manifest commit point), which the
+//!   determinism of the simulation makes bit-exact again.
+//!
+//! Nothing may silently mutate state: there is no fault class that
+//! "corrupts a little".
+
+use crate::sim::{SkewModel, TailModel};
+use crate::stream::elastic::FailurePlan;
+
+/// One correlated worker-death event: `workers` workers die together
+/// `fraction` of the way through window `window`'s training.
+///
+/// Synchronous training means the *cost* of a correlated kill equals a
+/// single kill — any death stalls the barrier and the window redoes from
+/// the last published version — but the event is recorded with its
+/// multiplicity so traces and reports attribute it correctly (and so a
+/// future async arm can charge it differently).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KillEvent {
+    /// Delta window (stream sequence number) the death lands in.
+    pub window: usize,
+    /// How many workers die together (≥ 1).
+    pub workers: usize,
+    /// How far through the window's training the failure hits, `(0, 1]`.
+    pub fraction: f64,
+    /// Heartbeat-timeout + re-scheduling gap before recovery starts
+    /// ([`crate::metrics::PHASE_DETECT`]).
+    pub detection_secs: f64,
+}
+
+/// One PS-shard (or worker) network partition: synchronous progress
+/// stalls for `stall_secs` at the start of window `window`, then the
+/// shard heals.  Latency-only: no parameter state is lost, so published
+/// artifacts are bit-identical to a partition-free run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionEvent {
+    pub window: usize,
+    /// Which shard is unreachable (PS server index, or worker rank on
+    /// the G-Meta arm) — trace attribution only; the stall cost is the
+    /// same whoever is cut off, because training is synchronous.
+    pub shard: usize,
+    /// Virtual seconds until the partition heals.
+    pub stall_secs: f64,
+}
+
+/// One torn publish: the DFS writer dies mid-version-write during window
+/// `window`, leaving `surviving_files` (0–2) of the version directory's
+/// three files on disk and the manifest — the durability commit point —
+/// untouched.  The session charges the wasted partial upload, runs
+/// [`crate::stream::DeltaStore::recover`] to sweep the orphan, and
+/// retries the publish; determinism makes the retried version bit-exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TornPublishEvent {
+    pub window: usize,
+    /// Complete files that hit the DFS before the writer died (0–2 of
+    /// `publish.json`, `dense.bin`, `rows.bin`, in write order); the
+    /// next file in order is left truncated mid-payload.
+    pub surviving_files: usize,
+}
+
+/// Every fault injected into one [`crate::stream::OnlineSession`] run.
+///
+/// Plain data, inert by default.  Built either from a [`FailurePlan`]
+/// (the compatibility path [`crate::stream::OnlineConfig::failures`]
+/// takes) or composed by [`crate::chaos::Scenario::schedule`].  Windows
+/// are delta sequence numbers; at most one event of each type per window
+/// is consulted (the `*_at` accessors return the first match).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    /// Correlated worker deaths, any number of windows.
+    pub kills: Vec<KillEvent>,
+    /// Shard partitions stalling window starts.
+    pub partitions: Vec<PartitionEvent>,
+    /// Publishes whose first attempt tears mid-write.
+    pub torn_publishes: Vec<TornPublishEvent>,
+    /// Per-worker clock skew, every window (None disables).
+    pub skew: Option<SkewModel>,
+    /// Slow-registry publish tail (None disables).
+    pub publish_tail: Option<TailModel>,
+}
+
+impl FaultSchedule {
+    /// True when no fault of any type is scheduled — the schedule a
+    /// default [`FailurePlan`] lowers to.
+    pub fn is_inert(&self) -> bool {
+        self.kills.is_empty()
+            && self.partitions.is_empty()
+            && self.torn_publishes.is_empty()
+            && self.skew.is_none()
+            && self.publish_tail.is_none()
+    }
+
+    /// Whether any scheduled fault rebuilds the trainer from its
+    /// [`crate::job::JobSpec`] (kills do; latency-only faults don't) —
+    /// the gate that rejects real-numerics (PJRT runtime) jobs.
+    pub fn rebuilds_trainer(&self) -> bool {
+        !self.kills.is_empty()
+    }
+
+    /// The kill landing in `window`, if any.
+    pub fn kill_at(&self, window: usize) -> Option<KillEvent> {
+        self.kills.iter().copied().find(|k| k.window == window)
+    }
+
+    /// The partition stalling `window`, if any.
+    pub fn partition_at(&self, window: usize) -> Option<PartitionEvent> {
+        self.partitions.iter().copied().find(|p| p.window == window)
+    }
+
+    /// The torn publish hitting `window`'s publish leg, if any.
+    pub fn torn_at(&self, window: usize) -> Option<TornPublishEvent> {
+        self.torn_publishes
+            .iter()
+            .copied()
+            .find(|t| t.window == window)
+    }
+}
+
+/// The compatibility lowering: a [`FailurePlan`] is exactly a
+/// single-kill (optional) + publish-tail (optional) schedule.  Field for
+/// field the same numbers flow into the session's window loop, which is
+/// what keeps PR 3/5 failure tests bit-identical under the new surface.
+impl From<FailurePlan> for FaultSchedule {
+    fn from(plan: FailurePlan) -> Self {
+        let kills = plan
+            .kill_at_window
+            .map(|window| KillEvent {
+                window,
+                workers: 1,
+                fraction: plan.kill_fraction,
+                detection_secs: plan.detection_secs,
+            })
+            .into_iter()
+            .collect();
+        let publish_tail = (plan.publish_tail_sigma > 0.0).then_some(TailModel {
+            sigma: plan.publish_tail_sigma,
+            seed: plan.tail_seed,
+        });
+        Self {
+            kills,
+            partitions: Vec::new(),
+            torn_publishes: Vec::new(),
+            skew: None,
+            publish_tail,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_failure_plan_lowers_to_an_inert_schedule() {
+        let sched = FaultSchedule::from(FailurePlan::default());
+        assert!(sched.is_inert());
+        assert!(!sched.rebuilds_trainer());
+        assert_eq!(sched.kill_at(0), None);
+        assert_eq!(sched.partition_at(0), None);
+        assert_eq!(sched.torn_at(0), None);
+    }
+
+    #[test]
+    fn failure_plan_lowers_field_for_field() {
+        let plan = FailurePlan {
+            kill_at_window: Some(4),
+            kill_fraction: 0.25,
+            detection_secs: 15.0,
+            publish_tail_sigma: 0.6,
+            tail_seed: 0xBEEF,
+        };
+        let sched = FaultSchedule::from(plan);
+        assert_eq!(
+            sched.kills,
+            vec![KillEvent {
+                window: 4,
+                workers: 1,
+                fraction: 0.25,
+                detection_secs: 15.0,
+            }]
+        );
+        assert_eq!(
+            sched.publish_tail,
+            Some(TailModel {
+                sigma: 0.6,
+                seed: 0xBEEF
+            })
+        );
+        assert!(sched.rebuilds_trainer());
+        assert_eq!(sched.kill_at(4).unwrap().workers, 1);
+        assert_eq!(sched.kill_at(3), None);
+    }
+
+    #[test]
+    fn accessors_find_events_by_window() {
+        let sched = FaultSchedule {
+            kills: vec![KillEvent {
+                window: 1,
+                workers: 2,
+                fraction: 0.5,
+                detection_secs: 0.0,
+            }],
+            partitions: vec![PartitionEvent {
+                window: 2,
+                shard: 0,
+                stall_secs: 9.0,
+            }],
+            torn_publishes: vec![TornPublishEvent {
+                window: 0,
+                surviving_files: 1,
+            }],
+            skew: None,
+            publish_tail: None,
+        };
+        assert!(!sched.is_inert());
+        assert_eq!(sched.kill_at(1).unwrap().workers, 2);
+        assert_eq!(sched.partition_at(2).unwrap().stall_secs, 9.0);
+        assert_eq!(sched.torn_at(0).unwrap().surviving_files, 1);
+        assert_eq!(sched.torn_at(2), None);
+    }
+}

@@ -36,6 +36,12 @@
 //!   charged as a measurable latency cliff), and a [`FailurePlan`]
 //!   injects mid-window worker death (window redone from the last
 //!   published version) and a slow-registry publish tail (p99 ≫ p50).
+//! * [`faults`] — the generalized fault-injection surface beneath both
+//!   [`FailurePlan`] (its thin compatibility constructor) and the chaos
+//!   lab ([`crate::chaos`]): a [`FaultSchedule`] composes correlated
+//!   multi-worker kills, PS-shard partitions, torn publishes (swept by
+//!   [`DeltaStore::recover`]), per-worker clock skew, and the publish
+//!   tail into one seed-replayable run.
 //!
 //! See `docs/ARCHITECTURE.md` for the delivery-window lifecycle diagram,
 //! including the reshard and redo detours.
@@ -43,16 +49,19 @@
 pub mod delta;
 pub mod delta_ckpt;
 pub mod elastic;
+pub mod faults;
 pub mod publisher;
 pub mod session;
 
 pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
 pub use delta_ckpt::{
-    DeltaStore, GcStats, PublishStats, RowFingerprints, VersionKind, VersionMeta, VersionPatch,
+    DeltaStore, GcStats, PublishStats, RecoveryReport, RowFingerprints, TornWriteStats,
+    VersionKind, VersionMeta, VersionPatch,
 };
 pub use elastic::{
     BacklogPolicy, ElasticEvent, FailurePlan, PhaseTimePolicy, ScaleDecision, ScalePolicy,
     ScheduledPolicy, WindowObservation,
 };
+pub use faults::{FaultSchedule, KillEvent, PartitionEvent, TornPublishEvent};
 pub use publisher::{CompactPolicy, PublishMode, PublishModel, Publisher, RowDedup};
 pub use session::{OnlineConfig, OnlineSession};

@@ -62,14 +62,16 @@ use crate::job::{JobSpec, Observer, TrainJob, Trainer};
 use crate::meta::{Episode, Sample, TaskBatch};
 use crate::metrics::{
     DeliveryMetrics, RunMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_DETECT, PHASE_GC,
-    PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_RESHARD, PHASE_RESTORE,
+    PHASE_PARTITION, PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_REPAIR, PHASE_RESHARD,
+    PHASE_RESTORE, PHASE_SKEW,
 };
 use crate::obs::{Tracer, TracingObserver};
-use crate::sim::{Clock, ReadPattern, StorageModel, TailModel};
+use crate::sim::{Clock, ReadPattern, StorageModel};
 use crate::stream::delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig};
 use crate::stream::elastic::{
     ElasticEvent, FailurePlan, ScaleDecision, ScalePolicy, WindowObservation,
 };
+use crate::stream::faults::{FaultSchedule, TornPublishEvent};
 use crate::stream::publisher::{CompactPolicy, PublishMode, PublishModel, Publisher, RowDedup};
 use crate::Result;
 
@@ -100,6 +102,8 @@ pub struct OnlineConfig {
     pub feed: DeltaFeedConfig,
     /// Injected fault model: mid-window worker death + slow-registry
     /// publish tail ([`crate::stream::elastic`]).  Inert by default.
+    /// Lowered to the generalized [`FaultSchedule`] at session build;
+    /// richer compositions attach via [`OnlineSession::with_faults`].
     pub failures: FailurePlan,
     /// When set, each window trains one pass over its own episodes
     /// (`ceil(episodes / world)` steps) instead of a fixed
@@ -170,6 +174,11 @@ pub struct OnlineSession<'rt> {
     /// Bytes the same reshard(s) streamed through the DFS.
     pending_reshard_bytes: u64,
     feed: DeltaFeed,
+    /// Generalized fault-injection schedule consulted by the window
+    /// loop.  Built from [`OnlineConfig::failures`] (the compatibility
+    /// path) in [`OnlineSession::new`]; richer compositions — the chaos
+    /// lab's scenarios — attach via [`OnlineSession::with_faults`].
+    faults: FaultSchedule,
     storage: StorageModel,
     /// Shared span tracer (when the job carries one): the session pins
     /// its base to the delivery clock before each run and re-attaches it
@@ -209,7 +218,10 @@ impl<'rt> OnlineSession<'rt> {
                  staleness is modeled by the offline PS harness instead."
             );
         }
-        if online.failures.kill_at_window.is_some() && job.trainer().has_runtime() {
+        // Lower the compatibility FailurePlan to the generalized fault
+        // schedule; richer compositions attach via `with_faults`.
+        let faults = FaultSchedule::from(online.failures);
+        if faults.rebuilds_trainer() && job.trainer().has_runtime() {
             anyhow::bail!(
                 "failure injection rebuilds the trainer from its JobSpec, which \
                  never carries a PJRT runtime — run failure experiments on the \
@@ -254,12 +266,7 @@ impl<'rt> OnlineSession<'rt> {
         publisher.storage = storage;
         // Slow-registry tail: stretch individual publish legs by a
         // deterministic lognormal factor keyed on the version number.
-        if online.failures.publish_tail_sigma > 0.0 {
-            publisher.tail = Some(TailModel {
-                sigma: online.failures.publish_tail_sigma,
-                seed: online.failures.tail_seed,
-            });
-        }
+        publisher.tail = faults.publish_tail;
         let job_spec = job.spec().clone();
         let tracer = job.tracer();
         let (trainer, observer) = job.into_parts();
@@ -277,6 +284,7 @@ impl<'rt> OnlineSession<'rt> {
             pending_reshard_secs: 0.0,
             pending_reshard_bytes: 0,
             feed: DeltaFeed::new(spec, online.feed),
+            faults,
             storage,
             tracer,
             online,
@@ -303,6 +311,27 @@ impl<'rt> OnlineSession<'rt> {
             );
         }
         self.policy = Some(policy);
+        Ok(self)
+    }
+
+    /// Replace the session's fault schedule with a composed one — the
+    /// generalized injection surface the chaos lab ([`crate::chaos`])
+    /// lowers its scenarios into.  [`OnlineConfig::failures`] is the
+    /// single-kill compatibility path routed through the same surface by
+    /// [`OnlineSession::new`]; this overrides it wholesale (including
+    /// the publish-tail model, which lives on the publisher).  Mirrors
+    /// `new`'s gate: schedules that rebuild the trainer (worker kills)
+    /// are refused for real-numerics jobs.
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Result<Self> {
+        if faults.rebuilds_trainer() && self.trainer.has_runtime() {
+            anyhow::bail!(
+                "failure injection rebuilds the trainer from its JobSpec, which \
+                 never carries a PJRT runtime — run failure experiments on the \
+                 virtual-clock path"
+            );
+        }
+        self.publisher.tail = faults.publish_tail;
+        self.faults = faults;
         Ok(self)
     }
 
@@ -527,6 +556,52 @@ impl<'rt> OnlineSession<'rt> {
         self.delivery.train.add_phase(PHASE_RESTORE, t_restore);
         self.emit_span(PHASE_RESTORE, t0, t_restore, &[("version", latest as f64)]);
         Ok(t_restore)
+    }
+
+    /// The doomed first attempt of a torn publish
+    /// ([`crate::stream::faults::TornPublishEvent`]): write a partial
+    /// version directory for the version the retry will publish, leave
+    /// the manifest untouched, then sweep it through
+    /// [`DeltaStore::recover`] and charge the waste — the partial upload
+    /// at registry bandwidth plus the orphan sweep's metadata deletes —
+    /// as [`PHASE_REPAIR`].  The subsequent real publish reuses the same
+    /// version number and, by determinism, the same bytes.
+    ///
+    /// [`DeltaStore::recover`]: crate::stream::DeltaStore::recover
+    fn torn_publish_detour(&mut self, window: usize, torn: TornPublishEvent) -> Result<()> {
+        let version = self.publisher.next_version();
+        let ckpt = self.trainer.capture(self.step);
+        // The doomed attempt ships the capture's touched rows — a
+        // deterministic stand-in for whatever the retry's publish policy
+        // (full vs delta, dedup) would have written; only the *wasted*
+        // bytes need to be reproducible, not identical to the retry's.
+        let stats = self
+            .publisher
+            .store
+            .simulate_torn_write(version, &ckpt, &ckpt.rows, torn.surviving_files)?;
+        let t0 = self.clock.now();
+        self.emit_instant(
+            "torn_publish",
+            t0,
+            &[
+                ("window", window as f64),
+                ("version", version as f64),
+                ("surviving_files", torn.surviving_files as f64),
+                ("bytes_wasted", stats.bytes_written as f64),
+            ],
+        );
+        let report = self.publisher.store.recover()?;
+        let repair = stats.bytes_written as f64 / self.publisher.model.upload_bw
+            + self.storage.delete_time(report.files_removed);
+        self.clock.advance(repair);
+        self.delivery.train.add_phase(PHASE_REPAIR, repair);
+        self.emit_span(
+            PHASE_REPAIR,
+            t0,
+            repair,
+            &[("window", window as f64), ("version", version as f64)],
+        );
+        Ok(())
     }
 
     /// Meta-steps the upcoming window trains: fixed
@@ -816,31 +891,79 @@ impl<'rt> OnlineSession<'rt> {
             );
         }
 
+        // --- Injected infrastructure stalls (latency-only faults).  A
+        // PS-shard partition pauses synchronous progress until the shard
+        // heals; per-worker clock skew delays the window barrier to the
+        // most-skewed worker.  Neither touches parameter state, so
+        // published artifacts stay bit-identical to a stall-free run —
+        // only the clock (and the freshness numbers) moves. ---
+        if let Some(p) = self.faults.partition_at(delta.seq) {
+            let t0 = self.clock.now();
+            self.emit_instant(
+                "partition",
+                t0,
+                &[
+                    ("window", delta.seq as f64),
+                    ("shard", p.shard as f64),
+                    ("stall_secs", p.stall_secs),
+                ],
+            );
+            let stall = p.stall_secs.max(0.0);
+            if stall > 0.0 {
+                self.clock.advance(stall);
+                self.delivery.train.add_phase(PHASE_PARTITION, stall);
+                self.emit_span(
+                    PHASE_PARTITION,
+                    t0,
+                    stall,
+                    &[("window", delta.seq as f64), ("shard", p.shard as f64)],
+                );
+            }
+        }
+        if let Some(skew) = self.faults.skew {
+            let wait = skew.barrier_penalty(self.world(), delta.seq as u64);
+            if wait > 0.0 {
+                let t0 = self.clock.now();
+                self.emit_instant(
+                    "clock_skew",
+                    t0,
+                    &[("window", delta.seq as f64), ("max_offset", wait)],
+                );
+                self.clock.advance(wait);
+                self.delivery.train.add_phase(PHASE_SKEW, wait);
+                self.emit_span(PHASE_SKEW, t0, wait, &[("window", delta.seq as f64)]);
+            }
+        }
+
         // --- Warm-start training on the fresh window, with the injected
-        // worker failure (when planned) striking first: restore the last
-        // published version into a fresh trainer, run the window once
-        // (the redo), and charge the doomed attempt's wasted time from
-        // the redo's duration — the two runs are identical by
+        // worker failure (when scheduled) striking first: restore the
+        // last published version into a fresh trainer, run the window
+        // once (the redo), and charge the doomed attempt's wasted time
+        // from the redo's duration — the two runs are identical by
         // determinism (see `recover_from_published`), so the failed
         // attempt is never simulated twice and the job observer sees
-        // exactly one completed run for the window. ---
+        // exactly one completed run for the window.  A correlated
+        // multi-worker kill costs the same as a single kill here —
+        // synchronous training stalls the barrier either way — but is
+        // recorded with its multiplicity. ---
         let steps = self.window_steps(&batches);
-        let failed = self.online.failures.kill_at_window == Some(delta.seq);
+        let kill = self.faults.kill_at(delta.seq);
         // Real clusters do not notice a dead worker instantly: the
         // heartbeat timeout + re-scheduling gap is charged before any
-        // recovery work starts ([`FailurePlan::detection_secs`]), as its
+        // recovery work starts ([`KillEvent::detection_secs`]), as its
         // own phase so the delivery log can attribute it.
-        let detect_secs = if failed {
+        let detect_secs = if let Some(k) = kill {
             let ts = self.clock.now();
             self.emit_instant(
                 "failure",
                 ts,
                 &[
                     ("window", delta.seq as f64),
-                    ("kill_fraction", self.online.failures.kill_fraction),
+                    ("kill_fraction", k.fraction),
+                    ("workers", k.workers as f64),
                 ],
             );
-            let t = self.online.failures.detection_secs.max(0.0);
+            let t = k.detection_secs.max(0.0);
             if t > 0.0 {
                 self.clock.advance(t);
                 self.delivery.train.add_phase(PHASE_DETECT, t);
@@ -850,16 +973,31 @@ impl<'rt> OnlineSession<'rt> {
         } else {
             0.0
         };
-        let mut redo_secs = if failed { self.recover_from_published()? } else { 0.0 };
+        let mut redo_secs = if kill.is_some() {
+            self.recover_from_published()?
+        } else {
+            0.0
+        };
         let train = self.train_window(&batches, steps)?;
-        if failed {
-            let frac = self.online.failures.kill_fraction.clamp(0.0, 1.0);
+        if let Some(k) = kill {
+            let frac = k.fraction.clamp(0.0, 1.0);
             let wasted = train.virtual_time * frac;
             let t0 = self.clock.now();
             self.clock.advance(wasted);
             self.delivery.train.add_phase(PHASE_REDO, wasted);
             self.emit_span(PHASE_REDO, t0, wasted, &[("window", delta.seq as f64)]);
             redo_secs += wasted;
+        }
+
+        // --- Torn publish: the DFS writer for this window's version dies
+        // mid-write, leaving a partial version directory the manifest —
+        // the durability commit point — never recorded.  Charge the
+        // wasted partial upload, sweep the orphan through the manifest
+        // recovery path, then retry: determinism makes the retried
+        // version bit-exact, so the fault is pure latency plus registry
+        // repair work. ---
+        if let Some(torn) = self.faults.torn_at(delta.seq) {
+            self.torn_publish_detour(delta.seq, torn)?;
         }
 
         // --- Capture + publish the version. ---

@@ -1,0 +1,462 @@
+//! Bench-artifact comparison core: the shared logic behind
+//! `examples/bench_diff.rs` (CI regression gate) and
+//! `examples/bench_ratchet.rs` (floor-tightening proposals).
+//!
+//! Both tools walk `BENCH_*.json` documents, pair every numeric leaf by
+//! its dotted path, and gate the headline-matched subset.  The pairing
+//! and gating live here so the fail-closed behaviors — malformed input
+//! errors that name the file, one-sided keys that warn but never fail,
+//! vacuous headline patterns that abort instead of silently gating
+//! nothing — are unit-tested library code rather than example-only
+//! logic the test suite can't reach.  The examples keep the CLI and the
+//! printing; every decision is made here.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Collect every numeric leaf of `doc` as `(dotted path, value)`, in
+/// document order (`reshard_pairs.2.bytes_reduction`, …).  Array
+/// indices are path components; null/bool/string leaves are skipped.
+pub fn numeric_leaves(doc: &Value) -> Vec<(String, f64)> {
+    fn walk(doc: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
+        match doc {
+            Value::Num(n) => out.push((prefix.to_string(), *n)),
+            Value::Arr(items) => {
+                for (i, item) in items.iter().enumerate() {
+                    let path = if prefix.is_empty() {
+                        i.to_string()
+                    } else {
+                        format!("{prefix}.{i}")
+                    };
+                    walk(item, &path, out);
+                }
+            }
+            Value::Obj(map) => {
+                for (k, v) in map {
+                    let path = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    walk(v, &path, out);
+                }
+            }
+            Value::Null | Value::Bool(_) | Value::Str(_) => {}
+        }
+    }
+    let mut out = Vec::new();
+    walk(doc, "", &mut out);
+    out
+}
+
+/// Parse a bench artifact's text into its numeric leaves.  Fail-closed:
+/// malformed JSON is an error naming `path`, never an empty leaf list a
+/// downstream gate would wave through.
+pub fn parse_leaves(text: &str, path: &str) -> Result<Vec<(String, f64)>> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("corrupt {path}: {e}"))?;
+    Ok(numeric_leaves(&doc))
+}
+
+/// Does `path` match any of the (non-empty) headline substrings?
+pub fn is_headline(headline: &[String], path: &str) -> bool {
+    headline.iter().any(|h| !h.is_empty() && path.contains(h))
+}
+
+/// Relative change percentage with the diff gate's conventions:
+/// `0 → 0` is 0%, `0 → x` is infinite, otherwise `(cur−base)/|base|`.
+pub fn delta_pct(base: f64, cur: f64) -> f64 {
+    if base != 0.0 {
+        (cur - base) / base.abs() * 100.0
+    } else if cur == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// One compared metric in a [`DiffReport`], in print order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DiffLine {
+    /// Present on both sides — the only shape that can regress.
+    Both {
+        path: String,
+        base: f64,
+        cur: f64,
+        delta_pct: f64,
+        gated: bool,
+        regressed: bool,
+    },
+    /// Only in the current artifact (schema drift): printed as `(new)`.
+    New { path: String, cur: f64, gated: bool },
+    /// Only in the baseline (schema drift): printed as `(removed)`.
+    Removed { path: String, base: f64, gated: bool },
+}
+
+/// Everything `bench_diff` decides: lines in print order (current-
+/// document order first, then baseline-only keys), one-sided-headline
+/// warnings, regression descriptions, and the gate counters.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub lines: Vec<DiffLine>,
+    /// Headline metrics seen on only one side — counted toward the
+    /// gate (so it is not vacuous) but warned about, never failed.
+    pub warnings: Vec<String>,
+    /// `path: base -> cur (+x.x%)` for every gated metric that dropped
+    /// past the threshold.
+    pub regressions: Vec<String>,
+    /// Headline-matched metrics (two-sided or one-sided).
+    pub gated: usize,
+    /// Numeric leaves in the current artifact.
+    pub compared: usize,
+}
+
+/// Pair `baseline` and `current` leaves and gate the headline subset:
+/// a gated metric regresses when `cur < base * (1 − fail_over_pct/100)`
+/// (headline metrics are higher-is-better ratios by the bench emission
+/// convention).  Pure — the verdict (including the vacuous-gate check)
+/// is [`DiffReport::verdict`].
+pub fn diff(
+    baseline: &[(String, f64)],
+    current: &[(String, f64)],
+    headline: &[String],
+    fail_over_pct: f64,
+) -> DiffReport {
+    let base_map: BTreeMap<&str, f64> = baseline.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let cur_map: BTreeMap<&str, f64> = current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut report = DiffReport {
+        compared: current.len(),
+        ..DiffReport::default()
+    };
+    for (path, cur) in current {
+        let Some(&base) = base_map.get(path.as_str()) else {
+            let gated = is_headline(headline, path);
+            if gated {
+                report.gated += 1;
+                report
+                    .warnings
+                    .push(format!("{path}: headline metric has no baseline yet"));
+            }
+            report.lines.push(DiffLine::New {
+                path: path.clone(),
+                cur: *cur,
+                gated,
+            });
+            continue;
+        };
+        let dp = delta_pct(base, *cur);
+        let gated = is_headline(headline, path);
+        let mut regressed = false;
+        if gated {
+            report.gated += 1;
+            if *cur < base * (1.0 - fail_over_pct / 100.0) {
+                regressed = true;
+                report
+                    .regressions
+                    .push(format!("{path}: {base:.4} -> {cur:.4} ({dp:+.1}%)"));
+            }
+        }
+        report.lines.push(DiffLine::Both {
+            path: path.clone(),
+            base,
+            cur: *cur,
+            delta_pct: dp,
+            gated,
+            regressed,
+        });
+    }
+    for (path, base) in baseline {
+        if !cur_map.contains_key(path.as_str()) {
+            let gated = is_headline(headline, path);
+            if gated {
+                report.gated += 1;
+                report
+                    .warnings
+                    .push(format!("{path}: headline metric only in baseline"));
+            }
+            report.lines.push(DiffLine::Removed {
+                path: path.clone(),
+                base,
+                gated,
+            });
+        }
+    }
+    report
+}
+
+impl DiffReport {
+    /// The CI gate: errors when the headline patterns matched nothing
+    /// (a vacuous gate is a misconfiguration, not a pass) or when any
+    /// gated metric regressed past the threshold.  One-sided keys never
+    /// fail — only a metric measured on both sides can.
+    pub fn verdict(&self, headline: &[String], fail_over_pct: f64) -> Result<()> {
+        if !headline.is_empty() && self.gated == 0 && self.regressions.is_empty() {
+            anyhow::bail!(
+                "no metric matched the headline patterns {headline:?} — \
+                 gate would be vacuous; fix the pattern or the bench output"
+            );
+        }
+        if !self.regressions.is_empty() {
+            anyhow::bail!(
+                "{} headline metric(s) regressed more than {fail_over_pct}%:\n  {}",
+                self.regressions.len(),
+                self.regressions.join("\n  ")
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One gated floor in a [`RatchetReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RatchetLine {
+    pub path: String,
+    pub floor: f64,
+    /// `None`: the bench no longer emits this floor (schema drift) —
+    /// the ratchet holds rather than proposing over it blindly.
+    pub current: Option<f64>,
+    pub gain_pct: f64,
+    pub verdict: RatchetVerdict,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RatchetVerdict {
+    /// Floor has no current value: never propose.
+    Missing,
+    /// Current is below its committed floor (`bench_diff` gates that).
+    BelowFloor,
+    /// Improved past the threshold: counts toward proposing.
+    Improved,
+    /// Within the threshold of the floor.
+    AtFloor,
+}
+
+/// What `bench_ratchet` decides about one artifact pair.
+#[derive(Debug, Clone, Default)]
+pub struct RatchetReport {
+    pub lines: Vec<RatchetLine>,
+    /// Every gated floor is met (and none is missing from the current
+    /// artifact).
+    pub all_at_floor: bool,
+    /// Gated floors beaten by more than the threshold.
+    pub improved: usize,
+    /// Gated floors present on both sides.
+    pub compared: usize,
+}
+
+/// Compare a fresh artifact against committed floors on the
+/// headline-matched subset.  Errors when no floor matches the patterns
+/// (a ratchet with nothing to gate on is a misconfiguration).
+pub fn ratchet(
+    baseline: &[(String, f64)],
+    current: &[(String, f64)],
+    headline: &[String],
+    improve_over_pct: f64,
+) -> Result<RatchetReport> {
+    let cur_map: BTreeMap<&str, f64> = current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut report = RatchetReport {
+        all_at_floor: true,
+        ..RatchetReport::default()
+    };
+    for (path, floor) in baseline.iter().filter(|(p, _)| is_headline(headline, p)) {
+        let Some(&now) = cur_map.get(path.as_str()) else {
+            report.all_at_floor = false;
+            report.lines.push(RatchetLine {
+                path: path.clone(),
+                floor: *floor,
+                current: None,
+                gain_pct: 0.0,
+                verdict: RatchetVerdict::Missing,
+            });
+            continue;
+        };
+        report.compared += 1;
+        let gain_pct = if *floor != 0.0 {
+            (now - floor) / floor.abs() * 100.0
+        } else {
+            0.0
+        };
+        let verdict = if now < *floor {
+            report.all_at_floor = false;
+            RatchetVerdict::BelowFloor
+        } else if gain_pct > improve_over_pct {
+            report.improved += 1;
+            RatchetVerdict::Improved
+        } else {
+            RatchetVerdict::AtFloor
+        };
+        report.lines.push(RatchetLine {
+            path: path.clone(),
+            floor: *floor,
+            current: Some(now),
+            gain_pct,
+            verdict,
+        });
+    }
+    if report.compared == 0 {
+        anyhow::bail!(
+            "no baseline metric matched the headline patterns {headline:?} — \
+             the ratchet has nothing to gate on"
+        );
+    }
+    Ok(report)
+}
+
+impl RatchetReport {
+    /// Propose a tighter baseline only when every floor is met and at
+    /// least one improved past the threshold — a run with any floor
+    /// missing or regressed never ratchets.
+    pub fn should_propose(&self) -> bool {
+        self.all_at_floor && self.improved > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hl(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn leaves(pairs: &[(&str, f64)]) -> Vec<(String, f64)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn numeric_leaves_walk_nested_docs_in_order() {
+        let got = parse_leaves(
+            r#"{"a": 1, "arr": [{"x": 2}, 3], "skip": "str", "b": {"c": 4.5}}"#,
+            "BENCH_t.json",
+        )
+        .unwrap();
+        assert_eq!(
+            got,
+            leaves(&[("a", 1.0), ("arr.0.x", 2.0), ("arr.1", 3.0), ("b.c", 4.5)])
+        );
+    }
+
+    #[test]
+    fn malformed_artifacts_error_naming_the_file() {
+        for text in ["", "{", "{\"a\": }", "not json at all", "[1, 2,"] {
+            let err = parse_leaves(text, "BENCH_broken.json").unwrap_err();
+            assert!(
+                err.to_string().contains("BENCH_broken.json"),
+                "error for {text:?} does not name the file: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn regression_past_threshold_fails_the_verdict() {
+        let base = leaves(&[("speedup", 2.0), ("other", 1.0)]);
+        let cur = leaves(&[("speedup", 1.5), ("other", 0.1)]);
+        let h = hl(&["speedup"]);
+        let report = diff(&base, &cur, &h, 20.0);
+        // `other` collapsed but is not gated; `speedup` dropped 25%.
+        assert_eq!(report.regressions.len(), 1);
+        assert!(report.regressions[0].contains("speedup"));
+        assert!(report.verdict(&h, 20.0).is_err());
+        // Within the threshold: same drop passes a looser gate.
+        assert!(diff(&base, &cur, &h, 30.0).verdict(&h, 30.0).is_ok());
+    }
+
+    #[test]
+    fn one_sided_headline_keys_warn_but_never_fail() {
+        // Metric only in current (a bench gained a metric)…
+        let report = diff(
+            &leaves(&[("old", 1.0)]),
+            &leaves(&[("old", 1.0), ("speedup", 3.0)]),
+            &hl(&["speedup"]),
+            20.0,
+        );
+        assert_eq!(report.warnings.len(), 1);
+        assert_eq!(report.gated, 1);
+        assert!(report.verdict(&hl(&["speedup"]), 20.0).is_ok());
+        assert!(matches!(
+            report.lines[1],
+            DiffLine::New { gated: true, .. }
+        ));
+
+        // …and only in baseline (a bench lost one): warn, count toward
+        // the gate (not vacuous), never fail.
+        let report = diff(
+            &leaves(&[("old", 1.0), ("speedup", 3.0)]),
+            &leaves(&[("old", 1.0)]),
+            &hl(&["speedup"]),
+            20.0,
+        );
+        assert_eq!(report.warnings.len(), 1);
+        assert_eq!(report.gated, 1);
+        assert!(report.verdict(&hl(&["speedup"]), 20.0).is_ok());
+        assert!(matches!(
+            report.lines[1],
+            DiffLine::Removed { gated: true, .. }
+        ));
+    }
+
+    #[test]
+    fn vacuous_headline_patterns_fail_closed() {
+        let base = leaves(&[("a", 1.0)]);
+        let cur = leaves(&[("a", 1.0)]);
+        let h = hl(&["no_such_metric"]);
+        let err = diff(&base, &cur, &h, 20.0).verdict(&h, 20.0).unwrap_err();
+        assert!(err.to_string().contains("vacuous"));
+        // No headline at all = ungated diff view: fine.
+        assert!(diff(&base, &cur, &[], 20.0).verdict(&[], 20.0).is_ok());
+    }
+
+    #[test]
+    fn zero_baselines_follow_the_documented_delta_convention() {
+        assert_eq!(delta_pct(0.0, 0.0), 0.0);
+        assert!(delta_pct(0.0, 1.0).is_infinite());
+        assert_eq!(delta_pct(2.0, 1.0), -50.0);
+        // A zero floor cannot regress (cur < 0 * anything is false for
+        // the non-negative ratios benches emit).
+        let h = hl(&["m"]);
+        let report = diff(&leaves(&[("m", 0.0)]), &leaves(&[("m", 0.0)]), &h, 20.0);
+        assert!(report.regressions.is_empty());
+        assert!(report.verdict(&h, 20.0).is_ok());
+    }
+
+    #[test]
+    fn ratchet_proposes_only_when_every_floor_is_met_and_one_improved() {
+        let h = hl(&["speedup", "hit_rate"]);
+        let base = leaves(&[("speedup", 2.0), ("hit_rate", 0.5), ("unrelated", 9.0)]);
+
+        // Improved well past 10%: propose.
+        let up = ratchet(&base, &leaves(&[("speedup", 3.0), ("hit_rate", 0.5)]), &h, 10.0).unwrap();
+        assert!(up.should_propose());
+        assert_eq!(up.improved, 1);
+        assert_eq!(up.compared, 2);
+
+        // One metric below floor: never propose, even though the other improved.
+        let mixed =
+            ratchet(&base, &leaves(&[("speedup", 3.0), ("hit_rate", 0.4)]), &h, 10.0).unwrap();
+        assert!(!mixed.should_propose());
+        assert!(!mixed.all_at_floor);
+
+        // Within the threshold: hold.
+        let flat =
+            ratchet(&base, &leaves(&[("speedup", 2.1), ("hit_rate", 0.5)]), &h, 10.0).unwrap();
+        assert!(!flat.should_propose());
+        assert_eq!(flat.improved, 0);
+    }
+
+    #[test]
+    fn ratchet_holds_on_missing_keys_and_fails_on_vacuous_patterns() {
+        let h = hl(&["speedup", "hit_rate"]);
+        let base = leaves(&[("speedup", 2.0), ("hit_rate", 0.5)]);
+        // The bench stopped emitting hit_rate: schema drift, hold.
+        let drift = ratchet(&base, &leaves(&[("speedup", 9.0)]), &h, 10.0).unwrap();
+        assert!(!drift.should_propose());
+        assert!(drift
+            .lines
+            .iter()
+            .any(|l| l.verdict == RatchetVerdict::Missing));
+        // No floor matches at all: misconfiguration, fail closed.
+        let err = ratchet(&base, &leaves(&[("speedup", 9.0)]), &hl(&["nope"]), 10.0).unwrap_err();
+        assert!(err.to_string().contains("nothing to gate on"));
+    }
+}

@@ -1,11 +1,17 @@
 //! In-tree substrates for ecosystem crates unavailable in the offline
 //! vendored build (DESIGN.md §1): a seedable RNG (`rand`), a minimal JSON
-//! parser/writer (`serde_json`), RAII temp dirs (`tempfile`), and a tiny
-//! CLI argument parser (`clap`).
+//! parser/writer (`serde_json`), RAII temp dirs (`tempfile`), a tiny
+//! CLI argument parser (`clap`), property-test hardening-tier knobs
+//! ([`props`], proptest's `PROPTEST_CASES`/`PROPTEST_SEED` env
+//! conventions), and the shared bench-artifact comparison core
+//! ([`benchcmp`], backing `examples/bench_diff.rs` and
+//! `examples/bench_ratchet.rs`).
 
 pub mod args;
+pub mod benchcmp;
 pub mod fxhash;
 pub mod json;
+pub mod props;
 pub mod rng;
 pub mod tempdir;
 

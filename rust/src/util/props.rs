@@ -1,0 +1,106 @@
+//! Hardening-tier controls for the property-based test suites.
+//!
+//! The offline build has no proptest crate; the test suites run a
+//! property over many seeded deterministic cases (see
+//! `docs/TESTING.md`).  This module gives every suite one shared
+//! knob set, compatible with proptest's conventions:
+//!
+//! * `PROPTEST_CASES` — raise the per-property case count (never
+//!   lowers below the suite's default, so a misconfigured CI job can't
+//!   silently weaken coverage).
+//! * `PROPTEST_SEED` — XOR-perturb the suite's seed base, exploring a
+//!   fresh slice of the input space while staying replayable (the
+//!   failing case's full seed is printed by the suite's panic).
+//! * `CHAOS_SEEDS` — scenario count for the chaos-lab soak
+//!   (`tests/chaos.rs`), separate from `PROPTEST_CASES` because one
+//!   chaos case is a whole pair of delivery runs, ~10³× the cost of a
+//!   collectives property case.
+//!
+//! The env parsing is split from the policy (`max`, `xor`) so the
+//! policy is unit-testable without process-global env races.
+
+/// The case count a suite should run: `max(default, override)` — an
+/// override can only harden, never weaken.  `None` = no override.
+pub fn case_count_from(default: u64, over: Option<u64>) -> u64 {
+    match over {
+        Some(n) => n.max(default),
+        None => default,
+    }
+}
+
+/// The seed base a suite should use: the default XOR-perturbed by the
+/// override, so distinct overrides explore disjoint deterministic
+/// slices and `0`/absent reproduces the committed run exactly.
+pub fn seed_base_from(default: u64, over: Option<u64>) -> u64 {
+    default ^ over.unwrap_or(0)
+}
+
+/// Parse a `u64` env var (decimal, or hex with an `0x` prefix).
+/// Unset, empty, or malformed values are `None` — a typo'd override
+/// falls back to the committed defaults instead of aborting the suite.
+pub fn env_u64(name: &str) -> Option<u64> {
+    let raw = std::env::var(name).ok()?;
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return None;
+    }
+    match raw.strip_prefix("0x").or_else(|| raw.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => raw.parse().ok(),
+    }
+}
+
+/// `max(default, $PROPTEST_CASES)` — the per-property case count.
+pub fn case_count(default: u64) -> u64 {
+    case_count_from(default, env_u64("PROPTEST_CASES"))
+}
+
+/// `default ^ $PROPTEST_SEED` — the suite's seed base.
+pub fn seed_base(default: u64) -> u64 {
+    seed_base_from(default, env_u64("PROPTEST_SEED"))
+}
+
+/// `max(default, $CHAOS_SEEDS)` — scenarios per chaos soak.
+pub fn chaos_seeds(default: u64) -> u64 {
+    case_count_from(default, env_u64("CHAOS_SEEDS"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_only_harden_case_counts() {
+        assert_eq!(case_count_from(64, None), 64);
+        assert_eq!(case_count_from(64, Some(2048)), 2048);
+        // A lowball override cannot weaken the committed default.
+        assert_eq!(case_count_from(64, Some(8)), 64);
+        assert_eq!(case_count_from(64, Some(0)), 64);
+    }
+
+    #[test]
+    fn seed_base_is_xor_perturbed_and_stable_by_default() {
+        assert_eq!(seed_base_from(0xFEED, None), 0xFEED);
+        assert_eq!(seed_base_from(0xFEED, Some(0)), 0xFEED);
+        assert_eq!(seed_base_from(0xFEED, Some(0xABC)), 0xFEED ^ 0xABC);
+        // Involutive: applying the same override twice round-trips.
+        assert_eq!(seed_base_from(seed_base_from(7, Some(9)), Some(9)), 7);
+    }
+
+    #[test]
+    fn env_u64_parses_decimal_and_hex_and_rejects_junk() {
+        // Process-global env: use one uniquely-named var per shape to
+        // stay race-free under the parallel test runner.
+        std::env::set_var("GMETA_PROPS_TEST_DEC", "2048");
+        assert_eq!(env_u64("GMETA_PROPS_TEST_DEC"), Some(2048));
+        std::env::set_var("GMETA_PROPS_TEST_HEX", "0xBEEF");
+        assert_eq!(env_u64("GMETA_PROPS_TEST_HEX"), Some(0xBEEF));
+        std::env::set_var("GMETA_PROPS_TEST_WS", "  17 ");
+        assert_eq!(env_u64("GMETA_PROPS_TEST_WS"), Some(17));
+        std::env::set_var("GMETA_PROPS_TEST_BAD", "lots");
+        assert_eq!(env_u64("GMETA_PROPS_TEST_BAD"), None);
+        std::env::set_var("GMETA_PROPS_TEST_EMPTY", "");
+        assert_eq!(env_u64("GMETA_PROPS_TEST_EMPTY"), None);
+        assert_eq!(env_u64("GMETA_PROPS_TEST_UNSET_NEVER_SET"), None);
+    }
+}

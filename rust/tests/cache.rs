@@ -18,10 +18,12 @@ use gmeta::embedding::{partition_lookups, RowCache};
 use gmeta::util::Rng;
 
 /// Run `body(seed, rng)` for `n` seeded cases; panic with the seed on
-/// failure so the case is replayable.
+/// failure so the case is replayable.  `PROPTEST_CASES` /
+/// `PROPTEST_SEED` harden the sweep (see `docs/TESTING.md`).
 fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
-    for seed in 0..n {
-        let mut rng = Rng::seed_from_u64(0xCAC4E ^ seed);
+    let base = gmeta::util::props::seed_base(0xCAC4E);
+    for seed in 0..gmeta::util::props::case_count(n) {
+        let mut rng = Rng::seed_from_u64(base ^ seed);
         body(seed, &mut rng);
     }
 }

@@ -1,0 +1,253 @@
+//! Chaos-lab integration tests: the no-silent-corruption invariant
+//! under composed, seed-replayable fault scenarios
+//! ([`gmeta::chaos`]).
+//!
+//! Three layers:
+//!
+//! * **Regression seeds** — [`CHAOS_REGRESSION_SEEDS`] pins scenarios
+//!   whose compositions exercised every fault type (and a few nasty
+//!   collisions) when they were recorded; each must keep passing
+//!   [`Runner::check`] on both architectures.
+//! * **Determinism pin** — the same seed replays to bit-identical
+//!   [`gmeta::metrics::VersionRecord`]s *and* a byte-identical exported
+//!   trace stream; without this, "replayable from a u64" is a lie.
+//! * **Property sweep** — fresh scenarios from sequential seeds, count
+//!   raised by `CHAOS_SEEDS` (the long-soak tier, see
+//!   `docs/TESTING.md`); any violation is shrunk to a locally-minimal
+//!   reproducer before panicking.
+//!
+//! Plus the compatibility pin: the legacy single-shot
+//! [`FailurePlan`] config path and its lowering through the
+//! generalized [`FaultSchedule`] surface publish bit-identical streams.
+
+use gmeta::chaos::Runner;
+use gmeta::config::{Architecture, ModelDims};
+use gmeta::data::movielens_like;
+use gmeta::job::TrainJob;
+use gmeta::metrics::{PHASE_DETECT, PHASE_REDO};
+use gmeta::stream::{FailurePlan, FaultSchedule, OnlineSession};
+use gmeta::util::{json, TempDir};
+
+const ARCHES: [Architecture; 2] = [Architecture::GMeta, Architecture::ParameterServer];
+
+/// Seeds with known-interesting compositions (recorded from
+/// `Scenario::from_seed(seed, 3, 4)`; replay any of them with
+/// `cargo run --release --example online_delivery -- --chaos <seed>`).
+/// Grow this table with the seed of any scenario that ever finds a bug.
+const CHAOS_REGRESSION_SEEDS: &[(u64, &str)] = &[
+    (0, "latency-only trio: preemption + clock skew + publish tail"),
+    (2, "five fault types composed: kill + 2 partitions + 2 torn publishes + preemption + skew"),
+    (3, "correlated double kill + double partition + slow publish tail"),
+    (5, "minimal torn publish (1 surviving file), nothing else"),
+    (6, "no kill: partitions + 2 torn publishes + preemption + skew + tail"),
+    (8, "kill and zero-survivor torn publish colliding at window 1, plus preemption"),
+    (125, "single large correlated kill (3 workers, ~29s detection)"),
+];
+
+#[test]
+fn regression_seeds_hold_on_both_architectures() {
+    for arch in ARCHES {
+        let runner = Runner::new(arch);
+        for &(seed, why) in CHAOS_REGRESSION_SEEDS {
+            let scenario = runner.scenario(seed);
+            let report = runner.check(&scenario).unwrap_or_else(|e| {
+                panic!("regression seed {seed} ({why}) violated the invariant on {arch:?}: {e}")
+            });
+            assert_eq!(
+                report.faults,
+                scenario.faults.len(),
+                "seed {seed}: report fault count"
+            );
+            assert!(report.versions > 0, "seed {seed}: no versions compared");
+        }
+    }
+}
+
+/// The recorded compositions actually charge their fault phases — the
+/// faults are injected, not silently skipped (a runner that never
+/// injects anything would pass the bit-exactness check vacuously).
+#[test]
+fn regression_seeds_charge_their_fault_phases() {
+    let runner = Runner::new(Architecture::GMeta);
+    // Seed 5 is a lone torn publish: repair time, nothing else torn-ish.
+    let torn = runner.check(&runner.scenario(5)).unwrap();
+    assert!(torn.repair_secs > 0.0, "torn publish charged no repair");
+    assert_eq!(torn.detect_secs, 0.0, "no kill in seed 5");
+    // Seed 125 is a lone kill with ~29s detection latency.
+    let kill = runner.check(&runner.scenario(125)).unwrap();
+    assert!(kill.detect_secs > 0.0, "kill charged no detection");
+    assert!(kill.redo_secs > 0.0, "kill charged no redo");
+    assert_eq!(kill.repair_secs, 0.0, "no torn publish in seed 125");
+    // Seed 0 composes the latency-only faults: skew waits at barriers.
+    let skew = runner.check(&runner.scenario(0)).unwrap();
+    assert!(skew.skew_secs > 0.0, "clock skew charged no barrier wait");
+    // Seed 2 composes partitions with everything else.
+    let multi = runner.check(&runner.scenario(2)).unwrap();
+    assert!(multi.partition_secs > 0.0, "partitions charged no stall");
+}
+
+#[test]
+fn same_seed_replays_bit_identically() {
+    for arch in ARCHES {
+        let runner = Runner::new(arch);
+        for seed in [2u64, 5] {
+            let scenario = runner.scenario(seed);
+            let (_t1, a) = runner.run_chaos_traced(&scenario).unwrap();
+            let (_t2, b) = runner.run_chaos_traced(&scenario).unwrap();
+            // Bit-identical version records (the full serialized form:
+            // latency, redo, detect, bytes — not just ids).
+            let records = |s: &OnlineSession<'_>| -> Vec<String> {
+                s.delivery
+                    .versions
+                    .iter()
+                    .map(|v| json::write(&v.to_json()))
+                    .collect()
+            };
+            assert_eq!(
+                records(&a),
+                records(&b),
+                "seed {seed} on {arch:?}: version records diverged between replays"
+            );
+            // Byte-identical exported trace stream (spans + fault
+            // instants on the virtual clock).
+            let ta = a.tracer().expect("traced run has a tracer").to_jsonl();
+            let tb = b.tracer().expect("traced run has a tracer").to_jsonl();
+            assert!(!ta.is_empty(), "trace export is empty");
+            assert_eq!(ta, tb, "seed {seed} on {arch:?}: trace streams diverged");
+        }
+    }
+}
+
+/// The property: every scenario in the sweep either publishes a version
+/// stream bit-exact to the fault-free twin or fails loudly — never
+/// silently corrupts, wedges the store, or leaves orphans.  Raise the
+/// sweep with `CHAOS_SEEDS=<n>` (nightly runs 64; see
+/// `.github/workflows/ci.yml`).
+#[test]
+fn chaos_sweep_no_silent_corruption() {
+    let n = gmeta::util::props::chaos_seeds(4);
+    for arch in ARCHES {
+        let runner = Runner::new(arch);
+        for seed in 0..n {
+            let scenario = runner.scenario(seed);
+            if let Err(e) = runner.check(&scenario) {
+                let minimal = runner.shrink(&scenario);
+                panic!(
+                    "chaos invariant violated on {arch:?} (seed {seed}): {e}\n\
+                     minimal reproducer: {}\n\
+                     replay: cargo run --release --example online_delivery -- --chaos {seed}",
+                    minimal.describe()
+                );
+            }
+        }
+    }
+}
+
+fn job(arch: Architecture, world: usize) -> TrainJob<'static> {
+    let dims = ModelDims {
+        batch: 8,
+        slots: 4,
+        valency: 2,
+        emb_dim: 8,
+        hidden1: 16,
+        hidden2: 8,
+        ..Default::default()
+    };
+    let builder = TrainJob::builder().dims(dims).dataset(movielens_like());
+    match arch {
+        Architecture::GMeta => builder.gmeta(1, world),
+        Architecture::ParameterServer => builder.parameter_server(world, 1),
+    }
+    .build()
+    .unwrap()
+}
+
+/// The legacy `OnlineConfig::failures` path and the generalized
+/// `with_faults(FaultSchedule::from(plan))` path are the same machine:
+/// bit-identical published versions and identical fault-phase charges.
+#[test]
+fn failure_plan_lowering_is_bit_compatible() {
+    for arch in ARCHES {
+        let runner = Runner::new(arch);
+        let plan = FailurePlan {
+            kill_at_window: Some(1),
+            kill_fraction: 0.5,
+            detection_secs: 7.5,
+            publish_tail_sigma: 0.4,
+            tail_seed: 77,
+        };
+
+        let tmp_legacy = TempDir::new().unwrap();
+        let mut cfg = runner.online();
+        cfg.failures = plan;
+        let mut legacy =
+            OnlineSession::new(job(arch, runner.world), cfg, tmp_legacy.path()).unwrap();
+        legacy.run().unwrap();
+
+        let tmp_new = TempDir::new().unwrap();
+        let mut lowered =
+            OnlineSession::new(job(arch, runner.world), runner.online(), tmp_new.path())
+                .unwrap()
+                .with_faults(FaultSchedule::from(plan))
+                .unwrap();
+        lowered.run().unwrap();
+
+        let records = |s: &OnlineSession<'_>| -> Vec<String> {
+            s.delivery
+                .versions
+                .iter()
+                .map(|v| json::write(&v.to_json()))
+                .collect()
+        };
+        assert_eq!(
+            records(&legacy),
+            records(&lowered),
+            "{arch:?}: FailurePlan lowering changed the version stream"
+        );
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for rec in &legacy.delivery.versions {
+            let a = legacy.publisher.store.load(rec.version).unwrap();
+            let b = lowered.publisher.store.load(rec.version).unwrap();
+            assert_eq!(a.step, b.step, "{arch:?} v{}", rec.version);
+            assert_eq!(bits(&a.dense), bits(&b.dense), "{arch:?} v{}", rec.version);
+            assert_eq!(a.rows.len(), b.rows.len(), "{arch:?} v{}", rec.version);
+            for ((ra, xa), (rb, xb)) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(ra, rb, "{arch:?} v{}", rec.version);
+                assert_eq!(bits(xa), bits(xb), "{arch:?} v{} row {ra}", rec.version);
+            }
+        }
+        for phase in [PHASE_DETECT, PHASE_REDO] {
+            assert_eq!(
+                legacy.delivery.train.phase(phase).to_bits(),
+                lowered.delivery.train.phase(phase).to_bits(),
+                "{arch:?}: {phase} charge diverged between the two paths"
+            );
+        }
+    }
+}
+
+/// An inert schedule is a no-op: `with_faults(FaultSchedule::default())`
+/// publishes the same stream as never calling it.
+#[test]
+fn inert_schedule_is_a_no_op() {
+    let runner = Runner::new(Architecture::GMeta);
+    let (_t1, plain) = runner.run_clean().unwrap();
+    let tmp = TempDir::new().unwrap();
+    let mut inert = OnlineSession::new(
+        job(Architecture::GMeta, runner.world),
+        runner.online(),
+        tmp.path(),
+    )
+    .unwrap()
+    .with_faults(FaultSchedule::default())
+    .unwrap();
+    inert.run().unwrap();
+    let records = |s: &OnlineSession<'_>| -> Vec<String> {
+        s.delivery
+            .versions
+            .iter()
+            .map(|v| json::write(&v.to_json()))
+            .collect()
+    };
+    assert_eq!(records(&plain), records(&inert));
+}

@@ -25,10 +25,12 @@ use gmeta::util::json::Value;
 use gmeta::util::{Rng, TempDir};
 
 /// Run `body(seed, rng)` for `n` seeded cases; assertion messages carry
-/// the seed so a failing case is replayable.
+/// the seed so a failing case is replayable.  `PROPTEST_CASES` /
+/// `PROPTEST_SEED` harden the sweep (see `docs/TESTING.md`).
 fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
-    for seed in 0..n {
-        let mut rng = Rng::seed_from_u64(0x0B5E ^ seed);
+    let base = gmeta::util::props::seed_base(0x0B5E);
+    for seed in 0..gmeta::util::props::case_count(n) {
+        let mut rng = Rng::seed_from_u64(base ^ seed);
         body(seed, &mut rng);
     }
 }

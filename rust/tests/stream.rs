@@ -166,3 +166,174 @@ fn overrunning_windows_queue_instead_of_time_travelling() {
         v[1].latency()
     );
 }
+
+// ---------------------------------------------------------------------
+// Torn-publish durability: a DFS writer dying mid-version-write must
+// never wedge the store.  The manifest write is the commit point, so a
+// torn write is always an *orphan* (recoverable wreckage), and the
+// legitimate corruption modes — truncated files, missing chain members,
+// stale manifest entries — fail loudly with the offending file named,
+// while publish/save_delta/compact/gc keep working.
+// ---------------------------------------------------------------------
+
+use gmeta::checkpoint::Checkpoint;
+use gmeta::stream::DeltaStore;
+
+fn store_dims() -> ModelDims {
+    ModelDims {
+        batch: 8,
+        slots: 2,
+        valency: 2,
+        emb_dim: 4,
+        hidden1: 8,
+        hidden2: 4,
+        task_dim: 4,
+        emb_rows: 1000,
+    }
+}
+
+fn store_ckpt(step: u64, dense_seed: f32, rows: &[(u64, f32)]) -> Checkpoint {
+    Checkpoint {
+        step,
+        variant: "maml".into(),
+        dims: store_dims(),
+        world: 4,
+        owner_map: gmeta::embedding::OwnerMap::Modulo,
+        dense: vec![dense_seed; 6],
+        rows: rows.iter().map(|&(r, v)| (r, vec![v; 4])).collect(),
+    }
+}
+
+#[test]
+fn torn_write_is_an_orphan_and_recover_removes_it() {
+    let tmp = TempDir::new().unwrap();
+    let mut store = DeltaStore::create(tmp.path()).unwrap();
+    let v0 = store_ckpt(10, 0.5, &[(1, 1.0), (5, 5.0)]);
+    store.publish(0, &v0, None).unwrap();
+
+    // The writer dies after completing 1 of the version's 3 files.
+    let v1 = store_ckpt(20, 0.6, &[(1, 1.5), (5, 5.0)]);
+    let stats = store
+        .simulate_torn_write(1, &v1, &v1.rows, 1)
+        .unwrap();
+    assert!(stats.files_written >= 1, "torn write left nothing behind");
+    assert_eq!(store.orphan_versions().unwrap(), vec![1]);
+    // The published stream is untouched: v0 still loads, latest is 0.
+    assert_eq!(store.latest().unwrap().version, 0);
+    store.load(0).unwrap();
+
+    // Recovery removes exactly the wreckage and is idempotent.
+    let report = store.recover().unwrap();
+    assert_eq!(report.orphans_removed, vec![1]);
+    assert!(report.files_removed >= 1);
+    assert!(report.bytes_removed > 0);
+    assert!(store.orphan_versions().unwrap().is_empty());
+    let again = store.recover().unwrap();
+    assert!(again.orphans_removed.is_empty());
+    assert_eq!(again.files_removed, 0);
+
+    // The retried publish of the same version now succeeds end to end.
+    store.publish(1, &v1, Some((0, &v0))).unwrap();
+    let got = store.load(1).unwrap();
+    assert_eq!(got.step, 20);
+}
+
+#[test]
+fn truncated_delta_file_errors_name_the_file_and_store_recovers() {
+    let tmp = TempDir::new().unwrap();
+    let mut store = DeltaStore::create(tmp.path()).unwrap();
+    let v0 = store_ckpt(10, 0.5, &[(1, 1.0), (5, 5.0)]);
+    let v1 = store_ckpt(20, 0.6, &[(1, 1.5), (5, 5.0), (9, 9.0)]);
+    store.publish(0, &v0, None).unwrap();
+    store.publish(1, &v1, Some((0, &v0))).unwrap();
+
+    // Corrupt the delta's row payload: keep only half the bytes.
+    let rows_path = tmp.path().join("v000001").join("rows.bin");
+    let bytes = std::fs::read(&rows_path).unwrap();
+    std::fs::write(&rows_path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let err = store.load(1).unwrap_err().to_string();
+    assert!(
+        err.contains("v000001") && err.contains("rows.bin"),
+        "error does not name the corrupt file: {err}"
+    );
+    // The base version is unaffected.
+    store.load(0).unwrap();
+
+    // Availability recovers by publishing a fresh full snapshot...
+    let v2 = store_ckpt(30, 0.7, &[(1, 2.0), (5, 5.0), (9, 9.5)]);
+    store.publish(2, &v2, None).unwrap();
+    store.load(2).unwrap();
+    // ...on top of which deltas, compaction, and GC all still work.
+    let v3 = store_ckpt(40, 0.8, &[(1, 2.5), (5, 5.0), (9, 9.5)]);
+    store.save_delta(3, &v3, 2).unwrap();
+    store.compact(3).unwrap();
+    let gc = store.gc(1).unwrap();
+    assert!(
+        gc.removed.contains(&1),
+        "GC did not retire the corrupt delta: {:?}",
+        gc.removed
+    );
+    let got = store.load(3).unwrap();
+    assert_eq!(got.step, 40);
+    assert!(store.orphan_versions().unwrap().is_empty());
+}
+
+#[test]
+fn missing_chain_member_errors_name_the_missing_version() {
+    let tmp = TempDir::new().unwrap();
+    let mut store = DeltaStore::create(tmp.path()).unwrap();
+    let v0 = store_ckpt(10, 0.5, &[(1, 1.0)]);
+    let v1 = store_ckpt(20, 0.6, &[(1, 1.5)]);
+    let v2 = store_ckpt(30, 0.7, &[(1, 2.0)]);
+    store.publish(0, &v0, None).unwrap();
+    store.publish(1, &v1, Some((0, &v0))).unwrap();
+    store.publish(2, &v2, Some((1, &v1))).unwrap();
+
+    // The full ancestor vanishes out from under the chain.
+    std::fs::remove_dir_all(tmp.path().join("v000000")).unwrap();
+
+    let err = store.load(2).unwrap_err().to_string();
+    assert!(
+        err.contains("v000000"),
+        "error does not name the missing chain member: {err}"
+    );
+    // A fresh full snapshot restores service without touching the
+    // broken chain.
+    let v3 = store_ckpt(40, 0.8, &[(1, 2.5)]);
+    store.publish(3, &v3, None).unwrap();
+    store.load(3).unwrap();
+}
+
+#[test]
+fn stale_manifest_entry_errors_then_gc_retires_it() {
+    let tmp = TempDir::new().unwrap();
+    let mut store = DeltaStore::create(tmp.path()).unwrap();
+    let v0 = store_ckpt(10, 0.5, &[(1, 1.0)]);
+    let v1 = store_ckpt(20, 0.6, &[(1, 1.5)]);
+    store.publish(0, &v0, None).unwrap();
+    store.publish(1, &v1, Some((0, &v0))).unwrap();
+
+    // The latest version's directory is gone but the manifest still
+    // lists it — a stale entry.
+    std::fs::remove_dir_all(tmp.path().join("v000001")).unwrap();
+    assert_eq!(store.latest().unwrap().version, 1);
+    let err = store.load(1).unwrap_err().to_string();
+    assert!(
+        err.contains("v000001"),
+        "error does not name the stale version: {err}"
+    );
+
+    // GC tolerates the already-missing directory: publish a fresh full,
+    // retire everything older, and the store is clean again.
+    let v2 = store_ckpt(30, 0.7, &[(1, 2.0)]);
+    store.publish(2, &v2, None).unwrap();
+    let gc = store.gc(1).unwrap();
+    assert!(gc.removed.contains(&1), "stale entry survived GC: {:?}", gc.removed);
+    store.load(2).unwrap();
+    assert!(store.orphan_versions().unwrap().is_empty());
+    assert_eq!(
+        store.versions().iter().map(|m| m.version).collect::<Vec<_>>(),
+        vec![2]
+    );
+}
