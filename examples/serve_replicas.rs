@@ -16,9 +16,18 @@
 //! and reports the migration window and the (asserted-zero) wrong-owner
 //! count.
 //!
+//! With `--chaos <seed>`, the example instead replays the serve-side
+//! chaos scenario that seed composes ([`gmeta::chaos::Runner`]): the
+//! delivery loop runs under the scenario's stream faults, the resulting
+//! version timeline is served under its replica kills / registry lag /
+//! migration tears on **both** [`gmeta::serve::ReactivePolicy`] arms,
+//! the serve invariant is enforced on each, and the static-vs-reactive
+//! SLO attainment is printed — the single-integer reproducer the chaos
+//! tests and `BENCH_chaos.json` name.
+//!
 //! Run: `cargo run --release --example serve_replicas`
 //!        `[-- --replicas N] [--zipf E] [--versions V] [--migrate]`
-//!        `[--trace out.json]`
+//!        `[--trace out.json] [--chaos SEED]`
 
 use gmeta::checkpoint::Checkpoint;
 use gmeta::config::ModelDims;
@@ -39,6 +48,13 @@ fn main() -> anyhow::Result<()> {
     let versions = args.usize_or("versions", 10)? as u64;
     let migrate = args.flag("migrate");
     let trace_path = args.get("trace").map(str::to_owned);
+
+    if let Some(raw) = args.get("chaos") {
+        let seed: u64 = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--chaos takes a u64 seed, got {raw:?}: {e}"))?;
+        return replay_chaos(seed, replicas);
+    }
 
     // Publish side: one base snapshot, then deltas touching a hot
     // subset each window — the store shape `stream::OnlineSession`
@@ -152,5 +168,46 @@ fn main() -> anyhow::Result<()> {
         std::fs::write(out, json_write(&m.to_json()))?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// Replay a serve-side chaos seed: compose the scenario, run the serve
+/// invariant check on both policy arms, and print the comparison.
+fn replay_chaos(seed: u64, replicas: usize) -> anyhow::Result<()> {
+    use gmeta::chaos::Runner;
+    use gmeta::config::Architecture;
+
+    let mut runner = Runner::new(Architecture::GMeta);
+    runner.replicas = replicas;
+    let scenario = runner.scenario_serve(seed);
+    println!("serve chaos replay: {}", scenario.describe());
+
+    let report = runner.check_serve(&scenario)?;
+    println!(
+        "\nserved {} versions over {:.0}s virtual on a fleet of {replicas}:",
+        report.versions, report.horizon
+    );
+    println!(
+        "  kills fired {}  migration torn {}  resumed {}",
+        report.replicas_killed, report.migration_torn, report.migration_resumed
+    );
+    println!(
+        "  static arm:   SLO {:.4}  unserved {}  degraded {}",
+        report.static_slo, report.static_unserved, report.static_degraded
+    );
+    println!(
+        "  reactive arm: SLO {:.4}  unserved {}  degraded {}  forced syncs {}",
+        report.reactive_slo, report.reactive_unserved, report.reactive_degraded,
+        report.forced_syncs
+    );
+    println!(
+        "  {}",
+        if report.dominated {
+            "reactive strictly dominates static on this seed"
+        } else {
+            "reactive did not strictly beat static on this seed"
+        }
+    );
+    println!("\nserve invariant held on both arms (wrong-owner 0, never served ahead, final state bit-exact)");
     Ok(())
 }

@@ -10,9 +10,16 @@
 //! repair) — deterministic numbers that double as a drift canary for
 //! the injection paths.
 //!
+//! It also runs the **reactive-vs-static serve sweep**: each serve
+//! scenario's fault-delayed version timeline is served under both
+//! [`gmeta::serve::ReactivePolicy`] arms (serve invariant enforced),
+//! SLO attainment is scored per seed into the `serve_reactive`
+//! section, and the reactive arm must strictly dominate the static arm
+//! on ≥80% of the full corpus.
+//!
 //! Results land in `BENCH_chaos.json` (CI uploads it as an artifact;
-//! the seeds here are a subset of `CHAOS_REGRESSION_SEEDS` in
-//! `tests/chaos.rs`).
+//! the seeds here are a subset of `CHAOS_REGRESSION_SEEDS` /
+//! `SERVE_CHAOS_REGRESSION_SEEDS` in `tests/chaos.rs`).
 //!
 //! Run: `cargo bench --bench chaos`
 //! CI smoke mode (fewer iters/seeds, same paths): `cargo bench --bench chaos -- --smoke`
@@ -31,6 +38,13 @@ fn main() -> anyhow::Result<()> {
         (1, 2, &[5, 8])
     } else {
         (1, 5, &[0, 2, 5, 8, 125])
+    };
+    // Serve-side corpus for the reactive-vs-static sweep (every seed
+    // carries at least one replica kill by construction).
+    let serve_seeds: &[u64] = if smoke {
+        &[0, 5]
+    } else {
+        &[0, 2, 5, 6, 8, 14, 16, 17, 19, 21]
     };
     println!(
         "chaos lab bench ({} mode): {} measured iters over seeds {seeds:?}\n",
@@ -83,9 +97,69 @@ fn main() -> anyhow::Result<()> {
                     ("virtual_partition_secs", num(report.partition_secs)),
                     ("virtual_skew_secs", num(report.skew_secs)),
                     ("virtual_repair_secs", num(report.repair_secs)),
+                    ("virtual_backoff_secs", num(report.backoff_secs)),
+                    ("escapes", num(report.escapes as f64)),
                 ]),
             ));
         }
+
+        // Reactive-vs-static serve sweep: run each serve scenario's
+        // fault-delayed version timeline through both policy arms
+        // (serve invariant enforced inside check_serve) and score SLO
+        // attainment per seed.  The reactive arm must strictly win on
+        // ≥80% of the full corpus — the headline evidence that the
+        // fault-aware policies earn their keep.
+        let mut serve_docs: Vec<(String, Value)> = Vec::new();
+        let mut dominated = 0usize;
+        for &seed in serve_seeds {
+            let scenario = runner.scenario_serve(seed);
+            let report = runner.check_serve(&scenario)?;
+            println!(
+                "{label}: serve seed {seed}: static SLO {:.4}, reactive SLO {:.4}{}",
+                report.static_slo,
+                report.reactive_slo,
+                if report.dominated { " (reactive wins)" } else { "" }
+            );
+            if report.dominated {
+                dominated += 1;
+            }
+            serve_docs.push((
+                format!("seed_{seed}"),
+                obj(vec![
+                    ("static_slo", num(report.static_slo)),
+                    ("reactive_slo", num(report.reactive_slo)),
+                    ("dominated", num(if report.dominated { 1.0 } else { 0.0 })),
+                    ("replicas_killed", num(report.replicas_killed as f64)),
+                    ("forced_syncs", num(report.forced_syncs as f64)),
+                    ("static_unserved", num(report.static_unserved as f64)),
+                    ("reactive_unserved", num(report.reactive_unserved as f64)),
+                    ("static_degraded", num(report.static_degraded as f64)),
+                    ("reactive_degraded", num(report.reactive_degraded as f64)),
+                ]),
+            ));
+        }
+        let frac = dominated as f64 / serve_seeds.len() as f64;
+        println!(
+            "{label}: reactive dominated static on {dominated}/{} serve seeds",
+            serve_seeds.len()
+        );
+        if smoke {
+            anyhow::ensure!(
+                dominated >= 1,
+                "{label}: reactive arm never beat static in the smoke corpus"
+            );
+        } else {
+            anyhow::ensure!(
+                dominated * 5 >= serve_seeds.len() * 4,
+                "{label}: reactive arm dominated only {dominated}/{} serve seeds (<80%)",
+                serve_seeds.len()
+            );
+        }
+        let mut serve_fields: Vec<(&str, Value)> = serve_docs
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        serve_fields.push(("dominated_frac", num(frac)));
 
         let seed_fields: Vec<(&str, Value)> = seed_docs
             .iter()
@@ -93,6 +167,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let mut fields = vec![("clean_mean_ms", num(clean.mean_s * 1e3))];
         fields.extend(seed_fields);
+        fields.push(("serve_reactive", obj(serve_fields)));
         arch_docs.push((label, obj(fields)));
         println!();
     }

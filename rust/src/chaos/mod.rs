@@ -30,6 +30,16 @@
 //! * [`Scenario::shrink`] / [`Runner::shrink`] — greedy single-fault
 //!   removal to a locally-minimal reproducer; `tests/chaos.rs` records
 //!   discovered-failing seeds in its `CHAOS_REGRESSION_SEEDS` table.
+//! * [`Runner::check_serve`] — the same discipline extended into the
+//!   serving plane: [`Scenario::from_seed_serve`] composes replica
+//!   kills, registry poll lag, and torn migrations on top of the
+//!   stream faults, and the checker serves the fault-delayed version
+//!   timeline under both [`crate::serve::ReactivePolicy`] arms,
+//!   enforcing the **serve invariant** (every answered lookup from an
+//!   owner under the active map, from a version no newer than the
+//!   freshest published, final replica state bit-exact to the store —
+//!   never torn) and reporting static-vs-reactive SLO attainment
+//!   ([`ServeChaosReport`]).
 //!
 //! Why this is tractable at all: every fault class is either
 //! latency-only (partitions, skew, detection gaps, publish tail) or
@@ -45,5 +55,5 @@
 pub mod runner;
 pub mod scenario;
 
-pub use runner::{ChaosReport, Runner};
+pub use runner::{ChaosReport, Runner, ServeChaosReport};
 pub use scenario::{Fault, Scenario};

@@ -8,11 +8,20 @@
 
 use crate::config::{Architecture, ModelDims};
 use crate::data::movielens_like;
+use crate::embedding::OwnerMap;
 use crate::job::TrainJob;
-use crate::metrics::{PHASE_DETECT, PHASE_PARTITION, PHASE_REDO, PHASE_REPAIR, PHASE_SKEW};
-use crate::stream::{
-    CompactPolicy, DeltaFeedConfig, OnlineConfig, OnlineSession, PublishMode, ScheduledPolicy,
+use crate::metrics::{
+    PHASE_BACKOFF, PHASE_DETECT, PHASE_PARTITION, PHASE_REDO, PHASE_REPAIR, PHASE_SKEW,
 };
+use crate::serve::{
+    PublishEvent, ReactivePolicy, RollingMigration, ServeConfig, ServeFaultPlan, ServeFleet,
+    ServeMetrics, ZipfTraffic,
+};
+use crate::stream::{
+    CompactPolicy, DeltaFeedConfig, DeltaStore, OnlineConfig, OnlineSession, PublishMode,
+    ScheduledPolicy,
+};
+use crate::util::rng::splitmix64;
 use crate::util::TempDir;
 use crate::Result;
 
@@ -36,6 +45,44 @@ pub struct ChaosReport {
     pub skew_secs: f64,
     /// Torn-publish repair seconds charged ([`PHASE_REPAIR`]).
     pub repair_secs: f64,
+    /// Retry-backoff seconds charged while riding out repeated torn
+    /// publishes ([`PHASE_BACKOFF`]).
+    pub backoff_secs: f64,
+    /// Windows where retries ran out and the publisher escaped by
+    /// republishing full ([`crate::metrics::VersionRecord::escaped`]).
+    pub escapes: usize,
+}
+
+/// What one [`Runner::check_serve`] proved: both policy arms survived
+/// the serve invariant, and how their SLO attainment compared.
+#[derive(Debug, Clone, Default)]
+pub struct ServeChaosReport {
+    /// Versions the (fault-delayed) delivery loop published and the
+    /// fleet then served.
+    pub versions: usize,
+    /// Serving horizon, virtual seconds.
+    pub horizon: f64,
+    /// [`crate::serve::ServeMetrics::slo_attainment`] of the passive
+    /// static arm.
+    pub static_slo: f64,
+    /// Same for the reactive arm.
+    pub reactive_slo: f64,
+    /// `reactive_slo > static_slo` (strictly, beyond fp noise) — the
+    /// per-seed win the bench sweep aggregates.
+    pub dominated: bool,
+    /// Kill events that fired (identical in both arms).
+    pub replicas_killed: u64,
+    /// Registry-lag detections the reactive arm force-synced through.
+    pub forced_syncs: u64,
+    pub static_unserved: u64,
+    pub reactive_unserved: u64,
+    pub static_degraded: u64,
+    pub reactive_degraded: u64,
+    /// A migration tear actually landed mid-transition (static arm
+    /// stays frozen in the double-routed window).
+    pub migration_torn: bool,
+    /// The reactive arm resumed the torn migration.
+    pub migration_resumed: bool,
 }
 
 /// Deterministic chaos harness: a small, fully-covered delivery config
@@ -51,6 +98,8 @@ pub struct Runner {
     pub windows: usize,
     /// Largest world a preemption/rescale may target.
     pub max_world: usize,
+    /// Serving-fleet size for [`Runner::check_serve`].
+    pub replicas: usize,
 }
 
 impl Runner {
@@ -60,12 +109,20 @@ impl Runner {
             world: 2,
             windows: 3,
             max_world: 4,
+            replicas: 4,
         }
     }
 
     /// A scenario sized to this runner (windows + world bounds).
     pub fn scenario(&self, seed: u64) -> Scenario {
         Scenario::from_seed(seed, self.windows, self.max_world)
+    }
+
+    /// A serve-side scenario sized to this runner: the base composition
+    /// plus replica kills, registry lag, and migration tears
+    /// ([`Scenario::from_seed_serve`]).
+    pub fn scenario_serve(&self, seed: u64) -> Scenario {
+        Scenario::from_seed_serve(seed, self.windows, self.max_world, self.replicas)
     }
 
     /// The delivery config both runs share.  `steps_per_window` covers
@@ -178,7 +235,11 @@ impl Runner {
             );
         }
         for (vf, vc) in sess.delivery.versions.iter().zip(&clean.delivery.versions) {
-            if vf.version != vc.version || vf.kind != vc.kind {
+            // An escaped window legitimately ships "full" where the
+            // clean twin shipped "delta" (retries ran out, the
+            // publisher republished full) — the *state* must still be
+            // bit-exact below, only the kind may differ.
+            if vf.version != vc.version || (vf.kind != vc.kind && !vf.escaped) {
                 anyhow::bail!(
                     "[{}] version stream diverged: chaos v{}({:?}) vs clean v{}({:?})",
                     scenario.describe(),
@@ -260,6 +321,8 @@ impl Runner {
             partition_secs: t.phase(PHASE_PARTITION),
             skew_secs: t.phase(PHASE_SKEW),
             repair_secs: t.phase(PHASE_REPAIR),
+            backoff_secs: t.phase(PHASE_BACKOFF),
+            escapes: sess.delivery.versions.iter().filter(|v| v.escaped).count(),
         })
     }
 
@@ -267,5 +330,179 @@ impl Runner {
     /// [`Runner::check`] as the predicate (see [`Scenario::shrink`]).
     pub fn shrink(&self, scenario: &Scenario) -> Scenario {
         scenario.shrink(&mut |c| self.check(c).is_err())
+    }
+
+    /// Run one policy arm of the serve-side check and enforce the
+    /// **serve invariant** on it: every answered lookup came from an
+    /// owner under the active map (`wrong_owner == 0`), from a version
+    /// no newer than the freshest published (`served_ahead == 0`), and
+    /// every settled replica's final row set is bit-exact to the
+    /// store's reconstruction of its served version filtered to the
+    /// rows it hosts — never a torn state.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_arm(
+        &self,
+        store: &DeltaStore,
+        schedule: &[PublishEvent],
+        plan: &ServeFaultPlan,
+        policy: ReactivePolicy,
+        horizon: f64,
+        universe: usize,
+        seed: u64,
+        label: &str,
+    ) -> Result<ServeMetrics> {
+        let cfg = ServeConfig {
+            replicas: self.replicas,
+            seed,
+            ..ServeConfig::default()
+        };
+        let mut fleet = ServeFleet::new(store, cfg)
+            .with_faults(plan.clone())
+            .with_policy(policy);
+        let mut mig = RollingMigration::new(OwnerMap::JumpHash, 0.3 * horizon, self.replicas);
+        let mut traffic = ZipfTraffic::new(universe, 1.1, splitmix64(seed ^ 0x7AFF));
+        let m = fleet.run(schedule, &mut traffic, horizon, Some(&mut mig))?;
+
+        if m.wrong_owner > 0 {
+            anyhow::bail!("[{label}] {} wrong-owner lookups", m.wrong_owner);
+        }
+        if m.served_ahead > 0 {
+            anyhow::bail!(
+                "[{label}] {} lookups served ahead of the freshest published version",
+                m.served_ahead
+            );
+        }
+        if plan.kills.is_empty() && m.unserved > 0 {
+            anyhow::bail!("[{label}] {} unserved lookups without a kill", m.unserved);
+        }
+        // Final-state bit-exactness.  A replica still mid-swap (rows
+        // already patched toward the target, old view served off the
+        // undo shadow) or still cold (version `None`) is legitimately
+        // unsettled and skipped.
+        for rep in &fleet.replicas {
+            if rep.swap_in_flight() {
+                continue;
+            }
+            let Some(v) = rep.version else { continue };
+            let truth = store.load(v)?;
+            let want: Vec<(u64, Vec<f32>)> = truth
+                .rows
+                .iter()
+                .filter(|(r, _)| rep.hosts(*r))
+                .cloned()
+                .collect();
+            let got = rep.rows_sorted();
+            if got.len() != want.len() {
+                anyhow::bail!(
+                    "[{label}] replica {} holds {} rows at v{v}, store says {}",
+                    rep.rank,
+                    got.len(),
+                    want.len()
+                );
+            }
+            for ((rg, xg), (rw, xw)) in got.iter().zip(&want) {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if rg != rw || bits(xg) != bits(xw) {
+                    anyhow::bail!(
+                        "[{label}] replica {} row {rg} diverged from store row {rw} at v{v}",
+                        rep.rank
+                    );
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Extend the chaos check into the serving plane: run `scenario`'s
+    /// stream faults through the delivery loop as usual, then serve the
+    /// resulting (possibly fault-delayed) version timeline under the
+    /// scenario's *serve* faults — once per policy arm
+    /// ([`ReactivePolicy::static_arm`] vs [`ReactivePolicy::reactive`])
+    /// — enforcing the serve invariant on both (see
+    /// [`Runner::serve_arm`]).  Kill instants are clamped into the
+    /// window where the two arms can differ (after the first publish,
+    /// respawning with slack before the horizon) so the SLO comparison
+    /// is meaningful on every seed.
+    pub fn check_serve(&self, scenario: &Scenario) -> Result<ServeChaosReport> {
+        let (_ft, sess) = self.run_chaos(scenario)?;
+        let store = &sess.publisher.store;
+        let schedule: Vec<PublishEvent> = sess
+            .delivery
+            .versions
+            .iter()
+            .map(|v| PublishEvent {
+                at: v.published,
+                version: v.version,
+            })
+            .collect();
+        if schedule.is_empty() {
+            anyhow::bail!("[{}] no versions published to serve", scenario.describe());
+        }
+        let first = schedule[0].at;
+        let last = schedule[schedule.len() - 1].at;
+        let horizon = (last + 30.0).max(60.0);
+        let mut plan = scenario.serve_plan(self.replicas, horizon);
+        for k in &mut plan.kills {
+            let hi = (horizon - k.respawn_secs - 10.0).max(first + 0.5);
+            k.at = k.at.clamp(first + 0.5, hi);
+        }
+        let latest = store
+            .latest()
+            .map(|m| m.version)
+            .ok_or_else(|| anyhow::anyhow!("[{}] empty store", scenario.describe()))?;
+        let universe = store
+            .load(latest)?
+            .rows
+            .iter()
+            .map(|(r, _)| *r as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(64);
+
+        let desc = scenario.describe();
+        let st = self.serve_arm(
+            store,
+            &schedule,
+            &plan,
+            ReactivePolicy::static_arm(),
+            horizon,
+            universe,
+            scenario.seed,
+            &format!("{desc} static"),
+        )?;
+        let re = self.serve_arm(
+            store,
+            &schedule,
+            &plan,
+            ReactivePolicy::reactive(),
+            horizon,
+            universe,
+            scenario.seed,
+            &format!("{desc} reactive"),
+        )?;
+
+        let static_slo = st.slo_attainment();
+        let reactive_slo = re.slo_attainment();
+        Ok(ServeChaosReport {
+            versions: schedule.len(),
+            horizon,
+            static_slo,
+            reactive_slo,
+            dominated: reactive_slo > static_slo + 1e-12,
+            replicas_killed: st.replicas_killed,
+            forced_syncs: re.forced_syncs,
+            static_unserved: st.unserved,
+            reactive_unserved: re.unserved,
+            static_degraded: st.degraded_qps,
+            reactive_degraded: re.degraded_qps,
+            migration_torn: st
+                .migration
+                .as_ref()
+                .is_some_and(|m| m.torn_at.is_some()),
+            migration_resumed: re
+                .migration
+                .as_ref()
+                .is_some_and(|m| m.resumed_at.is_some()),
+        })
     }
 }

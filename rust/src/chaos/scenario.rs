@@ -10,13 +10,17 @@
 //! [`Scenario::preemptions`] lowers spot/preemption reclamations to a
 //! [`crate::stream::ScheduledPolicy`] script.
 
+use crate::serve::{MigrationTearEvent, RegistryLagEvent, ReplicaKillEvent, ServeFaultPlan};
 use crate::sim::{SkewModel, TailModel};
 use crate::stream::faults::{FaultSchedule, KillEvent, PartitionEvent, TornPublishEvent};
 use crate::util::rng::splitmix64;
 use crate::util::Rng;
 
 /// One injected fault.  The first three land in a specific delivery
-/// window; the last three shape the whole run.
+/// window; the next three shape the whole run; the last three hit the
+/// *serving* plane (lowered by [`Scenario::serve_plan`], not
+/// [`Scenario::schedule`] — instants are fractions of the serve
+/// horizon, which the scenario does not know).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Fault {
     /// Correlated worker death: `workers` die together `fraction` of the
@@ -36,10 +40,14 @@ pub enum Fault {
     },
     /// The DFS writer dies mid-version-write during `window`'s publish,
     /// leaving `surviving_files` (0–2) complete files and no manifest
-    /// entry; the store recovers and the publish retries.
+    /// entry; the store recovers and the publish retries `attempts`
+    /// consecutive times (each tearing again) before succeeding — past
+    /// the session's [`crate::stream::RetryPolicy`] budget it escapes
+    /// via a forced full republish.
     TornPublish {
         window: usize,
         surviving_files: usize,
+        attempts: usize,
     },
     /// Spot/preemption reclamation: the scheduler reclaims capacity
     /// after `after_window`, forcing a rescale to `to_world` workers
@@ -51,6 +59,27 @@ pub enum Fault {
     /// Slow-registry publish tail: lognormal per-version stretch factor
     /// with shape `sigma` ([`TailModel`]).
     PublishTail { sigma: f64 },
+    /// Serving plane: replica `replica` dies `at_frac` of the way
+    /// through the serve horizon (mid-swap if one is in flight — the
+    /// undo shadow dies with the process) and a cold replacement is up
+    /// `respawn_secs` later.
+    ReplicaKill {
+        replica: usize,
+        at_frac: f64,
+        respawn_secs: f64,
+    },
+    /// Serving plane: replica `replica`'s registry polls run `lag_secs`
+    /// stale inside `[from_frac, until_frac]` of the serve horizon.
+    RegistryLag {
+        replica: usize,
+        from_frac: f64,
+        until_frac: f64,
+        lag_secs: f64,
+    },
+    /// Serving plane: the rolling owner-map migration is torn at
+    /// `at_frac` of the serve horizon, frozen between adopt and
+    /// cutover in the double-routed window.
+    MigrationTear { at_frac: f64 },
 }
 
 impl Fault {
@@ -63,7 +92,19 @@ impl Fault {
             Fault::Preemption { .. } => "preemption",
             Fault::ClockSkew { .. } => "clock_skew",
             Fault::PublishTail { .. } => "publish_tail",
+            Fault::ReplicaKill { .. } => "replica_kill",
+            Fault::RegistryLag { .. } => "registry_lag",
+            Fault::MigrationTear { .. } => "migration_tear",
         }
+    }
+
+    /// Does this fault hit the serving plane (lowered by
+    /// [`Scenario::serve_plan`] rather than [`Scenario::schedule`])?
+    pub fn is_serve(&self) -> bool {
+        matches!(
+            self,
+            Fault::ReplicaKill { .. } | Fault::RegistryLag { .. } | Fault::MigrationTear { .. }
+        )
     }
 }
 
@@ -129,6 +170,11 @@ impl Scenario {
                 faults.push(Fault::TornPublish {
                     window,
                     surviving_files: rng.gen_range(0, 3) as usize,
+                    // One tear per publish here — multi-attempt tearing
+                    // is a serve-scenario redraw
+                    // ([`Scenario::from_seed_serve`]); keeping it out of
+                    // this stream pins the regression seeds bit-for-bit.
+                    attempts: 1,
                 });
             }
         }
@@ -158,6 +204,65 @@ impl Scenario {
             });
         }
         Self { seed, faults }
+    }
+
+    /// Generate a scenario that also hits the *serving* plane: the base
+    /// [`Scenario::from_seed`] composition (drawn first, so every
+    /// pinned stream-side regression seed replays unchanged) extended
+    /// with serve faults drawn from a separately-salted stream.  The
+    /// serve stream also redraws each torn publish's `attempts`
+    /// (1..=5), so serve scenarios exercise the publish retry/backoff
+    /// loop and its give-up-and-republish-full escape.  Draw order in
+    /// this function MUST NOT change — pinned serve seeds replay it.
+    ///
+    /// Every serve scenario carries at least one [`Fault::ReplicaKill`]
+    /// — the fault class where the reactive policy's eager replacement
+    /// provably beats the static arm's wait-for-next-poll, so the
+    /// reactive-vs-static sweep never compares two identical runs.
+    pub fn from_seed_serve(seed: u64, windows: usize, max_world: usize, replicas: usize) -> Self {
+        assert!(replicas >= 1, "need at least one serve replica");
+        let mut sc = Self::from_seed(seed, windows, max_world);
+        let mut rng = Rng::seed_from_u64(splitmix64(seed ^ 0x5EBE_5EED));
+        for f in &mut sc.faults {
+            if let Fault::TornPublish { attempts, .. } = f {
+                *attempts = 1 + (rng.next_u64() % 5) as usize;
+            }
+        }
+        let mut drew_kill = false;
+        if rng.gen_bool(0.7) {
+            sc.faults.push(Fault::ReplicaKill {
+                replica: rng.gen_range(0, replicas as u64) as usize,
+                // Bounded away from the horizon's edges: late enough
+                // that versions exist to lose, early enough that the
+                // respawn and both arms' recoveries land inside the run.
+                at_frac: 0.15 + 0.5 * rng.f64(),
+                respawn_secs: 1.0 + 7.0 * rng.f64(),
+            });
+            drew_kill = true;
+        }
+        if rng.gen_bool(0.6) {
+            let from_frac = 0.1 + 0.4 * rng.f64();
+            let len_frac = 0.2 + 0.4 * rng.f64();
+            sc.faults.push(Fault::RegistryLag {
+                replica: rng.gen_range(0, replicas as u64) as usize,
+                from_frac,
+                until_frac: (from_frac + len_frac).min(0.95),
+                lag_secs: 10.0 + 50.0 * rng.f64(),
+            });
+        }
+        if rng.gen_bool(0.5) {
+            sc.faults.push(Fault::MigrationTear {
+                at_frac: 0.25 + 0.4 * rng.f64(),
+            });
+        }
+        if !drew_kill {
+            sc.faults.push(Fault::ReplicaKill {
+                replica: rng.gen_range(0, replicas as u64) as usize,
+                at_frac: 0.3,
+                respawn_secs: 2.0,
+            });
+        }
+        sc
     }
 
     /// Lower the scenario to the session's generalized injection
@@ -193,9 +298,11 @@ impl Scenario {
                 Fault::TornPublish {
                     window,
                     surviving_files,
+                    attempts,
                 } => s.torn_publishes.push(TornPublishEvent {
                     window,
                     surviving_files,
+                    attempts,
                 }),
                 Fault::ClockSkew { sigma } => {
                     s.skew = Some(SkewModel {
@@ -210,9 +317,54 @@ impl Scenario {
                     });
                 }
                 Fault::Preemption { .. } => {}
+                Fault::ReplicaKill { .. }
+                | Fault::RegistryLag { .. }
+                | Fault::MigrationTear { .. } => {}
             }
         }
         s
+    }
+
+    /// Lower the serving-plane faults onto a [`ServeFaultPlan`] for a
+    /// fleet of `replicas` over `horizon` virtual seconds (horizon
+    /// fractions become instants; ranks wrap into the fleet so a
+    /// scenario drawn for one fleet size stays valid for another).
+    /// Stream-side faults are untouched — they lower through
+    /// [`Scenario::schedule`].
+    pub fn serve_plan(&self, replicas: usize, horizon: f64) -> ServeFaultPlan {
+        assert!(replicas >= 1, "need at least one serve replica");
+        let mut plan = ServeFaultPlan::default();
+        for f in &self.faults {
+            match *f {
+                Fault::ReplicaKill {
+                    replica,
+                    at_frac,
+                    respawn_secs,
+                } => plan.kills.push(ReplicaKillEvent {
+                    at: at_frac * horizon,
+                    replica: replica % replicas,
+                    respawn_secs,
+                }),
+                Fault::RegistryLag {
+                    replica,
+                    from_frac,
+                    until_frac,
+                    lag_secs,
+                } => plan.lags.push(RegistryLagEvent {
+                    replica: replica % replicas,
+                    from: from_frac * horizon,
+                    until: until_frac * horizon,
+                    lag_secs,
+                }),
+                Fault::MigrationTear { at_frac } => {
+                    plan.migration_tear = Some(MigrationTearEvent {
+                        at: at_frac * horizon,
+                    });
+                }
+                _ => {}
+            }
+        }
+        plan
     }
 
     /// The spot/preemption reclamation trace as a
@@ -252,13 +404,28 @@ impl Scenario {
                 Fault::TornPublish {
                     window,
                     surviving_files,
-                } => format!("torn@{window}(surviving={surviving_files})"),
+                    attempts,
+                } => format!("torn@{window}(surviving={surviving_files} attempts={attempts})"),
                 Fault::Preemption {
                     after_window,
                     to_world,
                 } => format!("preempt@{after_window}(to_world={to_world})"),
                 Fault::ClockSkew { sigma } => format!("skew(sigma={sigma:.1}s)"),
                 Fault::PublishTail { sigma } => format!("tail(sigma={sigma:.2})"),
+                Fault::ReplicaKill {
+                    replica,
+                    at_frac,
+                    respawn_secs,
+                } => format!("replica_kill@{at_frac:.2}h(r={replica} respawn={respawn_secs:.1}s)"),
+                Fault::RegistryLag {
+                    replica,
+                    from_frac,
+                    until_frac,
+                    lag_secs,
+                } => format!(
+                    "registry_lag@[{from_frac:.2}h,{until_frac:.2}h](r={replica} lag={lag_secs:.1}s)"
+                ),
+                Fault::MigrationTear { at_frac } => format!("migration_tear@{at_frac:.2}h"),
             });
         }
         parts.join(" ")
@@ -327,9 +494,11 @@ mod tests {
                     Fault::TornPublish {
                         window,
                         surviving_files,
+                        attempts,
                     } => {
                         assert!(window < 3);
                         assert!(surviving_files <= 2);
+                        assert_eq!(attempts, 1, "base scenarios tear once per publish");
                     }
                     Fault::Preemption {
                         after_window,
@@ -340,6 +509,11 @@ mod tests {
                     }
                     Fault::ClockSkew { sigma } | Fault::PublishTail { sigma } => {
                         assert!(sigma > 0.0);
+                    }
+                    Fault::ReplicaKill { .. }
+                    | Fault::RegistryLag { .. }
+                    | Fault::MigrationTear { .. } => {
+                        panic!("base from_seed drew a serve fault: {f:?}")
                     }
                 }
             }
@@ -403,6 +577,7 @@ mod tests {
                 Fault::TornPublish {
                     window: 2,
                     surviving_files: 1,
+                    attempts: 4,
                 },
                 Fault::Preemption {
                     after_window: 0,
@@ -416,6 +591,7 @@ mod tests {
         assert_eq!(s.kills.len(), 1);
         assert_eq!(s.partitions.len(), 1);
         assert_eq!(s.torn_publishes.len(), 1);
+        assert_eq!(s.torn_publishes[0].attempts, 4);
         let skew = s.skew.unwrap();
         assert_eq!(skew.sigma, 2.0);
         assert_eq!(skew.seed, splitmix64(9 ^ 0x5E3A));
@@ -435,6 +611,7 @@ mod tests {
                 Fault::TornPublish {
                     window: 1,
                     surviving_files: 0,
+                    attempts: 1,
                 },
                 Fault::PublishTail { sigma: 0.3 },
             ],
@@ -449,5 +626,99 @@ mod tests {
         assert_eq!(min.faults.len(), 1);
         assert!(matches!(min.faults[0], Fault::TornPublish { .. }));
         assert_eq!(min.seed, 1);
+    }
+
+    #[test]
+    fn serve_scenarios_extend_the_base_composition() {
+        for seed in 0..64u64 {
+            let base = Scenario::from_seed(seed, 3, 4);
+            let serve = Scenario::from_seed_serve(seed, 3, 4, 4);
+            assert_eq!(
+                serve,
+                Scenario::from_seed_serve(seed, 3, 4, 4),
+                "seed {seed} serve scenario not replayable"
+            );
+            // The base composition is a prefix (modulo the redrawn torn
+            // attempts): same fault count and tags in the same order.
+            let stream: Vec<&Fault> = serve.faults.iter().filter(|f| !f.is_serve()).collect();
+            assert_eq!(stream.len(), base.faults.len(), "seed {seed}");
+            for (s, b) in stream.iter().zip(&base.faults) {
+                assert_eq!(s.tag(), b.tag(), "seed {seed}: stream fault order shifted");
+                if !matches!(s, Fault::TornPublish { .. }) {
+                    assert_eq!(**s, *b, "seed {seed}: non-torn stream fault mutated");
+                }
+            }
+            // Every serve scenario has a replica kill (the fault the
+            // reactive arm provably wins on) with sane bounds.
+            let mut kills = 0;
+            for f in &serve.faults {
+                match *f {
+                    Fault::ReplicaKill {
+                        replica,
+                        at_frac,
+                        respawn_secs,
+                    } => {
+                        kills += 1;
+                        assert!(replica < 4);
+                        assert!((0.15..=0.65).contains(&at_frac));
+                        assert!((1.0..=8.0).contains(&respawn_secs) || respawn_secs == 2.0);
+                    }
+                    Fault::RegistryLag {
+                        replica,
+                        from_frac,
+                        until_frac,
+                        lag_secs,
+                    } => {
+                        assert!(replica < 4);
+                        assert!(from_frac >= 0.1 && until_frac <= 0.95);
+                        assert!(until_frac > from_frac);
+                        assert!((10.0..=60.0).contains(&lag_secs));
+                    }
+                    Fault::MigrationTear { at_frac } => {
+                        assert!((0.25..=0.65).contains(&at_frac));
+                    }
+                    Fault::TornPublish { attempts, .. } => {
+                        assert!((1..=5).contains(&attempts), "seed {seed}");
+                    }
+                    _ => {}
+                }
+            }
+            assert!(kills >= 1, "seed {seed}: no replica kill in serve scenario");
+        }
+    }
+
+    #[test]
+    fn serve_plan_lowers_fractions_and_wraps_ranks() {
+        let sc = Scenario {
+            seed: 3,
+            faults: vec![
+                Fault::ReplicaKill {
+                    replica: 5,
+                    at_frac: 0.5,
+                    respawn_secs: 2.0,
+                },
+                Fault::RegistryLag {
+                    replica: 1,
+                    from_frac: 0.2,
+                    until_frac: 0.6,
+                    lag_secs: 15.0,
+                },
+                Fault::MigrationTear { at_frac: 0.4 },
+                // Stream fault: must not leak into the serve plan.
+                Fault::ClockSkew { sigma: 1.0 },
+            ],
+        };
+        let plan = sc.serve_plan(4, 100.0);
+        assert_eq!(plan.kills.len(), 1);
+        assert_eq!(plan.kills[0].replica, 1, "rank 5 wraps into a 4-fleet");
+        assert_eq!(plan.kills[0].at, 50.0);
+        assert_eq!(plan.lags.len(), 1);
+        assert_eq!(plan.lags[0].from, 20.0);
+        assert_eq!(plan.lags[0].until, 60.0);
+        assert_eq!(plan.migration_tear.unwrap().at, 40.0);
+        assert!(plan.validate(4, 100.0).is_ok());
+        // And the serve faults don't leak into the stream schedule.
+        assert!(sc.schedule().torn_publishes.is_empty());
+        assert!(sc.schedule().kills.is_empty());
     }
 }

@@ -83,6 +83,11 @@ pub const PHASE_SKEW: &str = "skew_wait";
 /// pass ([`crate::stream::DeltaStore::recover`]) before the publish
 /// retries ([`crate::stream::FaultSchedule::torn_publishes`]).
 pub const PHASE_REPAIR: &str = "store_repair";
+/// Jittered exponential backoff between torn-publish retry attempts
+/// ([`crate::stream::reactive::RetryPolicy`]): the deliberate wait a
+/// reactive session inserts before re-driving a publish against a DFS
+/// that just tore one, instead of hammering it back-to-back.
+pub const PHASE_BACKOFF: &str = "publish_backoff";
 
 /// Nearest-rank quantile of an already-sorted (ascending) sample slice:
 /// the smallest value whose rank covers fraction `q` of the samples,
@@ -261,6 +266,17 @@ pub struct VersionRecord {
     /// detection is charged separately as
     /// [`VersionRecord::detect_secs`]).
     pub redo_secs: f64,
+    /// Seconds this version's publish spent in deliberate retry backoff
+    /// after torn attempts ([`crate::stream::reactive::RetryPolicy`];
+    /// 0 when the first attempt committed).
+    pub backoff_secs: f64,
+    /// The publish escaped a persistent torn-write fault: after the
+    /// retry budget ran out, the session forced a *full* republish so
+    /// the chain re-roots at durable state instead of blocking the
+    /// window forever.  Escaped versions may legitimately differ in
+    /// `kind` from a fault-free twin (full where the twin shipped a
+    /// delta) while still reconstructing bit-identically.
+    pub escaped: bool,
     /// Cold-start tasks first seen in this version's delta window.
     pub cold_tasks: Vec<u64>,
     /// Zero-shot AUC of the *previously serving* model over the window's
@@ -294,6 +310,8 @@ impl VersionRecord {
             ("reshard_bytes", num(self.reshard_bytes as f64)),
             ("detect_secs", num(self.detect_secs)),
             ("redo_secs", num(self.redo_secs)),
+            ("backoff_secs", num(self.backoff_secs)),
+            ("escaped", Value::Bool(self.escaped)),
             (
                 "cold_tasks",
                 Value::Arr(self.cold_tasks.iter().map(|t| num(*t as f64)).collect()),
@@ -587,6 +605,8 @@ mod tests {
             reshard_bytes: 0,
             detect_secs: 0.0,
             redo_secs: 0.0,
+            backoff_secs: 0.0,
+            escaped: false,
             cold_tasks: vec![],
             zero_shot_auc: None,
         }

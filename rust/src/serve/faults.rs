@@ -1,0 +1,440 @@
+//! Serve-side fault injection: the chaos surface for the serving
+//! plane, and the reactive policy that decides how the fleet responds.
+//!
+//! The stream side already injects worker kills, PS partitions and torn
+//! publishes ([`crate::stream::FaultSchedule`]); this module is its
+//! serving-plane sibling.  A [`ServeFaultPlan`] composes three fault
+//! shapes onto the fleet's virtual clock:
+//!
+//! * [`ReplicaKillEvent`] — a replica dies at an instant (possibly
+//!   mid-swap: the shadow-swap undo is abandoned cleanly with the
+//!   process) and a cold replacement comes up `respawn_secs` later,
+//!   catching up from the registry from nothing.
+//! * [`RegistryLagEvent`] — a replica's registry polls go stale for a
+//!   window: every poll inside it sees the publish schedule as of
+//!   `lag_secs` ago, so the replica pins older versions.
+//! * [`MigrationTearEvent`] — a [`super::RollingMigration`] is
+//!   interrupted between adopt and cutover, leaving the fleet torn in
+//!   the double-routed transitional state.
+//!
+//! How the fleet *reacts* is the [`ReactivePolicy`]: the static arm
+//! ([`ReactivePolicy::static_arm`]) rides every fault out passively
+//! (dead replicas wait for their next scheduled poll, lagged polls are
+//! believed, torn migrations stay torn), while the reactive arm
+//! ([`ReactivePolicy::reactive`]) replaces dead replicas eagerly at
+//! respawn, force-syncs lagged registries, and resumes torn migrations
+//! after one [`RetryPolicy`] backoff — loudly, on the trace.  Both arms
+//! must preserve the serve invariant checked by
+//! [`crate::chaos::Runner`]: every answered lookup comes from an owner
+//! under the active map, from a version no newer than the freshest
+//! published, never from a torn half-state.
+
+use crate::stream::RetryPolicy;
+
+/// A replica process dies at `at`; a cold replacement is routable at
+/// `at + respawn_secs`.
+///
+/// Death is abrupt: any in-flight version swap is abandoned (the undo
+/// shadow dies with the process — no torn state survives because the
+/// replacement starts from nothing), the hot-row cache is lost, and
+/// every row the replica held is gone.  Until respawn, lookups routed
+/// to it are *unserved* (counted in
+/// [`super::ServeMetrics::unserved`]) unless a migration shadow owner
+/// can answer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaKillEvent {
+    /// Virtual instant of death.
+    pub at: f64,
+    /// Fleet rank killed.
+    pub replica: usize,
+    /// Seconds until the replacement process is up (detection +
+    /// reschedule + boot); the replacement is cold — catching up is
+    /// the policy's job.
+    pub respawn_secs: f64,
+}
+
+/// Replica `replica`'s registry polls are stale inside `[from, until)`:
+/// each poll in the window sees only versions published by
+/// `poll_instant - lag_secs`.
+///
+/// The static arm believes the lagged view and pins older versions
+/// (freshness decays); the reactive arm detects the staleness skew and
+/// force-syncs against the true schedule (counted in
+/// [`super::ServeMetrics::forced_syncs`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegistryLagEvent {
+    pub replica: usize,
+    /// Window start (inclusive), virtual seconds.
+    pub from: f64,
+    /// Window end (exclusive), virtual seconds.
+    pub until: f64,
+    /// How far behind the lagged view runs, seconds.
+    pub lag_secs: f64,
+}
+
+/// A rolling migration is interrupted at `at`, between adopt and
+/// cutover: the state machine freezes in the double-routed
+/// transitional window.
+///
+/// The static arm stays torn for the rest of the run (double-routing
+/// overhead forever, cutover never lands); the reactive arm resumes
+/// after one [`RetryPolicy`] backoff — or rolls the fleet back to the
+/// old map ([`super::RollingMigration::rollback`]) — either way loudly,
+/// as a trace instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationTearEvent {
+    pub at: f64,
+}
+
+/// A named, structural reason a [`ServeFaultPlan`] is invalid —
+/// returned by [`ServeFaultPlan::validate`] at build time so malformed
+/// plans fail loudly instead of silently injecting nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeFaultError {
+    /// An event targets a rank outside the fleet.
+    ReplicaOutOfRange {
+        event: &'static str,
+        replica: usize,
+        replicas: usize,
+    },
+    /// An event instant is non-finite, negative, or past the horizon
+    /// (it could never fire).
+    BadInstant {
+        event: &'static str,
+        at: f64,
+        horizon: f64,
+    },
+    /// A kill's respawn delay is non-finite or negative.
+    BadRespawn { replica: usize, secs: f64 },
+    /// A lag window is empty or inverted.
+    BadLagWindow { replica: usize, from: f64, until: f64 },
+    /// A lag magnitude is non-finite or not positive.
+    BadLagSecs { replica: usize, secs: f64 },
+}
+
+impl std::fmt::Display for ServeFaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeFaultError::ReplicaOutOfRange {
+                event,
+                replica,
+                replicas,
+            } => write!(
+                f,
+                "{event} targets replica {replica} but the fleet has {replicas} replicas"
+            ),
+            ServeFaultError::BadInstant { event, at, horizon } => write!(
+                f,
+                "{event} at t={at} can never fire inside horizon {horizon}"
+            ),
+            ServeFaultError::BadRespawn { replica, secs } => write!(
+                f,
+                "kill of replica {replica} has invalid respawn_secs {secs}"
+            ),
+            ServeFaultError::BadLagWindow {
+                replica,
+                from,
+                until,
+            } => write!(
+                f,
+                "registry lag on replica {replica} has empty window [{from}, {until})"
+            ),
+            ServeFaultError::BadLagSecs { replica, secs } => write!(
+                f,
+                "registry lag on replica {replica} has invalid lag_secs {secs}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeFaultError {}
+
+/// Everything injected into one serve run — the serving-plane sibling
+/// of [`crate::stream::FaultSchedule`].  An empty plan is inert:
+/// [`super::ServeFleet::run`] with `ServeFaultPlan::default()` replays
+/// bit-identically to a run with no plan at all.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeFaultPlan {
+    pub kills: Vec<ReplicaKillEvent>,
+    pub lags: Vec<RegistryLagEvent>,
+    pub migration_tear: Option<MigrationTearEvent>,
+}
+
+impl ServeFaultPlan {
+    /// Does this plan inject nothing?
+    pub fn is_inert(&self) -> bool {
+        self.kills.is_empty() && self.lags.is_empty() && self.migration_tear.is_none()
+    }
+
+    /// Structural validation against the fleet shape and run horizon.
+    /// Every failure is a named [`ServeFaultError`] — a plan that
+    /// targets a rank the fleet does not have, or an instant the run
+    /// can never reach, is a bug in the plan, not a fault to ride out.
+    pub fn validate(&self, replicas: usize, horizon: f64) -> Result<(), ServeFaultError> {
+        for k in &self.kills {
+            if k.replica >= replicas {
+                return Err(ServeFaultError::ReplicaOutOfRange {
+                    event: "replica kill",
+                    replica: k.replica,
+                    replicas,
+                });
+            }
+            if !k.at.is_finite() || k.at < 0.0 || k.at > horizon {
+                return Err(ServeFaultError::BadInstant {
+                    event: "replica kill",
+                    at: k.at,
+                    horizon,
+                });
+            }
+            if !k.respawn_secs.is_finite() || k.respawn_secs < 0.0 {
+                return Err(ServeFaultError::BadRespawn {
+                    replica: k.replica,
+                    secs: k.respawn_secs,
+                });
+            }
+        }
+        for l in &self.lags {
+            if l.replica >= replicas {
+                return Err(ServeFaultError::ReplicaOutOfRange {
+                    event: "registry lag",
+                    replica: l.replica,
+                    replicas,
+                });
+            }
+            if !l.from.is_finite() || !l.until.is_finite() || l.from < 0.0 || l.until <= l.from {
+                return Err(ServeFaultError::BadLagWindow {
+                    replica: l.replica,
+                    from: l.from,
+                    until: l.until,
+                });
+            }
+            if !l.lag_secs.is_finite() || l.lag_secs <= 0.0 {
+                return Err(ServeFaultError::BadLagSecs {
+                    replica: l.replica,
+                    secs: l.lag_secs,
+                });
+            }
+        }
+        if let Some(tear) = &self.migration_tear {
+            if !tear.at.is_finite() || tear.at < 0.0 || tear.at > horizon {
+                return Err(ServeFaultError::BadInstant {
+                    event: "migration tear",
+                    at: tear.at,
+                    horizon,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// The registry lag (seconds) replica `replica`'s poll at `now`
+    /// suffers, 0.0 outside every lag window.  Overlapping windows
+    /// compound to the largest lag (the slowest mirror wins).
+    pub fn lag_at(&self, replica: usize, now: f64) -> f64 {
+        self.lags
+            .iter()
+            .filter(|l| l.replica == replica && now >= l.from && now < l.until)
+            .map(|l| l.lag_secs)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// How the fleet reacts to injected faults — the policy knob the
+/// reactive-vs-static chaos sweep compares.
+///
+/// | signal | static arm | reactive arm |
+/// |---|---|---|
+/// | replica respawned cold | waits for its next scheduled poll | begins cold catch-up at the respawn instant |
+/// | registry lag detected | believes the lagged view | force-syncs against the true schedule |
+/// | catch-up not yet landed | serves what it has | same, flagged [`super::ServeMetrics::degraded_qps`] |
+/// | migration torn | stays torn (double-routes forever) | resumes after one backoff, or rolls back — loudly |
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReactivePolicy {
+    /// Begin a dead replica's cold catch-up at the respawn instant
+    /// instead of waiting for its next scheduled registry poll.
+    pub eager_replace: bool,
+    /// Detect registry staleness skew and poll the true schedule
+    /// (each detection counted in [`super::ServeMetrics::forced_syncs`]).
+    pub force_sync: bool,
+    /// Serve cold replicas (no published version loaded yet) instead
+    /// of refusing the lookup; such answers are flagged in
+    /// [`super::ServeMetrics::degraded_qps`].
+    pub degraded_serving: bool,
+    /// Resume a torn migration after one [`RetryPolicy`] backoff;
+    /// `false` leaves it torn (the static arm) — rollback is the
+    /// explicit [`super::RollingMigration::rollback`] escape.
+    pub resume_migration: bool,
+    /// Backoff schedule for reactions that should not stampede (the
+    /// migration-resume delay draws from it).
+    pub retry: RetryPolicy,
+}
+
+impl ReactivePolicy {
+    /// The passive baseline: ride every fault out with the mechanisms
+    /// the pre-fault fleet already had.  This is also the behavioural
+    /// default — a fleet with no explicit policy runs this arm, and
+    /// with an inert fault plan it is bit-identical to the pre-fault
+    /// code path.
+    pub fn static_arm() -> Self {
+        Self {
+            eager_replace: false,
+            force_sync: false,
+            degraded_serving: true,
+            resume_migration: false,
+            retry: RetryPolicy::default(),
+        }
+    }
+
+    /// The fault-aware arm the chaos sweep must show dominating the
+    /// static baseline on SLO attainment.
+    pub fn reactive() -> Self {
+        Self {
+            eager_replace: true,
+            force_sync: true,
+            degraded_serving: true,
+            resume_migration: true,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl Default for ReactivePolicy {
+    fn default() -> Self {
+        Self::static_arm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> ServeFaultPlan {
+        ServeFaultPlan {
+            kills: vec![ReplicaKillEvent {
+                at: 10.0,
+                replica: 1,
+                respawn_secs: 4.0,
+            }],
+            lags: vec![RegistryLagEvent {
+                replica: 2,
+                from: 5.0,
+                until: 25.0,
+                lag_secs: 12.0,
+            }],
+            migration_tear: Some(MigrationTearEvent { at: 30.0 }),
+        }
+    }
+
+    #[test]
+    fn well_formed_plan_validates() {
+        assert!(plan().validate(4, 60.0).is_ok());
+        assert!(ServeFaultPlan::default().is_inert());
+        assert!(ServeFaultPlan::default().validate(1, 1.0).is_ok());
+        assert!(!plan().is_inert());
+    }
+
+    #[test]
+    fn out_of_range_replica_is_named() {
+        let mut p = plan();
+        p.kills[0].replica = 4;
+        assert_eq!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::ReplicaOutOfRange {
+                event: "replica kill",
+                replica: 4,
+                replicas: 4,
+            })
+        );
+        let mut p = plan();
+        p.lags[0].replica = 9;
+        assert!(matches!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::ReplicaOutOfRange {
+                event: "registry lag",
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn unreachable_instants_are_named() {
+        let mut p = plan();
+        p.kills[0].at = 120.0;
+        assert!(matches!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::BadInstant {
+                event: "replica kill",
+                ..
+            })
+        ));
+        let mut p = plan();
+        p.migration_tear = Some(MigrationTearEvent { at: f64::NAN });
+        assert!(matches!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::BadInstant {
+                event: "migration tear",
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn malformed_payloads_are_named() {
+        let mut p = plan();
+        p.kills[0].respawn_secs = -1.0;
+        assert!(matches!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::BadRespawn { replica: 1, .. })
+        ));
+        let mut p = plan();
+        p.lags[0].until = p.lags[0].from;
+        assert!(matches!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::BadLagWindow { replica: 2, .. })
+        ));
+        let mut p = plan();
+        p.lags[0].lag_secs = 0.0;
+        assert!(matches!(
+            p.validate(4, 60.0),
+            Err(ServeFaultError::BadLagSecs { replica: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn lag_windows_compound_to_the_largest() {
+        let p = ServeFaultPlan {
+            lags: vec![
+                RegistryLagEvent {
+                    replica: 0,
+                    from: 0.0,
+                    until: 20.0,
+                    lag_secs: 3.0,
+                },
+                RegistryLagEvent {
+                    replica: 0,
+                    from: 10.0,
+                    until: 30.0,
+                    lag_secs: 8.0,
+                },
+            ],
+            ..ServeFaultPlan::default()
+        };
+        assert_eq!(p.lag_at(0, 5.0), 3.0);
+        assert_eq!(p.lag_at(0, 15.0), 8.0);
+        assert_eq!(p.lag_at(0, 25.0), 8.0);
+        assert_eq!(p.lag_at(0, 30.0), 0.0);
+        assert_eq!(p.lag_at(1, 15.0), 0.0);
+    }
+
+    #[test]
+    fn policy_arms_differ_where_it_matters() {
+        let s = ReactivePolicy::static_arm();
+        let r = ReactivePolicy::reactive();
+        assert!(!s.eager_replace && !s.force_sync && !s.resume_migration);
+        assert!(r.eager_replace && r.force_sync && r.resume_migration);
+        // Both arms serve degraded rather than block — refusing to
+        // answer is never the better SLO.
+        assert!(s.degraded_serving && r.degraded_serving);
+        assert_eq!(ReactivePolicy::default(), s);
+    }
+}

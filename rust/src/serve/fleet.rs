@@ -16,12 +16,17 @@
 
 use crate::embedding::{OwnerMap, RowCache};
 use crate::obs::{Tracer, Track};
+use crate::serve::faults::{ReactivePolicy, ServeFaultPlan};
 use crate::serve::metrics::{ReplicaServeStats, ServeMetrics};
 use crate::serve::migration::{RollingMigration, Route};
-use crate::serve::replica::{Lookup, Replica};
+use crate::serve::replica::{Hosting, Lookup, Replica};
 use crate::serve::traffic::ZipfTraffic;
 use crate::stream::DeltaStore;
 use crate::Result;
+
+/// Salt for the migration-resume backoff draw (see
+/// [`crate::stream::RetryPolicy::backoff_secs`]) — "MIGR".
+const MIG_RESUME_KEY: u64 = 0x4D49_4752;
 
 /// One registry entry: `version` became visible to pollers at `at`.
 #[derive(Debug, Clone, Copy)]
@@ -128,10 +133,34 @@ impl Default for ServeConfig {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Event {
+    /// The migration tear fires (if one is in transition).
+    Tear,
+    /// The reactive arm unfreezes a torn migration.
+    MigResume,
+    /// `kills[k]` fires: the replica dies.
+    Kill(usize),
+    /// `kills[k]`'s replacement process is up (still cold).
+    Respawn(usize),
     /// Replica r polls the registry.
     Poll(usize),
     /// A batch of lookups arrives.
     Query,
+}
+
+impl Event {
+    /// Deterministic same-instant ordering: faults resolve first, then
+    /// polls, then lookups (fault-free grids keep the original
+    /// poll-before-query order bit-identically).
+    fn sort_key(&self) -> (usize, usize) {
+        match self {
+            Event::Tear => (0, 0),
+            Event::MigResume => (1, 0),
+            Event::Kill(k) => (2, *k),
+            Event::Respawn(k) => (3, *k),
+            Event::Poll(r) => (4, *r),
+            Event::Query => (5, 0),
+        }
+    }
 }
 
 /// A swap in flight: committed (served) when the clock reaches
@@ -147,6 +176,11 @@ pub struct ServeFleet<'a> {
     store: &'a DeltaStore,
     pub cfg: ServeConfig,
     pub replicas: Vec<Replica>,
+    /// Injected serve-side faults (inert by default).
+    pub faults: ServeFaultPlan,
+    /// How the fleet reacts to them (passive static arm by default —
+    /// with an inert plan the run is bit-identical to pre-fault code).
+    pub policy: ReactivePolicy,
     tracer: Option<Tracer>,
 }
 
@@ -171,6 +205,8 @@ impl<'a> ServeFleet<'a> {
             store,
             cfg,
             replicas,
+            faults: ServeFaultPlan::default(),
+            policy: ReactivePolicy::static_arm(),
             tracer: None,
         }
     }
@@ -181,6 +217,64 @@ impl<'a> ServeFleet<'a> {
     pub fn with_tracer(mut self, tracer: Tracer) -> Self {
         self.tracer = Some(tracer);
         self
+    }
+
+    /// Inject a serve-side fault plan (validated against the fleet
+    /// shape at [`ServeFleet::run`]).
+    pub fn with_faults(mut self, faults: ServeFaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Choose how the fleet reacts to injected faults.
+    pub fn with_policy(mut self, policy: ReactivePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Start replica `r`'s catch-up toward `target` on the virtual
+    /// clock (the shared tail of a registry poll and an eager
+    /// replacement after a kill).
+    fn begin_swap(
+        &mut self,
+        r: usize,
+        target: PublishEvent,
+        t: f64,
+        stats: &mut [ReplicaServeStats],
+        in_flight: &mut [Option<InFlight>],
+    ) -> Result<()> {
+        if self.cfg.force_full_reload {
+            // Baseline arm: forget the resume point so the chain
+            // never passes through us.
+            self.replicas[r].version = None;
+        }
+        let swap = self.replicas[r].begin_catch_up(self.store, target.version)?;
+        let secs = self
+            .cfg
+            .swap
+            .swap_secs(swap.bytes, swap.rows_patched, swap.full_reload);
+        in_flight[r] = Some(InFlight {
+            done_at: t + secs,
+            published_at: target.at,
+        });
+        stats[r].apply_secs.push(secs);
+        stats[r].bytes_fetched += swap.bytes;
+        stats[r].rows_patched += swap.rows_patched as u64;
+        if let Some(tr) = &self.tracer {
+            tr.span(
+                "swap_apply",
+                Track::Replica(r),
+                t,
+                secs,
+                &[
+                    ("version", target.version as f64),
+                    ("bytes", swap.bytes as f64),
+                    ("rows", swap.rows_patched as f64),
+                    ("full", if swap.full_reload { 1.0 } else { 0.0 }),
+                ],
+            );
+        }
+        Ok(())
     }
 
     /// Replay `schedule` against zipfian `traffic` for `horizon`
@@ -198,8 +292,10 @@ impl<'a> ServeFleet<'a> {
             "schedule must be time-ordered"
         );
         let n = self.replicas.len();
+        self.faults.validate(n, horizon)?;
 
-        // Static event grid: staggered polls + query batches.
+        // Static event grid: staggered polls + query batches + the
+        // fault plan's instants.
         let mut events: Vec<(f64, Event)> = Vec::new();
         for r in 0..n {
             let phase = self.cfg.poll_interval * r as f64 / n as f64;
@@ -223,19 +319,31 @@ impl<'a> ServeFleet<'a> {
             events.push((t, Event::Query));
             k += 1;
         }
-        // Polls sort before queries at equal instants (Event derives
-        // nothing: sort by time, then poll-before-query, then rank for
-        // determinism).
+        for (k, kill) in self.faults.kills.iter().enumerate() {
+            events.push((kill.at, Event::Kill(k)));
+            let up = kill.at + kill.respawn_secs;
+            if up <= horizon {
+                events.push((up, Event::Respawn(k)));
+            }
+        }
+        if let Some(tear) = self.faults.migration_tear {
+            events.push((tear.at, Event::Tear));
+            if self.policy.resume_migration {
+                // The reactive arm resumes after one backoff — enough
+                // hesitation not to stampede a flapping driver.
+                let at = tear.at + self.policy.retry.backoff_secs(0, MIG_RESUME_KEY);
+                if at <= horizon {
+                    events.push((at, Event::MigResume));
+                }
+            }
+        }
+        // Same-instant ties: faults, then polls, then queries (see
+        // [`Event::sort_key`]); fault-free grids keep the original
+        // poll-before-query order bit-identically.
         events.sort_by(|(ta, ea), (tb, eb)| {
             ta.partial_cmp(tb)
                 .expect("finite event times")
-                .then_with(|| {
-                    let key = |e: &Event| match e {
-                        Event::Poll(r) => (0usize, *r),
-                        Event::Query => (1, 0),
-                    };
-                    key(ea).cmp(&key(eb))
-                })
+                .then_with(|| ea.sort_key().cmp(&eb.sort_key()))
         });
 
         let mut stats: Vec<ReplicaServeStats> = (0..n)
@@ -249,6 +357,11 @@ impl<'a> ServeFleet<'a> {
             ..ServeMetrics::default()
         };
         let mut in_flight: Vec<Option<InFlight>> = vec![None; n];
+        // `alive[r]` — replica r's process is up.  Between a kill and
+        // its respawn the rank is a hole: polls skip it and lookups
+        // routed to it go unserved (unless a migration shadow owner
+        // answers).
+        let mut alive: Vec<bool> = vec![true; n];
         // Version → schedule index / publish instant, for staleness math.
         let sched_index = |version: u64| -> Option<usize> {
             schedule.iter().position(|p| p.version == version)
@@ -285,46 +398,117 @@ impl<'a> ServeFleet<'a> {
             }
             // 3. The event itself.
             match ev {
-                Event::Poll(r) => {
-                    if in_flight[r].is_some() {
-                        // Still applying the previous swap: this poll
-                        // is a no-op; the next one catches up further.
-                    } else if let Some(target) = schedule
-                        .iter()
-                        .take_while(|p| p.at <= t)
-                        .last()
-                        .filter(|p| self.replicas[r].version != Some(p.version))
-                    {
-                        if self.cfg.force_full_reload {
-                            // Baseline arm: forget the resume point so
-                            // the chain never passes through us.
-                            self.replicas[r].version = None;
+                Event::Tear => {
+                    if let Some(mig) = migration.as_deref_mut() {
+                        let was = mig.torn();
+                        mig.tear(t);
+                        if !was && mig.torn() {
+                            if let Some(tr) = &self.tracer {
+                                tr.instant("migration_tear", t, &[("at", t)]);
+                            }
                         }
-                        let swap = self.replicas[r].begin_catch_up(self.store, target.version)?;
-                        let secs =
-                            self.cfg
-                                .swap
-                                .swap_secs(swap.bytes, swap.rows_patched, swap.full_reload);
-                        in_flight[r] = Some(InFlight {
-                            done_at: t + secs,
-                            published_at: target.at,
-                        });
-                        stats[r].apply_secs.push(secs);
-                        stats[r].bytes_fetched += swap.bytes;
-                        stats[r].rows_patched += swap.rows_patched as u64;
-                        if let Some(tr) = &self.tracer {
-                            tr.span(
-                                "swap_apply",
-                                Track::Replica(r),
-                                t,
-                                secs,
-                                &[
-                                    ("version", target.version as f64),
-                                    ("bytes", swap.bytes as f64),
-                                    ("rows", swap.rows_patched as f64),
-                                    ("full", if swap.full_reload { 1.0 } else { 0.0 }),
-                                ],
-                            );
+                    }
+                }
+                Event::MigResume => {
+                    if let Some(mig) = migration.as_deref_mut() {
+                        if mig.torn() {
+                            mig.resume(t);
+                            if let Some(tr) = &self.tracer {
+                                tr.instant("migration_resume", t, &[("at", t)]);
+                            }
+                        }
+                    }
+                }
+                Event::Kill(k) => {
+                    let kill = self.faults.kills[k];
+                    let r = kill.replica;
+                    // The process dies abruptly: any in-flight swap's
+                    // undo shadow dies with it — abandoned cleanly,
+                    // because the replacement below starts from
+                    // nothing (no torn half-state can survive a
+                    // process boundary).  The rank goes dark until
+                    // respawn.
+                    let map = match migration.as_deref() {
+                        Some(m) => m.serve_map(self.cfg.owner_map),
+                        None => self.cfg.owner_map,
+                    };
+                    let mut fresh = Replica::new(
+                        r,
+                        n,
+                        map,
+                        RowCache::new(
+                            self.cfg.cache_ttl,
+                            self.cfg.cache_capacity,
+                            self.cfg.emb_dim,
+                            self.cfg.seed ^ (r as u64).wrapping_mul(0x9E37_79B9),
+                        ),
+                    );
+                    if let Some(m) = migration.as_deref() {
+                        if m.in_transition(t) {
+                            // Mid-migration the replacement must host
+                            // under both maps, or double-routed reads
+                            // would see NotHosted on a live owner.
+                            fresh.hosting = Hosting::Both {
+                                old: self.cfg.owner_map,
+                                new: m.to,
+                            };
+                        }
+                    }
+                    self.replicas[r] = fresh;
+                    alive[r] = false;
+                    in_flight[r] = None;
+                    out.replicas_killed += 1;
+                    if let Some(tr) = &self.tracer {
+                        tr.instant("replica_kill", t, &[("replica", r as f64)]);
+                    }
+                }
+                Event::Respawn(k) => {
+                    let r = self.faults.kills[k].replica;
+                    alive[r] = true;
+                    if let Some(tr) = &self.tracer {
+                        tr.instant("replica_respawn", t, &[("replica", r as f64)]);
+                    }
+                    if self.policy.eager_replace && in_flight[r].is_none() {
+                        // Reactive arm: begin the cold catch-up at the
+                        // respawn instant instead of waiting for the
+                        // next scheduled poll — up to a full poll
+                        // interval of staleness saved.
+                        if let Some(target) = schedule
+                            .iter()
+                            .take_while(|p| p.at <= t)
+                            .last()
+                            .filter(|p| self.replicas[r].version != Some(p.version))
+                            .copied()
+                        {
+                            self.begin_swap(r, target, t, &mut stats, &mut in_flight)?;
+                        }
+                    }
+                }
+                Event::Poll(r) => {
+                    if !alive[r] || in_flight[r].is_some() {
+                        // Dead rank (nothing to poll) or still
+                        // applying the previous swap: this poll is a
+                        // no-op; the next one catches up further.
+                    } else {
+                        // A lagged registry mirror shows the schedule
+                        // as of `lag` seconds ago; the reactive arm
+                        // detects the staleness and polls the true
+                        // feed instead of believing it.
+                        let lag = self.faults.lag_at(r, t);
+                        let t_reg = if lag > 0.0 && self.policy.force_sync {
+                            out.forced_syncs += 1;
+                            t
+                        } else {
+                            t - lag
+                        };
+                        if let Some(target) = schedule
+                            .iter()
+                            .take_while(|p| p.at <= t_reg)
+                            .last()
+                            .filter(|p| self.replicas[r].version != Some(p.version))
+                            .copied()
+                        {
+                            self.begin_swap(r, target, t, &mut stats, &mut in_flight)?;
                         }
                     }
                 }
@@ -335,6 +519,7 @@ impl<'a> ServeFleet<'a> {
                         rep.cache.tick();
                     }
                     let ids = traffic.batch(self.cfg.batch);
+                    let published_upto = schedule.iter().take_while(|p| p.at <= t).count();
                     for row in ids {
                         out.queries += 1;
                         let route = match migration.as_deref() {
@@ -343,11 +528,37 @@ impl<'a> ServeFleet<'a> {
                         };
                         let rank = match route {
                             Route::Single(rank) => rank,
-                            Route::Double { chosen, .. } => {
+                            Route::Double { chosen, shadow } => {
                                 out.double_routed += 1;
-                                chosen
+                                if alive[chosen] {
+                                    chosen
+                                } else if alive[shadow] && self.replicas[shadow].hosts(row) {
+                                    // Fail over to the other owner the
+                                    // double-routed read already
+                                    // consults — only when it actually
+                                    // hosts the row (a not-yet-adopted
+                                    // new owner does not).
+                                    shadow
+                                } else {
+                                    out.unserved += 1;
+                                    continue;
+                                }
                             }
                         };
+                        if !alive[rank] {
+                            // Dead single owner: nobody can answer.
+                            out.unserved += 1;
+                            continue;
+                        }
+                        // A cold replica (respawned after a kill,
+                        // catch-up not yet landed) serves degraded —
+                        // zero-shot defaults instead of blocking —
+                        // when the policy allows it.
+                        let cold = self.replicas[rank].version.is_none() && published_upto > 0;
+                        if cold && !self.policy.degraded_serving {
+                            out.unserved += 1;
+                            continue;
+                        }
                         match self.replicas[rank].lookup(row) {
                             Lookup::CacheHit(_) => {
                                 out.answered += 1;
@@ -366,10 +577,18 @@ impl<'a> ServeFleet<'a> {
                                 continue;
                             }
                         }
+                        if cold {
+                            out.degraded_qps += 1;
+                        }
                         // Freshness weight from the *served* version's
-                        // publish instant.
+                        // publish instant — and the serve-invariant
+                        // tripwire: no answer may come from a version
+                        // newer than the freshest published.
                         if let Some(v) = self.replicas[rank].version {
                             if let Some(i) = sched_index(v) {
+                                if i >= published_upto {
+                                    out.served_ahead += 1;
+                                }
                                 let age = (t - schedule[i].at).max(0.0);
                                 out.fresh_weight += 1.0 / (1.0 + age / self.cfg.freshness_tau);
                             }

@@ -52,20 +52,38 @@ pub struct MigrationStats {
     /// Rows loaded into their new owners.
     pub adopted_rows: u64,
     pub bytes: u64,
+    /// The driver was torn ([`super::RollingMigration::tear`]) at this
+    /// instant — `None` for an uninterrupted migration.
+    pub torn_at: Option<f64>,
+    /// A torn driver was resumed at this instant.
+    pub resumed_at: Option<f64>,
+    /// The migration was abandoned and rolled back to the old map —
+    /// `finished_at` is the rollback instant, not a cutover.
+    pub rolled_back: bool,
 }
 
 impl MigrationStats {
     pub fn to_json(&self) -> Value {
         let mut sorted = self.adopt_secs.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite adopt secs"));
-        obj(vec![
+        let mut fields = vec![
             ("started_at", num(self.started_at)),
             ("finished_at", num(self.finished_at)),
             ("duration_secs", num(self.finished_at - self.started_at)),
             ("adopt_p99_secs", num(nearest_rank(&sorted, 0.99))),
             ("adopted_rows", num(self.adopted_rows as f64)),
             ("bytes", num(self.bytes as f64)),
-        ])
+        ];
+        if let Some(t) = self.torn_at {
+            fields.push(("torn_at", num(t)));
+        }
+        if let Some(t) = self.resumed_at {
+            fields.push(("resumed_at", num(t)));
+        }
+        if self.rolled_back {
+            fields.push(("rolled_back", Value::Bool(true)));
+        }
+        obj(fields)
     }
 }
 
@@ -87,6 +105,24 @@ pub struct ServeMetrics {
     pub wrong_owner: u64,
     /// Lookups that consulted both owner maps mid-migration.
     pub double_routed: u64,
+    /// Answered lookups served by a replica holding *no* published
+    /// version while at least one was published — the graceful-
+    /// degradation path (cold replacement after a kill, catch-up not
+    /// yet landed) serving the zero-shot default instead of blocking.
+    pub degraded_qps: u64,
+    /// Lookups routed to a dead replica with no live shadow owner —
+    /// nobody could answer.  Zero in a fault-free run; under injected
+    /// kills this is the availability gap both policy arms pay.
+    pub unserved: u64,
+    /// Registry-lag detections where the reactive policy polled the
+    /// true schedule instead of believing the lagged view.
+    pub forced_syncs: u64,
+    /// Replica kill events that actually fired.
+    pub replicas_killed: u64,
+    /// Answered lookups served from a version *newer* than the
+    /// freshest published at that instant — must be zero; the
+    /// serve-invariant tripwire ([`crate::chaos::Runner`]).
+    pub served_ahead: u64,
     /// Σ 1/(1+age/τ) over answered lookups.
     pub fresh_weight: f64,
     pub horizon: f64,
@@ -159,6 +195,19 @@ impl ServeMetrics {
         }
     }
 
+    /// SLO attainment: freshness-weighted fraction of *issued*
+    /// lookups.  An unserved lookup scores 0, a degraded (cold) answer
+    /// scores 0, a fresh answer approaches 1 — so the score folds
+    /// availability and freshness into one number in `[0, 1]`, the
+    /// headline of the reactive-vs-static chaos sweep.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.fresh_weight / self.queries as f64
+        }
+    }
+
     pub fn total_swaps(&self) -> usize {
         self.replicas.iter().map(|r| r.swaps).sum()
     }
@@ -181,6 +230,12 @@ impl ServeMetrics {
             ("untouched", num(self.untouched as f64)),
             ("wrong_owner", num(self.wrong_owner as f64)),
             ("double_routed", num(self.double_routed as f64)),
+            ("degraded_qps", num(self.degraded_qps as f64)),
+            ("unserved", num(self.unserved as f64)),
+            ("forced_syncs", num(self.forced_syncs as f64)),
+            ("replicas_killed", num(self.replicas_killed as f64)),
+            ("served_ahead", num(self.served_ahead as f64)),
+            ("slo_attainment", num(self.slo_attainment())),
             ("hit_rate", num(self.hit_rate())),
             ("qps", num(self.qps())),
             ("fresh_qps", num(self.fresh_qps())),

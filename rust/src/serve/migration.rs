@@ -63,6 +63,15 @@ pub struct RollingMigration {
     /// `adopted[r]` — replica `r`'s adopt completed; reads may prefer
     /// it as a new-map owner.
     adopted: Vec<bool>,
+    /// Torn: the driver was interrupted between adopt and cutover
+    /// ([`RollingMigration::tear`]) and freezes until
+    /// [`RollingMigration::resume`] or [`RollingMigration::rollback`].
+    /// While torn the fleet stays in the double-routed transitional
+    /// state — safe (every row keeps an owner) but never finishing.
+    frozen_at: Option<f64>,
+    /// The migration was abandoned: the fleet was rolled back to the
+    /// old map and routing must never consult `to` again.
+    rolled_back: bool,
     pub stats: MigrationStats,
 }
 
@@ -73,6 +82,8 @@ impl RollingMigration {
             start,
             state: MigState::Pending,
             adopted: vec![false; fleet],
+            frozen_at: None,
+            rolled_back: false,
             stats: MigrationStats {
                 started_at: start,
                 ..MigrationStats::default()
@@ -82,6 +93,70 @@ impl RollingMigration {
 
     pub fn done(&self) -> bool {
         self.state == MigState::Done
+    }
+
+    /// Is the driver frozen by a [`RollingMigration::tear`]?
+    pub fn torn(&self) -> bool {
+        self.frozen_at.is_some()
+    }
+
+    /// Was the migration abandoned by [`RollingMigration::rollback`]?
+    pub fn rolled_back(&self) -> bool {
+        self.rolled_back
+    }
+
+    /// The owner map lookups must be served under right now: `to`
+    /// only once the cutover landed (and was not rolled back),
+    /// otherwise the pre-migration `old` map.
+    pub fn serve_map(&self, old: OwnerMap) -> OwnerMap {
+        if self.done() && !self.rolled_back {
+            self.to
+        } else {
+            old
+        }
+    }
+
+    /// Interrupt the migration at `now`, between adopt and cutover:
+    /// the state machine freezes and the fleet stays torn in the
+    /// double-routed window until [`RollingMigration::resume`] or
+    /// [`RollingMigration::rollback`].  A tear after the cutover (or
+    /// before the start) is a no-op — there is no transitional state
+    /// to tear.
+    pub fn tear(&mut self, now: f64) {
+        if self.done() || !self.in_transition(now) {
+            return;
+        }
+        self.frozen_at = Some(now);
+        self.stats.torn_at = Some(now);
+    }
+
+    /// Unfreeze a torn migration at `now`; the next
+    /// [`RollingMigration::advance`] picks up exactly where the tear
+    /// left off (adopts already completed stay completed).
+    pub fn resume(&mut self, now: f64) {
+        if self.frozen_at.take().is_some() {
+            self.stats.resumed_at = Some(now);
+        }
+    }
+
+    /// Abandon the migration at `now`: every replica drops its
+    /// new-map rows and returns to the old map
+    /// ([`super::Replica::retire_to`]), routing collapses back to
+    /// single-map under `old_map`, and the driver terminates with
+    /// `rolled_back` set — loudly recorded in
+    /// [`MigrationStats::rolled_back`], never silently.
+    pub fn rollback(&mut self, now: f64, replicas: &mut [Replica], old_map: OwnerMap) {
+        if self.done() {
+            return;
+        }
+        for r in replicas.iter_mut() {
+            r.retire_to(old_map);
+        }
+        self.frozen_at = None;
+        self.rolled_back = true;
+        self.state = MigState::Done;
+        self.stats.rolled_back = true;
+        self.stats.finished_at = now;
     }
 
     /// Is the fleet between the first adopt and the cutover at `now`?
@@ -103,6 +178,10 @@ impl RollingMigration {
         swap: &SwapModel,
         tracer: Option<&Tracer>,
     ) -> Result<()> {
+        if self.frozen_at.is_some() {
+            // Torn: nothing progresses until resume() or rollback().
+            return Ok(());
+        }
         loop {
             match self.state {
                 MigState::Pending => {
@@ -114,7 +193,10 @@ impl RollingMigration {
                     // at the old version while the old-map rows patch
                     // to the target — a mixed-version replica.  The
                     // swap commits first; the next event retries.
-                    if replicas[0].swap_in_flight() {
+                    // Likewise defer a cold replica (freshly respawned
+                    // after a kill, nothing loaded yet): adopt reads
+                    // rows at the served version, and there is none.
+                    if replicas[0].swap_in_flight() || replicas[0].version.is_none() {
                         return Ok(());
                     }
                     self.begin_adopt(0, now, replicas, store, swap, tracer)?;
@@ -126,7 +208,7 @@ impl RollingMigration {
                     self.adopted[replica] = true;
                     let next = replica + 1;
                     if next < replicas.len() {
-                        if replicas[next].swap_in_flight() {
+                        if replicas[next].swap_in_flight() || replicas[next].version.is_none() {
                             // Same deferral as above (idempotent: the
                             // `adopted` mark above re-runs harmlessly
                             // until the swap commits).
@@ -194,6 +276,10 @@ impl RollingMigration {
     /// is plain single-map routing; inside it, rows whose owners
     /// differ double-route (see module docs).
     pub fn route(&self, row: u64, fleet: usize, old_map: OwnerMap, now: f64) -> Route {
+        if self.rolled_back {
+            // The migration was abandoned: `to` never became active.
+            return Route::Single(old_map.owner(row, fleet));
+        }
         if self.done() {
             return Route::Single(self.to.owner(row, fleet));
         }

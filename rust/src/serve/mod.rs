@@ -23,6 +23,15 @@
 //!   Modulo→JumpHash) moving the fleet replica-by-replica with
 //!   double-routed reads, zero wrong-owner lookups, and a bit-exact
 //!   post-cutover fleet.
+//! * [`faults`] — serve-side chaos: a [`ServeFaultPlan`] injects
+//!   replica kills (mid-swap death with a cold replacement), registry
+//!   poll lag, and torn migrations; a [`ReactivePolicy`] decides
+//!   whether the fleet rides them out passively (the static arm) or
+//!   replaces/force-syncs/resumes eagerly (the reactive arm) — both
+//!   under the chaos lab's serve invariant
+//!   ([`crate::chaos::Runner`]): every answered lookup from an owner
+//!   under the active map, from a version no newer than the freshest
+//!   published, never from a torn state.
 //!
 //! Traces: fleet activity lands on per-replica tracks
 //! ([`crate::obs::Track::Replica`]) — `swap_apply` / `migrate_adopt`
@@ -61,12 +70,17 @@
 //! # Ok(()) }
 //! ```
 
+pub mod faults;
 pub mod fleet;
 pub mod metrics;
 pub mod migration;
 pub mod replica;
 pub mod traffic;
 
+pub use faults::{
+    MigrationTearEvent, ReactivePolicy, RegistryLagEvent, ReplicaKillEvent, ServeFaultError,
+    ServeFaultPlan,
+};
 pub use fleet::{PublishEvent, ServeConfig, ServeFleet, SwapModel};
 pub use metrics::{MigrationStats, ReplicaServeStats, ServeMetrics};
 pub use migration::{RollingMigration, Route};

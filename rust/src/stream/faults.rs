@@ -78,6 +78,13 @@ pub struct TornPublishEvent {
     /// `publish.json`, `dense.bin`, `rows.bin`, in write order); the
     /// next file in order is left truncated mid-payload.
     pub surviving_files: usize,
+    /// How many consecutive publish attempts tear (≥ 1) before the DFS
+    /// heals — a persistent registry fault.  Each failed attempt is
+    /// swept and retried under the session's
+    /// [`crate::stream::reactive::RetryPolicy`] with jittered backoff;
+    /// attempts past the retry budget escape by forcing a *full*
+    /// republish ([`crate::metrics::VersionRecord::escaped`]).
+    pub attempts: usize,
 }
 
 /// Every fault injected into one [`crate::stream::OnlineSession`] run.
@@ -100,6 +107,78 @@ pub struct FaultSchedule {
     /// Slow-registry publish tail (None disables).
     pub publish_tail: Option<TailModel>,
 }
+
+/// Why a [`FaultSchedule`] was rejected at build time.
+///
+/// Historically the session *silently ignored* events that targeted
+/// windows beyond the run or ranks outside the cluster — a chaos
+/// scenario could claim to kill worker 7 of a 2-worker job and the test
+/// would pass vacuously.  Validation now happens up front
+/// ([`FaultSchedule::validate`], called by
+/// [`crate::stream::OnlineSession::new`] /
+/// [`crate::stream::OnlineSession::with_faults`]) and every rejection
+/// names the offending event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultScheduleError {
+    /// An event targets a delta window ≥ the run's window count.
+    WindowOutOfRange {
+        /// Which event kind carried the bad window ("kill", "partition",
+        /// "torn_publish").
+        event: &'static str,
+        window: usize,
+        windows: usize,
+    },
+    /// A kill names zero workers or more workers than the cluster holds.
+    BadKillWorkers { window: usize, workers: usize, max_world: usize },
+    /// A kill fraction outside `(0, 1]`.
+    BadKillFraction { window: usize, fraction: f64 },
+    /// A partition names a shard rank outside the cluster.
+    ShardOutOfRange { window: usize, shard: usize, max_world: usize },
+    /// A latency field is negative or non-finite.
+    BadLatency { event: &'static str, window: usize, secs: f64 },
+    /// A torn publish claims more than 2 surviving files (3 complete
+    /// files is a *committed* version, not a torn one).
+    BadSurvivingFiles { window: usize, surviving_files: usize },
+    /// A torn publish with zero attempts (1 = the classic single tear).
+    BadTornAttempts { window: usize },
+}
+
+impl std::fmt::Display for FaultScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::WindowOutOfRange { event, window, windows } => write!(
+                f,
+                "fault schedule: {event} targets window {window} but the run has only {windows} windows (0..{windows})"
+            ),
+            Self::BadKillWorkers { window, workers, max_world } => write!(
+                f,
+                "fault schedule: kill@{window} names {workers} workers; cluster holds at most {max_world} (and at least 1 must die)"
+            ),
+            Self::BadKillFraction { window, fraction } => write!(
+                f,
+                "fault schedule: kill@{window} fraction {fraction} outside (0, 1]"
+            ),
+            Self::ShardOutOfRange { window, shard, max_world } => write!(
+                f,
+                "fault schedule: partition@{window} targets shard {shard} but the cluster holds at most {max_world} shards"
+            ),
+            Self::BadLatency { event, window, secs } => write!(
+                f,
+                "fault schedule: {event}@{window} has negative or non-finite latency {secs}"
+            ),
+            Self::BadSurvivingFiles { window, surviving_files } => write!(
+                f,
+                "fault schedule: torn_publish@{window} claims {surviving_files} surviving files; a torn write leaves 0-2 (3 is a committed version)"
+            ),
+            Self::BadTornAttempts { window } => write!(
+                f,
+                "fault schedule: torn_publish@{window} with 0 attempts (use >= 1, or drop the event)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FaultScheduleError {}
 
 impl FaultSchedule {
     /// True when no fault of any type is scheduled — the schedule a
@@ -135,6 +214,98 @@ impl FaultSchedule {
             .iter()
             .copied()
             .find(|t| t.window == window)
+    }
+
+    /// Window-shape validation: every event must land inside the run's
+    /// `windows` delta windows and carry sane per-event numbers.  This
+    /// is what the session can check on its own (it knows its feed
+    /// length but not the scenario's cluster ceiling — a scenario built
+    /// for `max_world` 4 legitimately partitions shard 3 while the run
+    /// starts at world 2 and grows).
+    pub fn validate_windows(&self, windows: usize) -> Result<(), FaultScheduleError> {
+        for k in &self.kills {
+            if k.window >= windows {
+                return Err(FaultScheduleError::WindowOutOfRange {
+                    event: "kill",
+                    window: k.window,
+                    windows,
+                });
+            }
+            if !(k.fraction > 0.0 && k.fraction <= 1.0) {
+                return Err(FaultScheduleError::BadKillFraction {
+                    window: k.window,
+                    fraction: k.fraction,
+                });
+            }
+            if !(k.detection_secs.is_finite() && k.detection_secs >= 0.0) {
+                return Err(FaultScheduleError::BadLatency {
+                    event: "kill",
+                    window: k.window,
+                    secs: k.detection_secs,
+                });
+            }
+        }
+        for p in &self.partitions {
+            if p.window >= windows {
+                return Err(FaultScheduleError::WindowOutOfRange {
+                    event: "partition",
+                    window: p.window,
+                    windows,
+                });
+            }
+            if !(p.stall_secs.is_finite() && p.stall_secs >= 0.0) {
+                return Err(FaultScheduleError::BadLatency {
+                    event: "partition",
+                    window: p.window,
+                    secs: p.stall_secs,
+                });
+            }
+        }
+        for t in &self.torn_publishes {
+            if t.window >= windows {
+                return Err(FaultScheduleError::WindowOutOfRange {
+                    event: "torn_publish",
+                    window: t.window,
+                    windows,
+                });
+            }
+            if t.surviving_files > 2 {
+                return Err(FaultScheduleError::BadSurvivingFiles {
+                    window: t.window,
+                    surviving_files: t.surviving_files,
+                });
+            }
+            if t.attempts == 0 {
+                return Err(FaultScheduleError::BadTornAttempts { window: t.window });
+            }
+        }
+        Ok(())
+    }
+
+    /// Full validation: [`FaultSchedule::validate_windows`] plus rank
+    /// bounds against the cluster's worker/shard ceiling `max_world`
+    /// (what [`crate::chaos::Runner`] knows and the session does not).
+    pub fn validate(&self, windows: usize, max_world: usize) -> Result<(), FaultScheduleError> {
+        self.validate_windows(windows)?;
+        for k in &self.kills {
+            if k.workers == 0 || k.workers > max_world {
+                return Err(FaultScheduleError::BadKillWorkers {
+                    window: k.window,
+                    workers: k.workers,
+                    max_world,
+                });
+            }
+        }
+        for p in &self.partitions {
+            if p.shard >= max_world {
+                return Err(FaultScheduleError::ShardOutOfRange {
+                    window: p.window,
+                    shard: p.shard,
+                    max_world,
+                });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -230,6 +401,7 @@ mod tests {
             torn_publishes: vec![TornPublishEvent {
                 window: 0,
                 surviving_files: 1,
+                attempts: 1,
             }],
             skew: None,
             publish_tail: None,
@@ -239,5 +411,176 @@ mod tests {
         assert_eq!(sched.partition_at(2).unwrap().stall_secs, 9.0);
         assert_eq!(sched.torn_at(0).unwrap().surviving_files, 1);
         assert_eq!(sched.torn_at(2), None);
+    }
+
+    fn one_kill(window: usize, workers: usize) -> FaultSchedule {
+        FaultSchedule {
+            kills: vec![KillEvent {
+                window,
+                workers,
+                fraction: 0.5,
+                detection_secs: 0.0,
+            }],
+            ..FaultSchedule::default()
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_windows_by_name() {
+        // The historic bug: a kill aimed past the run was silently inert.
+        let err = one_kill(5, 1).validate_windows(3).unwrap_err();
+        assert_eq!(
+            err,
+            FaultScheduleError::WindowOutOfRange {
+                event: "kill",
+                window: 5,
+                windows: 3
+            }
+        );
+        assert!(err.to_string().contains("window 5"));
+        let sched = FaultSchedule {
+            partitions: vec![PartitionEvent {
+                window: 9,
+                shard: 0,
+                stall_secs: 1.0,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert!(matches!(
+            sched.validate_windows(3),
+            Err(FaultScheduleError::WindowOutOfRange { event: "partition", .. })
+        ));
+        let sched = FaultSchedule {
+            torn_publishes: vec![TornPublishEvent {
+                window: 3,
+                surviving_files: 0,
+                attempts: 1,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert!(matches!(
+            sched.validate_windows(3),
+            Err(FaultScheduleError::WindowOutOfRange { event: "torn_publish", .. })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_ranks_by_name() {
+        // Killing more workers than the cluster ever holds.
+        let err = one_kill(0, 7).validate(3, 4).unwrap_err();
+        assert_eq!(
+            err,
+            FaultScheduleError::BadKillWorkers {
+                window: 0,
+                workers: 7,
+                max_world: 4
+            }
+        );
+        assert!(one_kill(0, 0).validate(3, 4).is_err());
+        // Partitioning a shard rank outside the cluster.
+        let sched = FaultSchedule {
+            partitions: vec![PartitionEvent {
+                window: 1,
+                shard: 4,
+                stall_secs: 1.0,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert_eq!(
+            sched.validate(3, 4).unwrap_err(),
+            FaultScheduleError::ShardOutOfRange {
+                window: 1,
+                shard: 4,
+                max_world: 4
+            }
+        );
+        // Shard max_world-1 is the last legal rank.
+        let sched = FaultSchedule {
+            partitions: vec![PartitionEvent {
+                window: 1,
+                shard: 3,
+                stall_secs: 1.0,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert!(sched.validate(3, 4).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_event_payloads() {
+        let mut bad_frac = one_kill(0, 1);
+        bad_frac.kills[0].fraction = 0.0;
+        assert!(matches!(
+            bad_frac.validate_windows(3),
+            Err(FaultScheduleError::BadKillFraction { .. })
+        ));
+        let mut bad_detect = one_kill(0, 1);
+        bad_detect.kills[0].detection_secs = f64::NAN;
+        assert!(matches!(
+            bad_detect.validate_windows(3),
+            Err(FaultScheduleError::BadLatency { event: "kill", .. })
+        ));
+        let sched = FaultSchedule {
+            torn_publishes: vec![TornPublishEvent {
+                window: 0,
+                surviving_files: 3,
+                attempts: 1,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert!(matches!(
+            sched.validate_windows(3),
+            Err(FaultScheduleError::BadSurvivingFiles { .. })
+        ));
+        let sched = FaultSchedule {
+            torn_publishes: vec![TornPublishEvent {
+                window: 0,
+                surviving_files: 1,
+                attempts: 0,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert!(matches!(
+            sched.validate_windows(3),
+            Err(FaultScheduleError::BadTornAttempts { window: 0 })
+        ));
+        let sched = FaultSchedule {
+            partitions: vec![PartitionEvent {
+                window: 0,
+                shard: 0,
+                stall_secs: -1.0,
+            }],
+            ..FaultSchedule::default()
+        };
+        assert!(matches!(
+            sched.validate_windows(3),
+            Err(FaultScheduleError::BadLatency { event: "partition", .. })
+        ));
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_schedules() {
+        assert!(FaultSchedule::default().validate(0, 0).is_ok());
+        let sched = FaultSchedule {
+            kills: vec![KillEvent {
+                window: 2,
+                workers: 2,
+                fraction: 1.0,
+                detection_secs: 30.0,
+            }],
+            partitions: vec![PartitionEvent {
+                window: 0,
+                shard: 1,
+                stall_secs: 45.0,
+            }],
+            torn_publishes: vec![TornPublishEvent {
+                window: 1,
+                surviving_files: 2,
+                attempts: 4,
+            }],
+            skew: None,
+            publish_tail: None,
+        };
+        assert!(sched.validate(3, 2).is_ok());
     }
 }

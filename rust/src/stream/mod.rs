@@ -51,6 +51,7 @@ pub mod delta_ckpt;
 pub mod elastic;
 pub mod faults;
 pub mod publisher;
+pub mod reactive;
 pub mod session;
 
 pub use delta::{ingest, task_batches, Delta, DeltaFeed, DeltaFeedConfig, Ingest};
@@ -62,6 +63,9 @@ pub use elastic::{
     BacklogPolicy, ElasticEvent, FailurePlan, PhaseTimePolicy, ScaleDecision, ScalePolicy,
     ScheduledPolicy, WindowObservation,
 };
-pub use faults::{FaultSchedule, KillEvent, PartitionEvent, TornPublishEvent};
+pub use faults::{
+    FaultSchedule, FaultScheduleError, KillEvent, PartitionEvent, TornPublishEvent,
+};
 pub use publisher::{CompactPolicy, PublishMode, PublishModel, Publisher, RowDedup};
+pub use reactive::{FaultSignals, ReactiveScalePolicy, RetryPolicy};
 pub use session::{OnlineConfig, OnlineSession};

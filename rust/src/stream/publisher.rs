@@ -174,6 +174,10 @@ pub struct Publisher {
     delta_bytes_since_full: u64,
     /// Bytes of the most recent full snapshot (0 before the first).
     last_full_bytes: u64,
+    /// One-shot escape hatch armed by [`Publisher::force_full_next`]:
+    /// the next publish ships a full snapshot regardless of mode and
+    /// compaction cadence, then the flag clears.
+    force_full_next: bool,
 }
 
 impl Publisher {
@@ -200,6 +204,7 @@ impl Publisher {
             next_version: 0,
             delta_bytes_since_full: 0,
             last_full_bytes: 0,
+            force_full_next: false,
         })
     }
 
@@ -231,6 +236,18 @@ impl Publisher {
         self.next_version
     }
 
+    /// Arm the give-up-and-republish-full escape: the next
+    /// [`Publisher::publish`] ships a full snapshot regardless of
+    /// [`PublishMode`] / [`CompactPolicy`], re-rooting the delta chain
+    /// at durable state.  Used by the session when a torn-publish fault
+    /// outlives its [`crate::stream::reactive::RetryPolicy`] budget —
+    /// a full write takes a different (non-torn) path than re-driving
+    /// the identical delta into the same fault.  One-shot; cleared by
+    /// the publish it forces.
+    pub fn force_full_next(&mut self) {
+        self.force_full_next = true;
+    }
+
     /// The last published state (what the serving fleet currently runs).
     /// Retained — and therefore `Some` after the first publish — only
     /// under [`RowDedup::Exact`]; the bounded-memory policies return
@@ -258,17 +275,18 @@ impl Publisher {
         clock: &mut Clock,
     ) -> Result<VersionRecord> {
         let version = self.next_version;
-        let full = match self.mode {
-            PublishMode::FullRepublish => true,
-            PublishMode::DeltaRepublish => {
-                self.last_version.is_none()
-                    || self.compact.ship_full(
-                        version,
-                        self.delta_bytes_since_full,
-                        self.last_full_bytes,
-                    )
-            }
-        };
+        let full = std::mem::take(&mut self.force_full_next)
+            || match self.mode {
+                PublishMode::FullRepublish => true,
+                PublishMode::DeltaRepublish => {
+                    self.last_version.is_none()
+                        || self.compact.ship_full(
+                            version,
+                            self.delta_bytes_since_full,
+                            self.last_full_bytes,
+                        )
+                }
+            };
         let stats = if full {
             self.store.publish(version, &ckpt, None)?
         } else {
@@ -328,6 +346,8 @@ impl Publisher {
             reshard_bytes: 0,
             detect_secs: 0.0,
             redo_secs: 0.0,
+            backoff_secs: 0.0,
+            escaped: false,
             cold_tasks: Vec::new(),
             zero_shot_auc: None,
         };

@@ -1,0 +1,302 @@
+//! Fault-aware reaction primitives for the delivery loop.
+//!
+//! The chaos lab (PR 8) proved the loop never *corrupts* under composed
+//! faults; this module is the half that lets it *react*.  Three pieces:
+//!
+//! - [`FaultSignals`] — per-window fault telemetry surfaced by
+//!   [`crate::stream::OnlineSession`] on every
+//!   [`crate::stream::elastic::WindowObservation`], so scale policies
+//!   can see detection gaps and partition stalls, not just backlog.
+//! - [`RetryPolicy`] — deterministic bounded exponential backoff with
+//!   seeded jitter, shared by the session's torn-publish retry loop and
+//!   the serving fleet's forced registry syncs.  All delays come off the
+//!   virtual clock; replaying a seed replays the exact backoff schedule.
+//! - [`ReactiveScalePolicy`] — a [`ScalePolicy`] that replaces dead
+//!   workers *ahead of the next window* (instead of waiting for backlog
+//!   to pile up) and grows when fault overhead eats a configured
+//!   fraction of the window interval.
+//!
+//! Everything here is plain data on the virtual clock: no wall time, no
+//! unseeded randomness, bit-exact replay from a `u64` seed.
+
+use crate::stream::elastic::{ScaleDecision, ScalePolicy, WindowObservation};
+use crate::util::rng::splitmix64;
+
+/// Per-window fault telemetry, attached to every
+/// [`WindowObservation`].  All fields are virtual seconds (or counts)
+/// charged inside the window they describe; a fault-free window is
+/// `FaultSignals::default()` everywhere.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSignals {
+    /// Workers killed inside this window (before redo).
+    pub workers_lost: usize,
+    /// Seconds the window stalled before the kill was detected.
+    pub detect_secs: f64,
+    /// Seconds lost to PS-shard partition stalls.
+    pub partition_secs: f64,
+    /// Seconds spent redoing lost work from the last published version.
+    pub redo_secs: f64,
+    /// Seconds spent sweeping torn publishes out of the store.
+    pub repair_secs: f64,
+    /// Seconds the publish leg took (after any slow-registry tail).
+    pub publish_secs: f64,
+    /// Seconds spent backing off between torn-publish retry attempts
+    /// ([`RetryPolicy`]).
+    pub backoff_secs: f64,
+    /// The publish escaped a persistent torn-write fault by forcing a
+    /// full republish after exhausting [`RetryPolicy::max_retries`].
+    pub publish_escaped: bool,
+}
+
+impl FaultSignals {
+    /// Total virtual seconds this window lost to faults — the signal a
+    /// reactive policy compares against the window interval.
+    pub fn lost_secs(&self) -> f64 {
+        self.detect_secs + self.partition_secs + self.redo_secs + self.repair_secs
+            + self.backoff_secs
+    }
+
+    /// True when nothing fault-shaped happened in the window.
+    pub fn is_quiet(&self) -> bool {
+        self.workers_lost == 0 && self.lost_secs() == 0.0 && !self.publish_escaped
+    }
+}
+
+/// Bounded exponential backoff with deterministic seeded jitter.
+///
+/// `backoff_secs(attempt, key)` returns the delay *before* retry
+/// `attempt` (0-based): `base_secs * multiplier^attempt`, clamped to
+/// `max_secs`, then stretched by a jitter factor in
+/// `[1 - jitter, 1 + jitter]` drawn from `splitmix64(seed ^ key ^
+/// attempt)`.  The same `(seed, key, attempt)` triple always yields the
+/// same delay — chaos replays are bit-exact.
+///
+/// After `max_retries` failed attempts the caller should take its
+/// escape hatch (the session republishes a full snapshot; the fleet
+/// pins the replica stale and flags `degraded_qps`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempts before giving up and escaping (0 = never retry).
+    pub max_retries: usize,
+    /// Delay before the first retry, virtual seconds.
+    pub base_secs: f64,
+    /// Exponential growth factor per attempt.
+    pub multiplier: f64,
+    /// Ceiling on any single delay, virtual seconds.
+    pub max_secs: f64,
+    /// Jitter half-width as a fraction of the delay (0.2 → ±20%).
+    pub jitter: f64,
+    /// Seed for the jitter stream; combined with the caller's `key` so
+    /// independent retry sites decorrelate.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 3,
+            base_secs: 0.5,
+            multiplier: 2.0,
+            max_secs: 30.0,
+            jitter: 0.2,
+            seed: 0xB0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Deterministic delay before 0-based retry `attempt`, keyed by the
+    /// caller's `key` (e.g. the version number being republished or the
+    /// replica rank forcing a sync).
+    pub fn backoff_secs(&self, attempt: usize, key: u64) -> f64 {
+        let raw = self.base_secs * self.multiplier.powi(attempt as i32);
+        let clamped = raw.min(self.max_secs);
+        let bits = splitmix64(self.seed ^ key ^ (attempt as u64).wrapping_mul(0x9E37_79B9));
+        // Uniform in [-1, 1) from the top 53 bits, then scaled by jitter.
+        let unit = (bits >> 11) as f64 / (1u64 << 52) as f64 - 1.0;
+        (clamped * (1.0 + self.jitter * unit)).max(0.0)
+    }
+
+    /// True when 0-based `attempt` is past the retry budget and the
+    /// caller should escape instead of retrying again.
+    pub fn exhausted(&self, attempt: usize) -> bool {
+        attempt >= self.max_retries
+    }
+}
+
+/// A [`ScalePolicy`] that reacts to [`FaultSignals`] instead of backlog
+/// alone: dead workers are replaced *before* the next window starts,
+/// and sustained fault overhead (stalls, redo, repair eating more than
+/// `grow_lost_frac` of the interval) grows the cluster.  After
+/// `shrink_after_quiet` consecutive quiet windows any fault-driven
+/// growth is released back to `baseline_world`.
+#[derive(Debug, Clone)]
+pub struct ReactiveScalePolicy {
+    /// World size to return to once the fault clears.
+    pub baseline_world: usize,
+    /// Grow by `grow_step` when `FaultSignals::lost_secs` exceeds this
+    /// fraction of the window interval.
+    pub grow_lost_frac: f64,
+    /// Workers added per overloaded window.
+    pub grow_step: usize,
+    /// Hard ceiling on fault-driven growth.
+    pub max_world: usize,
+    /// Quiet windows observed before shrinking back to baseline.
+    pub shrink_after_quiet: usize,
+    quiet_streak: usize,
+}
+
+impl ReactiveScalePolicy {
+    pub fn new(baseline_world: usize, max_world: usize) -> Self {
+        Self {
+            baseline_world: baseline_world.max(1),
+            grow_lost_frac: 0.25,
+            grow_step: 1,
+            max_world: max_world.max(baseline_world.max(1)),
+            shrink_after_quiet: 3,
+            quiet_streak: 0,
+        }
+    }
+}
+
+impl ScalePolicy for ReactiveScalePolicy {
+    fn observe(&mut self, obs: &WindowObservation) -> ScaleDecision {
+        let f = &obs.faults;
+        if f.is_quiet() {
+            self.quiet_streak += 1;
+        } else {
+            self.quiet_streak = 0;
+        }
+        // Replace the dead first: a kill already cost this window its
+        // redo; the *next* window should not also run short-handed.
+        if f.workers_lost > 0 {
+            let target = (obs.world + f.workers_lost).min(self.max_world);
+            if target != obs.world {
+                return ScaleDecision::To(target);
+            }
+        }
+        // Sustained fault overhead: grow while the bill keeps coming.
+        if obs.interval > 0.0 && f.lost_secs() > self.grow_lost_frac * obs.interval {
+            let target = (obs.world + self.grow_step).min(self.max_world);
+            if target != obs.world {
+                return ScaleDecision::To(target);
+            }
+        }
+        // Fault cleared: release the extra workers.
+        if self.quiet_streak >= self.shrink_after_quiet && obs.world > self.baseline_world {
+            return ScaleDecision::To(self.baseline_world);
+        }
+        ScaleDecision::Hold
+    }
+
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(world: usize, faults: FaultSignals) -> WindowObservation {
+        WindowObservation {
+            window: 0,
+            world,
+            backlog_secs: 0.0,
+            train_secs: 1.0,
+            window_secs: 1.0,
+            interval: 10.0,
+            phases: vec![],
+            faults,
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        for attempt in 0..6 {
+            for key in [0u64, 7, 0xFEED] {
+                let a = p.backoff_secs(attempt, key);
+                let b = p.backoff_secs(attempt, key);
+                assert_eq!(a.to_bits(), b.to_bits(), "jitter must be pure");
+                let raw = (p.base_secs * p.multiplier.powi(attempt as i32)).min(p.max_secs);
+                assert!(a >= raw * (1.0 - p.jitter) - 1e-12 && a <= raw * (1.0 + p.jitter) + 1e-12);
+            }
+        }
+        // Different keys decorrelate the jitter stream.
+        assert_ne!(
+            p.backoff_secs(0, 1).to_bits(),
+            p.backoff_secs(0, 2).to_bits()
+        );
+    }
+
+    #[test]
+    fn backoff_grows_then_clamps() {
+        let p = RetryPolicy {
+            jitter: 0.0,
+            ..RetryPolicy::default()
+        };
+        assert!(p.backoff_secs(1, 0) > p.backoff_secs(0, 0));
+        // Far past the clamp point every delay is exactly max_secs.
+        assert_eq!(p.backoff_secs(20, 0), p.max_secs);
+        assert!(p.exhausted(3) && !p.exhausted(2));
+    }
+
+    #[test]
+    fn reactive_replaces_dead_workers_next_window() {
+        let mut pol = ReactiveScalePolicy::new(4, 8);
+        let faults = FaultSignals {
+            workers_lost: 2,
+            detect_secs: 5.0,
+            redo_secs: 3.0,
+            ..FaultSignals::default()
+        };
+        // Session already shrank nothing — world still 4, but two of the
+        // four died; the policy grows to re-cover the lost capacity.
+        assert_eq!(pol.observe(&obs(4, faults)), ScaleDecision::To(6));
+    }
+
+    #[test]
+    fn reactive_grows_on_sustained_stall_and_shrinks_when_quiet() {
+        let mut pol = ReactiveScalePolicy::new(2, 6);
+        let stall = FaultSignals {
+            partition_secs: 4.0, // 40% of the 10s interval > 25% threshold
+            ..FaultSignals::default()
+        };
+        assert_eq!(pol.observe(&obs(2, stall)), ScaleDecision::To(3));
+        // Three quiet windows release the growth back to baseline.
+        assert_eq!(
+            pol.observe(&obs(3, FaultSignals::default())),
+            ScaleDecision::Hold
+        );
+        assert_eq!(
+            pol.observe(&obs(3, FaultSignals::default())),
+            ScaleDecision::Hold
+        );
+        assert_eq!(
+            pol.observe(&obs(3, FaultSignals::default())),
+            ScaleDecision::To(2)
+        );
+    }
+
+    #[test]
+    fn reactive_holds_when_quiet_at_baseline() {
+        let mut pol = ReactiveScalePolicy::new(4, 8);
+        for _ in 0..10 {
+            assert_eq!(
+                pol.observe(&obs(4, FaultSignals::default())),
+                ScaleDecision::Hold
+            );
+        }
+    }
+
+    #[test]
+    fn reactive_respects_max_world() {
+        let mut pol = ReactiveScalePolicy::new(4, 4);
+        let faults = FaultSignals {
+            workers_lost: 1,
+            ..FaultSignals::default()
+        };
+        assert_eq!(pol.observe(&obs(4, faults)), ScaleDecision::Hold);
+    }
+}

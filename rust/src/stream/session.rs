@@ -61,9 +61,9 @@ use crate::io::preprocess::{preprocess, DatasetOnDisk};
 use crate::job::{JobSpec, Observer, TrainJob, Trainer};
 use crate::meta::{Episode, Sample, TaskBatch};
 use crate::metrics::{
-    DeliveryMetrics, RunMetrics, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_DETECT, PHASE_GC,
-    PHASE_PARTITION, PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_REPAIR, PHASE_RESHARD,
-    PHASE_RESTORE, PHASE_SKEW,
+    DeliveryMetrics, RunMetrics, PHASE_BACKOFF, PHASE_COLD_EVAL, PHASE_DELTA_INGEST, PHASE_DETECT,
+    PHASE_GC, PHASE_PARTITION, PHASE_PREPROCESS, PHASE_PUBLISH, PHASE_REDO, PHASE_REPAIR,
+    PHASE_RESHARD, PHASE_RESTORE, PHASE_SKEW,
 };
 use crate::obs::{Tracer, TracingObserver};
 use crate::sim::{Clock, ReadPattern, StorageModel};
@@ -73,6 +73,7 @@ use crate::stream::elastic::{
 };
 use crate::stream::faults::{FaultSchedule, TornPublishEvent};
 use crate::stream::publisher::{CompactPolicy, PublishMode, PublishModel, Publisher, RowDedup};
+use crate::stream::reactive::{FaultSignals, RetryPolicy};
 use crate::Result;
 
 /// Configuration of one online continuous-delivery session.
@@ -127,6 +128,14 @@ pub struct OnlineConfig {
     /// state is bit-identical either way — only the charged cost and
     /// bytes differ.
     pub partial_reshard: bool,
+    /// Retry policy for publishes against a persistently-torn registry:
+    /// jittered exponential backoff between attempts, and a
+    /// give-up-and-republish-full escape once the budget runs out
+    /// ([`crate::stream::reactive::RetryPolicy`]).  The first retry is
+    /// always immediate — the bit-compatible single-tear path — so
+    /// backoff only shows up under *repeated* tears
+    /// ([`TornPublishEvent::attempts`] ≥ 2).
+    pub retry: RetryPolicy,
     pub seed: u64,
 }
 
@@ -145,6 +154,7 @@ impl Default for OnlineConfig {
             failures: FailurePlan::default(),
             data_driven_steps: false,
             partial_reshard: false,
+            retry: RetryPolicy::default(),
             seed: 0x5EED,
         }
     }
@@ -221,6 +231,9 @@ impl<'rt> OnlineSession<'rt> {
         // Lower the compatibility FailurePlan to the generalized fault
         // schedule; richer compositions attach via `with_faults`.
         let faults = FaultSchedule::from(online.failures);
+        // Build-time validation: an event aimed past the run used to be
+        // silently inert (the test it was written for passed vacuously).
+        faults.validate_windows(online.feed.n_deltas)?;
         if faults.rebuilds_trainer() && job.trainer().has_runtime() {
             anyhow::bail!(
                 "failure injection rebuilds the trainer from its JobSpec, which \
@@ -321,8 +334,16 @@ impl<'rt> OnlineSession<'rt> {
     /// [`OnlineSession::new`]; this overrides it wholesale (including
     /// the publish-tail model, which lives on the publisher).  Mirrors
     /// `new`'s gate: schedules that rebuild the trainer (worker kills)
-    /// are refused for real-numerics jobs.
+    /// are refused for real-numerics jobs, and malformed schedules
+    /// (events aimed past the run, torn writes with impossible file
+    /// counts) are rejected with a named
+    /// [`crate::stream::FaultScheduleError`] instead of being silently
+    /// ignored.  Rank bounds against the scenario's cluster ceiling are
+    /// the caller's to check ([`FaultSchedule::validate`]) — the
+    /// session only knows its current world size, which a scenario
+    /// built for a larger `max_world` may legitimately exceed.
     pub fn with_faults(mut self, faults: FaultSchedule) -> Result<Self> {
+        faults.validate_windows(self.online.feed.n_deltas)?;
         if faults.rebuilds_trainer() && self.trainer.has_runtime() {
             anyhow::bail!(
                 "failure injection rebuilds the trainer from its JobSpec, which \
@@ -567,8 +588,11 @@ impl<'rt> OnlineSession<'rt> {
     /// as [`PHASE_REPAIR`].  The subsequent real publish reuses the same
     /// version number and, by determinism, the same bytes.
     ///
+    /// Returns the repair seconds charged, so the window can surface
+    /// them as [`FaultSignals::repair_secs`].
+    ///
     /// [`DeltaStore::recover`]: crate::stream::DeltaStore::recover
-    fn torn_publish_detour(&mut self, window: usize, torn: TornPublishEvent) -> Result<()> {
+    fn torn_publish_detour(&mut self, window: usize, torn: TornPublishEvent) -> Result<f64> {
         let version = self.publisher.next_version();
         let ckpt = self.trainer.capture(self.step);
         // The doomed attempt ships the capture's touched rows — a
@@ -601,7 +625,67 @@ impl<'rt> OnlineSession<'rt> {
             repair,
             &[("window", window as f64), ("version", version as f64)],
         );
-        Ok(())
+        Ok(repair)
+    }
+
+    /// Drive a window's publish through a (possibly persistent) torn
+    /// fault: each tearing attempt is swept and charged via
+    /// [`OnlineSession::torn_publish_detour`]; the first retry is
+    /// immediate (the bit-compatible single-tear path), later retries
+    /// wait out the [`RetryPolicy`]'s jittered backoff
+    /// ([`crate::metrics::PHASE_BACKOFF`]); and once the tear count
+    /// exceeds the retry budget the session *escapes* — it arms
+    /// [`Publisher::force_full_next`] so the upcoming publish re-roots
+    /// the chain with a full snapshot over the non-torn full-write path
+    /// instead of re-driving the identical delta into the same fault
+    /// forever.  Returns `(repair_secs, backoff_secs, escaped)` for the
+    /// window's [`FaultSignals`].
+    fn ride_out_torn_publish(
+        &mut self,
+        window: usize,
+        torn: TornPublishEvent,
+    ) -> Result<(f64, f64, bool)> {
+        let retry: RetryPolicy = self.online.retry;
+        let version = self.publisher.next_version();
+        let mut repair_secs = 0.0;
+        let mut backoff_secs = 0.0;
+        let mut escaped = false;
+        let mut tears = 0usize;
+        while tears < torn.attempts {
+            repair_secs += self.torn_publish_detour(window, torn)?;
+            tears += 1;
+            if tears > retry.max_retries {
+                // Budget exhausted: give up on the delta path and
+                // republish full.  Loud, visible, and recorded.
+                escaped = true;
+                self.publisher.force_full_next();
+                let ts = self.clock.now();
+                self.emit_instant(
+                    "publish_escape",
+                    ts,
+                    &[("window", window as f64), ("version", version as f64), ("tears", tears as f64)],
+                );
+                break;
+            }
+            // Retry 1 is immediate; from the second tear on, every
+            // further retry backs off (whether or not it will tear).
+            if tears >= 2 {
+                let wait = retry.backoff_secs(tears - 2, version);
+                if wait > 0.0 {
+                    let t0 = self.clock.now();
+                    self.clock.advance(wait);
+                    self.delivery.train.add_phase(PHASE_BACKOFF, wait);
+                    self.emit_span(
+                        PHASE_BACKOFF,
+                        t0,
+                        wait,
+                        &[("window", window as f64), ("attempt", tears as f64)],
+                    );
+                    backoff_secs += wait;
+                }
+            }
+        }
+        Ok((repair_secs, backoff_secs, escaped))
     }
 
     /// Meta-steps the upcoming window trains: fixed
@@ -897,6 +981,7 @@ impl<'rt> OnlineSession<'rt> {
         // most-skewed worker.  Neither touches parameter state, so
         // published artifacts stay bit-identical to a stall-free run —
         // only the clock (and the freshness numbers) moves. ---
+        let mut partition_secs = 0.0;
         if let Some(p) = self.faults.partition_at(delta.seq) {
             let t0 = self.clock.now();
             self.emit_instant(
@@ -909,6 +994,7 @@ impl<'rt> OnlineSession<'rt> {
                 ],
             );
             let stall = p.stall_secs.max(0.0);
+            partition_secs = stall;
             if stall > 0.0 {
                 self.clock.advance(stall);
                 self.delivery.train.add_phase(PHASE_PARTITION, stall);
@@ -996,9 +1082,12 @@ impl<'rt> OnlineSession<'rt> {
         // recovery path, then retry: determinism makes the retried
         // version bit-exact, so the fault is pure latency plus registry
         // repair work. ---
-        if let Some(torn) = self.faults.torn_at(delta.seq) {
-            self.torn_publish_detour(delta.seq, torn)?;
-        }
+        let (repair_secs, backoff_secs, escaped) =
+            if let Some(torn) = self.faults.torn_at(delta.seq) {
+                self.ride_out_torn_publish(delta.seq, torn)?
+            } else {
+                (0.0, 0.0, false)
+            };
 
         // --- Capture + publish the version. ---
         let mut rec = self.publish_version(data_ready)?;
@@ -1006,8 +1095,37 @@ impl<'rt> OnlineSession<'rt> {
         rec.reshard_bytes = std::mem::take(&mut self.pending_reshard_bytes);
         rec.detect_secs = detect_secs;
         rec.redo_secs = redo_secs;
+        rec.backoff_secs = backoff_secs;
+        rec.escaped = escaped;
         rec.cold_tasks = cold;
         rec.zero_shot_auc = zero_shot_auc;
+
+        // --- Fault telemetry: what this window cost in fault overhead,
+        // surfaced so a reactive policy can act on *causes* (dead
+        // workers, stalls) instead of the backlog symptom. ---
+        let faults = FaultSignals {
+            workers_lost: kill.map(|k| k.workers).unwrap_or(0),
+            detect_secs,
+            partition_secs,
+            redo_secs,
+            repair_secs,
+            publish_secs: rec.publish_secs,
+            backoff_secs,
+            publish_escaped: escaped,
+        };
+        if !faults.is_quiet() {
+            let ts = self.clock.now();
+            self.emit_instant(
+                "fault_signals",
+                ts,
+                &[
+                    ("window", delta.seq as f64),
+                    ("workers_lost", faults.workers_lost as f64),
+                    ("lost_secs", faults.lost_secs()),
+                    ("escaped", if escaped { 1.0 } else { 0.0 }),
+                ],
+            );
+        }
 
         // What the scale policy gets to see before the next window.
         self.last_obs = Some(WindowObservation {
@@ -1022,6 +1140,7 @@ impl<'rt> OnlineSession<'rt> {
                 .iter()
                 .map(|(k, v)| (k.clone(), *v))
                 .collect(),
+            faults,
         });
 
         self.delivery.versions.push(rec);

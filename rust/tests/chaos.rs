@@ -86,6 +86,117 @@ fn regression_seeds_charge_their_fault_phases() {
     assert!(multi.partition_secs > 0.0, "partitions charged no stall");
 }
 
+/// Serve-side seeds with known-interesting compositions (recorded from
+/// `Scenario::from_seed_serve(seed, 3, 4, 4)`; replay with
+/// `cargo run --release --example serve_replicas -- --chaos <seed>`).
+const SERVE_CHAOS_REGRESSION_SEEDS: &[(u64, &str)] = &[
+    (0, "latency-only stream trio + full serve trio: replica kill, registry lag, torn migration"),
+    (2, "five stream fault types under the full serve trio (kill r1, lag r3, mid-transition tear)"),
+    (5, "torn publish past the retry budget (attempts=4 escapes full) + torn migration + fallback kill"),
+    (6, "double torn publish (attempts 2 and 4, one escaping) + serve trio on a preempting cluster"),
+    (8, "kill/torn collision with a 5-attempt escape; serve kill from the fallback draw only"),
+    (14, "correlated double kill + partitions, registry lag and a fallback serve kill, no tear"),
+];
+
+#[test]
+fn serve_regression_seeds_hold_on_both_architectures() {
+    for arch in ARCHES {
+        let runner = Runner::new(arch);
+        for &(seed, why) in SERVE_CHAOS_REGRESSION_SEEDS {
+            let scenario = runner.scenario_serve(seed);
+            assert!(
+                scenario.faults.iter().any(|f| f.is_serve()),
+                "seed {seed}: no serve faults drawn"
+            );
+            let report = runner.check_serve(&scenario).unwrap_or_else(|e| {
+                panic!("serve seed {seed} ({why}) violated the serve invariant on {arch:?}: {e}")
+            });
+            assert!(report.versions > 0, "seed {seed}: nothing served");
+            assert!(report.replicas_killed >= 1, "seed {seed}: no kill fired");
+            for (label, slo) in [("static", report.static_slo), ("reactive", report.reactive_slo)] {
+                assert!(
+                    (0.0..=1.0).contains(&slo),
+                    "seed {seed}: {label} SLO {slo} out of range"
+                );
+            }
+        }
+    }
+}
+
+/// The reactive arm's advantage is real, not a bookkeeping artifact:
+/// across the pinned serve corpus it strictly beats the static arm on
+/// a clear majority of seeds (the bench sweep holds the full ≥80% bar;
+/// this tier-1 check keeps slack for an unlucky composition).
+#[test]
+fn reactive_policy_beats_static_on_most_pinned_seeds() {
+    let runner = Runner::new(Architecture::GMeta);
+    let mut dominated = 0;
+    let mut total = 0;
+    for &(seed, _) in SERVE_CHAOS_REGRESSION_SEEDS {
+        let report = runner.check_serve(&runner.scenario_serve(seed)).unwrap();
+        assert!(
+            report.reactive_slo >= report.static_slo - 1e-9,
+            "seed {seed}: reactive arm regressed the SLO ({} vs {})",
+            report.reactive_slo,
+            report.static_slo
+        );
+        total += 1;
+        if report.dominated {
+            dominated += 1;
+        }
+    }
+    assert!(
+        dominated * 3 >= total * 2,
+        "reactive dominated only {dominated}/{total} pinned serve seeds"
+    );
+}
+
+/// The serve stream extends — never perturbs — the base composition:
+/// the stream-side faults of a serve scenario lower to the same
+/// schedule windows the plain scenario pins (torn attempts aside).
+#[test]
+fn serve_scenarios_keep_stream_regression_seeds_stable() {
+    let runner = Runner::new(Architecture::GMeta);
+    for &(seed, _) in CHAOS_REGRESSION_SEEDS {
+        let base = runner.scenario(seed).schedule();
+        let serve = runner.scenario_serve(seed).schedule();
+        assert_eq!(base.kills, serve.kills, "seed {seed}");
+        assert_eq!(base.partitions, serve.partitions, "seed {seed}");
+        assert_eq!(
+            base.torn_publishes.len(),
+            serve.torn_publishes.len(),
+            "seed {seed}"
+        );
+        for (b, s) in base.torn_publishes.iter().zip(&serve.torn_publishes) {
+            assert_eq!(b.window, s.window, "seed {seed}");
+            assert_eq!(b.surviving_files, s.surviving_files, "seed {seed}");
+            assert!((1..=5).contains(&s.attempts), "seed {seed}");
+        }
+    }
+}
+
+/// Serve sweep over sequential seeds (raised by `CHAOS_SEEDS` like the
+/// stream sweep): every composed serve scenario must hold the serve
+/// invariant on both policy arms.
+#[test]
+fn serve_chaos_sweep_invariant_holds() {
+    let n = gmeta::util::props::chaos_seeds(3);
+    for arch in ARCHES {
+        let runner = Runner::new(arch);
+        for seed in 0..n {
+            let scenario = runner.scenario_serve(seed);
+            if let Err(e) = runner.check_serve(&scenario) {
+                panic!(
+                    "serve invariant violated on {arch:?} (seed {seed}): {e}\n\
+                     scenario: {}\n\
+                     replay: cargo run --release --example serve_replicas -- --chaos {seed}",
+                    scenario.describe()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn same_seed_replays_bit_identically() {
     for arch in ARCHES {

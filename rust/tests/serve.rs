@@ -14,12 +14,17 @@
 //! * **Rolling migration** — Modulo→JumpHash completes with zero
 //!   wrong-owner lookups while double-routing, and the post-cutover
 //!   fleet is bit-exact with one freshly built under the new map.
+//! * **Torn migration** (ISSUE 9) — a tear freezes the driver loudly in
+//!   the double-routed window (every row keeps an owner); resume lands
+//!   the cutover bit-exact, rollback returns the fleet to the old map
+//!   bit-exact with the abandonment recorded, never silently.
 
 use gmeta::checkpoint::Checkpoint;
 use gmeta::config::ModelDims;
 use gmeta::embedding::{OwnerMap, RowCache};
 use gmeta::serve::{
-    Lookup, PublishEvent, Replica, RollingMigration, ServeConfig, ServeFleet, ZipfTraffic,
+    Lookup, PublishEvent, Replica, RollingMigration, Route, ServeConfig, ServeFleet, SwapModel,
+    ZipfTraffic,
 };
 use gmeta::stream::DeltaStore;
 use gmeta::util::{Rng, TempDir};
@@ -393,6 +398,127 @@ fn rolling_migration_is_lossless_and_bit_exact() {
                 cfg.replicas,
             );
         }
+    });
+}
+
+/// A torn migration freezes loudly in the double-routed window — every
+/// row keeps a reachable owner the whole time — and either resumes to
+/// a clean cutover or rolls back to the old map bit-exactly; both exits
+/// are recorded in `MigrationStats`, never silent.
+#[test]
+fn torn_migration_freezes_then_resumes_or_rolls_back_loudly() {
+    cases(4, |seed, rng| {
+        let tmp = TempDir::new().unwrap();
+        let (store, _schedule) = seeded_store(rng, &tmp, 96, 6, 6.0);
+        let latest = store.latest().unwrap().version;
+        let fleet = 4usize;
+        let swap = SwapModel::default();
+        let build = || -> Vec<Replica> {
+            (0..fleet)
+                .map(|r| {
+                    let mut rep = fresh_replica(r, fleet, OwnerMap::Modulo);
+                    rep.catch_up(&store, latest).unwrap();
+                    rep
+                })
+                .collect()
+        };
+
+        // Tear mid-transition: the driver freezes with the instant
+        // recorded, and no amount of advancing moves it.
+        let mut reps = build();
+        let mut mig = RollingMigration::new(OwnerMap::JumpHash, 10.0, fleet);
+        mig.advance(10.0, &mut reps, &store, &swap, None).unwrap();
+        assert!(
+            mig.in_transition(10.0) && !mig.done(),
+            "seed {seed}: first adopt should leave the fleet in transition"
+        );
+        mig.tear(10.5);
+        assert!(mig.torn(), "seed {seed}: tear inside the window must freeze");
+        assert_eq!(mig.stats.torn_at, Some(10.5), "seed {seed}: tear not recorded");
+        mig.advance(1e6, &mut reps, &store, &swap, None).unwrap();
+        assert!(
+            mig.torn() && !mig.done(),
+            "seed {seed}: a torn migration must not progress"
+        );
+        assert_eq!(mig.serve_map(OwnerMap::Modulo), OwnerMap::Modulo);
+        // Torn is safe, not broken: every row still routes to a replica
+        // that hosts it (the adopt overlap never drops the old owner).
+        for row in 0..96u64 {
+            match mig.route(row, fleet, OwnerMap::Modulo, 50.0) {
+                Route::Single(r) => assert!(
+                    reps[r].hosts(row),
+                    "seed {seed}: row {row} lost its owner while torn"
+                ),
+                Route::Double { chosen, shadow } => assert!(
+                    reps[chosen].hosts(row) || reps[shadow].hosts(row),
+                    "seed {seed}: row {row} unreachable while torn"
+                ),
+            }
+        }
+
+        // Resume: recorded, and the cutover then lands bit-exact.
+        mig.resume(60.0);
+        assert!(!mig.torn(), "seed {seed}: resume must unfreeze");
+        assert_eq!(
+            mig.stats.resumed_at,
+            Some(60.0),
+            "seed {seed}: resume not recorded"
+        );
+        // Step the clock forward until the cutover lands (each adopt
+        // schedules its completion a little past the current instant).
+        let mut now = 60.0;
+        for _ in 0..64 {
+            if mig.done() {
+                break;
+            }
+            now += 1.0;
+            mig.advance(now, &mut reps, &store, &swap, None).unwrap();
+        }
+        assert!(
+            mig.done() && !mig.rolled_back(),
+            "seed {seed}: resumed migration must finish"
+        );
+        assert_eq!(mig.serve_map(OwnerMap::Modulo), OwnerMap::JumpHash);
+        assert_eq!(mig.stats.adopt_secs.len(), fleet, "seed {seed}: adopts missing");
+        for rep in &reps {
+            assert_replica_matches_load(seed, rep, &store, latest, OwnerMap::JumpHash, fleet);
+        }
+
+        // Rollback instead: the fleet returns to the old map bit-exact,
+        // the abandonment is recorded, and routing never consults the
+        // abandoned map again.
+        let mut reps = build();
+        let mut mig = RollingMigration::new(OwnerMap::JumpHash, 10.0, fleet);
+        mig.advance(10.0, &mut reps, &store, &swap, None).unwrap();
+        mig.tear(12.0);
+        mig.rollback(20.0, &mut reps, OwnerMap::Modulo);
+        assert!(
+            mig.rolled_back() && mig.done() && !mig.torn(),
+            "seed {seed}: rollback must terminate the driver"
+        );
+        assert!(mig.stats.rolled_back, "seed {seed}: rollback not recorded");
+        assert_eq!(mig.stats.finished_at, 20.0, "seed {seed}: rollback instant lost");
+        assert_eq!(mig.serve_map(OwnerMap::Modulo), OwnerMap::Modulo);
+        for row in 0..96u64 {
+            assert_eq!(
+                mig.route(row, fleet, OwnerMap::Modulo, 30.0),
+                Route::Single(OwnerMap::Modulo.owner(row, fleet)),
+                "seed {seed}: abandoned map leaked into routing for row {row}"
+            );
+        }
+        for rep in &reps {
+            assert_replica_matches_load(seed, rep, &store, latest, OwnerMap::Modulo, fleet);
+        }
+        // Terminal: a resume after rollback is a no-op, not a revival.
+        mig.resume(25.0);
+        assert!(
+            mig.rolled_back() && mig.done(),
+            "seed {seed}: rollback must be terminal"
+        );
+        assert_eq!(
+            mig.stats.resumed_at, None,
+            "seed {seed}: resume-after-rollback must not record"
+        );
     });
 }
 

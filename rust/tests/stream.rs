@@ -238,6 +238,58 @@ fn torn_write_is_an_orphan_and_recover_removes_it() {
     assert_eq!(got.step, 20);
 }
 
+/// Double-sweep idempotency with *multiple* orphans on a live chain:
+/// one recover pass removes all the wreckage, a second pass is a
+/// byte-level no-op (nothing removed, published reconstructions
+/// bit-identical before and after), and the swept version numbers are
+/// reusable.  This is the property the chaos runner leans on when a
+/// scenario tears several consecutive publishes
+/// (`Fault::TornPublish { attempts: .. }`).
+#[test]
+fn recover_double_sweep_is_idempotent_across_multiple_orphans() {
+    let tmp = TempDir::new().unwrap();
+    let mut store = DeltaStore::create(tmp.path()).unwrap();
+    let v0 = store_ckpt(10, 0.5, &[(1, 1.0), (5, 5.0)]);
+    let v1 = store_ckpt(20, 0.6, &[(1, 1.5), (5, 5.0), (9, 9.0)]);
+    store.publish(0, &v0, None).unwrap();
+    store.publish(1, &v1, Some((0, &v0))).unwrap();
+
+    // Two consecutive retries die mid-write with different wreckage
+    // shapes: v2 loses everything, v3 keeps two complete files.
+    let v2 = store_ckpt(30, 0.7, &[(1, 2.0), (9, 9.5)]);
+    store.simulate_torn_write(2, &v2, &v2.rows, 0).unwrap();
+    store.simulate_torn_write(3, &v2, &v2.rows, 2).unwrap();
+    assert_eq!(store.orphan_versions().unwrap(), vec![2, 3]);
+
+    let bits = |c: &Checkpoint| -> Vec<(u64, Vec<u32>)> {
+        c.rows
+            .iter()
+            .map(|(r, v)| (*r, v.iter().map(|x| x.to_bits()).collect()))
+            .collect()
+    };
+    let before = (bits(&store.load(0).unwrap()), bits(&store.load(1).unwrap()));
+
+    // First sweep: both orphans gone, in order.
+    let first = store.recover().unwrap();
+    assert_eq!(first.orphans_removed, vec![2, 3]);
+    assert!(first.files_removed >= 2, "v3 alone left two complete files");
+
+    // Second sweep: a no-op, not a partial re-sweep.
+    let second = store.recover().unwrap();
+    assert!(second.orphans_removed.is_empty());
+    assert_eq!(second.files_removed, 0);
+    assert_eq!(second.bytes_removed, 0);
+
+    // The published chain is untouched bit-for-bit by either sweep.
+    let after = (bits(&store.load(0).unwrap()), bits(&store.load(1).unwrap()));
+    assert_eq!(before, after, "recover touched the published chain");
+
+    // Swept numbers are reusable: the retried publish lands cleanly.
+    store.publish(2, &v2, Some((1, &v1))).unwrap();
+    assert_eq!(store.load(2).unwrap().step, 30);
+    assert!(store.orphan_versions().unwrap().is_empty());
+}
+
 #[test]
 fn truncated_delta_file_errors_name_the_file_and_store_recovers() {
     let tmp = TempDir::new().unwrap();
