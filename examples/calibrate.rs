@@ -9,15 +9,28 @@
 //! `ps/mod.rs` / `config.rs`; re-run this tool after changing any cost
 //! model to re-fit.
 //!
-//! Run: `cargo run --release --example calibrate`
+//! `--kernels` runs the *measured* arm instead: time the shard-parallel
+//! data-plane kernels on this host
+//! ([`gmeta::dataplane::calibrate::Calibration`]), print the fitted
+//! [`gmeta::serve::SwapModel`] / [`gmeta::sim::StorageModel`] /
+//! [`gmeta::sim::DeviceModel`] constants next to the defaults, and
+//! write the profile to `CALIBRATION.json` (loadable back via
+//! `Calibration::from_json`).
+//!
+//! Run: `cargo run --release --example calibrate` (Table-1 grid
+//! search) or `cargo run --release --example calibrate -- --kernels
+//! [--rows N] [--dim D] [--threads T]`.
 
 use gmeta::config::ModelDims;
 use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::{aliccp_like, inhouse_like, DatasetSpec};
+use gmeta::dataplane::calibrate::Calibration;
 use gmeta::harness::{inhouse_scale_dims, paper_scale_dims};
 use gmeta::job::TrainJob;
 use gmeta::meta::Episode;
-use gmeta::sim::DeviceModel;
+use gmeta::sim::{DeviceModel, StorageModel};
+use gmeta::util::args::Args;
+use gmeta::util::json;
 
 // Paper Table 1 targets (samples/s).
 const PS_SIZES: [usize; 4] = [20, 40, 80, 160];
@@ -50,7 +63,56 @@ fn log_err(got: f64, want: f64) -> f64 {
     e * e
 }
 
+/// `--kernels`: measure the data-plane kernels on this host, print the
+/// fitted constants against the hard-coded defaults, and write the
+/// profile to `CALIBRATION.json`.
+fn kernels(args: &Args) -> anyhow::Result<()> {
+    let rows = args.usize_or("rows", 200_000)?;
+    let dim = args.usize_or("dim", 16)?;
+    let threads = args.usize_or("threads", gmeta::dataplane::threads())?;
+    println!("measuring data-plane kernels: {rows} rows, D={dim}, {threads} threads\n");
+    let cal = Calibration::measure(rows, dim, threads);
+
+    println!(
+        "measured: diff {:.3e} B/s  fingerprint {:.3e} B/s  decode {:.3e} B/s",
+        cal.diff_bw, cal.fingerprint_bw, cal.decode_bw
+    );
+    println!(
+        "          row patch {:.3e} s/row  dispatch {:.3e} s\n",
+        cal.row_patch_secs, cal.dispatch_secs
+    );
+
+    let line = |name: &str, def: f64, fit: f64| println!("{name:<26} {def:>12.3e} {fit:>12.3e}");
+    let swap = cal.swap_model();
+    let swap_def = gmeta::serve::SwapModel::default();
+    println!("{:<26} {:>12} {:>12}", "constant", "default", "calibrated");
+    line("swap.poll_overhead", swap_def.poll_overhead, swap.poll_overhead);
+    line("swap.read_bw", swap_def.read_bw, swap.read_bw);
+    line("swap.row_patch_secs", swap_def.row_patch_secs, swap.row_patch_secs);
+    let storage = cal.storage_model();
+    let storage_def = StorageModel::default();
+    line("storage.binary_decode", storage_def.binary_decode, storage.binary_decode);
+    let dev = cal.cpu_device();
+    let dev_def = DeviceModel::cpu_worker();
+    line("device.mem_bw", dev_def.mem_bw, dev.mem_bw);
+    line("device.step_overhead", dev_def.step_overhead, dev.step_overhead);
+
+    let path = "CALIBRATION.json";
+    std::fs::write(path, json::write(&cal.to_json()))?;
+    // Prove the profile loads back exactly (the round trip users rely
+    // on when shipping a profile between hosts).
+    let back = Calibration::from_json(&json::parse(&std::fs::read_to_string(path)?)?)?;
+    anyhow::ensure!(back == cal, "CALIBRATION.json did not round-trip");
+    println!("\nwrote {path}");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    if args.flag("kernels") {
+        return kernels(&args);
+    }
+
     // --- GPU arm: fit per_lookup alone (ratios come from topology). ---
     let gpu_worlds: Vec<usize> = GPU_NODES.iter().map(|n| n * 4).collect();
     let pub_wl = prepare(aliccp_like(60_000), paper_scale_dims(), &gpu_worlds);

@@ -2,34 +2,202 @@
 //! work that must never bottleneck the device (DESIGN.md §7, the §Perf
 //! regression gate).
 //!
-//! Covers: lookup planning (dedup + shard routing), block assembly,
-//! gradient reduce/split, the AlltoAll router, ring AllReduce, the binary
-//! codec, and one full simulated coordinator step at paper scale.
+//! Covers two layers:
 //!
-//! Run: `cargo bench --bench hotpath`
+//! 1. **Data-plane kernels** (`gmeta::dataplane`): capture diff,
+//!    fingerprinting, reshard scan, frame decode, and the load-path
+//!    row gather, each measured at 1/2/4/max threads with rows/sec and
+//!    GB/s.  Emits `BENCH_hotpath.json` (thread-scaling ratios are the
+//!    headline keys gated by `examples/bench_diff.rs` in CI).
+//! 2. **Legacy coordinator path**: lookup planning, block assembly,
+//!    gradient reduce/split, the AlltoAll router, ring AllReduce, the
+//!    binary codec, and one full simulated coordinator step at paper
+//!    scale (skipped under `--smoke`).
+//!
+//! Run: `cargo bench --bench hotpath` (full) or
+//! `cargo bench --bench hotpath -- --smoke` (CI: kernels only, small
+//! tables).  The hard ≥2× 4-thread-vs-1 assertions only arm on a full
+//! run with ≥4 cores — smoke runs and small runners still emit the
+//! JSON so the trend is tracked.
 
 mod common;
+
+use std::collections::BTreeMap;
 
 use gmeta::collectives::{alltoall_bytes, ring_allreduce};
 use gmeta::config::ClusterSpec;
 use gmeta::coordinator::episodes_from_generator;
 use gmeta::data::aliccp_like;
-use gmeta::job::TrainJob;
+use gmeta::dataplane;
 use gmeta::embedding::plan::LookupPlan;
 use gmeta::embedding::{OwnerMap, ShardedEmbedding};
 use gmeta::harness::paper_scale_dims;
 use gmeta::io::codec::{decode_n, encode_all, Codec};
+use gmeta::job::TrainJob;
 use gmeta::net::Topology;
-use gmeta::util::Rng;
+use gmeta::util::{json, Rng};
+
+/// Per-thread-count stats leaf: wall p50 plus derived throughput over
+/// the nominal table volume (`rows * (8 + dim*4)` bytes).
+fn stats_obj(rows: usize, stride: usize, threads: usize, p50: f64) -> json::Value {
+    json::obj(vec![
+        ("threads", json::num(threads as f64)),
+        ("p50_s", json::num(p50)),
+        ("rows_per_sec", json::num(rows as f64 / p50)),
+        ("gb_per_sec", json::num(rows as f64 * stride as f64 / p50 / 1e9)),
+    ])
+}
+
+/// Measure one kernel at threads 1/2/4 plus the configured max, and
+/// return `(per-thread stats object, p50(t=1) / p50(t=4))`.
+fn bench_kernel<F: FnMut(usize)>(
+    key: &str,
+    rows: usize,
+    stride: usize,
+    warmup: usize,
+    iters: usize,
+    tmax: usize,
+    mut body: F,
+) -> (json::Value, f64) {
+    let mut p50s: BTreeMap<usize, f64> = BTreeMap::new();
+    for t in [1usize, 2, 4] {
+        let st = common::bench(&format!("{key} (threads={t})"), warmup, iters, || body(t));
+        p50s.insert(t, st.p50_s);
+    }
+    let tmax_p50 = match p50s.get(&tmax) {
+        Some(p) => *p,
+        None => {
+            common::bench(&format!("{key} (threads={tmax})"), warmup, iters, || body(tmax)).p50_s
+        }
+    };
+    let mut map = BTreeMap::new();
+    for (t, p50) in &p50s {
+        map.insert(format!("t{t}"), stats_obj(rows, stride, *t, *p50));
+    }
+    map.insert("tmax".to_string(), stats_obj(rows, stride, tmax, tmax_p50));
+    (json::Value::Obj(map), p50s[&1] / p50s[&4])
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let tmax = dataplane::threads();
+
+    // ---- data-plane kernels -------------------------------------------
+    let rows_n: usize = if smoke { 60_000 } else { 400_000 };
+    let dim: usize = 16;
+    let stride = 8 + dim * 4;
+    let (warmup, iters) = if smoke { (1, 5) } else { (2, 9) };
+    println!(
+        "data-plane kernels: {rows_n} rows, D={dim}, cores {cores}, max threads {tmax}{}\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Rng::seed_from_u64(0xDA7A);
+    let prev: Vec<(u64, Vec<f32>)> = (0..rows_n as u64)
+        .map(|r| (r * 3, (0..dim).map(|_| (rng.f64() - 0.5) as f32).collect()))
+        .collect();
+    let mut cur = prev.clone();
+    for (i, (_, vals)) in cur.iter_mut().enumerate() {
+        if i % 8 == 0 {
+            vals[0] += 1.0;
+        }
+    }
+    let mut payload = Vec::with_capacity(rows_n * stride);
+    for (row, vals) in &prev {
+        payload.extend_from_slice(&row.to_le_bytes());
+        for v in vals {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let picks: Vec<(u64, (u32, u32))> = (0..rows_n)
+        .map(|i| (prev[i].0, (0u32, i as u32)))
+        .collect();
+    let sources: [&[(u64, Vec<f32>)]; 1] = [&prev];
+
+    let mut kernels: BTreeMap<String, json::Value> = BTreeMap::new();
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+
+    let (obj, s) = bench_kernel("capture diff", rows_n, stride, warmup, iters, tmax, |t| {
+        std::hint::black_box(dataplane::capture_diff(&prev, &cur, t).len());
+    });
+    kernels.insert("capture_diff".into(), obj);
+    speedups.push(("capture_diff_speedup_4x1", s));
+
+    // The load-path reconstruction gather (DeltaStore::load's merge of
+    // head + chain rows) — "applying" a delta into a full table.
+    let (obj, s) = bench_kernel("delta apply (gather)", rows_n, stride, warmup, iters, tmax, |t| {
+        std::hint::black_box(dataplane::gather_rows(&picks, &sources, t).len());
+    });
+    kernels.insert("delta_apply".into(), obj);
+    speedups.push(("delta_apply_speedup_4x1", s));
+
+    let (obj, s) = bench_kernel("row fingerprints", rows_n, stride, warmup, iters, tmax, |t| {
+        std::hint::black_box(dataplane::fingerprint_rows(&prev, t).len());
+    });
+    kernels.insert("fingerprint".into(), obj);
+    speedups.push(("fingerprint_speedup_4x1", s));
+
+    let (obj, s) = bench_kernel("frame decode", rows_n, stride, warmup, iters, tmax, |t| {
+        std::hint::black_box(dataplane::decode_rows(&payload, dim, "hotpath", t).unwrap().len());
+    });
+    kernels.insert("decode".into(), obj);
+    speedups.push(("decode_speedup_4x1", s));
+
+    let (obj, s) = bench_kernel("reshard scan", rows_n, stride, warmup, iters, tmax, |t| {
+        std::hint::black_box(dataplane::reshard_scan(&prev, OwnerMap::JumpHash, 8, 12, t));
+    });
+    kernels.insert("reshard".into(), obj);
+    speedups.push(("reshard_speedup_4x1", s));
+
+    println!();
+    for (key, s) in &speedups {
+        println!("{key:<32} {s:.2}x");
+    }
+
+    let doc = json::obj(vec![
+        ("bench", json::s("hotpath")),
+        ("smoke", json::Value::Bool(smoke)),
+        (
+            "config",
+            json::obj(vec![
+                ("rows", json::num(rows_n as f64)),
+                ("dim", json::num(dim as f64)),
+                ("threads_max", json::num(tmax as f64)),
+                ("cores", json::num(cores as f64)),
+            ]),
+        ),
+        ("kernels", json::Value::Obj(kernels)),
+        (
+            "speedup",
+            json::obj(speedups.iter().map(|(k, s)| (*k, json::num(*s))).collect()),
+        ),
+    ]);
+    common::write_bench_json("hotpath", &doc);
+
+    // The acceptance bar: ≥2× at 4 threads vs 1 for the capture-diff
+    // and delta-apply kernels.  Only armed on a full run with enough
+    // physical parallelism — a smoke run or a 1-2 core runner cannot
+    // speed up wall-clock 2× no matter how good the kernels are.
+    if !smoke && cores >= 4 {
+        for key in ["capture_diff_speedup_4x1", "delta_apply_speedup_4x1"] {
+            let s = speedups.iter().find(|(k, _)| *k == key).unwrap().1;
+            assert!(s >= 2.0, "{key}: expected >=2.0x on a {cores}-core host, measured {s:.2}x");
+        }
+    }
+
+    if smoke {
+        return;
+    }
+
+    // ---- legacy coordinator hot path ----------------------------------
     let dims = paper_scale_dims();
     let world = 8;
     let n_ids = dims.batch * dims.slots * dims.valency * 2; // fused sup+qry
     let mut rng = Rng::seed_from_u64(5);
     let ids: Vec<u64> = (0..n_ids).map(|_| rng.gen_range(0, 1 << 22)).collect();
     println!(
-        "paper-scale lookup: {} ids/worker/iter, world {world}, D={}\n",
+        "\npaper-scale lookup: {} ids/worker/iter, world {world}, D={}\n",
         n_ids, dims.emb_dim
     );
 

@@ -2,7 +2,7 @@
 //! cache hit rate vs traffic skew, staleness, and the rolling
 //! owner-map migration.
 //!
-//! Four arms over one published base+delta chain:
+//! Five arms over one published base+delta chain:
 //!
 //! 1. **delta** — the fleet patches versions in place
 //!    ([`gmeta::serve::Replica::begin_catch_up`]); per-swap apply cost
@@ -19,6 +19,12 @@
 //! 4. **migration** — a live Modulo→JumpHash [`RollingMigration`]
 //!    mid-traffic: zero wrong-owner lookups, some double-routed reads,
 //!    finished before the horizon (all asserted).
+//! 5. **calibrated** — arms 1+2 re-run with a [`gmeta::serve::SwapModel`] fitted from
+//!    measured data-plane kernels
+//!    ([`gmeta::dataplane::calibrate::Calibration`]) instead of the
+//!    default constants; the calibrated speedup must clear the same
+//!    ≥2× gate (calibration changes the constants, not the
+//!    conclusion).
 //!
 //! Results land in `BENCH_serve.json`; the delta arm's tracer export
 //! lands in `TRACE_serve.json` (per-replica tracks, validated by
@@ -31,6 +37,7 @@ mod common;
 
 use gmeta::checkpoint::Checkpoint;
 use gmeta::config::ModelDims;
+use gmeta::dataplane::calibrate::Calibration;
 use gmeta::embedding::OwnerMap;
 use gmeta::obs::Tracer;
 use gmeta::serve::{
@@ -198,6 +205,30 @@ fn main() -> anyhow::Result<()> {
         "delta swaps must move fewer bytes"
     );
 
+    // Arm 5: same delta-vs-full comparison under a SwapModel fitted
+    // from measured data-plane kernels.  Uses at most 4 workers so the
+    // fit is stable on big hosts and honest on small ones.
+    let cal = Calibration::measure(4096, EMB_DIM, gmeta::dataplane::threads().min(4));
+    let cal_delta_cfg = ServeConfig {
+        swap: cal.swap_model(),
+        ..serve_cfg(&scale)
+    };
+    let cal_full_cfg = ServeConfig {
+        force_full_reload: true,
+        ..cal_delta_cfg.clone()
+    };
+    let cal_delta = run_fleet(&store, &schedule, &scale, cal_delta_cfg, 1.0, None, None)?;
+    let cal_full = run_fleet(&store, &schedule, &scale, cal_full_cfg, 1.0, None, None)?;
+    let cal_speedup = cal_full.apply_secs_quantile(0.5) / cal_delta.apply_secs_quantile(0.5);
+    println!(
+        "calibrated swap model: row_patch {:.2e}s  read_bw {:.2e} B/s  dispatch {:.2e}s  speedup {cal_speedup:.1}x",
+        cal.row_patch_secs, cal.decode_bw, cal.dispatch_secs
+    );
+    assert!(
+        cal_speedup >= 2.0,
+        "calibrated in-place apply must still beat full reloads >=2x (got {cal_speedup:.2})"
+    );
+
     // Arm 3: hit rate vs zipf exponent.
     let exponents = [0.6, 1.0, 1.4];
     let mut sweep: Vec<(f64, ServeMetrics)> = Vec::new();
@@ -282,6 +313,15 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("migration", migrated.to_json()),
+        (
+            "calibration",
+            obj(vec![
+                ("kernels", cal.to_json()),
+                ("delta_swap_speedup", num(cal_speedup)),
+                ("delta_apply_p50_secs", num(cal_delta.apply_secs_quantile(0.5))),
+                ("full_apply_p50_secs", num(cal_full.apply_secs_quantile(0.5))),
+            ]),
+        ),
         (
             "staleness",
             obj(vec![

@@ -84,17 +84,17 @@ impl Checkpoint {
     /// the consistent-hashing minimum `1 − min(w, w')/max(w, w')` moves
     /// (1/3 at 8→12).  The delta-reshard accounting behind
     /// [`crate::stream::OnlineConfig::partial_reshard`].
+    ///
+    /// The scan itself is the data plane's one-pass reshard kernel
+    /// ([`crate::dataplane::reshard_scan`]): both owners are computed in
+    /// a single pass over the flat row set with the owner-map variant
+    /// dispatched once per chunk, fanned out across the configured
+    /// worker count.
     pub fn reshard_delta(&self, w: usize, w_prime: usize) -> (usize, u64) {
-        let (w, wp) = (w.max(1), w_prime.max(1));
-        let mut moved_rows = 0usize;
-        let mut bytes = self.dense.len() as u64 * 4;
-        for (r, vals) in &self.rows {
-            if self.owner_map.owner(*r, w) != self.owner_map.owner(*r, wp) {
-                moved_rows += 1;
-                bytes += 8 + vals.len() as u64 * 4;
-            }
-        }
-        (moved_rows, bytes)
+        let threads = crate::dataplane::auto_threads(self.rows.len());
+        let (moved_rows, row_bytes) =
+            crate::dataplane::reshard_scan(&self.rows, self.owner_map, w, w_prime, threads);
+        (moved_rows, self.dense.len() as u64 * 4 + row_bytes)
     }
 
     /// Rows whose owner changes on a `w → w_prime` rescale — see
@@ -194,14 +194,10 @@ pub fn capture(
     variant: &str,
     dims: &ModelDims,
     dense: &DenseParams,
-    embedding: &mut ShardedEmbedding,
+    embedding: &ShardedEmbedding,
 ) -> Checkpoint {
     let world = embedding.world();
-    let mut rows = Vec::new();
-    for rank in 0..world {
-        rows.extend(embedding.export_shard(rank));
-    }
-    rows.sort_by_key(|(r, _)| *r);
+    let rows = embedding.export_all(crate::dataplane::threads().min(world.max(1)));
     Checkpoint {
         step,
         variant: variant.to_string(),
@@ -220,7 +216,7 @@ pub fn save(
     variant: &str,
     dims: &ModelDims,
     dense: &DenseParams,
-    embedding: &mut ShardedEmbedding,
+    embedding: &ShardedEmbedding,
 ) -> Result<()> {
     fs::create_dir_all(dir)?;
     let world = embedding.world();

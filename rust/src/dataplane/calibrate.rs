@@ -1,0 +1,291 @@
+//! Measured-kernel calibration: turn wall-clock throughput of the
+//! data-plane row kernels into the constants the virtual-clock models
+//! charge, so the simulator's costs are evidence instead of guesses
+//! (ROADMAP items 3 and 1b).
+//!
+//! [`Calibration::measure`] times the hot kernels on synthetic rows on
+//! *this* machine and records the achieved figures; the `*_model`
+//! methods then produce a [`SwapModel`] / [`StorageModel`] /
+//! [`DeviceModel`] whose measurable constants come from those figures
+//! while the constants a local microbenchmark cannot see (registry
+//! round trips, DFS seek time, full-reload overhead) keep their
+//! documented defaults.  `examples/calibrate.rs --kernels` runs the
+//! measurement and emits the profile as `CALIBRATION.json`;
+//! [`Calibration::from_json`] loads it back so builders can apply it.
+
+use std::time::Instant;
+
+use crate::serve::SwapModel;
+use crate::sim::{DeviceModel, StorageModel};
+use crate::util::{json, Rng};
+use crate::Result;
+
+/// Schema tag written into the JSON profile so stale files fail loud.
+pub const SCHEMA: &str = "gmeta-calibration-v1";
+
+/// Wall-clock figures measured from the data-plane kernels, plus the
+/// shape of the measurement that produced them.  All bandwidths are
+/// bytes/s over the on-disk row stride (`8 + dim * 4`); all times are
+/// seconds.  Produced by [`Calibration::measure`], serialized by
+/// [`Calibration::to_json`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Rows in the synthetic table the kernels ran over.
+    pub rows: usize,
+    /// Embedding dimension of the synthetic rows.
+    pub dim: usize,
+    /// Worker count the parallel measurements used.
+    pub threads: usize,
+    /// Per-row cost of the delta-apply gather (clone one resolved row
+    /// into the output), seconds — the measured analogue of
+    /// [`SwapModel::row_patch_secs`].
+    pub row_patch_secs: f64,
+    /// Achieved `rows.bin` decode bandwidth (frame bytes → `(row,
+    /// values)` pairs), bytes/s — the measured analogue of the binary
+    /// leg of [`StorageModel`]'s decode cost.
+    pub decode_bw: f64,
+    /// Achieved capture-diff streaming bandwidth (probe + bit-compare
+    /// per row), bytes/s — a gather/scatter-class figure for
+    /// [`DeviceModel::mem_bw`] on the CPU arm.
+    pub diff_bw: f64,
+    /// Achieved fingerprint hashing bandwidth, bytes/s.
+    pub fingerprint_bw: f64,
+    /// Round-trip cost of dispatching one parallel region (spawn +
+    /// join of the scoped workers with empty bodies), seconds — the
+    /// measured floor under any parallel kernel call.
+    pub dispatch_secs: f64,
+}
+
+/// Build the synthetic table every measurement runs over: `rows` rows
+/// of `dim` seeded values, unique ids.
+fn table(rows: usize, dim: usize) -> Vec<(u64, Vec<f32>)> {
+    let mut rng = Rng::seed_from_u64(0xCA11B);
+    (0..rows as u64)
+        .map(|r| {
+            let vals = (0..dim).map(|_| rng.f64() as f32).collect();
+            (r * 7, vals)
+        })
+        .collect()
+}
+
+/// Best-of-`reps` wall-clock time of `body`, clamped away from zero so
+/// derived bandwidths stay finite even when the timer under-resolves.
+fn best_of(reps: usize, mut body: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        body();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best.max(1e-9)
+}
+
+impl Calibration {
+    /// Measure the kernels over a `rows` × `dim` synthetic table at
+    /// `threads` workers, best-of-3 per kernel.  Deterministic inputs,
+    /// wall-clock outputs: the figures vary run to run with the
+    /// machine, which is the point.
+    pub fn measure(rows: usize, dim: usize, threads: usize) -> Calibration {
+        let rows = rows.max(1);
+        let dim = dim.max(1);
+        let prev = table(rows, dim);
+        let mut cur = prev.clone();
+        // Touch every 8th row so the diff kernel does real compare work
+        // but ships a realistic (small) delta.
+        for (i, (_, vals)) in cur.iter_mut().enumerate() {
+            if i % 8 == 0 {
+                vals[0] += 1.0;
+            }
+        }
+        let stride_bytes = (rows * (8 + dim * 4)) as f64;
+
+        let diff_secs = best_of(3, || {
+            std::hint::black_box(super::capture_diff(&prev, &cur, threads));
+        });
+        let fp_secs = best_of(3, || {
+            std::hint::black_box(super::fingerprint_rows(&cur, threads));
+        });
+
+        let mut payload = Vec::with_capacity(rows * (8 + dim * 4));
+        for (row, vals) in &prev {
+            payload.extend_from_slice(&row.to_le_bytes());
+            for v in vals {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let decode_secs = best_of(3, || {
+            std::hint::black_box(
+                super::decode_rows(&payload, dim, "calibrate", threads)
+                    .expect("calibration payload is well-framed"),
+            );
+        });
+
+        let picks: Vec<(u64, (u32, u32))> = (0..rows as u32).map(|i| (i as u64, (0, i))).collect();
+        let gather_secs = best_of(3, || {
+            std::hint::black_box(super::gather_rows(&picks, &[&prev], threads));
+        });
+
+        let dispatch_secs = best_of(9, || {
+            std::hint::black_box(super::par_ranges(threads, threads, |_| Vec::<()>::new()));
+        });
+
+        Calibration {
+            rows,
+            dim,
+            threads,
+            row_patch_secs: gather_secs / rows as f64,
+            decode_bw: payload.len() as f64 / decode_secs,
+            diff_bw: stride_bytes / diff_secs,
+            fingerprint_bw: (rows * dim * 4) as f64 / fp_secs,
+            dispatch_secs,
+        }
+    }
+
+    /// A [`SwapModel`] with the measurable constants replaced by this
+    /// machine's figures: `row_patch_secs` and `read_bw` (decode-bound
+    /// ingest) from the kernels, `poll_overhead` bumped by the measured
+    /// parallel-dispatch floor.  Registry RTT (`poll_overhead`'s
+    /// default) and `full_reload_overhead` are fleet properties a local
+    /// microbenchmark cannot see, so they keep their defaults.
+    pub fn swap_model(&self) -> SwapModel {
+        let default = SwapModel::default();
+        SwapModel {
+            poll_overhead: default.poll_overhead + self.dispatch_secs,
+            read_bw: self.decode_bw,
+            row_patch_secs: self.row_patch_secs,
+            full_reload_overhead: default.full_reload_overhead,
+        }
+    }
+
+    /// A [`StorageModel`] whose binary decode cost is the measured
+    /// `rows.bin` decode bandwidth; media figures (`seq_bw`,
+    /// `seek_time`) and the string-format legs keep their defaults —
+    /// they model the DFS, not this host's CPU.
+    pub fn storage_model(&self) -> StorageModel {
+        StorageModel {
+            binary_decode: 1.0 / self.decode_bw,
+            ..StorageModel::default()
+        }
+    }
+
+    /// A CPU-worker [`DeviceModel`] whose gather/scatter bandwidth is
+    /// the measured capture-diff figure and whose per-step overhead
+    /// includes the measured dispatch floor; FLOP and per-lookup
+    /// figures keep the documented A100/CPU calibration.
+    pub fn cpu_device(&self) -> DeviceModel {
+        let base = DeviceModel::cpu_worker();
+        DeviceModel {
+            mem_bw: self.diff_bw,
+            step_overhead: base.step_overhead.max(self.dispatch_secs),
+            ..base
+        }
+    }
+
+    /// Serialize to the `CALIBRATION.json` profile shape.
+    pub fn to_json(&self) -> json::Value {
+        json::obj(vec![
+            ("schema", json::s(SCHEMA)),
+            ("rows", json::num(self.rows as f64)),
+            ("dim", json::num(self.dim as f64)),
+            ("threads", json::num(self.threads as f64)),
+            ("row_patch_secs", json::num(self.row_patch_secs)),
+            ("decode_bw", json::num(self.decode_bw)),
+            ("diff_bw", json::num(self.diff_bw)),
+            ("fingerprint_bw", json::num(self.fingerprint_bw)),
+            ("dispatch_secs", json::num(self.dispatch_secs)),
+        ])
+    }
+
+    /// Parse a profile produced by [`Calibration::to_json`]; rejects
+    /// missing fields and unknown schema tags.
+    pub fn from_json(v: &json::Value) -> Result<Calibration> {
+        let schema = v.field("schema")?.as_str().unwrap_or_default();
+        if schema != SCHEMA {
+            anyhow::bail!("calibration profile: unknown schema {schema:?}, want {SCHEMA:?}");
+        }
+        let num = |key: &str| -> Result<f64> {
+            v.field(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("calibration profile: field {key} is not a number"))
+        };
+        Ok(Calibration {
+            rows: num("rows")? as usize,
+            dim: num("dim")? as usize,
+            threads: num("threads")? as usize,
+            row_patch_secs: num("row_patch_secs")?,
+            decode_bw: num("decode_bw")?,
+            diff_bw: num("diff_bw")?,
+            fingerprint_bw: num("fingerprint_bw")?,
+            dispatch_secs: num("dispatch_secs")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Calibration {
+        Calibration {
+            rows: 1000,
+            dim: 8,
+            threads: 2,
+            row_patch_secs: 2e-7,
+            decode_bw: 3e9,
+            diff_bw: 4e9,
+            fingerprint_bw: 5e9,
+            dispatch_secs: 1e-5,
+        }
+    }
+
+    #[test]
+    fn measure_produces_finite_positive_figures() {
+        let cal = Calibration::measure(2000, 8, 2);
+        for (name, x) in [
+            ("row_patch_secs", cal.row_patch_secs),
+            ("decode_bw", cal.decode_bw),
+            ("diff_bw", cal.diff_bw),
+            ("fingerprint_bw", cal.fingerprint_bw),
+            ("dispatch_secs", cal.dispatch_secs),
+        ] {
+            assert!(x.is_finite() && x > 0.0, "{name}={x}");
+        }
+        assert_eq!((cal.rows, cal.dim, cal.threads), (2000, 8, 2));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let cal = sample();
+        let text = json::write(&cal.to_json());
+        let back = Calibration::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cal);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema() {
+        let mut v = sample().to_json();
+        if let json::Value::Obj(fields) = &mut v {
+            fields.insert("schema".to_string(), json::s("other"));
+        }
+        let err = Calibration::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn models_apply_the_measured_constants() {
+        let cal = sample();
+        let swap = cal.swap_model();
+        assert_eq!(swap.row_patch_secs, cal.row_patch_secs);
+        assert_eq!(swap.read_bw, cal.decode_bw);
+        assert!(swap.poll_overhead > SwapModel::default().poll_overhead);
+        assert_eq!(swap.full_reload_overhead, SwapModel::default().full_reload_overhead);
+
+        let storage = cal.storage_model();
+        assert_eq!(storage.binary_decode, 1.0 / cal.decode_bw);
+        assert_eq!(storage.seq_bw, StorageModel::default().seq_bw);
+
+        let dev = cal.cpu_device();
+        assert_eq!(dev.mem_bw, cal.diff_bw);
+        assert!(dev.step_overhead >= cal.dispatch_secs);
+    }
+}

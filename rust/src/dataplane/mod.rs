@@ -1,0 +1,458 @@
+//! The shard-parallel data plane: real-thread row kernels with a
+//! deterministic merge.
+//!
+//! Everything else in this crate charges *virtual-clock* costs; this
+//! module is where the actual bytes move on the actual machine.  The
+//! five hot row kernels — capture diff, row fingerprinting, the dedup
+//! filter behind it, the reshard owner scan, and delta apply
+//! (decode + gather) — all share one execution scheme:
+//!
+//! 1. **Partition** the input rows into at most `threads` *contiguous*
+//!    chunks.
+//! 2. **Execute** each chunk on its own scoped [`std::thread`] (the
+//!    dependency set is vendored; no rayon).  Chunk bodies run over
+//!    flat contiguous `f32`/byte buffers in fixed-stride steps, the
+//!    shape the autovectorizer takes.
+//! 3. **Merge deterministically**: per-chunk outputs are concatenated
+//!    in chunk order (or summed, for scalar reductions, which is
+//!    order-free over integers).
+//!
+//! Because the chunks are contiguous and the merge preserves chunk
+//! order, the output is *bit-identical to the serial path at every
+//! thread count* — the property `tests/dataplane.rs` pins across
+//! thread counts {1, 2, 4, 7} and the existing delta-store / reshard /
+//! serve suites pin end-to-end.  Worker count comes from the
+//! [`GMETA_THREADS`](THREADS_ENV) environment knob (default: available
+//! parallelism); the kernels themselves take an explicit `threads`
+//! argument so tests and benches can sweep counts without touching
+//! process-global state.
+//!
+//! `benches/hotpath.rs` reports measured wall-clock rows/sec and GB/s
+//! for each kernel at 1/2/4/N threads, and
+//! [`calibrate::Calibration`] fits the virtual-clock model constants
+//! ([`crate::serve::SwapModel`], [`crate::sim::StorageModel`],
+//! [`crate::sim::DeviceModel`]) from those measurements — see
+//! `docs/ARCHITECTURE.md` § Data plane parallelism.
+
+pub mod calibrate;
+
+use crate::embedding::{row_fingerprint, row_fingerprint_batch, OwnerMap};
+use crate::util::fxhash::FxHashMap;
+use crate::Result;
+
+/// Environment knob naming the data-plane worker count: decimal or
+/// `0x`-hex, parsed like every other hardening knob
+/// ([`crate::util::props::env_u64`]).  Unset, `0`, or malformed means
+/// "use the machine's available parallelism".
+pub const THREADS_ENV: &str = "GMETA_THREADS";
+
+/// Rows below which an extra worker is not worth its spawn cost —
+/// [`auto_threads`] caps the worker count so tiny inputs stay serial.
+const MIN_ROWS_PER_THREAD: usize = 256;
+
+/// The configured data-plane worker count: [`THREADS_ENV`] when set to
+/// a positive value, otherwise [`std::thread::available_parallelism`].
+pub fn threads() -> usize {
+    match crate::util::props::env_u64(THREADS_ENV) {
+        Some(n) if n >= 1 => n as usize,
+        _ => std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1),
+    }
+}
+
+/// The worker count a kernel over `rows` rows should actually use:
+/// [`threads`] capped so every worker gets at least
+/// [`MIN_ROWS_PER_THREAD`] rows (spawning a thread to process a
+/// handful of rows costs more than the rows).  Results are bit-exact
+/// at every count, so this is purely a performance knob.
+pub fn auto_threads(rows: usize) -> usize {
+    threads().min((rows / MIN_ROWS_PER_THREAD).max(1))
+}
+
+/// Deterministic parallel map over index ranges: `0..n` is split into
+/// at most `threads` contiguous ranges, `f` runs once per range on its
+/// own scoped thread, and the per-range outputs are concatenated in
+/// range order — bit-identical to `f(0..n)` at every thread count.
+pub fn par_ranges<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>) -> Vec<R> + Sync,
+{
+    let workers = threads.clamp(1, n.max(1));
+    if workers <= 1 {
+        return f(0..n);
+    }
+    let chunk = n.div_ceil(workers);
+    let f = &f;
+    let parts: Vec<Vec<R>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                // Both bounds clamp to `n`: with awkward `n`/`workers`
+                // ratios the last workers' nominal starts can pass the
+                // end (n=10, workers=7 ⇒ chunk=2 ⇒ worker 6 at 12), and
+                // an inverted range must become an empty one, not a
+                // panic when the caller slices with it.
+                let range = (w * chunk).min(n)..((w + 1) * chunk).min(n);
+                scope.spawn(move || f(range))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("dataplane worker panicked"))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+    for part in parts {
+        out.extend(part);
+    }
+    out
+}
+
+/// [`par_ranges`] specialized to slices: each worker maps one
+/// contiguous sub-slice to an output vector; outputs concatenate in
+/// chunk order.
+pub fn par_chunks<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&[T]) -> Vec<R> + Sync,
+{
+    par_ranges(items.len(), threads, |range| f(&items[range]))
+}
+
+/// Bit-exact row-value equality: f32 `==` would treat `-0.0 == 0.0`
+/// and `NaN != NaN`, but published bytes must round-trip exactly.
+pub fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Strictly-increasing row ids — the shape every capture and
+/// reconstruction produces (sorted, unique).
+fn is_sorted_unique(rows: &[(u64, Vec<f32>)]) -> bool {
+    rows.windows(2).all(|w| w[0].0 < w[1].0)
+}
+
+/// Kernel 1 — **capture diff**: rows of `cur` that are new or
+/// bit-changed relative to `prev`, in `cur` order (what a delta
+/// version ships; see [`crate::stream::DeltaStore::publish`]).
+///
+/// Captures are sorted by unique row id, so the hot path is a
+/// **merge-join**: each worker binary-searches its chunk's start into
+/// `prev` and walks both sorted runs forward — no shared probe map to
+/// build serially, every worker streams two contiguous regions.
+/// Inputs that are not sorted-unique (never produced by a real
+/// capture) fall back to a hash-probe filter with identical output.
+pub fn capture_diff(
+    prev: &[(u64, Vec<f32>)],
+    cur: &[(u64, Vec<f32>)],
+    threads: usize,
+) -> Vec<(u64, Vec<f32>)> {
+    if is_sorted_unique(prev) && is_sorted_unique(cur) {
+        return par_chunks(cur, threads, |chunk| {
+            let mut cursor = match chunk.first() {
+                Some((id, _)) => prev.partition_point(|(r, _)| r < id),
+                None => return Vec::new(),
+            };
+            chunk
+                .iter()
+                .filter(|(r, v)| {
+                    while cursor < prev.len() && prev[cursor].0 < *r {
+                        cursor += 1;
+                    }
+                    match prev.get(cursor) {
+                        Some((pr, pv)) if pr == r => !bits_eq(pv, v),
+                        _ => true,
+                    }
+                })
+                .cloned()
+                .collect()
+        });
+    }
+    let prev_map: FxHashMap<u64, &[f32]> =
+        prev.iter().map(|(r, v)| (*r, v.as_slice())).collect();
+    par_chunks(cur, threads, |chunk| {
+        chunk
+            .iter()
+            .filter(|(r, v)| match prev_map.get(r) {
+                Some(pv) => !bits_eq(pv, v),
+                None => true,
+            })
+            .cloned()
+            .collect()
+    })
+}
+
+/// Kernel 2 — **row fingerprints**: the
+/// [`row_fingerprint`] of every row, in row order.  Each worker
+/// flattens its chunk into one contiguous `f32` buffer and hashes it
+/// at a fixed stride via [`row_fingerprint_batch`]; ragged chunks
+/// (mixed row widths — never produced by a real table) fall back to
+/// the per-row call.  Bit-exact against per-row hashing by
+/// construction.
+pub fn fingerprint_rows(rows: &[(u64, Vec<f32>)], threads: usize) -> Vec<u128> {
+    let dim = rows.first().map_or(0, |(_, v)| v.len());
+    par_chunks(rows, threads, |chunk| {
+        if dim > 0 && chunk.iter().all(|(_, v)| v.len() == dim) {
+            let mut flat = Vec::with_capacity(chunk.len() * dim);
+            for (_, vals) in chunk {
+                flat.extend_from_slice(vals);
+            }
+            row_fingerprint_batch(&flat, dim)
+        } else {
+            chunk.iter().map(|(_, vals)| row_fingerprint(vals)).collect()
+        }
+    })
+}
+
+/// Kernel 4 — **reshard owner scan**: one pass over the flat row set
+/// computing each row's old *and* new owner for a `w → w_prime`
+/// rescale, with the [`OwnerMap`] variant dispatched **once per
+/// chunk** instead of twice per row.  Returns `(moved_rows, moved
+/// bytes at the on-disk stride)`; the reduction is an integer sum, so
+/// the merge is order-free and exact.  Behind
+/// [`crate::checkpoint::Checkpoint::reshard_delta`].
+pub fn reshard_scan(
+    rows: &[(u64, Vec<f32>)],
+    map: OwnerMap,
+    w: usize,
+    w_prime: usize,
+    threads: usize,
+) -> (usize, u64) {
+    let (w, wp) = (w.max(1), w_prime.max(1));
+    let parts = par_chunks(rows, threads, |chunk| {
+        let mut moved = 0usize;
+        let mut bytes = 0u64;
+        // One match outside the row loop — the per-row body is
+        // branch-free over the variant.
+        match map {
+            OwnerMap::Modulo => {
+                let (w, wp) = (w as u64, wp as u64);
+                for (r, vals) in chunk {
+                    if r % w != r % wp {
+                        moved += 1;
+                        bytes += 8 + vals.len() as u64 * 4;
+                    }
+                }
+            }
+            OwnerMap::JumpHash => {
+                for (r, vals) in chunk {
+                    if OwnerMap::JumpHash.owner(*r, w) != OwnerMap::JumpHash.owner(*r, wp) {
+                        moved += 1;
+                        bytes += 8 + vals.len() as u64 * 4;
+                    }
+                }
+            }
+        }
+        vec![(moved, bytes)]
+    });
+    parts
+        .into_iter()
+        .fold((0, 0), |(m, b), (pm, pb)| (m + pm, b + pb))
+}
+
+/// Owner of every id under `map` in a `world`-way layout, in id order
+/// — the parallel form of the hosting filter a serving replica runs
+/// over an incoming patch ([`crate::serve::Replica::begin_catch_up`]).
+pub fn owners(ids: &[u64], map: OwnerMap, world: usize, threads: usize) -> Vec<usize> {
+    par_chunks(ids, threads, |chunk| {
+        chunk.iter().map(|&id| map.owner(id, world)).collect()
+    })
+}
+
+/// Kernel 5a — **row decode**: parse a framed `rows.bin` payload
+/// (fixed stride `8 + dim * 4`: little-endian row id then `dim` f32
+/// values) into `(row, values)` pairs, in file order.  The stride is
+/// validated once; each worker decodes a contiguous record range.
+pub fn decode_rows(
+    payload: &[u8],
+    dim: usize,
+    origin: &str,
+    threads: usize,
+) -> Result<Vec<(u64, Vec<f32>)>> {
+    let stride = 8 + dim * 4;
+    if payload.len() % stride != 0 {
+        anyhow::bail!("{origin}: not a multiple of the row stride");
+    }
+    let n = payload.len() / stride;
+    Ok(par_ranges(n, threads, |range| {
+        range
+            .map(|i| {
+                let rec = &payload[i * stride..(i + 1) * stride];
+                let row = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+                let vals = rec[8..]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                (row, vals)
+            })
+            .collect()
+    }))
+}
+
+/// Kernel 5b — **delta-apply gather**: materialize a reconstruction
+/// from its resolved row sources.  `picks[i] = (row, (source, index))`
+/// names where row `i` of the output lives — `sources[source][index]`
+/// — after a serial last-wins pass over the patch chain resolved which
+/// link owns each row.  Workers clone disjoint output ranges; the
+/// concatenated result preserves `picks` order (sorted by row id for
+/// [`crate::stream::DeltaStore::load`]).
+pub fn gather_rows(
+    picks: &[(u64, (u32, u32))],
+    sources: &[&[(u64, Vec<f32>)]],
+    threads: usize,
+) -> Vec<(u64, Vec<f32>)> {
+    par_chunks(picks, threads, |chunk| {
+        chunk
+            .iter()
+            .map(|&(row, (src, idx))| (row, sources[src as usize][idx as usize].1.clone()))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: u64, dim: usize) -> Vec<(u64, Vec<f32>)> {
+        (0..n).map(|r| (r * 3, vec![r as f32 + 0.5; dim])).collect()
+    }
+
+    #[test]
+    fn par_ranges_matches_serial_at_every_thread_count() {
+        let want: Vec<usize> = (0..1000).map(|i| i * 7).collect();
+        for threads in [1, 2, 3, 4, 7, 16, 1000, 2000] {
+            let got = par_ranges(1000, threads, |r| r.map(|i| i * 7).collect());
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(par_ranges(0, 4, |r| r.collect::<Vec<usize>>()).is_empty());
+    }
+
+    #[test]
+    fn capture_diff_matches_the_serial_filter() {
+        let prev = rows(100, 4);
+        let mut cur = rows(120, 4);
+        cur[17].1[2] = -9.0;
+        cur[40].1 = vec![f32::NAN; 4]; // NaN still compares bit-exactly
+        let want = capture_diff(&prev, &cur, 1);
+        // Rows 17 and 40 changed; rows 100..120 are new.
+        assert_eq!(want.len(), 22);
+        for threads in [2, 4, 7] {
+            assert_eq!(capture_diff(&prev, &cur, threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn capture_diff_fallback_handles_unsorted_and_duplicate_ids() {
+        // Not a shape real captures produce, but the kernel must not
+        // silently mis-join it: the hash-probe fallback keeps the exact
+        // per-row semantics (each cur row probed independently).
+        let prev = vec![(9u64, vec![1.0f32]), (3, vec![2.0]), (9, vec![1.0])];
+        let cur = vec![(3u64, vec![2.0f32]), (9, vec![5.0]), (1, vec![0.0])];
+        let prev_map: FxHashMap<u64, &[f32]> =
+            prev.iter().map(|(r, v)| (*r, v.as_slice())).collect();
+        let want: Vec<(u64, Vec<f32>)> = cur
+            .iter()
+            .filter(|(r, v)| match prev_map.get(r) {
+                Some(pv) => !bits_eq(pv, v),
+                None => true,
+            })
+            .cloned()
+            .collect();
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(capture_diff(&prev, &cur, threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_ranges_survives_more_workers_than_even_chunks() {
+        // Regression: n=10 over 7 workers gives chunk=2, so worker 6's
+        // nominal range is 12..14 — both ends must clamp to n, not
+        // panic on an inverted slice.
+        let want: Vec<usize> = (0..10).collect();
+        assert_eq!(par_ranges(10, 7, |r| r.collect::<Vec<usize>>()), want);
+        let items: Vec<usize> = (0..10).collect();
+        assert_eq!(par_chunks(&items, 7, |c| c.to_vec()), want);
+    }
+
+    #[test]
+    fn fingerprints_match_per_row_hashing() {
+        let rs = rows(300, 8);
+        let want: Vec<u128> = rs.iter().map(|(_, v)| row_fingerprint(v)).collect();
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(fingerprint_rows(&rs, threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn reshard_scan_matches_the_two_dispatch_loop() {
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            let rs = rows(500, 4);
+            let mut moved = 0usize;
+            let mut bytes = 0u64;
+            for (r, vals) in &rs {
+                if map.owner(*r, 8) != map.owner(*r, 12) {
+                    moved += 1;
+                    bytes += 8 + vals.len() as u64 * 4;
+                }
+            }
+            for threads in [1, 2, 4, 7] {
+                assert_eq!(
+                    reshard_scan(&rs, map, 8, 12, threads),
+                    (moved, bytes),
+                    "{map} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn owners_match_the_map() {
+        let ids: Vec<u64> = (0..400).map(|i| i * 11).collect();
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            let want: Vec<usize> = ids.iter().map(|&id| map.owner(id, 6)).collect();
+            for threads in [1, 2, 4, 7] {
+                assert_eq!(owners(&ids, map, 6, threads), want);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_stride_and_roundtrips() {
+        let rs = rows(50, 3);
+        let mut payload = Vec::new();
+        for (row, vals) in &rs {
+            payload.extend_from_slice(&row.to_le_bytes());
+            for v in vals {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(decode_rows(&payload, 3, "test", threads).unwrap(), rs);
+        }
+        let err = decode_rows(&payload[1..], 3, "test", 1).unwrap_err();
+        assert!(err.to_string().contains("stride"), "{err}");
+    }
+
+    #[test]
+    fn gather_follows_picks_in_order() {
+        let a = rows(10, 2);
+        let b: Vec<(u64, Vec<f32>)> = (0..10u64).map(|r| (r, vec![-1.0; 2])).collect();
+        let picks = vec![(0u64, (0u32, 0u32)), (1, (1, 1)), (27, (0, 9))];
+        let want = vec![
+            (0u64, a[0].1.clone()),
+            (1, b[1].1.clone()),
+            (27, a[9].1.clone()),
+        ];
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(gather_rows(&picks, &[&a, &b], threads), want);
+        }
+    }
+
+    #[test]
+    fn auto_threads_keeps_tiny_inputs_serial() {
+        assert_eq!(auto_threads(0), 1);
+        assert_eq!(auto_threads(10), 1);
+        assert!(auto_threads(1 << 20) >= 1);
+    }
+}

@@ -22,7 +22,7 @@ pub mod cache;
 pub mod owner;
 pub mod plan;
 
-pub use cache::{partition_lookups, row_fingerprint, RowCache};
+pub use cache::{partition_lookups, row_fingerprint, row_fingerprint_batch, RowCache};
 pub use owner::OwnerMap;
 pub use plan::{build_overlap, LookupPlan, WorkerLookup};
 
@@ -101,6 +101,23 @@ impl Shard {
     /// Number of materialized rows.
     pub fn touched(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Touched rows as (row, values) pairs sorted by row id — the flat
+    /// arena read behind [`ShardedEmbedding::export_shard`] and the
+    /// per-shard unit of work [`ShardedEmbedding::export_all`] fans out.
+    fn export_sorted(&self) -> Vec<(u64, Vec<f32>)> {
+        let dim = self.dim;
+        let mut out: Vec<(u64, Vec<f32>)> = self
+            .slots
+            .iter()
+            .map(|(&row, &slot)| {
+                let off = slot as usize * dim;
+                (row, self.values[off..off + dim].to_vec())
+            })
+            .collect();
+        out.sort_by_key(|(r, _)| *r);
+        out
     }
 
     /// Apply one sparse update to a row.
@@ -245,19 +262,24 @@ impl ShardedEmbedding {
 
     /// Export shard `rank`'s touched rows as (row, values) pairs, sorted
     /// by row id (deterministic checkpoint bytes).
-    pub fn export_shard(&mut self, rank: usize) -> Vec<(u64, Vec<f32>)> {
-        let dim = self.dim;
-        let shard = &self.shards[rank];
-        let mut out: Vec<(u64, Vec<f32>)> = shard
-            .slots
-            .iter()
-            .map(|(&row, &slot)| {
-                let off = slot as usize * dim;
-                (row, shard.values[off..off + dim].to_vec())
-            })
-            .collect();
-        out.sort_by_key(|(r, _)| *r);
-        out
+    pub fn export_shard(&self, rank: usize) -> Vec<(u64, Vec<f32>)> {
+        self.shards[rank].export_sorted()
+    }
+
+    /// Export every shard's touched rows, globally sorted by row id —
+    /// the capture read path ([`crate::checkpoint::capture`]),
+    /// with the per-shard exports fanned out across `threads` data-plane
+    /// workers ([`crate::dataplane::par_ranges`]).  Ids are unique across
+    /// shards, so the result is bit-identical to concatenating
+    /// [`Self::export_shard`] over every rank and sorting — at every
+    /// thread count.
+    pub fn export_all(&self, threads: usize) -> Vec<(u64, Vec<f32>)> {
+        let parts = crate::dataplane::par_ranges(self.shards.len(), threads, |range| {
+            range.map(|rank| self.shards[rank].export_sorted()).collect()
+        });
+        let mut rows: Vec<(u64, Vec<f32>)> = parts.into_iter().flatten().collect();
+        rows.sort_by_key(|(r, _)| *r);
+        rows
     }
 
     /// Overwrite (materializing if needed) a row's value on its owner
@@ -371,6 +393,22 @@ mod tests {
         let mut b = ShardedEmbedding::new(8, 8, 99);
         for row in [0u64, 17, 123456789] {
             assert_eq!(a.read(row), b.read(row));
+        }
+    }
+
+    #[test]
+    fn export_all_matches_per_shard_exports_at_every_thread_count() {
+        let mut t = ShardedEmbedding::new(4, 4, 7).with_owner_map(OwnerMap::JumpHash);
+        for row in 0..300u64 {
+            t.read(row * 5);
+        }
+        let mut want = Vec::new();
+        for rank in 0..4 {
+            want.extend(t.export_shard(rank));
+        }
+        want.sort_by_key(|(r, _)| *r);
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(t.export_all(threads), want, "threads={threads}");
         }
     }
 

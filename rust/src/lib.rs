@@ -71,6 +71,7 @@ pub mod collectives;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dataplane;
 pub mod dense;
 pub mod embedding;
 pub mod eval;

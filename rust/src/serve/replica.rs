@@ -40,6 +40,29 @@ impl Hosting {
             }
         }
     }
+
+    /// [`Hosting::hosts`] for a whole patch at once: the hosted mask of
+    /// `ids`, with the owner computations fanned out across the data
+    /// plane ([`crate::dataplane::owners`]) — bit-identical to calling
+    /// [`Hosting::hosts`] per id, in id order.
+    pub fn hosted_mask(&self, ids: &[u64], rank: usize, fleet: usize) -> Vec<bool> {
+        let threads = crate::dataplane::auto_threads(ids.len());
+        match self {
+            Hosting::Single(map) => crate::dataplane::owners(ids, *map, fleet, threads)
+                .into_iter()
+                .map(|owner| owner == rank)
+                .collect(),
+            Hosting::Both { old, new } => {
+                let old_owners = crate::dataplane::owners(ids, *old, fleet, threads);
+                let new_owners = crate::dataplane::owners(ids, *new, fleet, threads);
+                old_owners
+                    .into_iter()
+                    .zip(new_owners)
+                    .map(|(o, n)| o == rank || n == rank)
+                    .collect()
+            }
+        }
+    }
 }
 
 /// What one catch-up (version swap) actually did.
@@ -200,8 +223,14 @@ impl Replica {
             stats.versions_applied += 1;
             self.step = patch.step;
             self.dense = patch.dense;
-            for (row, vals) in patch.rows {
-                if !self.hosting.hosts(row, self.rank, self.fleet) {
+            // Owner computations for the whole patch fan out across the
+            // data plane; the table/undo/cache mutations stay serial in
+            // row order, so the result is bit-identical to filtering
+            // row-at-a-time.
+            let ids: Vec<u64> = patch.rows.iter().map(|(row, _)| *row).collect();
+            let hosted = self.hosting.hosted_mask(&ids, self.rank, self.fleet);
+            for ((row, vals), hosted) in patch.rows.into_iter().zip(hosted) {
+                if !hosted {
                     continue;
                 }
                 self.cache.invalidate(row);

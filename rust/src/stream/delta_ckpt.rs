@@ -35,7 +35,7 @@
 //!   in the table size; reconstruction stays bit-exact up to the
 //!   fingerprint's ~2⁻⁹⁶ collision bound.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -43,7 +43,6 @@ use crate::checkpoint::{
     bytes_to_f32s, dims_from_json, dims_to_json, f32s_to_bytes, frame, owner_map_from_header,
     unframe, Checkpoint,
 };
-use crate::embedding::row_fingerprint;
 use crate::util::fxhash::FxHashMap;
 use crate::util::json::{self, num, obj, s, Value};
 use crate::Result;
@@ -182,7 +181,7 @@ pub struct TornWriteStats {
 /// Bounded cache of last-published row fingerprints — the publish-side
 /// row dedup behind [`DeltaStore::save_delta`].
 ///
-/// One entry per row: the [`row_fingerprint`] of the row's values as
+/// One entry per row: the [`crate::embedding::row_fingerprint`] of the row's values as
 /// last *written* to the store.  A row whose current bytes still match
 /// its cached fingerprint is unchanged in the latest version's
 /// reconstruction, so a delta can skip it; a row evicted from the cache
@@ -191,7 +190,7 @@ pub struct TornWriteStats {
 /// is probabilistic where the exact diff is not: a changed row is
 /// wrongly skipped only if its old and new values collide in *both* of
 /// the fingerprint's independent digests at once (~2⁻⁹⁶ per
-/// comparison, see [`row_fingerprint`]).  Memory is O(capacity)
+/// comparison, see [`crate::embedding::row_fingerprint`]).  Memory is O(capacity)
 /// (a row id + 96-bit fingerprint per entry) instead of the O(table) a
 /// retained previous checkpoint costs
 /// ([`crate::stream::RowDedup::Exact`]).
@@ -233,15 +232,14 @@ impl RowFingerprints {
         }
     }
 
-    /// Does `vals` still match the row's last-published fingerprint?
-    fn matches(&mut self, row: u64, vals: &[f32]) -> bool {
-        // Only hash when the row is actually tracked: on a cold or
-        // undersized cache most rows miss, and hashing their values
-        // just to discard the result would dominate the pass.
-        let hit = self
-            .map
-            .get(&row)
-            .is_some_and(|fp| *fp == row_fingerprint(vals));
+    /// Does `fp` (the precomputed [`crate::embedding::row_fingerprint`] of the row's
+    /// current value) still match the row's last-published fingerprint?
+    /// The caller hashes candidates in one parallel batch
+    /// ([`crate::dataplane::fingerprint_rows`]) and probes serially in
+    /// row order, so the hit/miss counters stay bit-identical to a
+    /// per-row pass.
+    fn matches_fp(&mut self, row: u64, fp: u128) -> bool {
+        let hit = self.map.get(&row).is_some_and(|stored| *stored == fp);
         if hit {
             self.hits += 1;
         } else {
@@ -250,9 +248,9 @@ impl RowFingerprints {
         hit
     }
 
-    /// Record `vals` as the row's last-published value, evicting the
+    /// Record `fp` as the row's last-published fingerprint, evicting the
     /// oldest-inserted row when full (deterministic FIFO).
-    fn note(&mut self, row: u64, vals: &[f32]) {
+    fn note_fp(&mut self, row: u64, fp: u128) {
         if !self.map.contains_key(&row) {
             if self.map.len() >= self.capacity {
                 if let Some(victim) = self.fifo.pop_front() {
@@ -261,7 +259,7 @@ impl RowFingerprints {
             }
             self.fifo.push_back(row);
         }
-        self.map.insert(row, row_fingerprint(vals));
+        self.map.insert(row, fp);
     }
 
     fn clear(&mut self) {
@@ -278,12 +276,6 @@ pub struct DeltaStore {
     /// Publish-side row dedup state (`None` = dedup off: [`DeltaStore::save_delta`]
     /// ships every row it is handed).
     fingerprints: Option<RowFingerprints>,
-}
-
-/// Bit-exact row-value equality (f32 `==` would treat -0.0 == 0.0 and
-/// NaN != NaN; published bytes must round-trip exactly).
-fn bits_eq(a: &[f32], b: &[f32]) -> bool {
-    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 impl DeltaStore {
@@ -412,17 +404,13 @@ impl DeltaStore {
     }
 
     /// Rows in `cur` that are new or bit-changed relative to `prev`.
-    /// (Rows are never deleted: the touched set only grows.)
+    /// (Rows are never deleted: the touched set only grows.)  The
+    /// bit-exact compare is the data plane's capture-diff kernel
+    /// ([`crate::dataplane::capture_diff`]), fanned out across the
+    /// configured worker count with a deterministic merge.
     pub fn changed_rows(prev: &Checkpoint, cur: &Checkpoint) -> Vec<(u64, Vec<f32>)> {
-        let prev_map: HashMap<u64, &Vec<f32>> = prev.rows.iter().map(|(r, v)| (*r, v)).collect();
-        cur.rows
-            .iter()
-            .filter(|(r, v)| match prev_map.get(r) {
-                Some(pv) => !bits_eq(pv, v),
-                None => true,
-            })
-            .cloned()
-            .collect()
+        let threads = crate::dataplane::auto_threads(cur.rows.len());
+        crate::dataplane::capture_diff(&prev.rows, &cur.rows, threads)
     }
 
     fn check_monotonic(&self, version: u64) -> Result<()> {
@@ -442,9 +430,14 @@ impl DeltaStore {
     /// row's value in the *latest* version's reconstruction, which a
     /// just-written row always updates.
     fn note_written_rows(&mut self, rows: &[(u64, Vec<f32>)]) {
-        if let Some(cache) = self.fingerprints.as_mut() {
-            for (row, vals) in rows {
-                cache.note(*row, vals);
+        if self.fingerprints.is_some() {
+            let fps = crate::dataplane::fingerprint_rows(
+                rows,
+                crate::dataplane::auto_threads(rows.len()),
+            );
+            let cache = self.fingerprints.as_mut().expect("checked above");
+            for ((row, _), fp) in rows.iter().zip(fps) {
+                cache.note_fp(*row, fp);
             }
         }
     }
@@ -540,10 +533,18 @@ impl DeltaStore {
         }
         let (rows, rows_deduped) = match self.fingerprints.as_mut() {
             Some(cache) => {
+                // Hash every candidate row in one parallel batch, then
+                // probe the cache serially in row order — the hit/miss
+                // counters and FIFO eviction order stay bit-identical
+                // to a row-at-a-time pass.
+                let fps = crate::dataplane::fingerprint_rows(
+                    &cur.rows,
+                    crate::dataplane::auto_threads(cur.rows.len()),
+                );
                 let mut rows = Vec::new();
                 let mut skipped = 0usize;
-                for (row, vals) in &cur.rows {
-                    if cache.matches(*row, vals) {
+                for ((row, vals), fp) in cur.rows.iter().zip(fps) {
+                    if cache.matches_fp(*row, fp) {
                         skipped += 1;
                     } else {
                         rows.push((*row, vals.clone()));
@@ -652,18 +653,16 @@ impl DeltaStore {
                 .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", rows_path.display()))?,
             &rows_path.display().to_string(),
         )?;
+        // Fixed-stride decode fanned out across the data plane; the
+        // stride check (and its error naming this file) live in the
+        // kernel.
         let stride = 8 + dims.emb_dim * 4;
-        if payload.len() % stride != 0 {
-            anyhow::bail!(
-                "{}: not a multiple of the row stride",
-                rows_path.display()
-            );
-        }
-        let mut rows = Vec::with_capacity(payload.len() / stride);
-        for rec in payload.chunks_exact(stride) {
-            let row = u64::from_le_bytes(rec[0..8].try_into().unwrap());
-            rows.push((row, bytes_to_f32s(&rec[8..])?));
-        }
+        let rows = crate::dataplane::decode_rows(
+            &payload,
+            dims.emb_dim,
+            &rows_path.display().to_string(),
+            crate::dataplane::auto_threads(payload.len() / stride),
+        )?;
         Ok(Checkpoint {
             step,
             variant,
@@ -696,19 +695,43 @@ impl DeltaStore {
     pub fn load(&self, version: u64) -> Result<Checkpoint> {
         let chain = self.chain_to_full(version)?;
         let mut state = self.read_version(chain[0].version)?;
-        let mut rows: BTreeMap<u64, Vec<f32>> =
-            std::mem::take(&mut state.rows).into_iter().collect();
+        let mut links = Vec::with_capacity(chain.len().saturating_sub(1));
         for meta in &chain[1..] {
-            let overlay = self.read_version(meta.version)?;
-            state.step = overlay.step;
-            state.world = overlay.world;
-            state.owner_map = overlay.owner_map;
-            state.dense = overlay.dense;
-            for (row, vals) in overlay.rows {
-                rows.insert(row, vals);
+            links.push(self.read_version(meta.version)?);
+        }
+        if let Some(last) = links.last() {
+            state.step = last.step;
+            state.world = last.world;
+            state.owner_map = last.owner_map;
+            state.dense = last.dense.clone();
+        }
+        // Serial last-wins index pass: resolve, for every row id, which
+        // link of the chain (0 = the full base) owns its final value —
+        // cheap integer bookkeeping.  The value copies, the expensive
+        // part, then fan out through the data plane's gather kernel;
+        // the BTreeMap keeps ids sorted, so the result is bit-identical
+        // to overlaying the maps serially.
+        let mut picks: BTreeMap<u64, (u32, u32)> = BTreeMap::new();
+        for (idx, (row, _)) in state.rows.iter().enumerate() {
+            picks.insert(*row, (0, idx as u32));
+        }
+        for (src, link) in links.iter().enumerate() {
+            for (idx, (row, _)) in link.rows.iter().enumerate() {
+                picks.insert(*row, (src as u32 + 1, idx as u32));
             }
         }
-        state.rows = rows.into_iter().collect();
+        let picks: Vec<(u64, (u32, u32))> = picks.into_iter().collect();
+        let mut sources: Vec<&[(u64, Vec<f32>)]> = Vec::with_capacity(links.len() + 1);
+        sources.push(&state.rows);
+        for link in &links {
+            sources.push(&link.rows);
+        }
+        let rows = crate::dataplane::gather_rows(
+            &picks,
+            &sources,
+            crate::dataplane::auto_threads(picks.len()),
+        );
+        state.rows = rows;
         Ok(state)
     }
 
@@ -969,6 +992,7 @@ impl DeltaStore {
 mod tests {
     use super::*;
     use crate::config::ModelDims;
+    use crate::dataplane::bits_eq;
     use crate::util::TempDir;
 
     fn dims() -> ModelDims {

@@ -1,0 +1,244 @@
+//! Property suite: the shard-parallel data plane's deterministic-merge
+//! contract.
+//!
+//! Every row kernel must be **bit-identical to its serial run at every
+//! thread count** — the invariant that makes `GMETA_THREADS` a pure
+//! performance knob.  Each property sweeps random shard/row shapes
+//! (including NaN and `-0.0` values, which `f32 ==` would mishandle)
+//! and checks thread counts {1, 2, 4, 7} against an independent serial
+//! oracle written here, not against the kernel's own single-threaded
+//! output alone.
+//!
+//! Suite base `0xDA7A`; `PROPTEST_CASES` / `PROPTEST_SEED` scale the
+//! sweeps per `docs/TESTING.md`.
+
+use std::collections::HashMap;
+
+use gmeta::dataplane;
+use gmeta::embedding::{row_fingerprint, OwnerMap};
+use gmeta::util::Rng;
+
+const SUITE_BASE: u64 = 0xDA7A;
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+fn cases(n: u64, mut body: impl FnMut(u64, &mut Rng)) {
+    let base = gmeta::util::props::seed_base(SUITE_BASE);
+    for seed in 0..gmeta::util::props::case_count(n) {
+        let mut rng = Rng::seed_from_u64(base ^ seed);
+        body(seed, &mut rng);
+    }
+}
+
+/// A random sorted unique-id row table; values include NaN and -0.0
+/// with small probability so bit-exactness is actually exercised.
+fn random_rows(rng: &mut Rng, max_rows: u64, dim: usize) -> Vec<(u64, Vec<f32>)> {
+    let n = rng.gen_range(0, max_rows + 1);
+    let mut rows: Vec<(u64, Vec<f32>)> = (0..n)
+        .map(|_| {
+            let id = rng.gen_range(0, 1 << 20);
+            let vals = (0..dim)
+                .map(|_| {
+                    if rng.gen_bool(0.02) {
+                        f32::NAN
+                    } else if rng.gen_bool(0.02) {
+                        -0.0
+                    } else {
+                        (rng.f64() - 0.5) as f32
+                    }
+                })
+                .collect();
+            (id, vals)
+        })
+        .collect();
+    rows.sort_unstable_by_key(|(r, _)| *r);
+    rows.dedup_by_key(|(r, _)| *r);
+    rows
+}
+
+/// Bit-exact table equality (PartialEq on f32 would pass -0.0 == 0.0
+/// and fail NaN == NaN).
+fn assert_rows_bits_eq(got: &[(u64, Vec<f32>)], want: &[(u64, Vec<f32>)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: row count");
+    for ((rg, vg), (rw, vw)) in got.iter().zip(want) {
+        assert_eq!(rg, rw, "{ctx}: row id");
+        assert!(dataplane::bits_eq(vg, vw), "{ctx}: row {rg} value bits");
+    }
+}
+
+#[test]
+fn capture_diff_is_bit_identical_to_the_serial_oracle_at_every_thread_count() {
+    cases(24, |seed, rng| {
+        let dim = rng.gen_range(1, 10) as usize;
+        let prev = random_rows(rng, 400, dim);
+        // cur: mutate some prev rows, keep some, add fresh ids.
+        let mut cur = prev.clone();
+        cur.retain(|_| rng.gen_bool(0.9));
+        for (_, vals) in cur.iter_mut() {
+            if rng.gen_bool(0.3) {
+                vals[0] = if rng.gen_bool(0.1) { f32::NAN } else { vals[0] + 1.0 };
+            }
+        }
+        let mut extra = random_rows(rng, 80, dim);
+        extra.iter_mut().for_each(|(r, _)| *r += 1 << 21);
+        cur.extend(extra);
+
+        // Independent serial oracle: probe map + bit compare.
+        let prev_map: HashMap<u64, &Vec<f32>> = prev.iter().map(|(r, v)| (*r, v)).collect();
+        let want: Vec<(u64, Vec<f32>)> = cur
+            .iter()
+            .filter(|(r, v)| match prev_map.get(r) {
+                Some(pv) => !dataplane::bits_eq(pv, v),
+                None => true,
+            })
+            .cloned()
+            .collect();
+
+        for threads in THREADS {
+            let got = dataplane::capture_diff(&prev, &cur, threads);
+            assert_rows_bits_eq(&got, &want, &format!("seed {seed} threads {threads}"));
+        }
+    });
+}
+
+#[test]
+fn fingerprints_are_bit_identical_to_per_row_hashing_at_every_thread_count() {
+    cases(24, |seed, rng| {
+        let dim = rng.gen_range(1, 10) as usize;
+        let rows = random_rows(rng, 600, dim);
+        let want: Vec<u128> = rows.iter().map(|(_, v)| row_fingerprint(v)).collect();
+        for threads in THREADS {
+            assert_eq!(
+                dataplane::fingerprint_rows(&rows, threads),
+                want,
+                "seed {seed} threads {threads}"
+            );
+        }
+    });
+}
+
+#[test]
+fn reshard_scan_matches_the_two_dispatch_oracle_at_every_thread_count() {
+    cases(24, |seed, rng| {
+        let dim = rng.gen_range(1, 10) as usize;
+        let rows = random_rows(rng, 600, dim);
+        let w = rng.gen_range(1, 16) as usize;
+        let wp = rng.gen_range(1, 16) as usize;
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            // Independent oracle: per-row double dispatch through the
+            // shared owner helper.
+            let mut moved = 0usize;
+            let mut bytes = 0u64;
+            for (r, vals) in &rows {
+                if map.owner(*r, w) != map.owner(*r, wp) {
+                    moved += 1;
+                    bytes += 8 + vals.len() as u64 * 4;
+                }
+            }
+            for threads in THREADS {
+                assert_eq!(
+                    dataplane::reshard_scan(&rows, map, w, wp, threads),
+                    (moved, bytes),
+                    "seed {seed} {map} {w}->{wp} threads {threads}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn owners_match_the_per_id_map_at_every_thread_count() {
+    cases(24, |seed, rng| {
+        let n = rng.gen_range(0, 800);
+        let ids: Vec<u64> = (0..n).map(|_| rng.gen_range(0, 1 << 30)).collect();
+        let world = rng.gen_range(1, 12) as usize;
+        for map in [OwnerMap::Modulo, OwnerMap::JumpHash] {
+            let want: Vec<usize> = ids.iter().map(|&id| map.owner(id, world)).collect();
+            for threads in THREADS {
+                assert_eq!(
+                    dataplane::owners(&ids, map, world, threads),
+                    want,
+                    "seed {seed} {map} world {world} threads {threads}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn decode_roundtrips_the_frame_bit_exactly_at_every_thread_count() {
+    cases(24, |seed, rng| {
+        let dim = rng.gen_range(1, 10) as usize;
+        let rows = random_rows(rng, 400, dim);
+        let mut payload = Vec::with_capacity(rows.len() * (8 + dim * 4));
+        for (row, vals) in &rows {
+            payload.extend_from_slice(&row.to_le_bytes());
+            for v in vals {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for threads in THREADS {
+            let got = dataplane::decode_rows(&payload, dim, "prop", threads).unwrap();
+            assert_rows_bits_eq(&got, &rows, &format!("seed {seed} threads {threads}"));
+        }
+        if !payload.is_empty() {
+            let err = dataplane::decode_rows(&payload[..payload.len() - 1], dim, "prop", 2)
+                .unwrap_err();
+            assert!(err.to_string().contains("stride"), "seed {seed}: {err}");
+        }
+    });
+}
+
+#[test]
+fn gather_is_bit_identical_to_serial_indexing_at_every_thread_count() {
+    cases(24, |seed, rng| {
+        let dim = rng.gen_range(1, 10) as usize;
+        let sources: Vec<Vec<(u64, Vec<f32>)>> = (0..rng.gen_range(1, 4))
+            .map(|_| {
+                let mut t = random_rows(rng, 300, dim);
+                if t.is_empty() {
+                    t.push((0, vec![0.5; dim]));
+                }
+                t
+            })
+            .collect();
+        let n_picks = rng.gen_range(0, 500);
+        let picks: Vec<(u64, (u32, u32))> = (0..n_picks)
+            .map(|_| {
+                let src = rng.gen_range(0, sources.len() as u64) as u32;
+                let idx = rng.gen_range(0, sources[src as usize].len() as u64) as u32;
+                (rng.gen_range(0, 1 << 20), (src, idx))
+            })
+            .collect();
+        let refs: Vec<&[(u64, Vec<f32>)]> = sources.iter().map(Vec::as_slice).collect();
+        // Independent oracle: plain serial indexing.
+        let want: Vec<(u64, Vec<f32>)> = picks
+            .iter()
+            .map(|&(row, (src, idx))| (row, sources[src as usize][idx as usize].1.clone()))
+            .collect();
+        for threads in THREADS {
+            let got = dataplane::gather_rows(&picks, &refs, threads);
+            assert_rows_bits_eq(&got, &want, &format!("seed {seed} threads {threads}"));
+        }
+    });
+}
+
+#[test]
+fn changed_rows_and_load_still_agree_with_the_exact_diff_definition() {
+    // End-to-end sanity at the call-site layer: the store-facing
+    // wrappers (which pick their own worker counts) return the same
+    // bytes as the thread-count-1 kernels — the route-through must not
+    // change semantics.
+    cases(8, |seed, rng| {
+        let dim = 4;
+        let prev = random_rows(rng, 200, dim);
+        let mut cur = prev.clone();
+        for (_, vals) in cur.iter_mut() {
+            if rng.gen_bool(0.5) {
+                vals[0] += 1.0;
+            }
+        }
+        let a = dataplane::capture_diff(&prev, &cur, 1);
+        let b = dataplane::capture_diff(&prev, &cur, dataplane::auto_threads(cur.len()));
+        assert_rows_bits_eq(&a, &b, &format!("seed {seed} auto-thread diff"));
+    });
+}
